@@ -1,0 +1,95 @@
+"""Paper Table 1 / Table 6 + abstract-claim reproduction via the analytic
+memory-IO model (Eq. 5-6, Table 5).
+
+Method: the paper's latency tables mix two implementation regimes
+(torch-compiled vs eager, H100). We fit ONE effective-bandwidth parameter
+per regime from a single (batch=1 / batch=16) pair, then predict every
+other cell from the IO model and compare the predicted bifurcated/SDPA
+speedups against the paper's measured ones. The abstract's headline
+numbers are Table 1 cells:
+    2.1x  @ b=16, ctx 8k   (compiled:   26.19 / 12.60  = 2.08)
+    6.2x  @ b=16, ctx 16k  (eager:     251.47 / 36.78  = 6.8)
+"""
+from __future__ import annotations
+
+from repro.configs.registry import PAPER_7B_MH
+from repro.core.io_model import (
+    decode_step_io,
+    kv_speedup,
+    modelled_step_latency_ms,
+)
+
+# paper Table 1 (7B MH, H100): {(ctx, bs): (sdpa_ms, bif_ms)}
+TABLE1_COMPILED = {
+    (8192, 1): (8.77, 8.64), (8192, 2): (10.50, 11.77), (8192, 4): (13.22, 12.03),
+    (8192, 8): (17.33, 12.36), (8192, 16): (26.19, 12.60),
+    (16384, 1): (13.06, 12.16), (16384, 2): (15.35, 17.17),
+    (16384, 4): (20.65, 17.33), (16384, 8): (32.06, 18.07),
+    (32768, 1): (19.80, 20.90),
+}
+TABLE1_EAGER = {
+    (8192, 1): (26.40, 30.39), (8192, 2): (28.71, 31.37), (8192, 4): (43.36, 31.44),
+    (8192, 8): (72.71, 33.72), (8192, 16): (132.89, 31.71),
+    (16384, 1): (30.13, 30.66), (16384, 2): (44.74, 32.62),
+    (16384, 4): (73.62, 33.44), (16384, 8): (132.29, 34.67),
+    (16384, 16): (251.47, 36.78),
+    (32768, 1): (44.94, 39.97), (32768, 2): (69.22, 48.61),
+}
+M_D = 256  # decode-cache occupancy assumed during measurement
+
+
+def fit_bandwidths(table):
+    """Fit (weight_bw, attn_bw) from the b=1@8k and b=16-ish cells."""
+    cfg = PAPER_7B_MH
+    base_ms = table[(8192, 1)][0]
+    io1 = decode_step_io(cfg, b=1, m_c=8192, m_d=M_D, bifurcated=False)
+    # attribute the b=1 latency to weights+acts (KV tiny at b=1)
+    weight_bw = (io1.weights_bytes + io1.act_bytes) / (base_ms / 1e3)
+    ctx, bs = (8192, 16) if (8192, 16) in table else (16384, 16)
+    grown_ms = table[(ctx, bs)][0]
+    io_b = decode_step_io(cfg, b=bs, m_c=ctx, m_d=M_D, bifurcated=False)
+    attn_bw = io_b.kv_bytes / max(1e-4, (grown_ms - base_ms) / 1e3)
+    return weight_bw, attn_bw
+
+
+def run(report):
+    cfg = PAPER_7B_MH
+    for regime, table in (("compiled", TABLE1_COMPILED), ("eager", TABLE1_EAGER)):
+        weight_bw, attn_bw = fit_bandwidths(table)
+        report(f"memory_io/{regime}/fit_weight_bw_GBs", weight_bw / 1e9)
+        report(f"memory_io/{regime}/fit_attn_bw_GBs", attn_bw / 1e9)
+        rel_errs = []
+        for (ctx, bs), (sdpa_ms, bif_ms) in sorted(table.items()):
+            pred_sdpa = modelled_step_latency_ms(
+                cfg, b=bs, m_c=ctx, m_d=M_D, bifurcated=False,
+                weight_bw=weight_bw, attn_bw=attn_bw)
+            pred_bif = modelled_step_latency_ms(
+                cfg, b=bs, m_c=ctx, m_d=M_D, bifurcated=True,
+                weight_bw=weight_bw, attn_bw=attn_bw)
+            meas_ratio = sdpa_ms / bif_ms
+            pred_ratio = pred_sdpa / pred_bif
+            rel_errs.append(abs(pred_sdpa - sdpa_ms) / sdpa_ms)
+            report(f"memory_io/{regime}/ctx{ctx}_bs{bs}_speedup_meas", meas_ratio)
+            report(f"memory_io/{regime}/ctx{ctx}_bs{bs}_speedup_pred", pred_ratio)
+        report(f"memory_io/{regime}/sdpa_latency_mean_rel_err",
+               sum(rel_errs) / len(rel_errs))
+
+    # ---- abstract headline claims ----
+    wbw, abw = fit_bandwidths(TABLE1_COMPILED)
+    s_16_8k = (modelled_step_latency_ms(cfg, b=16, m_c=8192, m_d=M_D,
+                                        bifurcated=False, weight_bw=wbw, attn_bw=abw)
+               / modelled_step_latency_ms(cfg, b=16, m_c=8192, m_d=M_D,
+                                          bifurcated=True, weight_bw=wbw, attn_bw=abw))
+    wbw, abw = fit_bandwidths(TABLE1_EAGER)
+    s_16_16k = (modelled_step_latency_ms(cfg, b=16, m_c=16384, m_d=M_D,
+                                         bifurcated=False, weight_bw=wbw, attn_bw=abw)
+                / modelled_step_latency_ms(cfg, b=16, m_c=16384, m_d=M_D,
+                                           bifurcated=True, weight_bw=wbw, attn_bw=abw))
+    report("memory_io/claim_2.1x_at_b16_8k_pred", s_16_8k)
+    report("memory_io/claim_6.2x_at_b16_16k_pred", s_16_16k)
+    # pure IO bound (paper Eq. 5-6): the ceiling any implementation can reach
+    report("memory_io/kv_io_bound_b16_8k", kv_speedup(b=16, m_c=8192, m_d=M_D))
+    report("memory_io/kv_io_bound_b32_16k", kv_speedup(b=32, m_c=16384, m_d=M_D))
+    assert 1.7 <= s_16_8k <= 3.0, f"2.1x claim not reproduced: {s_16_8k:.2f}"
+    assert s_16_16k >= 5.0, f"6.2x claim not reproduced: {s_16_16k:.2f}"
+    return {"claim_2.1x": s_16_8k, "claim_6.2x": s_16_16k}

@@ -1,0 +1,59 @@
+"""Paper Figure 5 / Figure 7 analog: capability-equalized 1B MH vs MG vs MQ
+trio (paper Table 4 configs). Reproduces the three qualitative claims:
+  (F5) MQ's per-step latency is ~flat in context; MH's grows; crossover
+       exists at moderate context.
+  (F7) WITHOUT bifurcation MQ is far more efficient at batch sampling;
+       WITH bifurcation MH becomes comparable (moderate batch) — "an
+       existing MH model can serve batch sampling without retraining".
+"""
+from __future__ import annotations
+
+from repro.configs.registry import PAPER_1B_MH, PAPER_1B_MQ
+from repro.core.io_model import modelled_step_latency_ms
+
+# A100 + DeepSpeed/HF eager regime of the paper's Figures 5/7: low effective
+# bandwidths + a per-layer kernel-launch overhead; per-step latency is
+# measured early in decoding (m_d small), as in the figures.
+WEIGHT_BW, ATTN_BW = 2.0e11, 1.3e11
+LAYER_OVERHEAD_MS = 0.4
+M_D = 16
+
+
+def _lat(cfg, b, m_c, bif):
+    return (modelled_step_latency_ms(cfg, b=b, m_c=m_c, m_d=M_D, bifurcated=bif,
+                                     weight_bw=WEIGHT_BW, attn_bw=ATTN_BW)
+            + LAYER_OVERHEAD_MS * cfg.n_layers)
+
+
+def run(report):
+    out = {}
+    # F5: single-batch latency vs context
+    for m_c in (1024, 4096, 16384, 65536):
+        mh = _lat(PAPER_1B_MH, 1, m_c, False)
+        mq = _lat(PAPER_1B_MQ, 1, m_c, False)
+        report(f"mh_vs_mq/f5_ctx{m_c}_mh_ms", mh)
+        report(f"mh_vs_mq/f5_ctx{m_c}_mq_ms", mq)
+        out[("f5", m_c)] = (mh, mq)
+    # MQ ~parity or slightly slower at short ctx (bigger model), much
+    # faster at long ctx — the paper's crossover
+    assert out[("f5", 1024)][1] >= out[("f5", 1024)][0] * 0.95
+    assert out[("f5", 65536)][1] < 0.6 * out[("f5", 65536)][0]
+
+    # F7: batch sampling at 8k context
+    for b in (8, 32, 64, 256):
+        rows = {}
+        for cfg, tag in ((PAPER_1B_MH, "mh"), (PAPER_1B_MQ, "mq")):
+            for bif in (False, True):
+                ms = _lat(cfg, b, 8192, bif)
+                rows[(tag, bif)] = ms
+                report(f"mh_vs_mq/f7_b{b}_{tag}_{'bif' if bif else 'std'}_ms", ms)
+        out[("f7", b)] = rows
+        # without bifurcation, MQ much faster than MH at batch >= 32
+        if b >= 32:
+            assert rows[("mq", False)] < 0.5 * rows[("mh", False)], (b, rows)
+        # with bifurcation, MH comparable to MQ at moderate batch (paper:
+        # "up to batch size 64"); MQ keeps the edge at extreme batch
+        if b <= 64:
+            assert rows[("mh", True)] < rows[("mq", True)] * 1.25, (b, rows)
+    assert out[("f7", 256)][("mq", True)] < out[("f7", 256)][("mh", True)]
+    return out

@@ -1,0 +1,49 @@
+"""Deliverable (g): aggregate the dry-run JSONs into the roofline table
+(EXPERIMENTS.md §Roofline). Reads experiments/dryrun/*.json; no jax work."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_cells(pattern="*_1pod.json"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DIR, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def format_table(cells):
+    lines = ["| arch | shape | dom | comp ms | mem ms | coll ms | useful | GB/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("skipped"):
+            lines.append(f"| {c['arch']} | {c['shape']} | SKIP | - | - | - | - | - |")
+            continue
+        r = c["roofline"]
+        mem = c["memory"]["bytes_per_device_total"] / 1e9
+        uf = c.get("useful_flops_ratio")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['dominant'].replace('t_','').replace('_s','')} "
+            f"| {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+            f"| {r['t_collective_s']*1e3:.2f} | {uf and round(uf,3)} | {mem:.2f} |")
+    return "\n".join(lines)
+
+
+def run(report):
+    cells = load_cells()
+    done = [c for c in cells if not c.get("skipped")]
+    skipped = [c for c in cells if c.get("skipped")]
+    report("roofline_table/cells_compiled", len(done))
+    report("roofline_table/cells_skipped_subquadratic", len(skipped))
+    for c in done:
+        r = c["roofline"]
+        report(f"roofline/{c['arch']}_{c['shape']}_dominant_ms",
+               r["roofline_bound_s"] * 1e3)
+    if done:
+        print(format_table(cells))
+    return {"compiled": len(done), "skipped": len(skipped)}

@@ -1,0 +1,55 @@
+"""Quickstart: bifurcated attention in 60 seconds.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Build a small GQA LM (any of the 10 assigned archs, reduced).
+2. Prefill ONE shared context once.
+3. Sample 8 continuations in parallel — the context KV is stored unbatched
+   and read once per step (paper Eq. 3-6), via the BifurcatedCache.
+4. Verify against the standard batched-cache path (exact same tokens).
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ServeConfig, get_config, reduced_config
+from repro.core.policy import BifurcationPolicy
+from repro.models import get_model
+from repro.runtime.serve import ServeEngine
+
+
+def main():
+    cfg = reduced_config(get_config("internlm2-1.8b"))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    context = jnp.asarray(
+        np.random.RandomState(0).randint(0, cfg.vocab_size, (1, 64)))
+    batch, steps = 8, 12
+
+    results = {}
+    for bifurcated in (True, False):
+        scfg = ServeConfig(batch=batch, decode_capacity=steps + 4,
+                           temperature=0.8, top_p=0.95, bifurcated=bifurcated)
+        # this demo model is tiny — force past the production IO threshold
+        policy = BifurcationPolicy(enabled=bifurcated, min_io_saving_bytes=0)
+        engine = ServeEngine(model, cfg, scfg, policy=policy)
+        out = engine.generate(params, context, n_steps=steps,
+                              key=jax.random.PRNGKey(7))
+        results[bifurcated] = out
+        mode = "bifurcated" if bifurcated else "standard  "
+        print(f"{mode}: sampled {out.tokens.shape} tokens; "
+              f"best mean-logp {float(out.mean_logprob.max()):.3f}")
+
+    agree = float(jnp.mean(
+        (results[True].tokens == results[False].tokens).astype(jnp.float32)))
+    print(f"token agreement across cache layouts: {agree:.3f} "
+          "(fp32-exact per paper App. E.1; bf16 split-sum may flip near-ties)")
+    assert agree >= 0.85, agree
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Aggregate dryrun + perf JSONs into EXPERIMENTS.md tables (run ad hoc)."""
+import glob
+import json
+import os
+import sys
+
+DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(pattern):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(DIR, pattern))):
+        with open(p) as f:
+            out[os.path.basename(p).replace(".json", "")] = json.load(f)
+    return out
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def roofline_rows(cells, lever_fn=None):
+    rows = []
+    for name, c in cells.items():
+        if c.get("skipped"):
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | — | skipped: sub-quadratic-only shape |")
+            continue
+        r = c["roofline"]
+        dom = r["dominant"].replace("t_", "").replace("_s", "")
+        uf = c.get("useful_flops_ratio")
+        lever = lever_fn(c) if lever_fn else ""
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_ms(r['t_compute_s'])} | "
+            f"{fmt_ms(r['t_memory_s'])} | {fmt_ms(r['t_collective_s'])} | "
+            f"**{dom}** | {uf and round(uf, 2)} | {lever} |")
+    return rows
+
+
+LEVERS = {
+    ("train", "collective"): "EP/bf16 gathers (see §Perf C)",
+    ("train", "memory"): "fused attention + remat policy (§Perf B)",
+    ("prefill", "memory"): "VMEM-resident flash prefill kernel (§Perf B)",
+    ("prefill", "collective"): "reduce activation resharding between scan steps",
+    ("decode", "memory"): "bifurcation + bf16 weights; next: int8 KV cache",
+    ("decode", "collective"): "flash partial-merge (kills concat all-gather, §Perf A)",
+}
+
+
+def lever(c):
+    r = c["roofline"]
+    dom = r["dominant"].replace("t_", "").replace("_s", "")
+    return LEVERS.get((c["kind"], dom), "")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "dryrun/*_1pod.json"
+    cells = load(which)
+    print("| arch | shape | comp ms | mem ms | coll ms | dominant | useful | lever |")
+    print("|---|---|---|---|---|---|---|---|")
+    for row in roofline_rows(cells, lever):
+        print(row)

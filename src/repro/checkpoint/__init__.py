@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

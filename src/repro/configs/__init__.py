@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    MeshRules,
+    ModelConfig,
+    MoEConfig,
+    ServeConfig,
+    SSMConfig,
+    TrainConfig,
+)
+from repro.configs.registry import ARCH_IDS, get_config, reduced_config
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "MeshRules", "TrainConfig",
+    "ServeConfig", "ARCH_IDS", "get_config", "reduced_config",
+]

@@ -1,0 +1,204 @@
+"""Config system: model / parallelism / train / serve dataclasses.
+
+Every assigned architecture is a ``ModelConfig`` in ``repro/configs/<id>.py``.
+Configs are frozen dataclasses; derived quantities (padded vocab, heads) are
+properties so that the sharding layer can rely on divisibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+def round_up(x: int, multiple: int) -> int:
+    if multiple <= 1:
+        return x
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # tokens are re-grouped to this many per dispatch group to bound the
+    # (G, S, E, C) dispatch tensor (GShard/T5X-style einsum dispatch).
+    group_size: int = 512
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Chunked linear-attention substrate config (mLSTM / Mamba2-SSD)."""
+
+    state_dim: int = 64          # key/state dim per head (Mamba2 N)
+    head_dim: int = 64           # value dim per head
+    n_heads: int = 0             # 0 -> derive from d_inner / head_dim
+    expand: int = 2              # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 256
+    kind: str = "mamba2"         # "mamba2" | "mlstm" | "slstm"
+    slstm_every: int = 0         # xLSTM: every k-th layer is an sLSTM block
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | xlstm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None
+    rope_theta: float = 1_000_000.0
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    act: str = "swiglu"          # swiglu | geglu | gelu
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): one globally-shared attention block applied every
+    # `attn_period` ssm layers (Zamba-style parameter sharing).
+    attn_period: int = 0
+    # encdec (whisper): `n_layers` decoder layers + this many encoder layers.
+    n_encoder_layers: int = 0
+    cross_attention: bool = False
+    # learned absolute positions (whisper). 0 -> RoPE via rope_theta.
+    max_position: int = 0
+    max_enc_position: int = 0
+    # vlm (internvl2): stub frontend provides this many patch embeddings.
+    n_image_tokens: int = 0
+    # full-sequence attention implementation: "chunked" materializes
+    # (chunk x m) logit rows (baseline); "flash" is the online-softmax
+    # nested-scan path (beyond-paper prefill optimization, §Perf).
+    train_attn: str = "chunked"
+    # bifurcated context-cache layout: "mgk" (m_c, g, hd) einsum default;
+    # "gmk" (g, m_c, hd) head-major, kernel-DMA friendly (§Perf hillclimb;
+    # requires the flash/kernel decode impl).
+    ctx_layout: str = "mgk"
+    # padding multiples for sharding divisibility (Megatron-style padding).
+    vocab_pad_multiple: int = 256
+    head_pad_multiple: int = 1   # set to the mesh "model" axis size for TP
+    dtype: str = "bfloat16"
+    # serving: decode-cache capacity reserved beyond the shared context.
+    decode_capacity: int = 256
+
+    # ---- derived ----
+    @property
+    def kq_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return round_up(self.vocab_size, self.vocab_pad_multiple)
+
+    @property
+    def n_heads_padded(self) -> int:
+        """Query heads padded so that h is shardable over the model axis."""
+        return round_up(self.n_heads, self.head_pad_multiple)
+
+    @property
+    def n_kv_heads_padded(self) -> int:
+        g, h = self.n_kv_heads, self.n_heads
+        p = h // g
+        # keep the group size p intact; pad groups so g_pad * p == h_pad.
+        g_pad = round_up(g, max(1, self.head_pad_multiple // max(1, p)))
+        while (g_pad * p) < self.n_heads_padded:
+            g_pad += 1
+        return g_pad
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def param_count_estimate(self) -> int:
+        """Analytic 2-matmul-free parameter count (embeddings included)."""
+        d, k = self.d_model, self.kq_dim
+        h, g = self.n_heads, self.n_kv_heads
+        attn = d * h * k + 2 * d * g * k + h * k * d
+        if self.act in ("swiglu", "geglu"):
+            ffn = 3 * d * self.d_ff
+        else:
+            ffn = 2 * d * self.d_ff
+        if self.moe is not None:
+            ffn = ffn * self.moe.n_experts + d * self.moe.n_experts
+        per_layer = attn + ffn
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Logical-axis -> mesh-axis mapping. ``None`` = replicated / no mesh."""
+
+    batch: Tuple[str, ...] = ()          # e.g. ("pod", "data")
+    fsdp: Optional[str] = None           # "data"
+    tensor: Optional[str] = None         # "model"
+    kv_seq: Optional[str] = None         # decode-cache sequence sharding
+    expert: Optional[str] = None         # MoE expert-parallel axis (EP)
+    active: bool = False                 # constraints are no-ops unless True
+
+    @staticmethod
+    def production(multi_pod: bool = False, ep: bool = False) -> "MeshRules":
+        # NOTE: expert-parallelism is opt-in: under capacity-factor einsum
+        # dispatch the token<->expert all-to-alls move the cf-inflated
+        # (G,E,C,d) buffers and measured WORSE than FSDP-sharded experts on
+        # the dbrx-132b train cell (EXPERIMENTS.md §Perf C4/C6 — refuted).
+        return MeshRules(
+            batch=("pod", "data") if multi_pod else ("data",),
+            fsdp="data",
+            tensor="model",
+            kv_seq="model",
+            expert="data" if ep else None,
+            active=True,
+        )
+
+    @staticmethod
+    def serving(multi_pod: bool = False) -> "MeshRules":
+        """Inference sharding: weights TP-only (replicated over the data
+        axis — no per-step FSDP all-gathers), batch over data, KV-cache
+        sequence over model (flash-decoding style)."""
+        return MeshRules(
+            batch=("pod", "data") if multi_pod else ("data",),
+            fsdp=None,
+            tensor="model",
+            kv_seq="model",
+            expert=None,
+            active=True,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    learning_rate: float = 2.5e-4
+    warmup_steps: int = 2000
+    total_steps: int = 100_000
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    min_lr_ratio: float = 0.1
+    remat: str = "full"          # full | dots | none
+    grad_compression: str = "none"   # none | int8_ef
+    checkpoint_every: int = 500
+    keep_checkpoints: int = 3
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 16              # samples per shared context
+    context_len: int = 8192
+    decode_capacity: int = 256
+    temperature: float = 0.8
+    top_p: float = 0.95
+    bifurcated: bool = True
+    use_kernel: bool = False     # Pallas fused kernel vs paper-faithful einsums
+    seed: int = 0

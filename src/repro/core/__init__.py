@@ -1,0 +1,32 @@
+# The paper's primary contribution: context-aware bifurcated attention and
+# the generalized multi-group attention family it applies to.
+from repro.core.attention import (
+    decode_attention,
+    merge_heads,
+    multigroup_attention,
+    split_heads,
+)
+from repro.core.bifurcated import (
+    bifurcated_attention,
+    bifurcated_attention_flash,
+    merge_partials,
+)
+from repro.core.grouped import grouped_bifurcated_attention
+from repro.core.kv_cache import BifurcatedCache, DecodeCache, StateCache, update_layer_cache
+from repro.core.policy import BifurcationPolicy
+
+__all__ = [
+    "multigroup_attention",
+    "decode_attention",
+    "split_heads",
+    "merge_heads",
+    "bifurcated_attention",
+    "bifurcated_attention_flash",
+    "grouped_bifurcated_attention",
+    "merge_partials",
+    "DecodeCache",
+    "BifurcatedCache",
+    "StateCache",
+    "update_layer_cache",
+    "BifurcationPolicy",
+]

@@ -1,0 +1,87 @@
+"""Generalized multi-group attention (paper §3.3).
+
+One implementation covers multi-head (g == h), grouped-query (1 < g < h) and
+multi-query (g == 1) attention. Tensors follow the paper's einsum notation:
+
+  b: batch, g: kv groups, p: query heads per group (h = g * p),
+  n: query length, m: key/value length, k: head dim, v: value head dim (= k).
+
+Layouts used throughout the framework:
+  q            : (b, g, p, n, k)
+  K, V (batched): (b, m, g, k)
+  K_c, V_c      : (m_c, g, k)     -- unbatched shared-context cache
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import mask_to_bias
+
+
+def split_heads(x: jnp.ndarray, n_groups: int) -> jnp.ndarray:
+    """(b, n, h, k) -> (b, g, p, n, k)."""
+    b, n, h, k = x.shape
+    assert h % n_groups == 0, f"h={h} not divisible by g={n_groups}"
+    p = h // n_groups
+    return x.reshape(b, n, n_groups, p, k).transpose(0, 2, 3, 1, 4)
+
+
+def merge_heads(o: jnp.ndarray) -> jnp.ndarray:
+    """(b, g, p, n, k) -> (b, n, h*k)."""
+    b, g, p, n, k = o.shape
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, n, g * p * k)
+
+
+def multigroup_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    mask: Optional[jnp.ndarray] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Standard (non-bifurcated) multi-group attention.
+
+    Args:
+      q: (b, g, p, n, k)
+      k: (b, m, g, k)
+      v: (b, m, g, k)
+      mask: boolean, broadcastable to (b, g, p, n, m). True = attend.
+      scale: logit scale; defaults to k**-0.5.
+
+    Returns:
+      (b, g, p, n, k) attention output, in q.dtype.
+    """
+    head_dim = q.shape[-1]
+    scale = head_dim**-0.5 if scale is None else scale
+    logits = jnp.einsum("bgpnk,bmgk->bgpnm", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = logits + mask_to_bias(mask)
+    weights = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgpnm,bmgv->bgpnv", weights.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    *,
+    valid_mask: jnp.ndarray,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Incremental-decoding attention against a *batched* cache.
+
+    This is the paper's "without bifurcated attention" baseline: the batch
+    axis is present on the cache, so HBM reads scale as b * m.
+
+    Args:
+      q: (b, g, p, n, k) with small n (1, or n_g for speculative decoding).
+      k_cache, v_cache: (b, C, g, k) ring/linear caches, C = capacity.
+      valid_mask: (b, C) bool — which cache slots hold live tokens.
+    """
+    mask = valid_mask[:, None, None, None, :]  # (b, 1, 1, 1, C)
+    return multigroup_attention(q, k_cache, v_cache, mask=mask, scale=scale)

@@ -1,0 +1,163 @@
+"""Context-aware bifurcated attention (paper §4) — the core contribution.
+
+During incremental decoding in single-context batch sampling, the KV cache is
+``K = K_c ⊕ K_d`` where the context part ``K_c`` is identical across the batch
+axis. The attention is split into two GEMMs (paper Eq. 3–4):
+
+  ⟨q, K_c⟩ : einsum(bgpnk, m_c g k) -> b g p n m_c    # batch axis absent
+  ⟨q, K_d⟩ : einsum(bgpnk, b m_d g k) -> b g p n m_d
+
+joined by concatenation; the value attention is bifurcated the same way and
+joined by summation. FLOPs are unchanged, the result is bit-exact up to
+reduction order, and the HBM traffic for KV drops from
+``g·k·b·(m_c + m_d)`` to ``g·k·(m_c + b·m_d)`` (paper Eq. 5–6).
+
+Two join strategies are provided:
+
+  * ``bifurcated_attention``  — paper-faithful: concatenate context and decode
+    logits, one softmax over the full length (exactly Appendix E.3's 4-einsum
+    PyTorch reference, transcribed to JAX).
+  * ``bifurcated_attention_flash`` — beyond-paper: never concatenates; each
+    half keeps running (max, sum, value-accumulator) statistics which are
+    merged with the standard two-way online-softmax combine. This is the
+    formulation the Pallas TPU kernel implements (kernels/bifurcated_decode)
+    and is also what makes sequence-sharded K_c possible (partial stats are
+    psum-merged across shards).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import NEG_INF, mask_to_bias
+
+
+def bifurcated_attention(
+    q: jnp.ndarray,
+    k_context: jnp.ndarray,
+    v_context: jnp.ndarray,
+    k_decode: jnp.ndarray,
+    v_decode: jnp.ndarray,
+    *,
+    decode_mask: Optional[jnp.ndarray] = None,
+    context_mask: Optional[jnp.ndarray] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Paper-faithful bifurcated attention (4 einsums + one softmax).
+
+    Args:
+      q: (b, g, p, n, k) decode queries (n = 1, or n_g for speculative).
+      k_context, v_context: (m_c, g, k) — single shared context, NO batch dim.
+      k_decode, v_decode: (b, C_d, g, k) — per-sample decode caches.
+      decode_mask: (b, C_d) bool validity of decode-cache slots. If the
+        queries carry n > 1 new positions, pass (b, n, C_d) instead.
+      context_mask: optional (m_c,) bool (e.g. sliding-window clipping).
+      scale: logit scale, default k**-0.5.
+
+    Returns:
+      (b, g, p, n, k) — identical to standard attention over K_c ⊕ K_d.
+    """
+    head_dim = q.shape[-1]
+    scale = head_dim**-0.5 if scale is None else scale
+
+    # ⟨q, K_c⟩ : context GEMM — K_c loaded once for the whole batch.
+    logits_c = jnp.einsum("bgpnk,mgk->bgpnm", q, k_context).astype(jnp.float32)
+    # ⟨q, K_d⟩ : decode GEMM — batched as usual.
+    logits_d = jnp.einsum("bgpnk,bmgk->bgpnm", q, k_decode).astype(jnp.float32)
+    logits_c = logits_c * scale
+    logits_d = logits_d * scale
+
+    if context_mask is not None:
+        logits_c = logits_c + mask_to_bias(context_mask)[None, None, None, None, :]
+    if decode_mask is not None:
+        if decode_mask.ndim == 2:  # (b, C_d)
+            bias_d = mask_to_bias(decode_mask)[:, None, None, None, :]
+        else:  # (b, n, C_d)
+            bias_d = mask_to_bias(decode_mask)[:, None, None, :, :]
+        logits_d = logits_d + bias_d
+
+    m_c = logits_c.shape[-1]
+    weights = jax.nn.softmax(jnp.concatenate([logits_c, logits_d], axis=-1), axis=-1)
+    w_c = weights[..., :m_c].astype(v_context.dtype)
+    w_d = weights[..., m_c:].astype(v_decode.dtype)
+
+    # ⟨w, V⟩ bifurcated: join by summation (paper Eq. 4).
+    out_c = jnp.einsum("bgpnm,mgv->bgpnv", w_c, v_context)
+    out_d = jnp.einsum("bgpnm,bmgv->bgpnv", w_d, v_decode)
+    return (out_c + out_d).astype(q.dtype)
+
+
+def _partial_softmax(
+    logits: jnp.ndarray, v: jnp.ndarray, batched: bool, ctx_layout: str = "mgk"
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Running-softmax statistics (max, sumexp, acc) for one attention half."""
+    m = jnp.max(logits, axis=-1, keepdims=True)  # (b,g,p,n,1)
+    # Guard fully-masked rows.
+    m = jnp.maximum(m, NEG_INF / 2)
+    e = jnp.exp(logits - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    if batched:
+        eqn = "bgpnm,bmgv->bgpnv"
+    else:
+        eqn = "bgpnm,mgv->bgpnv" if ctx_layout == "mgk" else "bgpnm,gmv->bgpnv"
+    acc = jnp.einsum(eqn, e.astype(v.dtype), v).astype(jnp.float32)
+    return m, s, acc
+
+
+def merge_partials(parts) -> jnp.ndarray:
+    """Combine [(max, sumexp, acc), ...] partial softmaxes into the output."""
+    m_star = parts[0][0]
+    for m, _, _ in parts[1:]:
+        m_star = jnp.maximum(m_star, m)
+    total_s = 0.0
+    total_acc = 0.0
+    for m, s, acc in parts:
+        corr = jnp.exp(m - m_star)
+        total_s = total_s + s * corr
+        total_acc = total_acc + acc * corr[..., 0][..., None]
+    return total_acc / total_s[..., 0][..., None]
+
+
+def bifurcated_attention_flash(
+    q: jnp.ndarray,
+    k_context: jnp.ndarray,
+    v_context: jnp.ndarray,
+    k_decode: jnp.ndarray,
+    v_decode: jnp.ndarray,
+    *,
+    decode_mask: Optional[jnp.ndarray] = None,
+    context_mask: Optional[jnp.ndarray] = None,
+    scale: Optional[float] = None,
+    ctx_layout: str = "mgk",
+) -> jnp.ndarray:
+    """Online-softmax join of the two halves (no logit concatenation).
+
+    Numerically equivalent to ``bifurcated_attention``; this is the reference
+    semantics for the Pallas kernel and for sequence-sharded context caches.
+
+    ``ctx_layout``: "mgk" stores K_c as (m_c, g, k) (einsum-path default);
+    "gmk" stores (g, m_c, k) — head-major, matching the Pallas kernel's DMA
+    layout, which removes the per-layer transpose copy the compiler inserts
+    before the context GEMM (EXPERIMENTS.md §Perf, decode hillclimb).
+    """
+    head_dim = q.shape[-1]
+    scale = head_dim**-0.5 if scale is None else scale
+
+    eq_qk = "bgpnk,mgk->bgpnm" if ctx_layout == "mgk" else "bgpnk,gmk->bgpnm"
+    logits_c = jnp.einsum(eq_qk, q, k_context).astype(jnp.float32) * scale
+    if context_mask is not None:
+        logits_c = logits_c + mask_to_bias(context_mask)[None, None, None, None, :]
+    logits_d = jnp.einsum("bgpnk,bmgk->bgpnm", q, k_decode).astype(jnp.float32) * scale
+    if decode_mask is not None:
+        if decode_mask.ndim == 2:
+            bias_d = mask_to_bias(decode_mask)[:, None, None, None, :]
+        else:
+            bias_d = mask_to_bias(decode_mask)[:, None, None, :, :]
+        logits_d = logits_d + bias_d
+
+    part_c = _partial_softmax(logits_c, v_context, batched=False,
+                              ctx_layout=ctx_layout)
+    part_d = _partial_softmax(logits_d, v_decode, batched=True)
+    return merge_partials([part_c, part_d]).astype(q.dtype)

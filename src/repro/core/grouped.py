@@ -1,0 +1,71 @@
+"""Grouped (multi-prefix) bifurcated attention — beyond-paper extension.
+
+The paper handles ONE shared context per decode batch. Production serving
+batches multiple requests, each with its own prefix and its own sample
+group (continuous batching of single-context batch sampling). This
+generalizes Eq. 3-4 to G prefixes x s samples per prefix:
+
+    q:    (G, s, g, p, n, k)     — s samples per prefix
+    K_c:  (G, m_c, g, k)         — ONE copy per prefix (not per sample)
+    K_d:  (G, s, m_d, g, k)      — per-sample decode caches
+
+  ⟨q, K_c⟩ : einsum(Gsgpnk, GMgk -> GsgpnM)   — K_c read once per GROUP
+  ⟨q, K_d⟩ : einsum(Gsgpnk, Gsmgk -> Gsgpnm)
+
+HBM traffic for KV drops from  g·k·G·s·(m_c+m_d)  to  g·k·G·(m_c + s·m_d):
+the per-group s-fold saving of the paper, retained across a mixed batch
+(Hydragen-adjacent; Juravsky et al. 2024 is acknowledged concurrent work in
+the paper). Exactness is the same concat-softmax argument per group.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import mask_to_bias
+
+
+def grouped_bifurcated_attention(
+    q: jnp.ndarray,          # (G, s, g, p, n, k)
+    k_context: jnp.ndarray,  # (G, m_c, g, k)
+    v_context: jnp.ndarray,
+    k_decode: jnp.ndarray,   # (G, s, m_d, g, k)
+    v_decode: jnp.ndarray,
+    *,
+    context_lengths: Optional[jnp.ndarray] = None,  # (G,) live prefix lengths
+    decode_mask: Optional[jnp.ndarray] = None,      # (G, s, m_d)
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Exact attention over [prefix_G ⊕ decode_{G,s}] for every sample."""
+    head_dim = q.shape[-1]
+    scale = head_dim**-0.5 if scale is None else scale
+
+    logits_c = jnp.einsum("Gsgpnk,GMgk->GsgpnM", q, k_context).astype(jnp.float32)
+    logits_d = jnp.einsum("Gsgpnk,Gsmgk->Gsgpnm", q, k_decode).astype(jnp.float32)
+    logits_c = logits_c * scale
+    logits_d = logits_d * scale
+
+    m_c = k_context.shape[1]
+    if context_lengths is not None:  # ragged prefixes, padded to m_c
+        valid = jnp.arange(m_c)[None, :] < context_lengths[:, None]  # (G, m_c)
+        logits_c = logits_c + mask_to_bias(valid)[:, None, None, None, None, :]
+    if decode_mask is not None:
+        logits_d = logits_d + mask_to_bias(decode_mask)[:, :, None, None, None, :]
+
+    weights = jax.nn.softmax(
+        jnp.concatenate([logits_c, logits_d], axis=-1), axis=-1)
+    w_c = weights[..., :m_c].astype(v_context.dtype)
+    w_d = weights[..., m_c:].astype(v_decode.dtype)
+    out_c = jnp.einsum("GsgpnM,GMgk->Gsgpnk", w_c, v_context)
+    out_d = jnp.einsum("Gsgpnm,Gsmgk->Gsgpnk", w_d, v_decode)
+    return (out_c + out_d).astype(q.dtype)
+
+
+def grouped_kv_read_bytes(*, n_groups, samples, m_c, m_d, g, k,
+                          bifurcated: bool, bytes_per_el: int = 2) -> int:
+    """IO model extension of paper Eq. 5-6 to G prefix groups."""
+    if bifurcated:
+        return 2 * g * k * n_groups * (m_c + samples * m_d) * bytes_per_el
+    return 2 * g * k * n_groups * samples * (m_c + m_d) * bytes_per_el

@@ -1,0 +1,77 @@
+"""Analytic memory-IO model of incremental decoding (paper Table 5, Eq. 5-6,
+Appendix E.2). Used by the policy switch, the benchmarks that reproduce the
+paper's latency tables, and the roofline ideal-IO column.
+
+Per decode step, per layer, the KV-read traffic is
+    standard   : 2 * g*k * b*(m_c + m_d)            (Eq. 5)
+    bifurcated : 2 * g*k * (m_c + b*m_d)            (Eq. 6)
+(the 2 is K and V) plus model-weight reads (constant in b, m) and small
+activation terms (b*d etc., Appendix E.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeIO:
+    weights_bytes: int
+    kv_bytes: int
+    act_bytes: int
+
+    @property
+    def total(self) -> int:
+        return self.weights_bytes + self.kv_bytes + self.act_bytes
+
+
+def kv_read_bytes(*, b, m_c, m_d, g, k, bifurcated, bytes_per_el=2,
+                  window: Optional[int] = None) -> int:
+    """Eq. 5 / Eq. 6, per layer. ``window`` clips the live context (SWA)."""
+    if window is not None:
+        m_c = min(m_c, window)
+    if bifurcated:
+        return 2 * g * k * (m_c + b * m_d) * bytes_per_el
+    return 2 * g * k * b * (m_c + m_d) * bytes_per_el
+
+
+def decode_step_io(cfg, *, b, m_c, m_d, bifurcated, bytes_per_el=2) -> DecodeIO:
+    """Whole-model per-step IO for a ModelConfig-like object."""
+    n_params = cfg.param_count_estimate
+    kv = cfg.n_layers * kv_read_bytes(
+        b=b, m_c=m_c, m_d=m_d, g=cfg.n_kv_heads, k=cfg.kq_dim,
+        bifurcated=bifurcated, bytes_per_el=bytes_per_el,
+        window=cfg.sliding_window,
+    )
+    act = cfg.n_layers * b * cfg.d_model * 8 * bytes_per_el  # x, q, o, mlp io
+    return DecodeIO(weights_bytes=n_params * bytes_per_el, kv_bytes=kv,
+                    act_bytes=act)
+
+
+def kv_speedup(*, b, m_c, m_d) -> float:
+    """Pure KV-IO speedup bound: b(m_c+m_d) / (m_c + b m_d)."""
+    return b * (m_c + m_d) / (m_c + b * m_d)
+
+
+def modelled_step_latency_ms(cfg, *, b, m_c, m_d, bifurcated,
+                             weight_bw, attn_bw, bytes_per_el=2) -> float:
+    """Two-bandwidth latency model: weights stream at ``weight_bw`` (GEMM
+    path, near peak); *batched* KV reads go at ``attn_bw`` (the attention
+    kernel's effective bandwidth — fitted once per implementation; far below
+    peak for the baseline SDPA kernels in the paper's Tables 1/6). The
+    bifurcated CONTEXT read is a single contiguous GEMM operand stream —
+    the restructuring's point — so it runs at ``weight_bw``; only the small
+    per-sample decode arm stays at ``attn_bw``."""
+    n_params = cfg.param_count_estimate
+    w_bytes = n_params * bytes_per_el
+    act = cfg.n_layers * b * cfg.d_model * 8 * bytes_per_el
+    m_c_live = min(m_c, cfg.sliding_window) if cfg.sliding_window else m_c
+    per_layer = 2 * cfg.n_kv_heads * cfg.kq_dim * bytes_per_el
+    if bifurcated:
+        ctx_bytes = cfg.n_layers * per_layer * m_c_live
+        dec_bytes = cfg.n_layers * per_layer * b * m_d
+        t = (w_bytes + act + ctx_bytes) / weight_bw + dec_bytes / attn_bw
+    else:
+        kv_bytes = cfg.n_layers * per_layer * b * (m_c_live + m_d)
+        t = (w_bytes + act) / weight_bw + kv_bytes / attn_bw
+    return 1e3 * t

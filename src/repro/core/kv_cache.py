@@ -1,0 +1,143 @@
+"""KV-cache containers for incremental decoding.
+
+Two cache families, both stacked over layers (leading ``L`` axis) so that the
+model can ``lax.scan`` over layers:
+
+  * ``DecodeCache``      — the standard batched cache (b present on every slot).
+  * ``BifurcatedCache``  — the paper's layout: an *unbatched* context cache
+    ``(L, m_c, g, k)`` shared by every sample, plus a small batched decode
+    cache ``(L, b, C_d, g, k)``. This is the data structure that makes the
+    bifurcated GEMM (and its b-fold HBM saving) possible; it also cuts cache
+    *storage* from b·(m_c+C_d) to m_c + b·C_d slots (paper §5.2.2 notes the
+    memory-capacity side benefit).
+
+All updates are functional (return a new cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DecodeCache:
+    """Standard batched KV cache. k/v: (L, b, C, g, hd); length: scalar i32."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    length: jnp.ndarray  # number of valid slots, shared across batch
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[2]
+
+    @staticmethod
+    def init(n_layers, batch, capacity, n_groups, head_dim, dtype=jnp.bfloat16):
+        shape = (n_layers, batch, capacity, n_groups, head_dim)
+        return DecodeCache(
+            k=jnp.zeros(shape, dtype),
+            v=jnp.zeros(shape, dtype),
+            length=jnp.zeros((), jnp.int32),
+        )
+
+    @staticmethod
+    def spec(n_layers, batch, capacity, n_groups, head_dim, dtype=jnp.bfloat16):
+        shape = (n_layers, batch, capacity, n_groups, head_dim)
+        arr = jax.ShapeDtypeStruct(shape, dtype)
+        return DecodeCache(k=arr, v=arr, length=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def update_layer_cache(
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    k_new: jnp.ndarray,
+    v_new: jnp.ndarray,
+    index: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write (b, n, g, k) new KVs at ``index`` into (b, C, g, k) caches."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), index, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), index, axis=1)
+    return k_cache, v_cache
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BifurcatedCache:
+    """Bifurcated KV cache (paper §4).
+
+    k_ctx/v_ctx: (L, m_c, g, hd)    — shared context, no batch axis.
+    k_dec/v_dec: (L, b, C_d, g, hd) — per-sample decode continuation.
+    dec_length:  scalar i32         — valid decode slots.
+    """
+
+    k_ctx: jnp.ndarray
+    v_ctx: jnp.ndarray
+    k_dec: jnp.ndarray
+    v_dec: jnp.ndarray
+    dec_length: jnp.ndarray
+
+    @property
+    def context_len(self) -> int:
+        return self.k_ctx.shape[1]
+
+    @property
+    def decode_capacity(self) -> int:
+        return self.k_dec.shape[2]
+
+    @staticmethod
+    def init(n_layers, batch, m_c, dec_capacity, n_groups, head_dim,
+             dtype=jnp.bfloat16, ctx_layout="mgk"):
+        ctx = ((n_layers, m_c, n_groups, head_dim) if ctx_layout == "mgk"
+               else (n_layers, n_groups, m_c, head_dim))
+        dec = (n_layers, batch, dec_capacity, n_groups, head_dim)
+        return BifurcatedCache(
+            k_ctx=jnp.zeros(ctx, dtype),
+            v_ctx=jnp.zeros(ctx, dtype),
+            k_dec=jnp.zeros(dec, dtype),
+            v_dec=jnp.zeros(dec, dtype),
+            dec_length=jnp.zeros((), jnp.int32),
+        )
+
+    @staticmethod
+    def spec(n_layers, batch, m_c, dec_capacity, n_groups, head_dim,
+             dtype=jnp.bfloat16, ctx_layout="mgk"):
+        shape = ((n_layers, m_c, n_groups, head_dim) if ctx_layout == "mgk"
+                 else (n_layers, n_groups, m_c, head_dim))
+        ctx = jax.ShapeDtypeStruct(shape, dtype)
+        dec = jax.ShapeDtypeStruct((n_layers, batch, dec_capacity, n_groups, head_dim), dtype)
+        return BifurcatedCache(
+            k_ctx=ctx, v_ctx=ctx, k_dec=dec, v_dec=dec,
+            dec_length=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+
+    @staticmethod
+    def from_prefill(k_ctx, v_ctx, batch, dec_capacity, dtype=jnp.bfloat16):
+        """Build from a single-context prefill result (L, m_c, g, hd)."""
+        n_layers, _, n_groups, head_dim = k_ctx.shape
+        dec = (n_layers, batch, dec_capacity, n_groups, head_dim)
+        return BifurcatedCache(
+            k_ctx=k_ctx.astype(dtype),
+            v_ctx=v_ctx.astype(dtype),
+            k_dec=jnp.zeros(dec, dtype),
+            v_dec=jnp.zeros(dec, dtype),
+            dec_length=jnp.zeros((), jnp.int32),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StateCache:
+    """Recurrent-state cache for attention-free blocks (mLSTM / Mamba2 / sLSTM).
+
+    Holds a per-layer pytree of state arrays plus the running position.
+    For shared-prefix batch sampling the prefill state is simply broadcast
+    across the batch axis — the degenerate (free) analogue of bifurcation
+    for constant-size-state architectures (DESIGN.md §Arch-applicability).
+    """
+
+    state: dict
+    position: jnp.ndarray

@@ -1,0 +1,38 @@
+"""Attention masks: causal, sliding-window, decode-validity.
+
+All masks are boolean with True = attend. They are converted to additive
+bias (0 / NEG_INF) at the softmax site, in float32.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def causal_mask(n: int, m: int, *, offset: int = 0) -> jnp.ndarray:
+    """(n, m) boolean mask. Query i may attend key j iff j <= i + offset.
+
+    ``offset = m - n`` gives the standard "suffix query" causal mask used
+    when the query block sits at the end of the key sequence.
+    """
+    q_pos = jnp.arange(n)[:, None]
+    k_pos = jnp.arange(m)[None, :]
+    return k_pos <= q_pos + offset
+
+
+def sliding_window_mask(n: int, m: int, window: int, *, offset: int = 0) -> jnp.ndarray:
+    """Causal mask further restricted to the last ``window`` positions."""
+    q_pos = jnp.arange(n)[:, None] + offset
+    k_pos = jnp.arange(m)[None, :]
+    return (k_pos <= q_pos) & (k_pos > q_pos - window)
+
+
+def length_mask(lengths: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(..., m) mask of valid cache slots given per-example lengths."""
+    k_pos = jnp.arange(m)
+    return k_pos[None, :] < lengths[..., None]
+
+
+def mask_to_bias(mask: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.where(mask, jnp.zeros((), dtype), jnp.asarray(NEG_INF, dtype))

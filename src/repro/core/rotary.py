@@ -1,0 +1,37 @@
+"""Rotary position embeddings (RoPE), applied on the fly from positions.
+
+Used by every attention-bearing architecture in the zoo. Implemented in the
+"half-rotation" (GPT-NeoX / Llama) convention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,), float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate ``x`` by position-dependent angles.
+
+    Args:
+      x: (..., n, heads, head_dim) query or key tensor.
+      positions: (n,) or broadcastable to (..., n) absolute token positions.
+      theta: RoPE base (e.g. 10_000 or 1_000_000).
+
+    Returns:
+      Tensor of the same shape/dtype as ``x``.
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)  # (k/2,)
+    pos = positions.astype(jnp.float32)
+    angles = jnp.einsum("...n,f->...nf", pos, inv_freq)  # (..., n, k/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., n, 1, k/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,126 @@
+"""Deterministic, resumable, shardable data pipeline.
+
+Design constraints (1000+ node posture):
+  * a batch is a pure function of (seed, step) — restart/elastic-rescale
+    replays exactly without persisted iterator state;
+  * per-host sharding: each host materializes only its slice of the global
+    batch (host_id/host_count), matching jax.make_array_from_process-style
+    feeding on a real multi-host deployment;
+  * background prefetch thread with a bounded queue overlaps host-side batch
+    synthesis with device compute.
+
+Two sources: a synthetic in-memory corpus (Zipfian token stream with
+short-range structure so tiny models have signal to fit — used by the
+scaling-laws benchmark), and a binary token-file source.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticLMDataset:
+    """Zipf-distributed tokens with a copy/repeat structure: token t depends
+    on t-1 via a fixed random bigram table, giving tiny models a learnable
+    signal (validation loss decreases with capacity — what Figure 3 needs)."""
+
+    def __init__(self, vocab_size: int, seq_len: int, seed: int = 0,
+                 bigram_rank: int = 64):
+        self.vocab_size = vocab_size
+        self.seq_len = seq_len
+        self.seed = seed
+        rng = np.random.RandomState(seed + 1234)
+        # each token deterministically prefers a small successor set
+        self.successors = rng.randint(0, vocab_size, size=(vocab_size, bigram_rank))
+
+    def batch(self, step: int, batch_size: int, host_id: int = 0,
+              host_count: int = 1) -> dict:
+        per_host = batch_size // host_count
+        rng = np.random.RandomState(
+            (self.seed * 1_000_003 + step) % (2**31) + host_id * 7919
+        )
+        toks = np.empty((per_host, self.seq_len + 1), np.int32)
+        # Zipfian start tokens
+        toks[:, 0] = np.minimum(
+            rng.zipf(1.3, size=per_host) - 1, self.vocab_size - 1
+        )
+        follow = rng.rand(per_host, self.seq_len) < 0.8
+        choice = rng.randint(0, self.successors.shape[1], (per_host, self.seq_len))
+        rand_tok = rng.randint(0, self.vocab_size, (per_host, self.seq_len))
+        for t in range(1, self.seq_len + 1):
+            succ = self.successors[toks[:, t - 1], choice[:, t - 1]]
+            toks[:, t] = np.where(follow[:, t - 1], succ, rand_tok[:, t - 1])
+        return {
+            "tokens": toks[:, :-1],
+            "targets": toks[:, 1:],
+            "mask": np.ones((per_host, self.seq_len), np.float32),
+        }
+
+
+class TokenFileDataset:
+    """Flat binary int32 token file, sequence-packed; deterministic strided
+    reads by (step, host)."""
+
+    def __init__(self, path: str, seq_len: int, seed: int = 0):
+        self.tokens = np.memmap(path, dtype=np.int32, mode="r")
+        self.seq_len = seq_len
+        self.seed = seed
+        self.n_seqs = (len(self.tokens) - 1) // seq_len
+
+    def batch(self, step: int, batch_size: int, host_id: int = 0,
+              host_count: int = 1) -> dict:
+        per_host = batch_size // host_count
+        rng = np.random.RandomState((self.seed + step) % (2**31))
+        idx = rng.randint(0, self.n_seqs, size=(batch_size,))
+        idx = idx[host_id * per_host:(host_id + 1) * per_host]
+        starts = idx * self.seq_len
+        toks = np.stack([self.tokens[s:s + self.seq_len + 1] for s in starts])
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "targets": toks[:, 1:].astype(np.int32),
+            "mask": np.ones((per_host, self.seq_len), np.float32),
+        }
+
+
+def make_pipeline(
+    dataset,
+    batch_size: int,
+    start_step: int = 0,
+    host_id: int = 0,
+    host_count: int = 1,
+    prefetch: int = 2,
+) -> Iterator[dict]:
+    """Prefetching iterator; position is (dataset, step) — fully resumable."""
+    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def worker():
+        step = start_step
+        while not stop.is_set():
+            try:
+                q.put(
+                    (step, dataset.batch(step, batch_size, host_id, host_count)),
+                    timeout=0.5,
+                )
+                step += 1
+            except queue.Full:
+                continue
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+
+    class _Iter:
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            step, batch = q.get()
+            return step, batch
+
+        def close(self):
+            stop.set()
+
+    return _Iter()

@@ -1,0 +1,3 @@
+from repro.distributed.sharding import constrain, param_pspec_tree
+
+__all__ = ["constrain", "param_pspec_tree"]

@@ -1,0 +1,130 @@
+"""Sharding rules: logical axes -> mesh axes, applied via GSPMD constraints.
+
+Model code never names mesh axes directly; it calls ``constrain(x, rules,
+"batch", None, "tensor")`` with *logical* axis names resolved through
+``MeshRules``. Under a mesh context this becomes a
+``with_sharding_constraint``; without one it is a no-op, so the exact same
+model code runs in single-device smoke tests and in the 512-chip dry-run.
+
+Parameter shardings are assigned by name pattern (``param_pspec_tree``):
+TP shards the flattened head*dim / d_ff / vocab axes (always divisible after
+config padding), FSDP shards the d_model axis over "data".
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshRules
+
+
+def _resolve(rules: MeshRules, logical: Optional[str]):
+    if logical is None:
+        return None
+    if logical == "batch":
+        return rules.batch if rules.batch else None
+    return getattr(rules, logical)
+
+
+def constrain(x: jnp.ndarray, rules: Optional[MeshRules], *logical_axes) -> jnp.ndarray:
+    """Apply a sharding constraint expressed in logical axis names.
+    A constraint that resolves to all-None is a no-op (NOT forced
+    replication) — logical axes may be disabled per-run (e.g. EP off)."""
+    if rules is None or not rules.active:
+        return x
+    assert len(logical_axes) == x.ndim, (
+        f"constrain: rank mismatch {logical_axes} vs {x.shape}"
+    )
+    resolved = [_resolve(rules, a) for a in logical_axes]
+    if all(a is None for a in resolved):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (by path regex). Conventions:
+#   weights (d_model, heads*hd)  -> (fsdp, tensor)
+#   weights (heads*hd, d_model)  -> (tensor, fsdp)
+#   mlp wi  (d_model, d_ff)      -> (fsdp, tensor)
+#   mlp wo  (d_ff, d_model)      -> (tensor, fsdp)
+#   embed   (vocab, d_model)     -> (tensor, fsdp)
+#   experts (E, d_model, d_ff)   -> (None, fsdp, tensor)
+#   scalars / norms / biases     -> replicated
+# A leading scan axis (stacked layers) is never sharded.
+# ---------------------------------------------------------------------------
+
+_RULES = [
+    (r"(wq|wk|wv|in_proj|qkv|xbc_proj|dt_proj)$", ("fsdp", "tensor")),
+    (r"(wo|out_proj)$", ("tensor", "fsdp")),
+    (r"(wi|wi_gate|wi_up)$", ("fsdp", "tensor")),
+    (r"(w_down)$", ("tensor", "fsdp")),
+    (r"(embed|lm_head|pos_embed)$", ("tensor", "fsdp")),
+    # experts: EP (E over the expert axis) when enabled; FSDP fallback below
+    (r"(experts_wi_gate|experts_wi_up)$", ("expert", None, "tensor")),
+    (r"(experts_wo)$", ("expert", "tensor", None)),
+    (r"(router)$", ("fsdp", None)),
+]
+
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+_EXPERT_FALLBACK = {  # EP unavailable -> FSDP x TP expert sharding
+    r"(experts_wi_gate|experts_wi_up)$": (None, "fsdp", "tensor"),
+    r"(experts_wo)$": (None, "tensor", "fsdp"),
+}
+
+
+def _leaf_spec(path: str, leaf, rules: MeshRules, scanned: bool, mesh=None):
+    ndim = len(leaf.shape)
+    for pattern, logical in _RULES:
+        if rules.expert is None and pattern in _EXPERT_FALLBACK:
+            logical = _EXPERT_FALLBACK[pattern]
+        if re.search(pattern, path):
+            axes = [_resolve(rules, a) for a in logical]
+            lead = ndim - len(axes)
+            if lead < 0:  # e.g. bias with a matching name — replicate
+                return P(*([None] * ndim))
+            full = [None] * lead + axes
+            if mesh is not None:  # drop axes the dim doesn't divide
+                full = [
+                    a if a is None or d % _axes_size(mesh, a) == 0 else None
+                    for d, a in zip(leaf.shape, full)
+                ]
+            return P(*full)
+    return P(*([None] * ndim))
+
+
+def param_pspec_tree(params, rules: MeshRules, scanned: bool = True, mesh=None):
+    """PartitionSpec pytree matching ``params`` (by dict-path name).
+    Pass ``mesh`` to drop axes whose size does not divide the dim (e.g.
+    mixtral's 8 experts on a 16-wide EP axis fall back to replication)."""
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        return _leaf_spec(path, node, rules, scanned, mesh)
+
+    return walk(params, "")
+
+
+def named_sharding_tree(params, mesh, rules: MeshRules):
+    from jax.sharding import NamedSharding
+
+    specs = param_pspec_tree(params, rules)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: fused bifurcated flash-decode (context arm).
+
+The paper's context GEMM (⟨q, K_c⟩, Eq. 3) is the memory-IO hot spot of
+shared-prefix batch decoding: K_c is the one tensor whose HBM traffic the
+technique eliminates b-fold. This kernel goes beyond the paper's 4-einsum
+formulation by fusing the softmax into the GEMM pair flash-decoding style:
+
+  grid = (g, m_c / block_m) — for each kv group, stream K_c/V_c blocks
+  HBM -> VMEM exactly ONCE; all b*p query rows ride the MXU's row dimension
+  (batch becomes compute parallelism, not memory replication). Running
+  (max, sumexp, acc) live in fp32 VMEM scratch; b*h*m_c logits never touch
+  HBM (the einsum path materializes them: ~b*h*m_c*4 bytes saved on top of
+  the paper's saving).
+
+TPU mapping notes:
+  * block_m is MXU/lane aligned (multiple of 128); K_c tail is masked via
+    the static m_c closed over by the kernel.
+  * per-row stats are kept as (rows, 128) replicated-lane tiles — the
+    standard Mosaic idiom for rowwise scalars.
+  * rows = b * p (queries-per-group x batch): for b >= 8 this saturates the
+    8x128 MXU sublane tile even when p == 1 (MQA).
+
+The tiny per-sample decode arm (C_d ~ hundreds) stays on the einsum path;
+`ops.bifurcated_decode_attention` merges the two partials with the exact
+online-softmax combine (`core.bifurcated.merge_partials` semantics).
+
+Validated on CPU in interpret mode against `ref.py` over a shape/dtype sweep
+(tests/test_kernels.py); intended layout for deployment: K_c stored
+(g, m_c, hd) so block DMA is contiguous.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ctx_flash_kernel(
+    q_ref,      # (1, rows, hd)
+    k_ref,      # (1, block_m, hd)
+    v_ref,      # (1, block_m, hd)
+    acc_ref,    # out: (1, rows, hd) f32 — unnormalized value accumulator
+    m_ref,      # out: (1, rows, 128) f32 — running max (lane-replicated)
+    l_ref,      # out: (1, rows, 128) f32 — running sumexp
+    acc_scr,    # scratch (rows, hd) f32
+    m_scr,      # scratch (rows, 128) f32
+    l_scr,      # scratch (rows, 128) f32
+    *,
+    scale: float,
+    m_c: int,
+    block_m: int,
+):
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0]                      # (rows, hd)
+    k = k_ref[0]                      # (block_m, hd)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                          # (rows, block_m)
+
+    # mask the zero-padded K tail of the last block
+    pos = i * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < m_c, s, NEG_INF)
+
+    m_prev = m_scr[:, :1]             # (rows, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    corr = jnp.exp(m_prev - m_new)    # (rows, 1)
+    p = jnp.exp(s - m_new)            # (rows, block_m)
+    l_new = l_scr[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                  # (rows, hd)
+    acc_scr[...] = acc_scr[...] * corr + pv
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(i == nb - 1)
+    def _flush():
+        acc_ref[0] = acc_scr[...]
+        m_ref[0] = m_scr[...]
+        l_ref[0] = l_scr[...]
+
+
+def context_flash_partials(
+    q: jnp.ndarray,        # (g, rows, hd)  rows = b * p
+    k_ctx: jnp.ndarray,    # (g, m_c, hd)
+    v_ctx: jnp.ndarray,    # (g, m_c, hd)
+    *,
+    scale: float,
+    block_m: int = 512,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns flash partials (acc (g,rows,hd) f32, m (g,rows), l (g,rows))."""
+    g, rows, hd = q.shape
+    m_c = k_ctx.shape[1]
+    block_m = min(block_m, max(128, m_c))
+    pad = (-m_c) % block_m
+    if pad:
+        k_ctx = jnp.pad(k_ctx, ((0, 0), (0, pad), (0, 0)))
+        v_ctx = jnp.pad(v_ctx, ((0, 0), (0, pad), (0, 0)))
+    nb = k_ctx.shape[1] // block_m
+
+    kernel = functools.partial(
+        _ctx_flash_kernel, scale=scale, m_c=m_c, block_m=block_m
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(g, nb),
+        in_specs=[
+            pl.BlockSpec((1, rows, hd), lambda gi, i: (gi, 0, 0)),
+            pl.BlockSpec((1, block_m, hd), lambda gi, i: (gi, i, 0)),
+            pl.BlockSpec((1, block_m, hd), lambda gi, i: (gi, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rows, hd), lambda gi, i: (gi, 0, 0)),
+            pl.BlockSpec((1, rows, 128), lambda gi, i: (gi, 0, 0)),
+            pl.BlockSpec((1, rows, 128), lambda gi, i: (gi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, rows, hd), jnp.float32),
+            jax.ShapeDtypeStruct((g, rows, 128), jnp.float32),
+            jax.ShapeDtypeStruct((g, rows, 128), jnp.float32),
+        ],
+        scratch_shapes=[
+            # fp32 VMEM accumulators — the whole working set per grid step is
+            # rows*hd (q) + 2*block_m*hd (kv) + rows*(hd+256) (scratch) floats;
+            # with rows=256, hd=128, block_m=512 that is ~0.9 MB << 16 MB VMEM.
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_ctx, v_ctx)
+    return acc, m[..., 0], l[..., 0]

@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: chunked scalar-decay linear attention (SSM family).
+
+The mLSTM / Mamba2-SSD substrate (models/linear_scan.py) is memory-bound in
+the dry-run (zamba2/xlstm cells): the XLA lowering round-trips the
+(chunk x chunk) decay-weighted score blocks and the (dk x dv) running state
+through HBM every chunk. This kernel keeps them in VMEM:
+
+  grid = (b*H, n/chunk) — the chunk axis iterates sequentially (TPU grid
+  minor dim), so the fp32 state scratch S (dk, dv) carries across chunks
+  exactly like the lax.scan carry, but VMEM-resident. Per step it computes
+
+    out[i] = sum_{j<=i} (q_i . k_j) e^{A_i - A_j} v_j  +  e^{A_i} q_i . S
+    S     <- e^{A_last} S + sum_j e^{A_last - A_j} k_j v_j^T
+
+  (A = within-chunk inclusive cumulative log-decay, <= 0 — every exp <= 1).
+
+HBM traffic = q + k + v + decay + out (+ S once at the end): the score
+blocks and state never leave VMEM. Validated in interpret mode against the
+sequential-recurrence oracle (tests/test_kernels.py::test_chunked_linear_*).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _chunk_kernel(
+    q_ref,    # (1, chunk, dk)
+    k_ref,    # (1, chunk, dk)
+    v_ref,    # (1, chunk, dv)
+    a_ref,    # (1, chunk, 1)  inclusive cumulative log-decay
+    o_ref,    # out (1, chunk, dv)
+    s_out,    # out (1, dk, dv) — final state, written on the last chunk
+    s_scr,    # scratch (dk, dv) f32
+    *,
+    chunk: int,
+):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (chunk, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # (chunk, dv)
+    A = a_ref[0, :, 0].astype(jnp.float32)    # (chunk,)
+
+    # intra-chunk: scores (i, j) = (q_i . k_j) * exp(A_i - A_j), j <= i
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    diff = A[:, None] - A[None, :]
+    causal = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+              >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    D = jnp.where(causal, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    intra = jax.lax.dot_general(s * D, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # inter-chunk: q_i e^{A_i} . S_prev
+    q_scaled = q * jnp.exp(A)[:, None]
+    inter = jax.lax.dot_general(q_scaled, s_scr[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0] = (intra + inter).astype(o_ref.dtype)
+
+    # state update: S <- e^{A_last} S + sum_j e^{A_last - A_j} k_j v_j^T
+    a_last = A[chunk - 1]
+    k_scaled = k * jnp.exp(a_last - A)[:, None]
+    summ = jax.lax.dot_general(k_scaled, v, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    s_scr[...] = s_scr[...] * jnp.exp(a_last) + summ
+
+    @pl.when(c == nc - 1)
+    def _flush():
+        s_out[0] = s_scr[...]
+
+
+def chunked_linear_attention_kernel(
+    q: jnp.ndarray,          # (b, n, H, dk)
+    k: jnp.ndarray,
+    v: jnp.ndarray,          # (b, n, H, dv)
+    log_decay: jnp.ndarray,  # (b, n, H), <= 0
+    *,
+    chunk: int = 256,
+    normalize: bool = False,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Drop-in for models.linear_scan.chunked_linear_attention (same
+    semantics, VMEM-resident state). Returns (out, final_state)."""
+    b, n, H, dk = q.shape
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones((b, n, H, 1), v.dtype)], axis=-1)
+    dv = v.shape[-1]
+    chunk = min(chunk, n)
+    pad = (-n) % chunk
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v, log_decay = zpad(q), zpad(k), zpad(v), zpad(log_decay)
+    npad = q.shape[1]
+    nc = npad // chunk
+
+    def to_bh(x):  # (b, n, H, d) -> (b*H, n, d)
+        return x.transpose(0, 2, 1, 3).reshape(b * H, npad, x.shape[-1])
+
+    qb, kb, vb = to_bh(q), to_bh(k), to_bh(v)
+    # inclusive cumulative log-decay within each chunk
+    a = log_decay.transpose(0, 2, 1).reshape(b * H, nc, chunk)
+    A = jnp.cumsum(a.astype(jnp.float32), axis=-1).reshape(b * H, npad, 1)
+
+    kernel = functools.partial(_chunk_kernel, chunk=chunk)
+    out, state = pl.pallas_call(
+        kernel,
+        grid=(b * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * H, npad, dv), v.dtype),
+            jax.ShapeDtypeStruct((b * H, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(qb, kb, vb, A)
+
+    out = out.reshape(b, H, npad, dv).transpose(0, 2, 1, 3)[:, :n]
+    state = state.reshape(b, H, dk, dv)
+    if normalize:
+        num, den = out[..., :-1], out[..., -1]
+        out = num / jnp.maximum(jnp.abs(den.astype(jnp.float32)), 1.0
+                                ).astype(out.dtype)[..., None]
+    return out, state

@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: causal flash attention for prefill/training.
+
+Motivation (EXPERIMENTS.md §Perf cell B): prefill_32k is memory-bound
+because both XLA-level attention formulations round-trip large intermediates
+through HBM — `chunked_attention` writes (chunk x m) logit rows, and the
+pure-JAX online-softmax variant pays the scan-carry traffic for (m, l, acc)
+every kv step (measured: it is NOT better). The fix requires VMEM-resident
+accumulators, i.e. a kernel.
+
+Grid: (b, h, n/block_q, m/block_k), kv innermost. Per step the kernel holds
+q block (block_q, hd), k/v blocks (block_k, hd) and fp32 scratch
+(block_q, hd) + two (block_q, 128) stat tiles in VMEM; HBM traffic is
+exactly q + K + V + out (plus K/V re-reads once per q block — n/block_q
+times; pick block_q so q-block + kv-block + scratch fit VMEM, e.g. 512).
+
+GQA: the kv BlockSpec index map folds the query head onto its kv group
+(h // p), so grouped heads re-read the same KV block — on TPU these hits
+come from VMEM/The same HBM stream (p consecutive grid steps share it).
+
+Causal masking is in-kernel; fully-masked (q,k) block pairs are skipped
+with pl.when (no MXU work issued; the DMA prefetch still runs — noted as
+the remaining gap vs a grid-pruned kernel).
+
+Validated in interpret mode against the pure-jnp oracle over a shape/dtype
+sweep (tests/test_kernels.py::test_flash_prefill_*).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,   # (1, 1, block_q, hd)
+    k_ref,   # (1, 1, block_k, hd)
+    v_ref,   # (1, 1, block_k, hd)
+    o_ref,   # out (1, 1, block_q, hd)
+    acc_scr, m_scr, l_scr,
+    *,
+    scale: float,
+    n: int,
+    m: int,
+    block_q: int,
+    block_k: int,
+    causal: bool,
+    window: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # causal block skip: no live (q, k) pair when the whole k block is
+    # strictly in the future of the whole q block
+    live = (not causal) or True
+
+    @pl.when((not causal) or (k_start <= q_start + block_q - 1))
+    def _compute():
+        q = q_ref[0, 0]
+        k = k_ref[0, 0]
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (block_q, block_k)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < m
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window > 0:
+            mask = mask & (k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = jnp.broadcast_to(
+            l_scr[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True), l_scr.shape)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = l_scr[:, :1]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_prefill_attention(
+    q: jnp.ndarray,   # (b, n, h, hd)
+    k: jnp.ndarray,   # (b, m, g, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, n, h, hd = q.shape
+    m, g = k.shape[1], k.shape[2]
+    p = h // g
+    scale = hd**-0.5
+    block_q = min(block_q, max(8, n))
+    block_k = min(block_k, max(8, m))
+    qpad = (-n) % block_q
+    kpad = (-m) % block_k
+    qh = q.transpose(0, 2, 1, 3)  # (b, h, n, hd)
+    kh = k.transpose(0, 2, 1, 3)  # (b, g, m, hd)
+    vh = v.transpose(0, 2, 1, 3)
+    if qpad:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, qpad), (0, 0)))
+    if kpad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    nq = qh.shape[2] // block_q
+    nk = kh.shape[2] // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, n=n, m=m, block_q=block_q,
+        block_k=block_k, causal=causal, window=window or 0,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, qi, ki, _p=p: (bi, hi // _p, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, qi, ki, _p=p: (bi, hi // _p, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, nq * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out[:, :, :n].transpose(0, 2, 1, 3)

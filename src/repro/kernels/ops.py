@@ -1,0 +1,73 @@
+"""Jitted wrappers + dispatch for the Pallas kernels.
+
+`bifurcated_decode_attention` is the deployable fused path: the context arm
+runs the Pallas flash kernel (K_c/V_c streamed once for the whole batch);
+the small decode arm stays on einsums; both halves merge with the exact
+two-way online-softmax combine. Accepts the framework's cache layouts and
+handles the (g, m_c, hd) kernel layout internally.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bifurcated_decode import context_flash_partials
+
+NEG_INF = -1e30
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_m", "interpret", "ctx_layout"),
+)
+def bifurcated_decode_attention(
+    q: jnp.ndarray,         # (b, g, p, 1, hd) — framework decode layout
+    k_ctx: jnp.ndarray,     # (m_c, g, hd) "mgk" or (g, m_c, hd) "gmk"
+    v_ctx: jnp.ndarray,
+    k_dec: jnp.ndarray,     # (b, c_d, g, hd)
+    v_dec: jnp.ndarray,
+    dec_mask: jnp.ndarray,  # (b, c_d) bool
+    *,
+    scale: Optional[float] = None,
+    block_m: int = 512,
+    interpret: bool = True,
+    ctx_layout: str = "mgk",
+) -> jnp.ndarray:
+    b, g, p, n, hd = q.shape
+    assert n == 1, "fused kernel path is n=1 decode; use einsum path for n>1"
+    scale = hd**-0.5 if scale is None else scale
+
+    # ---- context arm: Pallas flash kernel, (g, rows, hd) layout ----
+    qk = q[:, :, :, 0, :].transpose(1, 0, 2, 3).reshape(g, b * p, hd)
+    if ctx_layout == "gmk":  # already kernel-major: zero-copy
+        kc, vc = k_ctx, v_ctx
+    else:
+        kc = k_ctx.transpose(1, 0, 2)  # (g, m_c, hd)
+        vc = v_ctx.transpose(1, 0, 2)
+    acc_c, m_cx, l_c = context_flash_partials(
+        qk, kc, vc, scale=scale, block_m=block_m, interpret=interpret
+    )  # (g, b*p, hd), (g, b*p), (g, b*p)
+
+    # ---- decode arm: einsum partials (c_d is small) ----
+    s_d = jnp.einsum("bgpk,bmgk->bgpm", q[:, :, :, 0, :], k_dec).astype(jnp.float32)
+    s_d = s_d * scale
+    s_d = jnp.where(dec_mask[:, None, None, :], s_d, NEG_INF)
+    m_d = jnp.max(s_d, axis=-1)
+    m_d = jnp.maximum(m_d, NEG_INF / 2)
+    e_d = jnp.exp(s_d - m_d[..., None])
+    l_d = jnp.sum(e_d, axis=-1)
+    acc_d = jnp.einsum("bgpm,bmgv->bgpv", e_d.astype(v_dec.dtype), v_dec).astype(jnp.float32)
+
+    # ---- exact two-way merge ----
+    acc_cb = acc_c.reshape(g, b, p, hd).transpose(1, 0, 2, 3)
+    m_cb = m_cx.reshape(g, b, p).transpose(1, 0, 2)
+    l_cb = l_c.reshape(g, b, p).transpose(1, 0, 2)
+    m_star = jnp.maximum(m_cb, m_d)
+    corr_c = jnp.exp(m_cb - m_star)
+    corr_d = jnp.exp(m_d - m_star)
+    l_tot = l_cb * corr_c + l_d * corr_d
+    out = (acc_cb * corr_c[..., None] + acc_d * corr_d[..., None]) / l_tot[..., None]
+    return out[:, :, :, None, :].astype(q.dtype)  # (b, g, p, 1, hd)

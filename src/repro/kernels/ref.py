@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (no pallas imports here)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bifurcated_decode_ref(
+    q: jnp.ndarray,          # (b, g, p, hd)  — one decode token per sample
+    k_ctx: jnp.ndarray,      # (g, m_c, hd)   — shared context, kernel layout
+    v_ctx: jnp.ndarray,      # (g, m_c, hd)
+    k_dec: jnp.ndarray,      # (b, g, c_d, hd)
+    v_dec: jnp.ndarray,      # (b, g, c_d, hd)
+    dec_mask: jnp.ndarray,   # (b, c_d) bool
+    scale: float,
+) -> jnp.ndarray:
+    """Monolithic softmax over [K_ctx ⊕ K_dec] — ground truth."""
+    b, g, p, hd = q.shape
+    lc = jnp.einsum("bgpk,gmk->bgpm", q, k_ctx).astype(jnp.float32) * scale
+    ld = jnp.einsum("bgpk,bgmk->bgpm", q, k_dec).astype(jnp.float32) * scale
+    ld = jnp.where(dec_mask[:, None, None, :], ld, -1e30)
+    logits = jnp.concatenate([lc, ld], axis=-1)
+    w = jax.nn.softmax(logits, axis=-1)
+    m_c = k_ctx.shape[1]
+    oc = jnp.einsum("bgpm,gmv->bgpv", w[..., :m_c].astype(v_ctx.dtype), v_ctx)
+    od = jnp.einsum("bgpm,bgmv->bgpv", w[..., m_c:].astype(v_dec.dtype), v_dec)
+    return (oc + od).astype(q.dtype)
+
+
+def context_partial_ref(q, k_ctx, v_ctx, scale):
+    """Unnormalized flash partials of the context arm: (acc, m, l)."""
+    s = jnp.einsum("bgpk,gmk->bgpm", q, k_ctx).astype(jnp.float32) * scale
+    m = jnp.max(s, axis=-1)
+    e = jnp.exp(s - m[..., None])
+    l = jnp.sum(e, axis=-1)
+    acc = jnp.einsum("bgpm,gmv->bgpv", e.astype(v_ctx.dtype), v_ctx).astype(jnp.float32)
+    return acc, m, l

@@ -1,0 +1,123 @@
+"""HLO-text analysis: collective bytes for the roofline's third term.
+
+``cost_analysis()`` has FLOPs and HBM bytes but not collective traffic, so we
+parse the compiled module text and sum the bytes moved by every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Bytes-moved convention (ring algorithms, per-chip):
+  all-reduce        2 * (n-1)/n * result_bytes   (reduce-scatter + all-gather)
+  all-gather        (n-1)/n * result_bytes
+  reduce-scatter    (n-1)/n * operand_bytes ~= result_bytes * (n-1)
+  all-to-all        (n-1)/n * result_bytes
+  collective-permute  result_bytes
+We report both the raw per-op result-bytes sum and the ring-adjusted bytes;
+the roofline uses the ring-adjusted number with n = the largest group size
+found on the op (conservative).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[128,32,128]' -> bytes. tuple types: sum components."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len(first.split(","))
+    return 2
+
+
+def collective_stats(hlo_text: str) -> Dict[str, dict]:
+    """Per-collective-kind {count, result_bytes, ring_bytes}."""
+    stats = defaultdict(lambda: {"count": 0, "result_bytes": 0, "ring_bytes": 0})
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result type appears after '=', op name after that: "%x = bf16[..] all-reduce("
+        m = re.match(r"%?[\w.\-]+ = ((?:\([^)]*\)|[\w\[\],{}\s/]+?)) ([\w\-]+)\(", ls)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        nbytes = _shape_bytes(type_str)
+        n = max(2, _group_size(ls))
+        if kind == "all-reduce":
+            ring = int(2 * (n - 1) / n * nbytes)
+        elif kind in ("all-gather", "all-to-all"):
+            ring = int((n - 1) / n * nbytes)
+        elif kind == "reduce-scatter":
+            ring = int((n - 1) * nbytes)  # operand = result * n
+        else:  # collective-permute
+            ring = nbytes
+        stats[kind]["count"] += 1
+        stats[kind]["result_bytes"] += nbytes
+        stats[kind]["ring_bytes"] += ring
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(v["ring_bytes"] for v in collective_stats(hlo_text).values())
+
+
+# ---- roofline -------------------------------------------------------------
+
+V5E = dict(
+    peak_flops=197e12,     # bf16 FLOP/s per chip
+    hbm_bw=819e9,          # bytes/s per chip
+    ici_bw=50e9,           # bytes/s per link (brief's constant)
+)
+
+
+def roofline_terms(*, flops: float, hbm_bytes: float, collective_bytes: float,
+                   chips: int, hw: dict = V5E) -> dict:
+    t_comp = flops / (chips * hw["peak_flops"])
+    t_mem = hbm_bytes / (chips * hw["hbm_bw"])
+    t_coll = collective_bytes / (chips * hw["ici_bw"])
+    terms = {"t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(t_comp, t_mem, t_coll)
+    terms.update(
+        dominant=dominant,
+        roofline_bound_s=bound,
+        compute_fraction=(t_comp / bound if bound > 0 else 0.0),
+    )
+    return terms

@@ -1,0 +1,18 @@
+"""Production meshes. A FUNCTION, not a module-level constant — importing
+this module never touches jax device state (per the brief)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ("data", "model"); multi_pod adds a leading
+    pure-DP "pod" axis (2 pods = 512 chips, gradient all-reduce over DCN)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh for CPU multi-device tests (8 forced host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,146 @@
+"""Input ShapeDtypeStruct stand-ins per (arch × shape) cell — weak-type
+correct, shardable, zero allocation.
+
+Shape set (per assignment):
+  train_4k     seq 4096,   global_batch 256  -> train_step
+  prefill_32k  seq 32768,  global_batch 32   -> prefill_step
+  decode_32k   seq 32768,  global_batch 128  -> serve_step (1 new token)
+  long_500k    seq 524288, global_batch 1    -> serve_step, sub-quadratic only
+
+Skips (DESIGN.md §Arch-applicability): long_500k is skipped for pure
+full-attention archs (internlm2, qwen1.5-32b, stablelm, dbrx, whisper,
+internvl2) and runs for SWA (danube, mixtral) and SSM/hybrid (xlstm, zamba2).
+Whisper convention: train = enc m/2 frames + dec m/2 tokens; decode shapes
+use a fixed 1500-frame encoder memory. VLM: 1024 stub patch embeddings are
+part of the (shared) prefix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+FULL_ATTENTION_ONLY = {
+    "internlm2-1.8b", "qwen1.5-32b", "stablelm-3b", "dbrx-132b",
+    "whisper-medium", "internvl2-26b",
+}
+
+WHISPER_ENC_FRAMES_DECODE = 1500
+
+
+def cell_supported(arch: str, shape: str) -> bool:
+    if shape == "long_500k" and arch in FULL_ATTENTION_ONLY:
+        return False
+    return True
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def train_batch_specs(cfg: ModelConfig, seq_len: int, batch: int) -> dict:
+    if cfg.family == "encdec":
+        n = seq_len // 2
+        return {
+            "frames": _f32((batch, n, cfg.d_model)),
+            "tokens": _i32((batch, n)),
+            "targets": _i32((batch, n)),
+            "mask": _f32((batch, n)),
+        }
+    if cfg.family == "vlm":
+        n_text = seq_len - cfg.n_image_tokens
+        return {
+            "patch_embeds": _f32((batch, cfg.n_image_tokens, cfg.d_model)),
+            "tokens": _i32((batch, n_text)),
+            "targets": _i32((batch, n_text)),
+            "mask": _f32((batch, n_text)),
+        }
+    return {
+        "tokens": _i32((batch, seq_len)),
+        "targets": _i32((batch, seq_len)),
+        "mask": _f32((batch, seq_len)),
+    }
+
+
+def prefill_input_specs(cfg: ModelConfig, seq_len: int, batch: int) -> dict:
+    if cfg.family == "encdec":
+        n = seq_len // 2
+        return {"tokens": _i32((batch, n)),
+                "frames": _f32((batch, n, cfg.d_model))}
+    if cfg.family == "vlm":
+        return {"tokens": _i32((batch, seq_len - cfg.n_image_tokens)),
+                "patch_embeds": _f32((batch, cfg.n_image_tokens, cfg.d_model))}
+    return {"tokens": _i32((batch, seq_len))}
+
+
+def decode_cache_specs(cfg: ModelConfig, model, seq_len: int, batch: int,
+                       bifurcated: bool, ctx_quant: str = "none") -> dict:
+    """serve_step inputs: cache holding ``seq_len`` tokens + 1 new token."""
+    dec_cap = cfg.decode_capacity
+    if cfg.family in ("dense", "moe", "vlm"):
+        capacity = seq_len
+        if cfg.sliding_window and seq_len > cfg.sliding_window:
+            # SWA ring cache: live slots are the trailing window (+ headroom)
+            capacity = cfg.sliding_window + dec_cap
+        cache = model.make_cache_spec(batch, capacity, bifurcated=bifurcated,
+                                      dec_capacity=dec_cap,
+                                      ctx_quant=ctx_quant)
+        return {"cache": cache, "tokens": _i32((batch, 1))}
+    if cfg.family == "encdec":
+        cache = model.make_cache_spec(batch, seq_len, bifurcated=bifurcated,
+                                      dec_capacity=dec_cap,
+                                      n_enc=WHISPER_ENC_FRAMES_DECODE)
+        return {"cache": cache, "tokens": _i32((batch, 1))}
+    if cfg.family == "xlstm":
+        cache = model.make_cache_spec(batch, seq_len)
+        return {"cache": cache, "tokens": _i32((batch, 1))}
+    if cfg.family == "hybrid":
+        capacity = seq_len
+        cache = model.make_cache_spec(batch, capacity, bifurcated=bifurcated,
+                                      dec_capacity=dec_cap)
+        return {"cache": cache, "tokens": _i32((batch, 1))}
+    raise ValueError(cfg.family)
+
+
+def param_specs(model) -> dict:
+    """Abstract params via eval_shape: zero allocation."""
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def train_state_specs(model) -> dict:
+    params = param_specs(model)
+    f32like = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "params": params,
+        "opt_state": {
+            "m": jax.tree.map(f32like, params),
+            "v": jax.tree.map(f32like, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+    }
+
+
+def param_count(model) -> int:
+    return sum(int(np_prod(l.shape)) for l in jax.tree.leaves(param_specs(model)))
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out

@@ -1,0 +1,200 @@
+"""Step builders + input sharding trees for the dry-run and the real CLIs.
+
+Divisibility-aware sharding: a dim is sharded over an axis (group) only when
+its size divides evenly; otherwise it is replicated (e.g. batch=1 long_500k,
+kv-group counts < 16). Head-dependent weight tensors are sharded on the
+*flattened* h*hd / g*hd axes which are 16-divisible for every assigned arch
+(after qwen's 40->48 head padding via head_pad_multiple=16).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeshRules, ModelConfig, TrainConfig
+from repro.core.kv_cache import BifurcatedCache, DecodeCache
+from repro.distributed.sharding import param_pspec_tree
+from repro.launch import specs as S
+from repro.models import get_model
+from repro.runtime.train_loop import make_train_step
+
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(mesh, dim_size: int, axes):
+    """axes if dim divides the axes product, else None (replicate)."""
+    if axes is None:
+        return None
+    if dim_size % _axes_size(mesh, axes) == 0 and dim_size >= _axes_size(mesh, axes):
+        return axes
+    return None
+
+
+def batch_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def spec_for_leaf(mesh, leaf_shape, logical):
+    """logical: tuple of (axes-or-None) per dim with divisibility check."""
+    resolved = []
+    for size, ax in zip(leaf_shape, logical):
+        resolved.append(_maybe(mesh, size, ax))
+    return P(*resolved)
+
+
+def batch_pspec_tree(mesh, batch_specs: dict):
+    ba = batch_axes(mesh)
+    out = {}
+    for k, v in batch_specs.items():
+        logical = [ba] + [None] * (len(v.shape) - 1)
+        out[k] = spec_for_leaf(mesh, v.shape, logical)
+    return out
+
+
+def cache_pspec_tree(mesh, cache) -> object:
+    """PartitionSpecs for any cache pytree by leaf shape/kind."""
+    ba = batch_axes(mesh)
+
+    def spec_bif(c: BifurcatedCache):
+        # context m-dim is dim 1 ("mgk") or dim 2 ("gmk"): pick the larger
+        ctx_axes = [None, "model", None, None]
+        if c.k_ctx.shape[2] > c.k_ctx.shape[1]:
+            ctx_axes = [None, None, "model", None]
+        return BifurcatedCache(
+            k_ctx=spec_for_leaf(mesh, c.k_ctx.shape, ctx_axes),
+            v_ctx=spec_for_leaf(mesh, c.v_ctx.shape, ctx_axes),
+            k_dec=spec_for_leaf(mesh, c.k_dec.shape, [None, ba, "model", None, None]),
+            v_dec=spec_for_leaf(mesh, c.v_dec.shape, [None, ba, "model", None, None]),
+            dec_length=P(),
+        )
+
+    def spec_std(c: DecodeCache):
+        return DecodeCache(
+            k=spec_for_leaf(mesh, c.k.shape, [None, ba, "model", None, None]),
+            v=spec_for_leaf(mesh, c.v.shape, [None, ba, "model", None, None]),
+            length=P(),
+        )
+
+    def walk(node):
+        from repro.core.quantized import QuantBifurcatedCache
+
+        if isinstance(node, QuantBifurcatedCache):
+            ctx = spec_for_leaf(mesh, node.k_ctx.shape, [None, "model", None, None])
+            sc = spec_for_leaf(mesh, node.k_scale.shape, [None, "model", None])
+            dec = spec_for_leaf(mesh, node.k_dec.shape, [None, ba, "model", None, None])
+            return QuantBifurcatedCache(
+                k_ctx=ctx, v_ctx=ctx, k_scale=sc, v_scale=sc,
+                k_dec=dec, v_dec=dec, dec_length=P())
+        if isinstance(node, BifurcatedCache):
+            return spec_bif(node)
+        if isinstance(node, DecodeCache):
+            return spec_std(node)
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "mamba":
+                    out[k] = {
+                        "ssm": spec_for_leaf(mesh, v["ssm"].shape,
+                                             [None, ba, "model", None, None]),
+                        "conv": spec_for_leaf(mesh, v["conv"].shape,
+                                              [None, ba, None, "model"]),
+                    }
+                elif k == "mlstm":
+                    out[k] = spec_for_leaf(mesh, v.shape,
+                                           [None, None, ba, None, "model", None])
+                elif k in ("slstm_h", "slstm_c"):
+                    out[k] = spec_for_leaf(mesh, v.shape, [None, ba, None, "model"])
+                elif k in ("cross_k", "cross_v"):
+                    if len(v.shape) == 4:  # shared (L, m_enc, g, hd)
+                        out[k] = spec_for_leaf(mesh, v.shape, [None, "model", None, None])
+                    else:  # (L, b, m_enc, g, hd)
+                        out[k] = spec_for_leaf(mesh, v.shape,
+                                               [None, ba, "model", None, None])
+                elif k == "position":
+                    out[k] = P()
+                else:
+                    out[k] = walk(v)
+            return out
+        return P()
+
+    return walk(cache)
+
+
+def to_named(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def production_config(cfg: ModelConfig) -> ModelConfig:
+    """Apply lowering-time padding (16-way TP) to a full config."""
+    return dataclasses.replace(cfg, head_pad_multiple=16)
+
+
+def _fit_rules(rules: MeshRules, cfg: ModelConfig, mesh) -> MeshRules:
+    """Disable the EP axis when n_experts doesn't divide it (mixtral 8e on a
+    16-wide data axis falls back to replicated-expert TP)."""
+    if cfg.moe is not None and rules.expert is not None:
+        if cfg.moe.n_experts % mesh.shape[rules.expert] != 0:
+            rules = dataclasses.replace(rules, expert=None)
+    return rules
+
+
+def build_train(cfg: ModelConfig, mesh, tcfg: Optional[TrainConfig] = None):
+    rules = _fit_rules(MeshRules.production(multi_pod="pod" in mesh.axis_names),
+                       cfg, mesh)
+    model = get_model(cfg)
+    tcfg = tcfg or TrainConfig()
+    step = make_train_step(model, cfg, tcfg, rules)
+    return model, step, rules
+
+
+def build_prefill(cfg: ModelConfig, mesh):
+    rules = _fit_rules(MeshRules.serving(multi_pod="pod" in mesh.axis_names),
+                       cfg, mesh)
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        kwargs = {}
+        if cfg.family == "encdec":
+            kwargs["frames"] = batch["frames"]
+        if cfg.family == "vlm":
+            kwargs["patch_embeds"] = batch["patch_embeds"]
+        return model.prefill(params, batch["tokens"], rules, **kwargs)
+
+    return model, prefill_step, rules
+
+
+def build_serve(cfg: ModelConfig, mesh, *, impl: str = "flash"):
+    """serve_step = decode_step + temperature sampling (one new token)."""
+    rules = _fit_rules(MeshRules.serving(multi_pod="pod" in mesh.axis_names),
+                       cfg, mesh)
+    model = get_model(cfg)
+
+    def serve_step(params, cache, tokens, key):
+        logits, cache = model.decode_step(params, cache, tokens, rules, impl=impl)
+        next_tok = jax.random.categorical(
+            key, logits[:, -1].astype(jnp.float32) / 0.8, axis=-1
+        )
+        return next_tok, cache
+
+    return model, serve_step, rules

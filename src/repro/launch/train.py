@@ -1,0 +1,66 @@
+"""Training CLI: ``PYTHONPATH=src python -m repro.launch.train --arch <id>``.
+
+CPU-scale by default (reduced config + tiny steps) so it runs here; pass
+--full for the production config (requires a real TPU slice with the mesh
+from launch/mesh.py). Supports checkpoint/restart (auto-resume), heartbeat
+supervision, and gradient compression.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import TrainConfig, get_config, reduced_config
+from repro.data import SyntheticLMDataset
+from repro.models import get_model
+from repro.runtime.fault_tolerance import Heartbeat, supervise
+from repro.runtime.train_loop import run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (production) config")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=20)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--supervise", action="store_true",
+                    help="restart-on-failure wrapper (fault tolerance)")
+    ap.add_argument("--heartbeat", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced_config(cfg)
+    tcfg = TrainConfig(
+        global_batch=args.batch, seq_len=args.seq_len,
+        learning_rate=1e-3, warmup_steps=10, total_steps=max(args.steps, 10),
+        checkpoint_every=args.checkpoint_every,
+        grad_compression=args.grad_compression,
+    )
+    model = get_model(cfg)
+    data = SyntheticLMDataset(cfg.vocab_size, args.seq_len, seed=0)
+    hb = Heartbeat(args.heartbeat) if args.heartbeat else None
+
+    def run_once():
+        return run_training(
+            model, cfg, tcfg, data, num_steps=args.steps,
+            checkpoint_dir=args.checkpoint_dir,
+            heartbeat=(hb.beat if hb else None),
+        )
+
+    result = supervise(run_once) if args.supervise else run_once()
+    print(f"finished at step {result.final_step}; "
+          f"resumed_from={result.resumed_from}; skipped={result.skipped_steps}")
+    for step, loss in result.losses[:3] + result.losses[-3:]:
+        print(f"  step {step:5d} loss {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.api import get_model
+
+__all__ = ["get_model"]

@@ -1,0 +1,32 @@
+"""Unified model registry: cfg.family -> model implementation.
+
+Every model exposes:
+  init(key) -> params
+  train_logits(params, batch, rules, remat) -> (logits, aux_loss)
+  prefill(params, tokens, rules, ...) -> (logits, cache)
+  decode_step(params, cache, tokens, rules, ...) -> (logits, cache)
+  make_cache_spec(batch, capacity, bifurcated=...) -> cache of ShapeDtypeStructs
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import TransformerLM
+
+        return TransformerLM(cfg)
+    if cfg.family == "xlstm":
+        from repro.models.xlstm import XLSTMModel
+
+        return XLSTMModel(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HybridModel
+
+        return HybridModel(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecModel
+
+        return EncDecModel(cfg)
+    raise ValueError(f"unknown model family: {cfg.family}")

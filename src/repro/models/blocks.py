@@ -1,0 +1,415 @@
+"""Shared transformer building blocks: norms, MLPs, attention layers.
+
+All parameters are plain dicts of jnp arrays; all apply functions are pure.
+Layer parameters are vmapped at init into a stacked (L, ...) pytree so model
+forward passes can ``lax.scan`` over layers — keeping HLO size O(1) in depth,
+which is what makes the 512-chip dry-run of 40..81-layer models compile fast.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MeshRules, ModelConfig
+from repro.core.attention import decode_attention
+from repro.core.bifurcated import bifurcated_attention, bifurcated_attention_flash
+from repro.core.kv_cache import update_layer_cache
+from repro.core.masks import NEG_INF, causal_mask, mask_to_bias, sliding_window_mask
+from repro.core.rotary import apply_rope
+from repro.distributed.sharding import constrain
+
+Init = jax.nn.initializers.normal
+
+
+def _dense_init(key, shape, scale_axis=0, dtype=jnp.float32):
+    """Scaled-normal init (1/sqrt(fan_in))."""
+    fan_in = shape[scale_axis]
+    return (jax.random.normal(key, shape, dtype) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(cfg: ModelConfig, params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        out = (xf - mu) * lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    else:  # rmsnorm
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_normalize(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "wi_gate": _dense_init(k1, (d, f)),
+            "wi_up": _dense_init(k2, (d, f)),
+            "w_down": _dense_init(k3, (f, d)),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {"wi": _dense_init(k1, (d, f)), "w_down": _dense_init(k2, (f, d))}
+
+
+def apply_mlp(cfg: ModelConfig, params, x, rules: Optional[MeshRules]):
+    dtype = x.dtype
+    if cfg.act in ("swiglu", "geglu"):
+        gate = x @ params["wi_gate"].astype(dtype)
+        up = x @ params["wi_up"].astype(dtype)
+        act = jax.nn.silu(gate) if cfg.act == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(x @ params["wi"].astype(dtype))
+    h = constrain(h, rules, "batch", None, "tensor")
+    return h @ params["w_down"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, *, cross: bool = False):
+    d, hd = cfg.d_model, cfg.kq_dim
+    h, g = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(k1, (d, h * hd)),
+        "wk": _dense_init(k2, (d, g * hd)),
+        "wv": _dense_init(k3, (d, g * hd)),
+        "wo": _dense_init(k4, (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((g * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((g * hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, params, x, x_kv=None):
+    """x: (b, n, d) -> q (b, n, h, hd), k/v (b, m, g, hd)."""
+    dtype = x.dtype
+    h, g, hd = cfg.n_heads_padded, cfg.n_kv_heads_padded, cfg.kq_dim
+    x_kv = x if x_kv is None else x_kv
+    q = x @ params["wq"].astype(dtype)
+    k = x_kv @ params["wk"].astype(dtype)
+    v = x_kv @ params["wv"].astype(dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    b, n = q.shape[:2]
+    m = k.shape[1]
+    return (
+        q.reshape(b, n, h, hd),
+        k.reshape(b, m, g, hd),
+        v.reshape(b, m, g, hd),
+    )
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    rules: Optional[MeshRules] = None,
+) -> jnp.ndarray:
+    """Memory-bounded full attention: scan over query chunks.
+
+    q: (b, n, h, hd); k, v: (b, m, g, hd) with h = g * p — the kv tensors are
+    broadcast over the group dimension inside the einsum (no materialized
+    repeat). Logits for one chunk are (b, h, chunk, m): the peak activation
+    is n/chunk times smaller than the full logits tensor, which is what lets
+    prefill_32k lower without an O(n^2) buffer.
+    """
+    b, n, h, hd = q.shape
+    m, g = k.shape[1], k.shape[2]
+    p = h // g
+    scale = hd**-0.5
+    chunk = min(chunk, n)
+    if n % chunk != 0:  # pad queries to a chunk multiple
+        pad = chunk - n % chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = q.shape[1] // chunk
+    qs = q.reshape(b, nc, chunk, g, p, hd).transpose(1, 0, 3, 4, 2, 5)
+    # (nc, b, g, p, chunk, hd)
+
+    def one_chunk(carry, inp):
+        qc, start = inp
+        logits = jnp.einsum("bgpck,bmgk->bgpcm", qc, k).astype(jnp.float32) * scale
+        if causal:
+            q_pos = start + jnp.arange(chunk)[:, None]
+            k_pos = jnp.arange(m)[None, :]
+            mask = k_pos <= q_pos
+            if window is not None:
+                mask = mask & (k_pos > q_pos - window)
+            logits = logits + mask_to_bias(mask)
+        elif window is not None:
+            q_pos = start + jnp.arange(chunk)[:, None]
+            k_pos = jnp.arange(m)[None, :]
+            logits = logits + mask_to_bias(jnp.abs(k_pos - q_pos) < window)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bgpcm,bmgk->bgpck", w.astype(v.dtype), v)
+        return carry, out
+
+    starts = jnp.arange(nc) * chunk
+    _, outs = lax.scan(one_chunk, None, (qs, starts))
+    # (nc, b, g, p, chunk, hd) -> (b, nc, chunk, g, p, hd) -> (b, n, h, hd)
+    outs = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nc * chunk, h, hd)
+    return outs[:, :n]
+
+
+def flash_chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    rules: Optional[MeshRules] = None,
+) -> jnp.ndarray:
+    """Online-softmax (flash) attention in pure JAX: nested scans over query
+    and key chunks with fp32 (m, l, acc) carries. Never materializes
+    (n x m) logits in HBM — per-step live state is q_chunk x kv_chunk logits
+    plus the q_chunk x hd accumulator. Beyond-paper prefill optimization
+    (EXPERIMENTS.md §Perf): cuts the memory-bound prefill term ~10x vs the
+    `chunked_attention` baseline which writes full logit rows.
+
+    Shapes as `chunked_attention`: q (b, n, h, hd), k/v (b, m, g, hd).
+    """
+    b, n, h, hd = q.shape
+    m, g = k.shape[1], k.shape[2]
+    p = h // g
+    scale = hd**-0.5
+    q_chunk = min(q_chunk, n)
+    kv_chunk = min(kv_chunk, m)
+    qpad = (-n) % q_chunk
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    kpad = (-m) % kv_chunk
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    nq = q.shape[1] // q_chunk
+    nk = k.shape[1] // kv_chunk
+    qs = q.reshape(b, nq, q_chunk, g, p, hd).transpose(1, 0, 3, 4, 2, 5)
+    ks = k.reshape(b, nk, kv_chunk, g, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, kv_chunk, g, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_block(_, inp):
+        qc, qi = inp  # (b, g, p, qc, hd)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(carry, kv_inp):
+            m_run, l_run, acc = carry
+            kc, vc, ki = kv_inp  # (b, kv_chunk, g, hd)
+            s = jnp.einsum("bgpck,bmgk->bgpcm", qc, kc).astype(jnp.float32) * scale
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            if causal:
+                mask = k_pos[None, :] <= q_pos[:, None]
+                if window is not None:
+                    mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            else:
+                mask = jnp.broadcast_to(k_pos[None, :] < m, (q_chunk, kv_chunk))
+                if window is not None:
+                    mask = mask & (jnp.abs(k_pos[None, :] - q_pos[:, None]) < window)
+            s = s + mask_to_bias(mask)
+            m_cur = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m_run, m_cur)
+            corr = jnp.exp(m_run - m_new)
+            e = jnp.exp(s - m_new[..., None])
+            l_new = l_run * corr + jnp.sum(e, axis=-1)
+            pv = jnp.einsum("bgpcm,bmgk->bgpck", e.astype(vc.dtype), vc)
+            acc = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((b, g, p, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((b, g, p, q_chunk), jnp.float32),
+            jnp.zeros((b, g, p, q_chunk, hd), jnp.float32),
+        )
+        (m_f, l_f, acc), _ = lax.scan(kv_block, init, (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = lax.scan(q_block, None, (qs, jnp.arange(nq)))
+    # (nq, b, g, p, q_chunk, hd) -> (b, nq, q_chunk, g, p, hd) -> (b, n, h, hd)
+    outs = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * q_chunk, h, hd)
+    return outs[:, :n]
+
+
+def attention_train(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,
+    *,
+    rules: Optional[MeshRules],
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    x_kv: Optional[jnp.ndarray] = None,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill / encoder)."""
+    q, k, v = _project_qkv(cfg, params, x, x_kv)
+    if cfg.rope_theta > 0 and x_kv is None:
+        pos = positions if positions is not None else jnp.arange(q.shape[1])
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    q = constrain(q, rules, "batch", None, "tensor", None)
+    k = constrain(k, rules, "batch", None, None, None)
+    v = constrain(v, rules, "batch", None, None, None)
+    if cfg.train_attn == "flash":
+        o = flash_chunked_attention(
+            q, k, v, causal=causal, window=cfg.sliding_window,
+            q_chunk=chunk, rules=rules,
+        )
+    else:
+        o = chunked_attention(
+            q, k, v, causal=causal, window=cfg.sliding_window, chunk=chunk,
+            rules=rules,
+        )
+    b, n = o.shape[:2]
+    o = o.reshape(b, n, cfg.n_heads_padded * cfg.kq_dim)
+    return o @ params["wo"].astype(x.dtype)
+
+
+def attention_prefill_kv(
+    cfg: ModelConfig, params, x: jnp.ndarray, positions: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return the rotated K/V tensors that prefill writes into the cache."""
+    _, k, v = _project_qkv(cfg, params, x)
+    if cfg.rope_theta > 0:
+        pos = positions if positions is not None else jnp.arange(k.shape[1])
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return k, v
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,
+    layer_cache: dict,
+    *,
+    position: jnp.ndarray,
+    rules: Optional[MeshRules],
+    bifurcated: bool,
+    impl: str = "einsum",  # einsum (paper 4-einsum) | flash (online merge) | kernel (Pallas)
+) -> Tuple[jnp.ndarray, dict]:
+    """One incremental-decoding step for one layer.
+
+    ``layer_cache`` (standard):   {"k": (b,C,g,hd), "v": ...}
+    ``layer_cache`` (bifurcated): {"k_ctx": (m_c,g,hd), "v_ctx": ...,
+                                   "k_dec": (b,Cd,g,hd), "v_dec": ...}
+    ``position`` — absolute position of the new token(s); also the write
+    index for the standard cache; decode-cache index is position - m_c.
+    """
+    b, n = x.shape[:2]
+    g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
+    p = cfg.n_heads_padded // g
+    q, k_new, v_new = _project_qkv(cfg, params, x)
+    if cfg.rope_theta > 0:
+        pos = position + jnp.arange(n)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    q = q.reshape(b, n, g, p, hd).transpose(0, 2, 3, 1, 4)  # (b,g,p,n,hd)
+
+    window = cfg.sliding_window
+    if bifurcated:
+        quant = "k_scale" in layer_cache  # int8 context arm (core/quantized.py)
+        gmk = (not quant) and cfg.ctx_layout == "gmk"
+        m_c = layer_cache["k_ctx"].shape[1 if gmk else 0]
+        dec_idx = position - m_c
+        k_dec, v_dec = update_layer_cache(
+            layer_cache["k_dec"], layer_cache["v_dec"], k_new, v_new, dec_idx
+        )
+        cap = k_dec.shape[1]
+        slot = jnp.arange(cap)[None, :]
+        dec_valid = slot <= dec_idx + n - 1
+        ctx_valid = None
+        if window is not None:
+            # SWA clips the live context to the trailing `window` positions.
+            ctx_pos = jnp.arange(m_c)
+            ctx_valid = ctx_pos > (position + n - 1) - window
+            dec_valid = dec_valid & (slot + m_c > (position + n - 1) - window)
+        ctx_axes = (None, "kv_seq", None) if gmk else ("kv_seq", None, None)
+        k_ctx = constrain(layer_cache["k_ctx"], rules, *ctx_axes)
+        v_ctx = constrain(layer_cache["v_ctx"], rules, *ctx_axes)
+        if quant:
+            from repro.core.quantized import bifurcated_attention_q8
+
+            k_s = constrain(layer_cache["k_scale"], rules, "kv_seq", None)
+            v_s = constrain(layer_cache["v_scale"], rules, "kv_seq", None)
+            o = bifurcated_attention_q8(
+                q, k_ctx, v_ctx, k_s, v_s, k_dec, v_dec,
+                decode_mask=jnp.broadcast_to(dec_valid, (b, cap)),
+                context_mask=ctx_valid,
+            )
+        elif impl == "kernel" and n == 1 and window is None:
+            # fused Pallas flash-decode path (beyond-paper; kernels/ops.py)
+            from repro.kernels.ops import bifurcated_decode_attention
+
+            o = bifurcated_decode_attention(
+                q, k_ctx, v_ctx, k_dec, v_dec,
+                jnp.broadcast_to(dec_valid, (b, cap)),
+                ctx_layout=cfg.ctx_layout,
+            )
+        elif impl == "flash" or gmk:
+            o = bifurcated_attention_flash(
+                q, k_ctx, v_ctx, k_dec, v_dec,
+                decode_mask=jnp.broadcast_to(dec_valid, (b, cap)),
+                context_mask=ctx_valid, ctx_layout=cfg.ctx_layout,
+            )
+        else:
+            o = bifurcated_attention(
+                q, k_ctx, v_ctx, k_dec, v_dec,
+                decode_mask=jnp.broadcast_to(dec_valid, (b, cap)),
+                context_mask=ctx_valid,
+            )
+        new_cache = {**layer_cache, "k_dec": k_dec, "v_dec": v_dec}
+    else:
+        k_cache, v_cache = update_layer_cache(
+            layer_cache["k"], layer_cache["v"], k_new, v_new, position
+        )
+        cap = k_cache.shape[1]
+        slot = jnp.arange(cap)[None, :]
+        valid = slot <= position + n - 1
+        if window is not None:
+            valid = valid & (slot > (position + n - 1) - window)
+        k_cache = constrain(k_cache, rules, "batch", "kv_seq", None, None)
+        v_cache = constrain(v_cache, rules, "batch", "kv_seq", None, None)
+        o = decode_attention(
+            q, k_cache, v_cache, valid_mask=jnp.broadcast_to(valid, (b, cap))
+        )
+        new_cache = {**layer_cache, "k": k_cache, "v": v_cache}
+
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, n, cfg.n_heads_padded * hd)
+    return o @ params["wo"].astype(x.dtype), new_cache

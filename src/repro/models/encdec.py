@@ -1,0 +1,275 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend stubbed).
+
+`input_specs()` provides precomputed frame embeddings (b, n_frames, d) — the
+mel-spectrogram conv stem is a stub projection per the assignment brief.
+Learned absolute position embeddings on both stacks (rope_theta = 0).
+
+Bifurcation applies twice during shared-prefix batch sampling:
+  * decoder self-attention — standard BifurcatedCache;
+  * cross-attention — the encoder memory KV is *always* shared across
+    samples of one input, so it is stored unbatched (m_enc, g, hd): the
+    same one-read-for-all-b mechanism as the paper's context GEMM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MeshRules, ModelConfig
+from repro.core.bifurcated import bifurcated_attention  # noqa: F401 (docs)
+from repro.core.kv_cache import BifurcatedCache, DecodeCache
+from repro.core.masks import mask_to_bias
+from repro.distributed.sharding import constrain
+from repro.models import blocks
+from repro.models.blocks import (
+    apply_mlp,
+    apply_norm,
+    attention_decode,
+    attention_train,
+    init_attention,
+    init_mlp,
+    init_norm,
+)
+
+
+def _init_enc_layer(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_norm(cfg, cfg.d_model),
+        "attn": init_attention(cfg, k1),
+        "ln2": init_norm(cfg, cfg.d_model),
+        "mlp": init_mlp(cfg, k2),
+    }
+
+
+def _init_dec_layer(cfg: ModelConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg, cfg.d_model),
+        "attn": init_attention(cfg, k1),
+        "ln_x": init_norm(cfg, cfg.d_model),
+        "xattn": init_attention(cfg, k2),
+        "ln2": init_norm(cfg, cfg.d_model),
+        "mlp": init_mlp(cfg, k3),
+    }
+
+
+def shared_cross_attention(cfg: ModelConfig, params, q: jnp.ndarray,
+                           k_mem: jnp.ndarray, v_mem: jnp.ndarray) -> jnp.ndarray:
+    """Cross-attention against an *unbatched* shared encoder memory.
+
+    q: (b, n, d) decoder hidden; k_mem/v_mem: (m_enc, g, hd). This is the
+    context-only arm of bifurcated attention (paper Eq. 3-4 with m_d = 0).
+    """
+    h, g, hd = cfg.n_heads_padded, cfg.n_kv_heads_padded, cfg.kq_dim
+    p = h // g
+    b, n = q.shape[:2]
+    dtype = q.dtype
+    qh = (q @ params["wq"].astype(dtype)).reshape(b, n, g, p, hd).transpose(0, 2, 3, 1, 4)
+    logits = jnp.einsum("bgpnk,mgk->bgpnm", qh, k_mem).astype(jnp.float32) * hd**-0.5
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bgpnm,mgv->bgpnv", w.astype(v_mem.dtype), v_mem)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, n, h * hd)
+    return o @ params["wo"].astype(dtype)
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        enc_keys = jax.random.split(keys[0], cfg.n_encoder_layers)
+        dec_keys = jax.random.split(keys[1], cfg.n_layers)
+        return {
+            "frame_proj": blocks._dense_init(keys[2], (cfg.d_model, cfg.d_model)),
+            "enc_pos_embed": (jax.random.normal(keys[3], (cfg.max_enc_position, cfg.d_model)) * 0.01).astype(jnp.float32),
+            "enc_layers": jax.vmap(functools.partial(_init_enc_layer, cfg))(enc_keys),
+            "enc_norm": init_norm(cfg, cfg.d_model),
+            "embed": blocks._dense_init(keys[4], (cfg.padded_vocab, cfg.d_model), scale_axis=1),
+            "pos_embed": (jax.random.normal(keys[5], (cfg.max_position, cfg.d_model)) * 0.01).astype(jnp.float32),
+            "dec_layers": jax.vmap(functools.partial(_init_dec_layer, cfg))(dec_keys),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+
+    def _unembed(self, params, x, rules):
+        cfg = self.cfg
+        logits = x @ params["embed"].T.astype(x.dtype)  # tied
+        logits = constrain(logits, rules, "batch", None, "tensor")
+        if cfg.padded_vocab > cfg.vocab_size:
+            pad = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
+            logits = logits + pad.astype(logits.dtype)
+        return logits
+
+    def encode(self, params, frames, rules: Optional[MeshRules]):
+        cfg = self.cfg
+        n = frames.shape[1]
+        x = frames.astype(jnp.bfloat16) @ params["frame_proj"].astype(jnp.bfloat16)
+        x = x + params["enc_pos_embed"][:n].astype(x.dtype)
+        x = constrain(x, rules, "batch", None, None)
+
+        def body(x, layer):
+            a = attention_train(cfg, layer["attn"], apply_norm(cfg, layer["ln1"], x),
+                                rules=rules, causal=False)
+            x = x + a
+            x = x + apply_mlp(cfg, layer["mlp"], apply_norm(cfg, layer["ln2"], x), rules)
+            return constrain(x, rules, "batch", None, None), None
+
+        body = jax.checkpoint(body)
+        x, _ = lax.scan(body, x, params["enc_layers"])
+        return apply_norm(cfg, params["enc_norm"], x)
+
+    def train_logits(self, params, batch, rules: Optional[MeshRules], remat: str = "full"):
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"], rules)
+        tokens = batch["tokens"]
+        y = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+        y = y + params["pos_embed"][: tokens.shape[1]].astype(y.dtype)
+        y = constrain(y, rules, "batch", None, None)
+
+        def body(y, layer):
+            a = attention_train(cfg, layer["attn"], apply_norm(cfg, layer["ln1"], y),
+                                rules=rules, causal=True)
+            y = y + a
+            xa = attention_train(cfg, layer["xattn"], apply_norm(cfg, layer["ln_x"], y),
+                                 rules=rules, causal=False, x_kv=memory)
+            y = y + xa
+            y = y + apply_mlp(cfg, layer["mlp"], apply_norm(cfg, layer["ln2"], y), rules)
+            return constrain(y, rules, "batch", None, None), None
+
+        if remat == "full":
+            body = jax.checkpoint(body)
+        y, _ = lax.scan(body, y, params["dec_layers"])
+        y = apply_norm(cfg, params["final_norm"], y)
+        return self._unembed(params, y, rules), jnp.zeros((), jnp.float32)
+
+    # ---- serving ----
+    def make_cache_spec(self, batch, capacity, *, bifurcated, dec_capacity=None,
+                        n_enc: int = 1500):
+        cfg = self.cfg
+        g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
+        L = cfg.n_layers
+        dec_capacity = dec_capacity or cfg.decode_capacity
+        if bifurcated:
+            self_cache = BifurcatedCache.spec(L, batch, capacity - dec_capacity,
+                                              dec_capacity, g, hd)
+            cross = jax.ShapeDtypeStruct((L, n_enc, g, hd), jnp.bfloat16)
+        else:
+            self_cache = DecodeCache.spec(L, batch, capacity, g, hd)
+            cross = jax.ShapeDtypeStruct((L, batch, n_enc, g, hd), jnp.bfloat16)
+        return {"self": self_cache, "cross_k": cross, "cross_v": cross}
+
+    def prefill(self, params, tokens, rules: Optional[MeshRules],
+                frames=None, capacity=None, bifurcated=False, dec_capacity=None,
+                sample_batch=None):
+        """Encode frames, cross-KV once, then teacher-force the decoder prompt."""
+        cfg = self.cfg
+        b, n = tokens.shape
+        memory = self.encode(params, frames, rules)
+        m_enc = memory.shape[1]
+        y = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+        y = y + params["pos_embed"][:n].astype(y.dtype)
+        ks, vs, xks, xvs = [], [], [], []
+        for li in range(cfg.n_layers):
+            layer = jax.tree.map(lambda a: a[li], params["dec_layers"])
+            h = apply_norm(cfg, layer["ln1"], y)
+            k, v = blocks.attention_prefill_kv(cfg, layer["attn"], h)
+            ks.append(k); vs.append(v)
+            a = attention_train(cfg, layer["attn"], h, rules=rules, causal=True)
+            y = y + a
+            hx = apply_norm(cfg, layer["ln_x"], y)
+            xk, xv = blocks.attention_prefill_kv(cfg, layer["xattn"], memory)
+            xks.append(xk); xvs.append(xv)
+            xa = attention_train(cfg, layer["xattn"], hx, rules=rules,
+                                 causal=False, x_kv=memory)
+            y = y + xa
+            y = y + apply_mlp(cfg, layer["mlp"], apply_norm(cfg, layer["ln2"], y), rules)
+        y = apply_norm(cfg, params["final_norm"], y)
+        logits = self._unembed(params, y[:, -1:], rules)[:, 0]
+
+        dec_capacity = dec_capacity or cfg.decode_capacity
+        capacity = capacity or (n + dec_capacity)
+        ks, vs = jnp.stack(ks), jnp.stack(vs)          # (L, b, n, g, hd)
+        xks, xvs = jnp.stack(xks), jnp.stack(xvs)      # (L, b, m_enc, g, hd)
+        g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
+        if bifurcated:
+            cache = {
+                "self": BifurcatedCache.from_prefill(
+                    ks[:, 0], vs[:, 0], sample_batch or b, dec_capacity
+                ),
+                "cross_k": xks[:, 0], "cross_v": xvs[:, 0],
+            }
+        else:
+            pad = capacity - n
+            cache = {
+                "self": DecodeCache(
+                    k=jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                    v=jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                    length=jnp.asarray(n, jnp.int32),
+                ),
+                "cross_k": xks, "cross_v": xvs,
+            }
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, rules: Optional[MeshRules],
+                    *, impl: str = "einsum"):
+        cfg = self.cfg
+        self_cache = cache["self"]
+        bifurcated = isinstance(self_cache, BifurcatedCache)
+        b, n = tokens.shape
+        if bifurcated:
+            position = self_cache.k_ctx.shape[1] + self_cache.dec_length
+            lcaches = {"k_ctx": self_cache.k_ctx, "v_ctx": self_cache.v_ctx,
+                       "k_dec": self_cache.k_dec, "v_dec": self_cache.v_dec}
+        else:
+            position = self_cache.length
+            lcaches = {"k": self_cache.k, "v": self_cache.v}
+        y = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+        pos_vec = jnp.take(params["pos_embed"], position + jnp.arange(n), axis=0)
+        y = y + pos_vec.astype(y.dtype)
+
+        def body(y, inp):
+            layer, lcache, xk, xv = inp
+            h = apply_norm(cfg, layer["ln1"], y)
+            a, new_lcache = attention_decode(
+                cfg, layer["attn"], h, lcache, position=position, rules=rules,
+                bifurcated=bifurcated, impl=impl)
+            y = y + a
+            hx = apply_norm(cfg, layer["ln_x"], y)
+            if bifurcated:  # shared (unbatched) encoder memory — one read
+                xa = shared_cross_attention(cfg, layer["xattn"], hx, xk, xv)
+            else:
+                from repro.core.attention import decode_attention
+                g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
+                p = cfg.n_heads_padded // g
+                dtype = hx.dtype
+                qh = (hx @ layer["xattn"]["wq"].astype(dtype)).reshape(
+                    b, n, g, p, hd).transpose(0, 2, 3, 1, 4)
+                valid = jnp.ones((b, xk.shape[1]), bool)
+                o = decode_attention(qh, xk, xv, valid_mask=valid)
+                o = o.transpose(0, 3, 1, 2, 4).reshape(b, n, cfg.n_heads_padded * hd)
+                xa = o @ layer["xattn"]["wo"].astype(dtype)
+            y = y + xa
+            y = y + apply_mlp(cfg, layer["mlp"], apply_norm(cfg, layer["ln2"], y), rules)
+            return y, new_lcache
+
+        y, new_lcaches = lax.scan(
+            body, y, (params["dec_layers"], lcaches, cache["cross_k"], cache["cross_v"])
+        )
+        y = apply_norm(cfg, params["final_norm"], y)
+        logits = self._unembed(params, y, rules)
+        if bifurcated:
+            new_self = BifurcatedCache(
+                k_ctx=self_cache.k_ctx, v_ctx=self_cache.v_ctx,
+                k_dec=new_lcaches["k_dec"], v_dec=new_lcaches["v_dec"],
+                dec_length=self_cache.dec_length + n)
+        else:
+            new_self = DecodeCache(k=new_lcaches["k"], v=new_lcaches["v"],
+                                   length=self_cache.length + n)
+        return logits, {"self": new_self, "cross_k": cache["cross_k"],
+                        "cross_v": cache["cross_v"]}

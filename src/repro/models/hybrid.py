@@ -1,0 +1,302 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one globally-shared attention block.
+
+Layout: ``n_full`` super-blocks of (``attn_period`` mamba layers + one
+application of THE shared attention+MLP block), plus trailing mamba layers.
+zamba2-7b: 81 mamba layers = 13 x 6 + 3, shared block applied 13 times.
+The shared block's weights are a single set reused at every application
+(Zamba's parameter-sharing trick); its KV caches are per-application (13
+cache entries), and bifurcated attention applies to each application during
+shared-prefix batch decoding (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MeshRules, ModelConfig
+from repro.core.kv_cache import BifurcatedCache, DecodeCache
+from repro.distributed.sharding import constrain
+from repro.models import blocks
+from repro.models.blocks import (
+    apply_mlp,
+    apply_norm,
+    attention_decode,
+    attention_train,
+    init_attention,
+    init_mlp,
+    init_norm,
+)
+from repro.models.mamba import (
+    apply_mamba_decode,
+    apply_mamba_train,
+    init_mamba_layer,
+    mamba_state_init,
+    mamba_state_spec,
+)
+
+
+class HybridModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.attn_period > 0
+        self.n_super = cfg.n_layers // cfg.attn_period  # shared-attn applications
+        self.n_tail = cfg.n_layers - self.n_super * cfg.attn_period
+
+    def init(self, key):
+        cfg = self.cfg
+        kE, kM, kT, kA, kF = jax.random.split(key, 5)
+        init_m = functools.partial(init_mamba_layer, cfg)
+        mamba_keys = jax.random.split(kM, self.n_super * cfg.attn_period)
+        stacked = jax.vmap(init_m)(mamba_keys)
+        stacked = jax.tree.map(
+            lambda x: x.reshape(self.n_super, cfg.attn_period, *x.shape[1:]), stacked
+        )
+        params = {
+            "embed": blocks._dense_init(kE, (cfg.padded_vocab, cfg.d_model), scale_axis=1),
+            "mamba": stacked,
+            "shared_attn": {
+                "ln1": init_norm(cfg, cfg.d_model),
+                "attn": init_attention(cfg, kA),
+                "ln2": init_norm(cfg, cfg.d_model),
+                "mlp": init_mlp(cfg, kF),
+            },
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+        if self.n_tail:
+            tail_keys = jax.random.split(kT, self.n_tail)
+            params["mamba_tail"] = jax.vmap(init_m)(tail_keys)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = blocks._dense_init(
+                jax.random.fold_in(kE, 7), (cfg.padded_vocab, cfg.d_model), scale_axis=1
+            )
+        return params
+
+    def _unembed(self, params, x, rules):
+        cfg = self.cfg
+        table = params.get("lm_head", params["embed"])
+        logits = x @ table.T.astype(x.dtype)
+        logits = constrain(logits, rules, "batch", None, "tensor")
+        if cfg.padded_vocab > cfg.vocab_size:
+            pad = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
+            logits = logits + pad.astype(logits.dtype)
+        return logits
+
+    def _shared_block_train(self, params, x, rules, positions):
+        cfg = self.cfg
+        sb = params["shared_attn"]
+        a = attention_train(cfg, sb["attn"], apply_norm(cfg, sb["ln1"], x),
+                            rules=rules, positions=positions)
+        x = x + a
+        x = x + apply_mlp(cfg, sb["mlp"], apply_norm(cfg, sb["ln2"], x), rules)
+        return constrain(x, rules, "batch", None, None)
+
+    def train_logits(self, params, batch, rules: Optional[MeshRules], remat: str = "full"):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(jnp.bfloat16)
+        x = constrain(x, rules, "batch", None, None)
+        positions = jnp.arange(x.shape[1])
+
+        def super_block(x, layer_stack):
+            def mamba_body(x, lp):
+                return apply_mamba_train(cfg, lp, x, rules), None
+
+            x, _ = lax.scan(mamba_body, x, layer_stack)
+            x = self._shared_block_train(params, x, rules, positions)
+            return x, None
+
+        if remat == "full":
+            super_block = jax.checkpoint(super_block)
+        x, _ = lax.scan(super_block, x, params["mamba"])
+        if self.n_tail:
+            def mamba_body(x, lp):
+                return apply_mamba_train(cfg, lp, x, rules), None
+            x, _ = lax.scan(mamba_body, x, params["mamba_tail"])
+        x = apply_norm(cfg, params["final_norm"], x)
+        return self._unembed(params, x, rules), jnp.zeros((), jnp.float32)
+
+    # ---- serving ----
+    def make_cache_spec(self, batch, capacity, *, bifurcated, dec_capacity=None):
+        cfg = self.cfg
+        g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
+        dec_capacity = dec_capacity or cfg.decode_capacity
+        state = mamba_state_spec(cfg, self.n_super * cfg.attn_period + self.n_tail, batch)
+        if bifurcated:
+            attn = BifurcatedCache.spec(
+                self.n_super, batch, capacity - dec_capacity, dec_capacity, g, hd
+            )
+        else:
+            attn = DecodeCache.spec(self.n_super, batch, capacity, g, hd)
+        return {"attn": attn, "mamba": state,
+                "position": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def init_cache(self, batch, capacity, *, bifurcated, dec_capacity=None):
+        spec = self.make_cache_spec(batch, capacity, bifurcated=bifurcated,
+                                    dec_capacity=dec_capacity)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+    def prefill(self, params, tokens, rules: Optional[MeshRules], capacity=None,
+                dec_capacity=None, bifurcated=False):
+        """Sequential-free prefill: mamba states via chunked scan, attention
+        KVs computed in full, then packed into the serve cache."""
+        cfg = self.cfg
+        b, n = tokens.shape
+        capacity = capacity or (n + cfg.decode_capacity)
+        cache = self.init_cache(b, capacity, bifurcated=bifurcated,
+                                dec_capacity=dec_capacity)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+        positions = jnp.arange(n)
+        # NOTE: prefill runs the mamba stack chunk-parallel but keeps the
+        # final state; attention KVs for the shared block are stored per
+        # application. Implemented as a python loop over super-blocks (13
+        # iterations — fine, weights are shared).
+        from repro.models.linear_scan import chunked_linear_attention  # noqa
+        attn_ks, attn_vs = [], []
+        states = []
+
+        def run_stack(x, stack, n_l):
+            sts = []
+            for i in range(n_l):
+                lp = jax.tree.map(lambda a: a[i], stack)
+                x2 = apply_mamba_train(cfg, lp, x, rules)
+                # recompute final state cheaply via decode on last token is
+                # incorrect; instead capture states with a stateful variant:
+                x = x2
+                sts.append(None)
+            return x
+
+        # For serving-grade prefill we need final ssm states; use the
+        # chunked kernel's returned state by re-running each layer with
+        # state capture.
+        def run_layer_with_state(x, lp):
+            from repro.models.mamba import mamba_dims, _mamba_inner, _causal_conv
+            from repro.models.blocks import rms_normalize
+            d_inner, nh, state_d = mamba_dims(cfg)
+            hd = d_inner // nh
+            h = rms_normalize(x, lp["ln"]["scale"])
+            z, xbc, dt = _mamba_inner(cfg, lp, h)
+            xbc = jax.nn.silu(_causal_conv(xbc, lp["conv_w"], lp["conv_b"]))
+            xs, B, C = jnp.split(xbc, [d_inner, d_inner + state_d], axis=-1)
+            dtf = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+            log_decay = -jnp.exp(lp["A_log"]) * dtf
+            v = xs.reshape(b, n, nh, hd) * dtf[..., None].astype(xs.dtype)
+            q = jnp.broadcast_to(C[:, :, None, :], (b, n, nh, state_d))
+            k = jnp.broadcast_to(B[:, :, None, :], (b, n, nh, state_d))
+            out, S = chunked_linear_attention(q, k, v, log_decay, chunk=cfg.ssm.chunk)
+            out = out + xs.reshape(b, n, nh, hd) * lp["D"][:, None].astype(xs.dtype)
+            out = rms_normalize(out.reshape(b, n, d_inner) * jax.nn.silu(z), lp["norm_scale"])
+            conv_tail = xbc_raw = None
+            # conv state: last (width-1) pre-conv channels
+            _, xbc_pre, _ = _mamba_inner(cfg, lp, h)
+            conv_state = xbc_pre[:, -(cfg.ssm.conv_width - 1):].astype(jnp.bfloat16)
+            return x + out @ lp["out_proj"].astype(x.dtype), S, conv_state
+
+        li = 0
+        for sb_idx in range(self.n_super):
+            for i in range(cfg.attn_period):
+                lp = jax.tree.map(lambda a: a[sb_idx, i], params["mamba"])
+                x, S, cs = run_layer_with_state(x, lp)
+                states.append((S, cs))
+                li += 1
+            sbp = params["shared_attn"]
+            h = apply_norm(cfg, sbp["ln1"], x)
+            k, v = blocks.attention_prefill_kv(cfg, sbp["attn"], h, positions)
+            attn_ks.append(k)
+            attn_vs.append(v)
+            x = self._shared_block_train(params, x, rules, positions)
+        for i in range(self.n_tail):
+            lp = jax.tree.map(lambda a: a[i], params["mamba_tail"])
+            x, S, cs = run_layer_with_state(x, lp)
+            states.append((S, cs))
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x[:, -1:], rules)[:, 0]
+
+        ssm = jnp.stack([s for s, _ in states])
+        conv = jnp.stack([c for _, c in states])
+        ks = jnp.stack(attn_ks)  # (n_super, b, n, g, hd)
+        vs = jnp.stack(attn_vs)
+        if bifurcated:
+            attn_cache = cache["attn"]
+            attn_cache = BifurcatedCache(
+                k_ctx=ks[:, 0, : attn_cache.k_ctx.shape[1]],
+                v_ctx=vs[:, 0, : attn_cache.v_ctx.shape[1]],
+                k_dec=attn_cache.k_dec, v_dec=attn_cache.v_dec,
+                dec_length=jnp.zeros((), jnp.int32),
+            )
+        else:
+            dc = cache["attn"]
+            pad = dc.k.shape[2] - n
+            attn_cache = DecodeCache(
+                k=jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                v=jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                length=jnp.asarray(n, jnp.int32),
+            )
+        new_cache = {"attn": attn_cache, "mamba": {"ssm": ssm, "conv": conv},
+                     "position": jnp.asarray(n, jnp.int32)}
+        return logits, new_cache
+
+    def decode_step(self, params, cache, tokens, rules: Optional[MeshRules],
+                    *, impl: str = "einsum"):
+        cfg = self.cfg
+        bifurcated = isinstance(cache["attn"], BifurcatedCache)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+        position = cache["position"]
+        mamba_state = cache["mamba"]
+        attn_cache = cache["attn"]
+
+        def mamba_slice(i):
+            return jax.tree.map(lambda a: a[i], mamba_state)
+
+        new_ssm, new_conv = [], []
+        if bifurcated:
+            attn_pos = attn_cache.k_ctx.shape[1] + attn_cache.dec_length
+            lcaches = {"k_ctx": attn_cache.k_ctx, "v_ctx": attn_cache.v_ctx,
+                       "k_dec": attn_cache.k_dec, "v_dec": attn_cache.v_dec}
+        else:
+            attn_pos = attn_cache.length
+            lcaches = {"k": attn_cache.k, "v": attn_cache.v}
+        new_lcaches = []
+
+        li = 0
+        for sb_idx in range(self.n_super):
+            for i in range(cfg.attn_period):
+                lp = jax.tree.map(lambda a: a[sb_idx, i], params["mamba"])
+                x, st = apply_mamba_decode(cfg, lp, x, mamba_slice(li), rules)
+                new_ssm.append(st["ssm"]); new_conv.append(st["conv"])
+                li += 1
+            sbp = params["shared_attn"]
+            lc = jax.tree.map(lambda a: a[sb_idx], lcaches)
+            h = apply_norm(cfg, sbp["ln1"], x)
+            a, nlc = attention_decode(cfg, sbp["attn"], h, lc, position=attn_pos,
+                                      rules=rules, bifurcated=bifurcated,
+                                      impl=impl)
+            x = x + a
+            x = x + apply_mlp(cfg, sbp["mlp"], apply_norm(cfg, sbp["ln2"], x), rules)
+            new_lcaches.append(nlc)
+        for i in range(self.n_tail):
+            lp = jax.tree.map(lambda a: a[i], params["mamba_tail"])
+            x, st = apply_mamba_decode(cfg, lp, x, mamba_slice(li), rules)
+            new_ssm.append(st["ssm"]); new_conv.append(st["conv"])
+            li += 1
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x, rules)
+        stacked_lc = jax.tree.map(lambda *xs: jnp.stack(xs), *new_lcaches)
+        if bifurcated:
+            new_attn = BifurcatedCache(
+                k_ctx=attn_cache.k_ctx, v_ctx=attn_cache.v_ctx,
+                k_dec=stacked_lc["k_dec"], v_dec=stacked_lc["v_dec"],
+                dec_length=attn_cache.dec_length + tokens.shape[1],
+            )
+        else:
+            new_attn = DecodeCache(k=stacked_lc["k"], v=stacked_lc["v"],
+                                   length=attn_cache.length + tokens.shape[1])
+        new_cache = {
+            "attn": new_attn,
+            "mamba": {"ssm": jnp.stack(new_ssm), "conv": jnp.stack(new_conv)},
+            "position": position + tokens.shape[1],
+        }
+        return logits, new_cache

@@ -1,0 +1,142 @@
+"""Chunked scalar-decay linear attention — the SSM-family compute substrate.
+
+One algorithm serves both xLSTM's mLSTM (matrix memory, scalar exp/sig gates)
+and Mamba2's SSD (scalar-per-head decay): the recurrence
+
+    S_t = exp(a_t) * S_{t-1} + k_t v_t^T          (S: (dk, dv) per head)
+    h_t = q_t @ S_t                                (optionally normalized)
+
+is evaluated chunkwise: O(n * c) intra-chunk attention-like GEMMs plus an
+O(n / c) sequential `lax.scan` over chunk summaries. Sub-quadratic in n,
+O(1)-state decode — which is why the ssm/hybrid archs run the `long_500k`
+shape that pure full-attention archs skip.
+
+All decays are log-space (`a <= 0`), so every exponential in the chunked
+path is <= 1: no overflow, bf16-safe with fp32 accumulation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chunked_linear_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_decay: jnp.ndarray,
+    *,
+    chunk: int = 256,
+    normalize: bool = False,
+    initial_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Args:
+      q, k: (b, n, H, dk); v: (b, n, H, dv); log_decay: (b, n, H), <= 0.
+      normalize: mLSTM-style |q.n| denominator (tracked as an extra v column).
+
+    Returns:
+      (out (b, n, H, dv), final_state (b, H, dk, dv[+1])).
+    """
+    b, n, H, dk = q.shape
+    dv = v.shape[-1]
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones((b, n, H, 1), v.dtype)], axis=-1)
+    dv_s = v.shape[-1]
+
+    c = min(chunk, n)
+    pad = (-n) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // c
+
+    qf = q.astype(jnp.float32).reshape(b, nc, c, H, dk)
+    kf = k.astype(jnp.float32).reshape(b, nc, c, H, dk)
+    vf = v.astype(jnp.float32).reshape(b, nc, c, H, dv_s)
+    a = log_decay.astype(jnp.float32).reshape(b, nc, c, H)
+    A = jnp.cumsum(a, axis=2)  # inclusive within-chunk cumulative log decay
+    A_last = A[:, :, -1:, :]  # (b, nc, 1, H)
+
+    # ---- intra-chunk (attention-like, decay-weighted, causal) ----
+    # D[i, j] = exp(A_i - A_j) for j <= i else 0
+    diff = A[:, :, :, None, :] - A[:, :, None, :, :]  # (b,nc,i,j,H)
+    causal = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])[None, None, :, :, None]
+    D = jnp.exp(jnp.minimum(diff, 0.0)) * causal
+    scores = jnp.einsum("bcihk,bcjhk->bcijh", qf, kf) * D
+    out_intra = jnp.einsum("bcijh,bcjhv->bcihv", scores, vf)
+
+    # ---- chunk summaries ----
+    k_scaled = kf * jnp.exp(A_last - A)[..., None]  # decay from j to chunk end
+    summaries = jnp.einsum("bcjhk,bcjhv->bchkv", k_scaled, vf)
+    chunk_decay = jnp.exp(A_last[:, :, 0, :])  # (b, nc, H)
+    q_scaled = qf * jnp.exp(A)[..., None]
+
+    # ---- inter-chunk sequential scan ----
+    if initial_state is None:
+        S0 = jnp.zeros((b, H, dk, dv_s), jnp.float32)
+    else:
+        S0 = initial_state.astype(jnp.float32)
+
+    def body(S, inp):
+        qs, summ, dec = inp  # (b,c,H,dk), (b,H,dk,dv), (b,H)
+        out = jnp.einsum("bchk,bhkv->bchv", qs, S)
+        S_new = S * dec[:, :, None, None] + summ
+        return S_new, out
+
+    xs = (
+        q_scaled.transpose(1, 0, 2, 3, 4),
+        summaries.transpose(1, 0, 2, 3, 4),
+        chunk_decay.transpose(1, 0, 2),
+    )
+    S_final, out_inter = lax.scan(body, S0, xs)
+    out_inter = out_inter.transpose(1, 0, 2, 3, 4)  # (b, nc, c, H, dv)
+
+    out = (out_intra + out_inter).reshape(b, nc * c, H, dv_s)[:, :n]
+    if normalize:
+        num, den = out[..., :dv], out[..., dv]
+        out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return out.astype(v.dtype), S_final
+
+
+def linear_attention_decode(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_decay: jnp.ndarray,
+    state: jnp.ndarray,
+    *,
+    normalize: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrent update. q/k: (b,H,dk), v: (b,H,dv), a: (b,H),
+    state: (b,H,dk,dv[+1]). Returns (out (b,H,dv), new_state)."""
+    qf, kf = q.astype(jnp.float32), k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if normalize:
+        vf = jnp.concatenate([vf, jnp.ones((*vf.shape[:-1], 1), jnp.float32)], -1)
+    dec = jnp.exp(jnp.minimum(log_decay.astype(jnp.float32), 0.0))
+    new_state = state * dec[..., None, None] + kf[..., :, None] * vf[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", qf, new_state)
+    if normalize:
+        dv = v.shape[-1]
+        num, den = out[..., :dv], out[..., dv]
+        out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return out.astype(v.dtype), new_state
+
+
+def reference_linear_attention(q, k, v, log_decay, *, normalize=False):
+    """O(n^2)-free sequential oracle for tests: plain per-step recurrence."""
+    b, n, H, dk = q.shape
+    dv = v.shape[-1]
+    state = jnp.zeros((b, H, dk, dv + (1 if normalize else 0)), jnp.float32)
+    outs = []
+    for t in range(n):
+        o, state = linear_attention_decode(
+            q[:, t], k[:, t], v[:, t], log_decay[:, t], state, normalize=normalize
+        )
+        outs.append(o)
+    return jnp.stack(outs, axis=1), state

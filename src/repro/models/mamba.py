@@ -1,0 +1,144 @@
+"""Mamba2 (SSD) layer on the chunked linear-attention substrate.
+
+TPU adaptation: the selective-scan is evaluated with the chunkwise SSD
+decomposition (scalar-per-head decay == GLA with scalar gates), which maps to
+MXU-friendly GEMMs instead of the CUDA parallel-scan kernel. The depthwise
+causal conv (width 4) is a `lax.conv_general_dilated` with
+feature_group_count == channels.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MeshRules, ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.blocks import _dense_init, rms_normalize
+from repro.models.linear_scan import chunked_linear_attention, linear_attention_decode
+
+
+def mamba_dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = ssm.n_heads or d_inner // ssm.head_dim
+    return d_inner, n_heads, ssm.state_dim
+
+
+def init_mamba_layer(cfg: ModelConfig, key):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    d_inner, nh, state = mamba_dims(cfg)
+    conv_ch = d_inner + 2 * state
+    k1, k2, k3 = jax.random.split(key, 3)
+    proj_out = 2 * d_inner + 2 * state + nh  # z, x, B, C, dt
+    return {
+        "ln": {"scale": jnp.ones((d,), jnp.float32)},
+        "in_proj": _dense_init(k1, (d, proj_out)),
+        "conv_w": (jax.random.normal(k2, (ssm.conv_width, conv_ch)) * 0.1).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": _dense_init(k3, (d_inner, d)),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (b, n, ch); w: (width, ch)."""
+    width, ch = w.shape
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),  # (width, 1, ch) HIO
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=ch,
+    )
+    return (out + b).astype(x.dtype)
+
+
+def _mamba_inner(cfg: ModelConfig, p, x: jnp.ndarray):
+    """Project + conv + gate pieces shared by train and decode paths."""
+    d_inner, nh, state = mamba_dims(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, rest = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(rest, [d_inner + 2 * state], axis=-1)
+    return z, xbc, dt
+
+
+def apply_mamba_train(
+    cfg: ModelConfig, p, x: jnp.ndarray, rules: Optional[MeshRules]
+) -> jnp.ndarray:
+    d_inner, nh, state = mamba_dims(cfg)
+    hd = d_inner // nh
+    h = rms_normalize(x, p["ln"]["scale"])
+    z, xbc, dt = _mamba_inner(cfg, p, h)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
+    b, n = xs.shape[:2]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,n,nh)
+    log_decay = -jnp.exp(p["A_log"]) * dt  # <= 0
+    v = xs.reshape(b, n, nh, hd) * dt[..., None].astype(xs.dtype)
+    q = jnp.broadcast_to(C[:, :, None, :], (b, n, nh, state))
+    k = jnp.broadcast_to(B[:, :, None, :], (b, n, nh, state))
+    out, _ = chunked_linear_attention(
+        q, k, v, log_decay, chunk=cfg.ssm.chunk, normalize=False
+    )
+    out = out + xs.reshape(b, n, nh, hd) * p["D"][:, None].astype(xs.dtype)
+    out = out.reshape(b, n, d_inner)
+    out = rms_normalize(out * jax.nn.silu(z), p["norm_scale"])
+    out = constrain(out, rules, "batch", None, "tensor")
+    return x + out @ p["out_proj"].astype(x.dtype)
+
+
+def mamba_state_spec(cfg: ModelConfig, n_layers: int, batch: int, dtype=jnp.float32):
+    d_inner, nh, state = mamba_dims(cfg)
+    hd = d_inner // nh
+    conv_ch = d_inner + 2 * state
+    width = cfg.ssm.conv_width
+    return {
+        "ssm": jax.ShapeDtypeStruct((n_layers, batch, nh, state, hd), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((n_layers, batch, width - 1, conv_ch), jnp.bfloat16),
+    }
+
+
+def mamba_state_init(cfg: ModelConfig, n_layers: int, batch: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), mamba_state_spec(cfg, n_layers, batch)
+    )
+
+
+def apply_mamba_decode(
+    cfg: ModelConfig, p, x: jnp.ndarray, lstate: dict, rules: Optional[MeshRules]
+) -> Tuple[jnp.ndarray, dict]:
+    """x: (b, 1, d); lstate: {'ssm': (b,nh,state,hd), 'conv': (b,w-1,ch)}."""
+    d_inner, nh, state = mamba_dims(cfg)
+    hd = d_inner // nh
+    b = x.shape[0]
+    h = rms_normalize(x, p["ln"]["scale"])
+    z, xbc, dt = _mamba_inner(cfg, p, h)
+
+    conv_buf = jnp.concatenate([lstate["conv"], xbc.astype(jnp.bfloat16)], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bwc,wc->bc", conv_buf.astype(jnp.float32), w) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv_out).astype(x.dtype)  # (b, ch)
+    new_conv = conv_buf[:, 1:]
+
+    xs, B, C = jnp.split(xbc_t, [d_inner, d_inner + state], axis=-1)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,nh)
+    log_decay = -jnp.exp(p["A_log"]) * dt_t
+    v = xs.reshape(b, nh, hd) * dt_t[..., None].astype(xs.dtype)
+    q = jnp.broadcast_to(C[:, None, :], (b, nh, state))
+    k = jnp.broadcast_to(B[:, None, :], (b, nh, state))
+    out, new_ssm = linear_attention_decode(q, k, v, log_decay, lstate["ssm"])
+    out = out + xs.reshape(b, nh, hd) * p["D"][:, None].astype(xs.dtype)
+    out = out.reshape(b, 1, d_inner)
+    out = rms_normalize(out * jax.nn.silu(z), p["norm_scale"])
+    y = x + out @ p["out_proj"].astype(x.dtype)
+    return y, {"ssm": new_ssm, "conv": new_conv}

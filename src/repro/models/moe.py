@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN with GShard/T5X-style capacity-bounded dispatch.
+
+Top-k routing with a dense one-hot dispatch einsum: tokens are re-grouped into
+(G, S) dispatch groups of ``group_size`` tokens so the (G, S, E, C) dispatch
+tensor stays small (~2-3 % FLOP overhead at the assigned configs); expert
+weights carry an (E, d, f) layout sharded FSDP×TP. An auxiliary
+load-balancing loss (Switch-style) is returned alongside the output.
+
+Applies to dbrx-132b (16e top-4) and mixtral-8x7b (8e top-2); the attention
+part of those archs still uses bifurcated attention — MoE is orthogonal
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MeshRules, ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.blocks import _dense_init
+
+
+def init_moe(cfg: ModelConfig, key):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(k1, (d, e)),
+        "experts_wi_gate": _dense_init(k2, (e, d, f), scale_axis=1),
+        "experts_wi_up": _dense_init(k3, (e, d, f), scale_axis=1),
+        "experts_wo": _dense_init(k4, (e, f, d), scale_axis=1),
+    }
+
+
+def apply_moe(
+    cfg: ModelConfig, params, x: jnp.ndarray, rules: Optional[MeshRules]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, s, d) -> (out (b, s, d), aux_loss scalar)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    dtype = x.dtype
+    e, top_k = moe.n_experts, moe.top_k
+
+    sg = min(moe.group_size, s)
+    n_tok = b * s
+    pad = (-n_tok) % sg
+    xt = x.reshape(n_tok, d)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    n_groups = (n_tok + pad) // sg
+    xg = xt.reshape(n_groups, sg, d)
+    xg = constrain(xg, rules, "batch", None, None)
+
+    # --- routing (fp32) ---
+    logits = (xg.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, S, E)
+
+    # Switch-style load-balance aux loss over the whole batch.
+    density = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), e)
+    frac = jnp.mean(top1, axis=(0, 1))
+    aux_loss = e * jnp.sum(density * frac) * moe.router_aux_weight
+
+    # --- top-k assignment with capacity ---
+    capacity = int(sg * top_k * moe.capacity_factor / e)
+    capacity = max(capacity, 4)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (G, S, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each (token, k) inside its expert queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)  # (G, S, K, E)
+    flat = onehot.reshape(n_groups, sg * top_k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # (G, S*K, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(n_groups, sg, top_k)
+    keep = pos < capacity
+
+    # dispatch/combine tensors (G, S, E, C)
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)  # (G,S,K,C)
+    expert_oh = onehot.astype(jnp.float32)  # (G,S,K,E)
+    keep_f = keep.astype(jnp.float32)[..., None, None]
+    dispatch = jnp.einsum("gske,gskc->gsec", expert_oh, pos_oh * keep[..., None].astype(jnp.float32))
+    combine = jnp.einsum("gsk,gske,gskc->gsec", gate_vals * keep.astype(jnp.float32), expert_oh, pos_oh)
+
+    # --- expert FFN (dense GEMMs over (E, C) buffers) ---
+    # Expert parallelism: the dispatch output is token-sharded (g over data);
+    # constraining it expert-sharded (E over the EP axis) makes GSPMD emit
+    # the canonical token->expert ALL-TO-ALL instead of all-reducing the full
+    # expert buffers (the difference is ~160x collective bytes on
+    # dbrx-132b x train_4k — EXPERIMENTS.md §Perf cell C).
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(dtype), xg)  # (G,E,C,d)
+    use_ep = rules is not None and rules.active and rules.expert is not None
+    xe = constrain(xe, rules, "batch", None, None, None)
+    if use_ep:
+        # compute token-sharded FIRST, then reshard expert-sharded: the
+        # explicit boundary makes GSPMD emit the token->expert ALL-TO-ALL
+        # instead of pulling the E-sharding into the dispatch einsum (which
+        # would all-gather the (G,S,E,C) dispatch tensor).
+        xe = constrain(xe, rules, None, "expert", None, None)
+    gate = jnp.einsum("gecd,edf->gecf", xe, params["experts_wi_gate"].astype(dtype))
+    up = jnp.einsum("gecd,edf->gecf", xe, params["experts_wi_up"].astype(dtype))
+    h = jax.nn.silu(gate) * up
+    if use_ep:
+        h = constrain(h, rules, None, "expert", None, "tensor")
+    else:
+        h = constrain(h, rules, "batch", None, None, "tensor")
+    ye = jnp.einsum("gecf,efd->gecd", h, params["experts_wo"].astype(dtype))
+    if use_ep:
+        # expert->token all-to-all back to g-sharded before the combine
+        ye = constrain(ye, rules, None, "expert", None, None)
+        ye = constrain(ye, rules, "batch", None, None, None)
+
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(dtype), ye)
+    out = out.reshape(n_tok + pad, d)
+    if pad:
+        out = out[:n_tok]
+    return out.reshape(b, s, d), aux_loss
+
+
+def moe_decode(
+    cfg: ModelConfig, params, x: jnp.ndarray, rules: Optional[MeshRules]
+) -> jnp.ndarray:
+    """Decode-time MoE: per-token top-k without capacity games.
+
+    x: (b, n, d) with tiny n — gather the k expert weight slices per token is
+    memory-hostile on TPU; instead compute the k selected experts via one-hot
+    weighted einsum over the (small) token count.
+    """
+    moe = cfg.moe
+    b, n, d = x.shape
+    dtype = x.dtype
+    e, top_k = moe.n_experts, moe.top_k
+    xt = x.reshape(b * n, d)
+    logits = (xt.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    # weight per expert per token: (T, E)
+    w = jnp.zeros((b * n, e), jnp.float32)
+    w = jnp.sum(jax.nn.one_hot(gate_idx, e) * gate_vals[..., None], axis=1)
+    # Compute all experts on the tiny token set, weighted-sum: with n=1 this
+    # reads each live expert's weights once — decode is weight-IO bound
+    # regardless, and top-k masking of the one-hot keeps combine exact.
+    gate_h = jnp.einsum("td,edf->tef", xt, params["experts_wi_gate"].astype(dtype))
+    up_h = jnp.einsum("td,edf->tef", xt, params["experts_wi_up"].astype(dtype))
+    h = jax.nn.silu(gate_h) * up_h
+    ye = jnp.einsum("tef,efd->ted", h, params["experts_wo"].astype(dtype))
+    out = jnp.einsum("te,ted->td", w.astype(dtype), ye)
+    return out.reshape(b, n, d)

@@ -1,0 +1,245 @@
+"""Decoder-only transformer LM covering the dense / moe / vlm families.
+
+Layers are scan-stacked; the decode path supports both the standard batched
+KV cache and the paper's BifurcatedCache. VLM (internvl2) prepends stub
+patch embeddings to the token embeddings — the image tokens become part of
+the shared prefix and are covered by bifurcated attention like any other
+context token.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MeshRules, ModelConfig
+from repro.core.kv_cache import BifurcatedCache, DecodeCache
+from repro.distributed.sharding import constrain
+from repro.models import blocks
+from repro.models.blocks import (
+    apply_mlp,
+    apply_norm,
+    attention_decode,
+    attention_train,
+    init_attention,
+    init_mlp,
+    init_norm,
+)
+from repro.models.moe import apply_moe, init_moe, moe_decode
+
+
+def _init_layer(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    layer = {
+        "ln1": init_norm(cfg, cfg.d_model),
+        "attn": init_attention(cfg, k1),
+        "ln2": init_norm(cfg, cfg.d_model),
+    }
+    if cfg.moe is not None:
+        layer["moe"] = init_moe(cfg, k2)
+    else:
+        layer["mlp"] = init_mlp(cfg, k2)
+    return layer
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- params ----
+    def init(self, key):
+        cfg = self.cfg
+        kE, kL, kH, kP = jax.random.split(key, 4)
+        layer_keys = jax.random.split(kL, cfg.n_layers)
+        layers = jax.vmap(functools.partial(_init_layer, cfg))(layer_keys)
+        params = {
+            "embed": blocks._dense_init(kE, (cfg.padded_vocab, cfg.d_model), scale_axis=1),
+            "layers": layers,
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = blocks._dense_init(kH, (cfg.padded_vocab, cfg.d_model), scale_axis=1)
+        if cfg.family == "vlm":
+            # stub frontend: a single projection standing in for InternViT's
+            # mlp1 connector (patch embeddings are precomputed inputs).
+            params["img_proj"] = blocks._dense_init(kP, (cfg.d_model, cfg.d_model))
+        return params
+
+    # ---- shared pieces ----
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+        return x
+
+    def _unembed(self, params, x, rules):
+        cfg = self.cfg
+        table = params.get("lm_head", params["embed"])
+        logits = x @ table.T.astype(x.dtype)
+        logits = constrain(logits, rules, "batch", None, "tensor")
+        if cfg.padded_vocab > cfg.vocab_size:
+            pad_bias = jnp.where(
+                jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30
+            ).astype(logits.dtype)
+            logits = logits + pad_bias
+        return logits
+
+    def _layer_train(self, x, layer, rules, positions):
+        cfg = self.cfg
+        a = attention_train(cfg, layer["attn"], apply_norm(cfg, layer["ln1"], x),
+                            rules=rules, positions=positions)
+        x = x + a
+        x = constrain(x, rules, "batch", None, None)
+        h = apply_norm(cfg, layer["ln2"], x)
+        if cfg.moe is not None:
+            m, aux = apply_moe(cfg, layer["moe"], h, rules)
+        else:
+            m, aux = apply_mlp(cfg, layer["mlp"], h, rules), 0.0
+        x = x + m
+        x = constrain(x, rules, "batch", None, None)
+        return x, aux
+
+    # ---- training ----
+    def train_logits(self, params, batch, rules: Optional[MeshRules], remat: str = "full"):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm":
+            img = batch["patch_embeds"].astype(x.dtype) @ params["img_proj"].astype(x.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+        x = constrain(x, rules, "batch", None, None)
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, layer):
+            x, aux = self._layer_train(x, layer, rules, positions)
+            return x, aux
+
+        if remat == "full":
+            body = jax.checkpoint(body)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+        x, auxes = lax.scan(body, x, params["layers"])
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x, rules)
+        if cfg.family == "vlm":  # only text positions produce logits
+            logits = logits[:, batch["patch_embeds"].shape[1]:]
+        return logits, jnp.sum(auxes)
+
+    # ---- prefill (batched, standard cache out) ----
+    def prefill(self, params, tokens, rules: Optional[MeshRules],
+                patch_embeds: Optional[jnp.ndarray] = None):
+        """Returns (last-position logits, DecodeCache holding the context)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm" and patch_embeds is not None:
+            img = patch_embeds.astype(x.dtype) @ params["img_proj"].astype(x.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+        x = constrain(x, rules, "batch", None, None)
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, layer):
+            h = apply_norm(cfg, layer["ln1"], x)
+            k, v = blocks.attention_prefill_kv(cfg, layer["attn"], h, positions)
+            a = attention_train(cfg, layer["attn"], h, rules=rules, positions=positions)
+            x = x + a
+            h2 = apply_norm(cfg, layer["ln2"], x)
+            if cfg.moe is not None:
+                m, _ = apply_moe(cfg, layer["moe"], h2, rules)
+            else:
+                m = apply_mlp(cfg, layer["mlp"], h2, rules)
+            x = x + m
+            x = constrain(x, rules, "batch", None, None)
+            return x, (k, v)
+
+        x, (ks, vs) = lax.scan(body, x, params["layers"])
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x[:, -1:], rules)[:, 0]
+        cache = DecodeCache(k=ks, v=vs, length=jnp.asarray(x.shape[1], jnp.int32))
+        return logits, cache
+
+    # ---- decode ----
+    def decode_step(self, params, cache, tokens, rules: Optional[MeshRules],
+                    *, impl: str = "einsum"):
+        """tokens: (b, n) new token ids. Returns (logits (b, n, V), cache')."""
+        cfg = self.cfg
+        from repro.core.quantized import QuantBifurcatedCache
+
+        quant = isinstance(cache, QuantBifurcatedCache)
+        bifurcated = isinstance(cache, BifurcatedCache) or quant
+        x = self._embed(params, tokens)
+        x = constrain(x, rules, "batch", None, None)
+        if bifurcated:
+            m_dim = 2 if (cfg.ctx_layout == "gmk" and not quant) else 1
+            position = cache.k_ctx.shape[m_dim] + cache.dec_length
+            layer_caches = {
+                "k_ctx": cache.k_ctx, "v_ctx": cache.v_ctx,
+                "k_dec": cache.k_dec, "v_dec": cache.v_dec,
+            }
+            if quant:
+                layer_caches["k_scale"] = cache.k_scale
+                layer_caches["v_scale"] = cache.v_scale
+        else:
+            position = cache.length
+            layer_caches = {"k": cache.k, "v": cache.v}
+
+        def body(x, inp):
+            layer, lcache = inp
+            h = apply_norm(cfg, layer["ln1"], x)
+            a, new_lcache = attention_decode(
+                cfg, layer["attn"], h, lcache,
+                position=position, rules=rules,
+                bifurcated=bifurcated, impl=impl,
+            )
+            x = x + a
+            h2 = apply_norm(cfg, layer["ln2"], x)
+            if cfg.moe is not None:
+                m = moe_decode(cfg, layer["moe"], h2, rules)
+            else:
+                m = apply_mlp(cfg, layer["mlp"], h2, rules)
+            x = x + m
+            return x, new_lcache
+
+        x, new_caches = lax.scan(body, x, (params["layers"], layer_caches))
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x, rules)
+        n = tokens.shape[1]
+        if quant:
+            new_cache = QuantBifurcatedCache(
+                k_ctx=cache.k_ctx, v_ctx=cache.v_ctx,
+                k_scale=cache.k_scale, v_scale=cache.v_scale,
+                k_dec=new_caches["k_dec"], v_dec=new_caches["v_dec"],
+                dec_length=cache.dec_length + n,
+            )
+        elif bifurcated:
+            new_cache = BifurcatedCache(
+                k_ctx=cache.k_ctx, v_ctx=cache.v_ctx,
+                k_dec=new_caches["k_dec"], v_dec=new_caches["v_dec"],
+                dec_length=cache.dec_length + n,
+            )
+        else:
+            new_cache = DecodeCache(
+                k=new_caches["k"], v=new_caches["v"], length=cache.length + n
+            )
+        return logits, new_cache
+
+    # ---- cache constructors (dry-run + serving) ----
+    def make_cache_spec(self, batch, capacity, *, bifurcated, dec_capacity=None,
+                        ctx_quant: str = "none"):
+        cfg = self.cfg
+        g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
+        if bifurcated:
+            dec_capacity = dec_capacity or cfg.decode_capacity
+            if ctx_quant == "int8":
+                from repro.core.quantized import QuantBifurcatedCache
+
+                return QuantBifurcatedCache.spec(
+                    cfg.n_layers, batch, capacity - dec_capacity, dec_capacity,
+                    g, hd)
+            return BifurcatedCache.spec(
+                cfg.n_layers, batch, capacity - dec_capacity, dec_capacity, g, hd,
+                ctx_layout=cfg.ctx_layout,
+            )
+        return DecodeCache.spec(cfg.n_layers, batch, capacity, g, hd)

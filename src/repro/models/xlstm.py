@@ -1,0 +1,310 @@
+"""xLSTM (sLSTM + mLSTM) — attention-free family.
+
+xlstm-1.3b: 48 layers in 6 super-groups of (7 mLSTM + 1 sLSTM), matching the
+paper's ~7:1 ratio. mLSTM runs on the chunked linear-attention substrate
+(matrix memory + scalar gates, normalizer tracked as an extra value column);
+sLSTM is a per-timestep recurrent cell with per-head block-diagonal
+recurrence, evaluated with `lax.scan` over time.
+
+Bifurcated attention is inapplicable (no KV cache); the shared-prefix
+analogue is broadcasting the post-prefill recurrent state across samples,
+which is free (DESIGN.md §Arch-applicability). Decode state is O(1) in
+context length, so `long_500k` runs.
+
+Simplifications vs the released xLSTM (recorded per DESIGN.md): sigmoid
+input gates folded into keys instead of stabilized exp gates; z-branch
+SiLU gating instead of learned o-gate projections.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MeshRules, ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import blocks
+from repro.models.blocks import init_norm, apply_norm, rms_normalize
+from repro.models.linear_scan import (
+    chunked_linear_attention,
+    linear_attention_decode,
+)
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    nh = cfg.n_heads
+    hd = d_inner // nh
+    return d_inner, nh, hd
+
+
+def init_mlstm_layer(cfg: ModelConfig, key):
+    d = cfg.d_model
+    d_inner, nh, hd = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln": {"scale": jnp.ones((d,), jnp.float32)},
+        "up_proj": blocks._dense_init(k1, (d, 2 * d_inner)),
+        "wqkv": (jax.random.normal(k2, (3, nh, hd, hd)) / jnp.sqrt(hd)).astype(jnp.float32),
+        "w_gates": blocks._dense_init(k3, (d, 2 * nh)),
+        "gate_bias": jnp.array([0.0] * nh + [3.0] * nh, jnp.float32),  # forget bias
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "down_proj": blocks._dense_init(k4, (d_inner, d)),
+    }
+
+
+def _mlstm_qkv(cfg, p, x):
+    """x: (b, n, d) -> q,k,v (b,n,nh,hd), log_f (b,n,nh)."""
+    d_inner, nh, hd = _dims(cfg)
+    b, n = x.shape[:2]
+    u = x @ p["up_proj"].astype(x.dtype)
+    x_in, z = jnp.split(u, 2, axis=-1)
+    xh = x_in.reshape(b, n, nh, hd)
+    q = jnp.einsum("bnhd,hde->bnhe", xh, p["wqkv"][0].astype(x.dtype))
+    k = jnp.einsum("bnhd,hde->bnhe", xh, p["wqkv"][1].astype(x.dtype)) * (hd**-0.5)
+    v = jnp.einsum("bnhd,hde->bnhe", xh, p["wqkv"][2].astype(x.dtype))
+    gates = (x.astype(jnp.float32) @ p["w_gates"]) + p["gate_bias"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)  # (b,n,nh)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    i_gate = jax.nn.sigmoid(i_pre)
+    k = k * i_gate[..., None].astype(k.dtype)  # fold input gate into keys
+    return q, k, v, log_f, z
+
+
+def apply_mlstm_train(cfg: ModelConfig, p, x, rules: Optional[MeshRules]):
+    d_inner, nh, hd = _dims(cfg)
+    b, n = x.shape[:2]
+    h = rms_normalize(x, p["ln"]["scale"])
+    q, k, v, log_f, z = _mlstm_qkv(cfg, p, h)
+    out, _ = chunked_linear_attention(q, k, v, log_f, chunk=cfg.ssm.chunk, normalize=True)
+    out = rms_normalize(out.reshape(b, n, d_inner) * jax.nn.silu(z), p["norm_scale"])
+    out = constrain(out, rules, "batch", None, "tensor")
+    return x + out @ p["down_proj"].astype(x.dtype)
+
+
+def apply_mlstm_decode(cfg: ModelConfig, p, x, state, rules):
+    """x: (b, 1, d); state: (b, nh, hd, hd+1)."""
+    d_inner, nh, hd = _dims(cfg)
+    b = x.shape[0]
+    h = rms_normalize(x, p["ln"]["scale"])
+    q, k, v, log_f, z = _mlstm_qkv(cfg, p, h)
+    out, new_state = linear_attention_decode(
+        q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], state, normalize=True
+    )
+    out = rms_normalize(out.reshape(b, 1, d_inner) * jax.nn.silu(z), p["norm_scale"])
+    return x + out @ p["down_proj"].astype(x.dtype), new_state
+
+
+def init_slstm_layer(cfg: ModelConfig, key):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln": {"scale": jnp.ones((d,), jnp.float32)},
+        "w_in": blocks._dense_init(k1, (d, 4 * d)),
+        "r_rec": (jax.random.normal(k2, (nh, 4, hd, hd)) / jnp.sqrt(hd)).astype(jnp.float32),
+        "bias": jnp.zeros((4, nh, hd), jnp.float32),
+        "out_proj": blocks._dense_init(k3, (d, d)),
+    }
+
+
+def _slstm_cell(cfg, p, pre_t, h_prev, c_prev):
+    """pre_t: (b, 4, nh, hd); h/c: (b, nh, hd)."""
+    rec = jnp.einsum("bhd,hgde->bghe", h_prev.astype(jnp.float32), p["r_rec"])
+    g = pre_t.astype(jnp.float32) + rec + p["bias"]
+    i = jax.nn.sigmoid(g[:, 0])
+    f = jax.nn.sigmoid(g[:, 1] + 3.0)
+    z = jnp.tanh(g[:, 2])
+    o = jax.nn.sigmoid(g[:, 3])
+    c = f * c_prev + i * z
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def apply_slstm_train(cfg: ModelConfig, p, x, rules):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    b, n = x.shape[:2]
+    hn = rms_normalize(x, p["ln"]["scale"])
+    pre = (hn @ p["w_in"].astype(x.dtype)).reshape(b, n, 4, nh, hd)
+
+    def step(carry, pre_t):
+        h_prev, c_prev = carry
+        h, c = _slstm_cell(cfg, p, pre_t, h_prev, c_prev)
+        return (h, c), h
+
+    init = (jnp.zeros((b, nh, hd), jnp.float32), jnp.zeros((b, nh, hd), jnp.float32))
+    _, hs = lax.scan(step, init, pre.transpose(1, 0, 2, 3, 4))
+    out = hs.transpose(1, 0, 2, 3).reshape(b, n, d).astype(x.dtype)
+    return x + out @ p["out_proj"].astype(x.dtype)
+
+
+def apply_slstm_decode(cfg: ModelConfig, p, x, state, rules):
+    d = cfg.d_model
+    nh, hd = cfg.n_heads, d // cfg.n_heads
+    b = x.shape[0]
+    h_prev, c_prev = state
+    hn = rms_normalize(x, p["ln"]["scale"])
+    pre = (hn @ p["w_in"].astype(x.dtype)).reshape(b, 4, nh, hd)
+    h, c = _slstm_cell(cfg, p, pre, h_prev, c_prev)
+    out = h.reshape(b, 1, d).astype(x.dtype)
+    return x + out @ p["out_proj"].astype(x.dtype), (h, c)
+
+
+class XLSTMModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        every = cfg.ssm.slstm_every or 8
+        assert cfg.n_layers % every == 0
+        self.n_groups = cfg.n_layers // every
+        self.m_per_group = every - 1
+
+    def init(self, key):
+        cfg = self.cfg
+        kE, kM, kS, kH = jax.random.split(key, 4)
+        m_keys = jax.random.split(kM, self.n_groups * self.m_per_group)
+        mlstm = jax.vmap(functools.partial(init_mlstm_layer, cfg))(m_keys)
+        mlstm = jax.tree.map(
+            lambda x: x.reshape(self.n_groups, self.m_per_group, *x.shape[1:]), mlstm
+        )
+        s_keys = jax.random.split(kS, self.n_groups)
+        slstm = jax.vmap(functools.partial(init_slstm_layer, cfg))(s_keys)
+        params = {
+            "embed": blocks._dense_init(kE, (cfg.padded_vocab, cfg.d_model), scale_axis=1),
+            "mlstm": mlstm,
+            "slstm": slstm,
+            "final_norm": init_norm(cfg, cfg.d_model),
+            "lm_head": blocks._dense_init(kH, (cfg.padded_vocab, cfg.d_model), scale_axis=1),
+        }
+        return params
+
+    def _unembed(self, params, x, rules):
+        cfg = self.cfg
+        logits = x @ params["lm_head"].T.astype(x.dtype)
+        logits = constrain(logits, rules, "batch", None, "tensor")
+        if cfg.padded_vocab > cfg.vocab_size:
+            pad = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
+            logits = logits + pad.astype(logits.dtype)
+        return logits
+
+    def train_logits(self, params, batch, rules: Optional[MeshRules], remat: str = "full"):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(jnp.bfloat16)
+        x = constrain(x, rules, "batch", None, None)
+
+        def group(x, gp):
+            m_stack, s_layer = gp
+
+            def m_body(x, lp):
+                return apply_mlstm_train(cfg, lp, x, rules), None
+
+            x, _ = lax.scan(m_body, x, m_stack)
+            x = apply_slstm_train(cfg, s_layer, x, rules)
+            return x, None
+
+        if remat == "full":
+            group = jax.checkpoint(group)
+        x, _ = lax.scan(group, x, (params["mlstm"], params["slstm"]))
+        x = apply_norm(cfg, params["final_norm"], x)
+        return self._unembed(params, x, rules), jnp.zeros((), jnp.float32)
+
+    # ---- serving (state cache; no KV) ----
+    def make_cache_spec(self, batch, capacity, *, bifurcated=False, dec_capacity=None):
+        cfg = self.cfg
+        d_inner, nh, hd = _dims(cfg)
+        s_hd = cfg.d_model // cfg.n_heads
+        return {
+            "mlstm": jax.ShapeDtypeStruct(
+                (self.n_groups, self.m_per_group, batch, nh, hd, hd + 1), jnp.float32
+            ),
+            "slstm_h": jax.ShapeDtypeStruct((self.n_groups, batch, nh, s_hd), jnp.float32),
+            "slstm_c": jax.ShapeDtypeStruct((self.n_groups, batch, nh, s_hd), jnp.float32),
+            "position": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def init_cache(self, batch, capacity=0, *, bifurcated=False, dec_capacity=None):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.make_cache_spec(batch, capacity),
+        )
+
+    def prefill(self, params, tokens, rules: Optional[MeshRules], **kw):
+        """Run the chunk-parallel form, capture final states per layer."""
+        cfg = self.cfg
+        b, n = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+        m_states, s_h, s_c = [], [], []
+        for gi in range(self.n_groups):
+            for mi in range(self.m_per_group):
+                lp = jax.tree.map(lambda a: a[gi, mi], params["mlstm"])
+                h = rms_normalize(x, lp["ln"]["scale"])
+                q, k, v, log_f, z = _mlstm_qkv(cfg, lp, h)
+                out, S = chunked_linear_attention(
+                    q, k, v, log_f, chunk=cfg.ssm.chunk, normalize=True
+                )
+                d_inner = q.shape[-1] * q.shape[-2]
+                out = rms_normalize(
+                    out.reshape(b, n, d_inner) * jax.nn.silu(z), lp["norm_scale"]
+                )
+                x = x + out @ lp["down_proj"].astype(x.dtype)
+                m_states.append(S)
+            sp = jax.tree.map(lambda a: a[gi], params["slstm"])
+            nh, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+            hn = rms_normalize(x, sp["ln"]["scale"])
+            pre = (hn @ sp["w_in"].astype(x.dtype)).reshape(b, n, 4, nh, hd)
+
+            def step(carry, pre_t):
+                h_prev, c_prev = carry
+                h, c = _slstm_cell(cfg, sp, pre_t, h_prev, c_prev)
+                return (h, c), h
+
+            init = (jnp.zeros((b, nh, hd), jnp.float32),) * 2
+            (hf, cf), hs = lax.scan(step, init, pre.transpose(1, 0, 2, 3, 4))
+            out = hs.transpose(1, 0, 2, 3).reshape(b, n, cfg.d_model).astype(x.dtype)
+            x = x + out @ sp["out_proj"].astype(x.dtype)
+            s_h.append(hf); s_c.append(cf)
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x[:, -1:], rules)[:, 0]
+        cache = {
+            "mlstm": jnp.stack(m_states).reshape(
+                self.n_groups, self.m_per_group, *m_states[0].shape
+            ),
+            "slstm_h": jnp.stack(s_h),
+            "slstm_c": jnp.stack(s_c),
+            "position": jnp.asarray(n, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, rules: Optional[MeshRules], **kw):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+
+        def group(x, inp):
+            (m_stack, s_layer), (m_state, sh, sc) = inp
+
+            def m_body(x, lp_state):
+                lp, st = lp_state
+                x, new_st = apply_mlstm_decode(cfg, lp, x, st, rules)
+                return x, new_st
+
+            x, new_m = lax.scan(m_body, x, (m_stack, m_state))
+            x, (nh_, nc_) = apply_slstm_decode(cfg, s_layer, x, (sh, sc), rules)
+            return x, (new_m, nh_, nc_)
+
+        x, (new_m, new_h, new_c) = lax.scan(
+            group, x,
+            ((params["mlstm"], params["slstm"]),
+             (cache["mlstm"], cache["slstm_h"], cache["slstm_c"])),
+        )
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x, rules)
+        new_cache = {
+            "mlstm": new_m, "slstm_h": new_h, "slstm_c": new_c,
+            "position": cache["position"] + tokens.shape[1],
+        }
+        return logits, new_cache

@@ -1,0 +1,8 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import compress_int8_ef, decompress_int8
+
+__all__ = [
+    "adamw_init", "adamw_update", "cosine_schedule",
+    "compress_int8_ef", "decompress_int8",
+]

@@ -1,0 +1,63 @@
+"""AdamW with decoupled weight decay and global-norm gradient clipping
+(paper Appendix C.1 training setup: b1=0.9, b2=0.95, eps=1e-8, wd=0.01,
+clip=1.0). Optimizer state is a pytree mirroring params — it shards with the
+same FSDP rules, so m/v never exceed per-device param memory."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    params,
+    grads,
+    opt_state,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    grad_clip: float = 1.0,
+) -> Tuple[dict, dict]:
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip_scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9)) if grad_clip else 1.0
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip_scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / (1 - b1**step.astype(jnp.float32))
+        vhat = v / (1 - b2**step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay only on matrices (ndim >= 2), Chinchilla-style
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,42 @@
+"""Int8 gradient compression with error feedback.
+
+Cross-pod gradient all-reduce is the one collective that traverses DCN in the
+multi-pod mesh; int8 quantization cuts those bytes 2x vs bf16 (4x vs fp32).
+Error feedback (residual carried to the next step) keeps convergence intact
+(1-bit Adam / EF-SGD lineage). Used by the train loop when
+TrainConfig.grad_compression == "int8_ef".
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8_ef(grads, error_state):
+    """Quantize grads+error to int8 per-tensor symmetric; return residual."""
+
+    def q(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        qg = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        residual = gf - qg.astype(jnp.float32) * scale
+        return (qg, scale), residual
+
+    if error_state is None:
+        error_state = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_state)
+    pairs = [q(g, e) for g, e in zip(flat_g, flat_e)]
+    qgrads = treedef.unflatten([p[0] for p in pairs])
+    new_error = treedef.unflatten([p[1] for p in pairs])
+    return qgrads, new_error
+
+
+def decompress_int8(qgrads):
+    return jax.tree.map(
+        lambda pair: pair[0].astype(jnp.float32) * pair[1],
+        qgrads,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+    )

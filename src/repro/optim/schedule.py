@@ -1,0 +1,13 @@
+"""Warmup + cosine decay to min_lr_ratio (paper Appendix C.1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr, warmup_steps, total_steps, min_lr_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+    frac = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = min_lr_ratio + (1 - min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)

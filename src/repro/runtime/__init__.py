@@ -1,0 +1,3 @@
+from repro.runtime.losses import lm_loss
+
+__all__ = ["lm_loss"]

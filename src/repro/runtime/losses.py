@@ -1,0 +1,18 @@
+"""Cross-entropy over (possibly padding-extended) vocab, fp32 softmax."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits, targets, mask, vocab_size: int) -> jnp.ndarray:
+    """logits: (b, s, Vp); targets: (b, s) in [0, vocab); mask: (b, s)."""
+    logits = logits.astype(jnp.float32)
+    vp = logits.shape[-1]
+    if vp > vocab_size:
+        pad_bias = jnp.where(jnp.arange(vp) < vocab_size, 0.0, -1e30)
+        logits = logits + pad_bias
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,143 @@
+"""Fault-tolerant training loop.
+
+Features (1000+ node posture; every one exercised by tests/examples):
+  * jitted train_step = fwd + bwd + AdamW update, donated state;
+  * checkpoint/restart: async atomic checkpoints every N steps, auto-resume
+    from latest on (re)start — data position replays from the step counter;
+  * NaN/Inf step skipping (counted, loss-scale-free bf16 training);
+  * watchdog: per-step deadline; on a real cluster the launcher kills and
+    reschedules the job when the heartbeat file goes stale — straggler and
+    hang mitigation (see fault_tolerance.py);
+  * optional int8+error-feedback gradient compression across the DP axes;
+  * elastic restart: checkpoints are host-level and resharded on load, so a
+    restart may use a different mesh shape (see Checkpointer.restore).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import MeshRules, ModelConfig, TrainConfig
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.optim.compression import compress_int8_ef, decompress_int8
+from repro.runtime.losses import lm_loss
+
+
+def make_train_step(model, cfg: ModelConfig, tcfg: TrainConfig,
+                    rules: Optional[MeshRules]) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics). Pure & jittable."""
+
+    def loss_fn(params, batch):
+        logits, aux = model.train_logits(params, batch, rules, remat=tcfg.remat)
+        loss = lm_loss(logits, batch["targets"], batch["mask"], cfg.vocab_size)
+        return loss + aux, (loss, aux)
+
+    def train_step(state, batch):
+        params, opt_state, error_state = (
+            state["params"], state["opt_state"], state.get("error_fb")
+        )
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        if tcfg.grad_compression == "int8_ef":
+            qgrads, error_state = compress_int8_ef(grads, error_state)
+            grads = decompress_int8(qgrads)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+        ))
+        lr = cosine_schedule(
+            opt_state["step"], peak_lr=tcfg.learning_rate,
+            warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps,
+            min_lr_ratio=tcfg.min_lr_ratio,
+        )
+        bad = ~jnp.isfinite(gnorm)
+        new_params, new_opt = adamw_update(
+            params, grads, opt_state, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            eps=tcfg.eps, weight_decay=tcfg.weight_decay,
+            grad_clip=tcfg.grad_clip,
+        )
+        # NaN-step skip: keep old state when the gradient blew up.
+        pick = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(bad, o, n), new, old)
+        new_state = {
+            "params": pick(new_params, params),
+            "opt_state": pick(new_opt, {**opt_state, "step": opt_state["step"] + 1}),
+        }
+        if tcfg.grad_compression == "int8_ef":
+            new_state["error_fb"] = error_state
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm, "lr": lr,
+                   "skipped": bad.astype(jnp.int32)}
+        return new_state, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainLoopResult:
+    final_step: int
+    losses: list
+    skipped_steps: int
+    resumed_from: Optional[int]
+
+
+def run_training(
+    model,
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    dataset,
+    *,
+    num_steps: int,
+    checkpoint_dir: Optional[str] = None,
+    rules: Optional[MeshRules] = None,
+    init_key=None,
+    state: Optional[dict] = None,
+    step_timeout_s: float = 0.0,
+    log_every: int = 10,
+    heartbeat: Optional[Callable[[int], None]] = None,
+) -> TrainLoopResult:
+    """Single-controller training driver with checkpoint/restart."""
+    train_step = jax.jit(make_train_step(model, cfg, tcfg, rules),
+                         donate_argnums=(0,))
+
+    ckpt = Checkpointer(checkpoint_dir, tcfg.keep_checkpoints) if checkpoint_dir else None
+    resumed_from = None
+    if state is None:
+        params = model.init(init_key if init_key is not None else jax.random.PRNGKey(tcfg.seed))
+        state = {"params": params, "opt_state": adamw_init(params)}
+        if tcfg.grad_compression == "int8_ef":
+            state["error_fb"] = jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+        if ckpt and ckpt.latest_step() is not None:
+            resumed_from = ckpt.latest_step()
+            state = ckpt.restore(state)
+
+    start = int(jax.device_get(state["opt_state"]["step"]))
+    losses, skipped = [], 0
+    for step in range(start, num_steps):
+        t0 = time.monotonic()
+        _, batch = dataset.batch(step, tcfg.global_batch), None
+        batch = dataset.batch(step, tcfg.global_batch)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, metrics = train_step(state, batch)
+        if step % log_every == 0 or step == num_steps - 1:
+            loss = float(jax.device_get(metrics["loss"]))
+            losses.append((step, loss))
+        skipped += int(jax.device_get(metrics["skipped"]))
+        if heartbeat:
+            heartbeat(step)
+        if step_timeout_s and (time.monotonic() - t0) > step_timeout_s:
+            raise TimeoutError(
+                f"step {step} exceeded {step_timeout_s}s deadline (straggler)")
+        if ckpt and (step + 1) % tcfg.checkpoint_every == 0:
+            ckpt.save(step + 1, state)
+    if ckpt:
+        if num_steps % tcfg.checkpoint_every == 0 and num_steps > start:
+            ckpt.wait()  # final step already saved asynchronously above
+        else:
+            ckpt.save(num_steps, state, blocking=True)
+    return TrainLoopResult(num_steps, losses, skipped, resumed_from)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run single-device (the 512-device override lives ONLY in
+# launch/dryrun.py, per the brief).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) on the system's core invariants:
+
+  P1  bifurcated == standard attention for ANY (b, g, p, m_c, m_d) split;
+  P2  attention output is invariant to WHERE the context/decode boundary
+      is drawn (pure refactoring of the same softmax);
+  P3  partial-softmax merge is associative/order-invariant (what makes
+      sequence-sharded K_c exact);
+  P4  chunked linear attention == sequential recurrence for any chunk size;
+  P5  KV-IO model: bifurcated bytes <= standard bytes, equality iff b == 1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bifurcated_attention, multigroup_attention
+from repro.core.bifurcated import _partial_softmax, merge_partials
+from repro.core.io_model import kv_read_bytes
+from repro.models.linear_scan import (
+    chunked_linear_attention,
+    reference_linear_attention,
+)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _mk(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 5), g=st.integers(1, 3), p=st.integers(1, 3),
+    m_c=st.integers(1, 24), m_d=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_p1_bifurcated_equals_standard(b, g, p, m_c, m_d, seed):
+    rng = np.random.default_rng(seed)
+    k = 8
+    q = _mk(rng, b, g, p, 1, k)
+    kc, vc = _mk(rng, m_c, g, k), _mk(rng, m_c, g, k)
+    kd, vd = _mk(rng, b, m_d, g, k), _mk(rng, b, m_d, g, k)
+    out = bifurcated_attention(q, kc, vc, kd, vd)
+    K = jnp.concatenate([jnp.broadcast_to(kc[None], (b, m_c, g, k)), kd], 1)
+    V = jnp.concatenate([jnp.broadcast_to(vc[None], (b, m_c, g, k)), vd], 1)
+    ref = multigroup_attention(q, K, V)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m_total=st.integers(4, 32), split=st.floats(0.1, 0.9),
+    seed=st.integers(0, 10_000),
+)
+def test_p2_boundary_invariance(m_total, split, seed):
+    """Moving the context/decode boundary never changes the result."""
+    rng = np.random.default_rng(seed)
+    b, g, p, k = 3, 2, 2, 8
+    q = _mk(rng, b, g, p, 1, k)
+    K = _mk(rng, m_total, g, k)
+    V = _mk(rng, m_total, g, k)
+    outs = []
+    for frac in (split, 0.5):
+        m_c = max(1, min(m_total - 1, int(m_total * frac)))
+        kc, kd = K[:m_c], jnp.broadcast_to(K[m_c:][None], (b, m_total - m_c, g, k))
+        vc, vd = V[:m_c], jnp.broadcast_to(V[m_c:][None], (b, m_total - m_c, g, k))
+        outs.append(bifurcated_attention(q, kc, vc, kd, vd))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n_shards=st.integers(1, 5), m_per=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_p3_partial_merge_shard_invariance(n_shards, m_per, seed):
+    rng = np.random.default_rng(seed)
+    b, g, p, k = 2, 2, 1, 8
+    m = n_shards * m_per
+    q = _mk(rng, b, g, p, 1, k)
+    K, V = _mk(rng, m, g, k), _mk(rng, m, g, k)
+    scale = k**-0.5
+    logits = jnp.einsum("bgpnk,mgk->bgpnm", q, K) * scale
+    parts = [
+        _partial_softmax(logits[..., i * m_per:(i + 1) * m_per],
+                         V[i * m_per:(i + 1) * m_per], batched=False)
+        for i in range(n_shards)
+    ]
+    merged = merge_partials(parts)
+    mono = merge_partials([_partial_softmax(logits, V, batched=False)])
+    np.testing.assert_allclose(merged, mono, rtol=1e-4, atol=1e-4)
+    # order invariance (psum semantics)
+    merged_rev = merge_partials(parts[::-1])
+    np.testing.assert_allclose(merged, merged_rev, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 40), chunk=st.integers(1, 16),
+    normalize=st.booleans(), seed=st.integers(0, 10_000),
+)
+def test_p4_chunked_scan_equals_recurrence(n, chunk, normalize, seed):
+    rng = np.random.default_rng(seed)
+    b, H, dk, dv = 2, 2, 4, 4
+    q, k = _mk(rng, b, n, H, dk), _mk(rng, b, n, H, dk)
+    v = _mk(rng, b, n, H, dv)
+    a = -jnp.abs(_mk(rng, b, n, H)) * 0.3
+    out_c, S_c = chunked_linear_attention(q, k, v, a, chunk=chunk,
+                                          normalize=normalize)
+    out_r, S_r = reference_linear_attention(q, k, v, a, normalize=normalize)
+    np.testing.assert_allclose(out_c, out_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(S_c, S_r, rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 64), m_c=st.integers(1, 10_000), m_d=st.integers(0, 512),
+    g=st.integers(1, 64), k=st.sampled_from([64, 80, 112, 128]),
+)
+def test_p5_io_model_dominance(b, m_c, m_d, g, k):
+    std = kv_read_bytes(b=b, m_c=m_c, m_d=m_d, g=g, k=k, bifurcated=False)
+    bif = kv_read_bytes(b=b, m_c=m_c, m_d=m_d, g=g, k=k, bifurcated=True)
+    assert bif <= std
+    if b == 1:
+        assert bif == std
+    if b > 1 and m_c > 0:
+        assert bif < std

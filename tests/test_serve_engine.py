@@ -1,0 +1,107 @@
+"""Serve-engine integration: bifurcated vs standard produce identical
+samples, policy switch behavior, reranking, kernel path, spec-decode n>1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ServeConfig, get_config, reduced_config
+from repro.core import BifurcatedCache
+from repro.models import get_model
+from repro.runtime.serve import ServeEngine, rank_by_mean_logprob, sample_tokens
+
+CFG = reduced_config(get_config("internlm2-1.8b"))
+MODEL = get_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+CTX = jnp.asarray(np.random.RandomState(0).randint(0, CFG.vocab_size, (1, 48)))
+
+
+def _engine(bifurcated, use_kernel=False, batch=6):
+    from repro.core.policy import BifurcationPolicy
+
+    scfg = ServeConfig(batch=batch, decode_capacity=16, temperature=0.8,
+                       top_p=0.95, bifurcated=bifurcated, use_kernel=use_kernel)
+    # reduced configs sit below the production IO threshold; force the
+    # requested mode so tests exercise the real bifurcated path
+    policy = BifurcationPolicy(enabled=bifurcated, min_io_saving_bytes=0)
+    return ServeEngine(MODEL, CFG, scfg, policy=policy)
+
+
+def test_bifurcated_and_standard_sample_nearly_identically():
+    """Math-level exactness is proven in fp32 (tests/test_bifurcated.py);
+    in bf16 the split-sum reduction order can flip near-tied samples, so the
+    end-to-end check asserts high token agreement, not bit identity."""
+    r_b = _engine(True).generate(PARAMS, CTX, n_steps=8,
+                                 key=jax.random.PRNGKey(3))
+    r_s = _engine(False).generate(PARAMS, CTX, n_steps=8,
+                                  key=jax.random.PRNGKey(3))
+    agree = float(np.mean(np.asarray(r_b.tokens) == np.asarray(r_s.tokens)))
+    assert agree >= 0.85, agree
+    np.testing.assert_allclose(np.asarray(r_b.mean_logprob),
+                               np.asarray(r_s.mean_logprob), rtol=0.2, atol=0.2)
+
+
+def test_kernel_path_matches_einsum_path():
+    r_k = _engine(True, use_kernel=True).generate(
+        PARAMS, CTX, n_steps=6, key=jax.random.PRNGKey(5))
+    r_e = _engine(True, use_kernel=False).generate(
+        PARAMS, CTX, n_steps=6, key=jax.random.PRNGKey(5))
+    agree = float(np.mean(np.asarray(r_k.tokens) == np.asarray(r_e.tokens)))
+    assert agree >= 0.85, agree  # bf16 merge-order tolerance, see above
+
+
+def test_policy_falls_back_for_tiny_workloads():
+    eng = ServeEngine(MODEL, CFG, ServeConfig(batch=1, bifurcated=True))
+    assert not eng.should_bifurcate(1, 8192)      # batch 1: never
+    assert not eng.should_bifurcate(2, 4)          # tiny context
+    big = ServeConfig(batch=16, bifurcated=True)
+    eng2 = ServeEngine(MODEL, CFG, big)
+    assert eng2.should_bifurcate(16, 4096)
+
+
+def test_cache_memory_footprint_single_context():
+    """Bifurcated cache stores the context ONCE: m_c + b*C_d slots, vs the
+    standard cache's b*(m_c + C_d) — the paper's §5.2.2 capacity win."""
+    b, m_c, cd = 16, 48, 16
+    _, cache = _engine(True, batch=b).prefill_shared(PARAMS, CTX, b)
+    assert isinstance(cache, BifurcatedCache)
+    slots_bif = cache.k_ctx.shape[1] + b * cache.k_dec.shape[2]
+    _, std = _engine(False, batch=b).prefill_shared(PARAMS, CTX, b)
+    slots_std = b * std.k.shape[2]
+    assert slots_bif < slots_std / 3
+
+
+def test_rerank_dedups_and_orders():
+    class R:  # minimal GenerationResult stand-in
+        tokens = jnp.asarray([[1, 2], [1, 2], [3, 4], [5, 6]])
+        mean_logprob = jnp.asarray([-1.0, -1.0, -0.5, -2.0])
+
+    order = rank_by_mean_logprob(R(), top_k=3)
+    assert order[0] == 2            # best score first
+    assert len(order) == 3          # duplicate row dropped
+    assert set(order) == {2, 0, 3} or set(order) == {2, 1, 3}
+
+
+def test_sample_tokens_greedy_and_topp():
+    logits = jnp.asarray([[0.0, 5.0, 1.0]])
+    assert int(sample_tokens(jax.random.PRNGKey(0), logits, 0.0, 1.0)[0]) == 1
+    # top-p keeps the head of the distribution only
+    toks = [int(sample_tokens(jax.random.PRNGKey(i), logits, 1.0, 0.5)[0])
+            for i in range(20)]
+    assert set(toks) == {1}
+
+
+def test_speculative_n_tokens_decode():
+    """Paper §G: bifurcation persists under multi-token (draft) decoding."""
+    from repro.core.kv_cache import BifurcatedCache
+
+    _, cache1 = MODEL.prefill(PARAMS, CTX, None)
+    b, n_g = 3, 4
+    cache = BifurcatedCache.from_prefill(cache1.k[:, 0], cache1.v[:, 0], b, 16,
+                                         dtype=cache1.k.dtype)
+    draft = jnp.asarray(np.random.RandomState(2).randint(
+        0, CFG.vocab_size, (b, n_g)))
+    logits, cache2 = MODEL.decode_step(PARAMS, cache, draft, None)
+    assert logits.shape == (b, n_g, CFG.padded_vocab)
+    assert int(cache2.dec_length) == n_g
+    assert not bool(jnp.isnan(logits).any())
