@@ -1,20 +1,20 @@
-"""Paper §H analog (kernel-level comparison): the fused Pallas bifurcated
-flash-decode vs the 4-einsum paper path.
+"""Paper §H analog (kernel-level comparison): the single-pass fused Pallas
+bifurcated decode vs the two-pass (partials-spill) kernel vs the 4-einsum
+paper path.
 
-Since real-TPU timing is unavailable here, we compare (a) exactness in
-interpret mode, (b) modelled HBM traffic: the fused kernel never
-materializes the (b, h, m_c) logits in HBM — an additional saving ON TOP of
-the paper's b-fold K_c saving — and (c) wall-clock of the two jitted paths
-on CPU (indicative only)."""
+Since real-TPU timing is unavailable here, we compare (a) exactness of both
+kernel paths in interpret mode, (b) modelled HBM traffic per implementation
+(core.io_model.decode_impl_io_bytes): the einsum path round-trips fp32
+logits through HBM, the two-pass path round-trips the fp32 (acc, m, l)
+flash partials, the fused path spills NOTHING — KV + q + output only.
+Wall-clock grids live in benchmarks/latency_decode.py (BENCH_fused_decode)."""
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bifurcated import bifurcated_attention
+from repro.core.io_model import decode_impl_io_bytes
 from repro.kernels.ops import bifurcated_decode_attention
 from repro.kernels.ref import bifurcated_decode_ref
 
@@ -30,29 +30,40 @@ def run(report):
     vd = jnp.asarray(rng.randn(b, g, c_d, hd), jnp.bfloat16)
     mask = jnp.ones((b, c_d), bool)
 
-    out_k = bifurcated_decode_attention(
-        q[:, :, :, None, :], kc.transpose(1, 0, 2), vc.transpose(1, 0, 2),
-        kd.transpose(0, 2, 1, 3), vd.transpose(0, 2, 1, 3), mask,
-        interpret=True)[:, :, :, 0, :]
     ref = bifurcated_decode_ref(q, kc, vc, kd, vd, mask, hd**-0.5)
-    err = float(jnp.max(jnp.abs(out_k.astype(jnp.float32) - ref.astype(jnp.float32))))
-    report("kernel_io/interpret_max_abs_err", err)
-    assert err < 3e-2
+    for name, two_pass in (("fused", False), ("two_pass", True)):
+        out_k = bifurcated_decode_attention(
+            q[:, :, :, None, :], kc.transpose(1, 0, 2), vc.transpose(1, 0, 2),
+            kd.transpose(0, 2, 1, 3), vd.transpose(0, 2, 1, 3), mask,
+            interpret=True, two_pass=two_pass)[:, :, :, 0, :]
+        err = float(jnp.max(jnp.abs(
+            out_k.astype(jnp.float32) - ref.astype(jnp.float32))))
+        report(f"kernel_io/{name}_interpret_max_abs_err", err)
+        assert err < 3e-2
 
-    # HBM traffic model (bytes), per call:
+    # HBM traffic model (bytes), per layer-call:
+    io = {
+        impl: decode_impl_io_bytes(b=b, p=p, n=1, m_c=m_c, c_d=c_d, g=g,
+                                   hd=hd, impl=impl)
+        for impl in ("einsum", "two_pass", "fused")
+    }
+    for impl, bytes_ in io.items():
+        report(f"kernel_io/{impl}_path_bytes", bytes_)
+    report("kernel_io/fused_vs_einsum_io_saving", io["einsum"] / io["fused"])
+    report("kernel_io/fused_vs_two_pass_io_saving",
+           io["two_pass"] / io["fused"])
+    # strict ordering: each generation of the path removes HBM round trips
+    assert io["fused"] < io["two_pass"] < io["einsum"]
+    assert io["einsum"] / io["fused"] > 1.2
+
+    # vs the naive (non-bifurcated) cache: K_c replicated b-fold + logits
     el = 2  # bf16
-    kv_ctx = 2 * g * m_c * hd * el
-    kv_dec = 2 * b * g * c_d * hd * el
-    q_io = b * g * p * hd * el
-    logits_hbm = b * g * p * (m_c + c_d) * 4  # fp32 logits, einsum path
-    einsum_path = kv_ctx + kv_dec + q_io + 2 * logits_hbm  # write + read back
-    kernel_path = kv_ctx + kv_dec + q_io  # logits live in VMEM
-    report("kernel_io/einsum_path_bytes", einsum_path)
-    report("kernel_io/kernel_path_bytes", kernel_path)
-    report("kernel_io/fused_io_saving", einsum_path / kernel_path)
-    naive_path = 2 * b * g * (m_c + c_d) * hd * el + q_io + 2 * logits_hbm
+    rows = b * p
+    naive_path = (2 * b * g * (m_c + c_d) * hd * el
+                  + 2 * rows * g * hd * el
+                  + 2 * rows * g * (m_c + c_d) * 4)
     report("kernel_io/naive_path_bytes", naive_path)
-    report("kernel_io/total_vs_naive", naive_path / kernel_path)
-    assert einsum_path / kernel_path > 1.2
-    return {"fused_saving": einsum_path / kernel_path,
-            "vs_naive": naive_path / kernel_path}
+    report("kernel_io/total_vs_naive", naive_path / io["fused"])
+    return {"fused_vs_einsum": io["einsum"] / io["fused"],
+            "fused_vs_two_pass": io["two_pass"] / io["fused"],
+            "vs_naive": naive_path / io["fused"]}

@@ -2,9 +2,19 @@
 a scaled-down 7B-proxy model, SDPA-equivalent (batched cache) vs bifurcated,
 swept over batch x context. The GEMM restructuring is measurable on CPU too
 (the broadcast K_c read disappears); absolute numbers are CPU-scale, the
-RATIOS are the paper's object of study."""
+RATIOS are the paper's object of study.
+
+Also sweeps the three bifurcated decode IMPLEMENTATIONS — fused single-pass
+Pallas kernel vs two-pass (partials spill + host merge) vs paper 4-einsum —
+over a (b, m_c) grid and writes ``BENCH_fused_decode.json`` (wall-clock per
+call + modelled per-layer HBM bytes per path). Kernels run in interpret
+mode here, so the wall-clock columns are indicative only; the IO-model
+columns are the hardware-relevant object.
+"""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -14,11 +24,21 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.attention import decode_attention
 from repro.core.bifurcated import bifurcated_attention
+from repro.core.io_model import decode_impl_io_bytes
+from repro.kernels.ops import bifurcated_decode_attention
 
 PROXY = ModelConfig(
     name="7b-proxy", family="dense", n_layers=2, d_model=512,
     n_heads=8, n_kv_heads=8, head_dim=64, d_ff=2048, vocab_size=1024,
 )
+
+# anchored to the repo root so the committed artifact is updated regardless
+# of the invoking cwd
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused_decode.json"
+
+# fused vs two-pass vs einsum sweep (>= 3x3 as the perf trajectory seed)
+GRID_B = (4, 16, 32)
+GRID_MC = (512, 2048, 4096)
 
 
 def _time(fn, *args, iters=5):
@@ -29,6 +49,59 @@ def _time(fn, *args, iters=5):
         out = fn(*args)
         jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters
+
+
+def _impl_grid(report):
+    """fused / two_pass / einsum over (b, m_c): wall-clock + IO model."""
+    rng = np.random.RandomState(1)
+    g, p, hd = PROXY.n_kv_heads, 1, PROXY.kq_dim
+    c_d = 64
+    rows_out = []
+    for m_c in GRID_MC:
+        kc = jnp.asarray(rng.randn(g, m_c, hd), jnp.bfloat16)   # "gmk"
+        vc = jnp.asarray(rng.randn(g, m_c, hd), jnp.bfloat16)
+        for b in GRID_B:
+            q = jnp.asarray(rng.randn(b, g, p, 1, hd), jnp.bfloat16)
+            kd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+            vd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+            mask = jnp.ones((b, c_d), bool)
+
+            fused = lambda *a: bifurcated_decode_attention(
+                *a, ctx_layout="gmk", block_m=1024, interpret=True)
+            two_pass = lambda *a: bifurcated_decode_attention(
+                *a, ctx_layout="gmk", block_m=1024, interpret=True,
+                two_pass=True)
+            einsum = jax.jit(lambda q, kc, vc, kd, vd, mask:
+                             bifurcated_attention(q, kc.transpose(1, 0, 2),
+                                                  vc.transpose(1, 0, 2),
+                                                  kd, vd, decode_mask=mask))
+            args = (q, kc, vc, kd, vd, mask)
+            row = {"b": b, "m_c": m_c, "c_d": c_d, "g": g, "p": p, "hd": hd}
+            for name, fn in (("fused", fused), ("two_pass", two_pass),
+                             ("einsum", einsum)):
+                row[f"{name}_us"] = _time(fn, *args, iters=3) * 1e6
+                row[f"{name}_io_bytes"] = decode_impl_io_bytes(
+                    b=b, p=p, n=1, m_c=m_c, c_d=c_d, g=g, hd=hd, impl=name)
+                report(f"latency_decode/impl_ctx{m_c}_bs{b}_{name}_us",
+                       row[f"{name}_us"])
+            row["fused_io_saving_vs_einsum"] = (
+                row["einsum_io_bytes"] / row["fused_io_bytes"])
+            report(f"latency_decode/impl_ctx{m_c}_bs{b}_fused_io_saving",
+                   row["fused_io_saving_vs_einsum"])
+            rows_out.append(row)
+    payload = {
+        "meta": {
+            "device": jax.devices()[0].platform,
+            "kernel_interpret_mode": True,
+            "note": "interpret-mode kernel wall-clock is indicative only; "
+                    "*_io_bytes is the modelled per-layer HBM traffic "
+                    "(core.io_model.decode_impl_io_bytes)",
+        },
+        "grid": rows_out,
+    }
+    BENCH_JSON.write_text(json.dumps(payload, indent=2))
+    report("latency_decode/bench_json_rows", len(rows_out))
+    return rows_out
 
 
 def run(report):
@@ -62,4 +135,6 @@ def run(report):
     # paper-shaped sanity: bifurcated wins grow with b at fixed large ctx
     assert results[(8192, 16)] > 1.5, results
     assert results[(8192, 32)] >= results[(8192, 4)] * 0.9
+
+    _impl_grid(report)
     return results

@@ -75,10 +75,12 @@ class ModelConfig:
     # (chunk x m) logit rows (baseline); "flash" is the online-softmax
     # nested-scan path (beyond-paper prefill optimization, §Perf).
     train_attn: str = "chunked"
-    # bifurcated context-cache layout: "mgk" (m_c, g, hd) einsum default;
-    # "gmk" (g, m_c, hd) head-major, kernel-DMA friendly (§Perf hillclimb;
-    # requires the flash/kernel decode impl).
-    ctx_layout: str = "mgk"
+    # bifurcated context-cache layout: "gmk" (g, m_c, hd) head-major is the
+    # default — contiguous DMA for the fused Pallas decode kernel and no
+    # per-layer transpose copy on the hot path (uses the flash/kernel decode
+    # impls). "mgk" (m_c, g, hd) is the legacy sequence-major einsum layout
+    # (still used by the int8-quantized context arm).
+    ctx_layout: str = "gmk"
     # padding multiples for sharding divisibility (Megatron-style padding).
     vocab_pad_multiple: int = 256
     head_pad_multiple: int = 1   # set to the mesh "model" axis size for TP
@@ -200,5 +202,6 @@ class ServeConfig:
     temperature: float = 0.8
     top_p: float = 0.95
     bifurcated: bool = True
-    use_kernel: bool = False     # Pallas fused kernel vs paper-faithful einsums
+    # single-pass fused Pallas decode kernel vs paper-faithful einsums
+    use_kernel: bool = False
     seed: int = 0

@@ -48,6 +48,38 @@ def decode_step_io(cfg, *, b, m_c, m_d, bifurcated, bytes_per_el=2) -> DecodeIO:
                     act_bytes=act)
 
 
+def decode_impl_io_bytes(*, b, p, n, m_c, c_d, g, hd, impl,
+                         bytes_per_el=2) -> int:
+    """Per-layer HBM traffic of one bifurcated decode step by IMPLEMENTATION
+    (all three read KV once — Eq. 6 — they differ in intermediate spills):
+
+      "einsum":   + fp32 (b,g,p,n,m_c+c_d) logits written AND read back
+                  around the XLA softmax (two extra passes over the logits);
+      "two_pass": + fp32 flash partials acc (g,rows,hd) and m/l
+                  ((g,rows,128) lane-replicated tiles) spilled by the
+                  context kernel and read back by the host-side merge, plus
+                  the einsum decode arm's fp32 (b,g,p,n,c_d) logits;
+      "fused":    KV + q + normalized output only — nothing else touches
+                  HBM (single pallas_call, in-VMEM merge). The (rows, b*c_d)
+                  decode tile costs extra FLOPs, not extra reads: the b*c_d
+                  decode slots are DMA'd once per group either way.
+    """
+    rows = b * p * n
+    kv = 2 * g * (m_c + b * c_d) * hd * bytes_per_el
+    q_io = rows * g * hd * bytes_per_el
+    out_io = rows * g * hd * bytes_per_el
+    if impl == "einsum":
+        logits = rows * g * (m_c + c_d) * 4
+        return kv + q_io + out_io + 2 * logits
+    if impl == "two_pass":
+        partials = g * rows * (hd + 2 * 128) * 4
+        dec_logits = rows * g * c_d * 4
+        return kv + q_io + out_io + 2 * partials + 2 * dec_logits
+    if impl == "fused":
+        return kv + q_io + out_io
+    raise ValueError(impl)
+
+
 def kv_speedup(*, b, m_c, m_d) -> float:
     """Pure KV-IO speedup bound: b(m_c+m_d) / (m_c + b m_d)."""
     return b * (m_c + m_d) / (m_c + b * m_d)

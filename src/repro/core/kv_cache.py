@@ -5,8 +5,10 @@ model can ``lax.scan`` over layers:
 
   * ``DecodeCache``      — the standard batched cache (b present on every slot).
   * ``BifurcatedCache``  — the paper's layout: an *unbatched* context cache
-    ``(L, m_c, g, k)`` shared by every sample, plus a small batched decode
-    cache ``(L, b, C_d, g, k)``. This is the data structure that makes the
+    shared by every sample (head-major ``(L, g, m_c, k)`` by default, so the
+    fused Pallas decode kernel DMAs contiguous blocks with no per-layer
+    transpose; sequence-major "mgk" remains available), plus a small batched
+    decode cache ``(L, b, C_d, g, k)``. This is the data structure that makes the
     bifurcated GEMM (and its b-fold HBM saving) possible; it also cuts cache
     *storage* from b·(m_c+C_d) to m_c + b·C_d slots (paper §5.2.2 notes the
     memory-capacity side benefit).
@@ -69,9 +71,16 @@ def update_layer_cache(
 class BifurcatedCache:
     """Bifurcated KV cache (paper §4).
 
-    k_ctx/v_ctx: (L, m_c, g, hd)    — shared context, no batch axis.
+    k_ctx/v_ctx — shared context, no batch axis; layout per ``ctx_layout``:
+        "gmk" (default): (L, g, m_c, hd) — head-major, contiguous block DMA
+        for the fused Pallas decode kernel, no per-layer transpose copy.
+        "mgk":           (L, m_c, g, hd) — sequence-major einsum layout.
     k_dec/v_dec: (L, b, C_d, g, hd) — per-sample decode continuation.
     dec_length:  scalar i32         — valid decode slots.
+
+    ``ctx_layout`` is a STATIC pytree field: it rides along through jit /
+    scan / tree_map (no trace-time cost) and layout-mismatched trees fail
+    loudly at structure comparison instead of silently misreading shapes.
     """
 
     k_ctx: jnp.ndarray
@@ -79,10 +88,12 @@ class BifurcatedCache:
     k_dec: jnp.ndarray
     v_dec: jnp.ndarray
     dec_length: jnp.ndarray
+    ctx_layout: str = dataclasses.field(default="gmk",
+                                        metadata=dict(static=True))
 
     @property
     def context_len(self) -> int:
-        return self.k_ctx.shape[1]
+        return self.k_ctx.shape[2 if self.ctx_layout == "gmk" else 1]
 
     @property
     def decode_capacity(self) -> int:
@@ -90,7 +101,7 @@ class BifurcatedCache:
 
     @staticmethod
     def init(n_layers, batch, m_c, dec_capacity, n_groups, head_dim,
-             dtype=jnp.bfloat16, ctx_layout="mgk"):
+             dtype=jnp.bfloat16, ctx_layout="gmk"):
         ctx = ((n_layers, m_c, n_groups, head_dim) if ctx_layout == "mgk"
                else (n_layers, n_groups, m_c, head_dim))
         dec = (n_layers, batch, dec_capacity, n_groups, head_dim)
@@ -100,11 +111,12 @@ class BifurcatedCache:
             k_dec=jnp.zeros(dec, dtype),
             v_dec=jnp.zeros(dec, dtype),
             dec_length=jnp.zeros((), jnp.int32),
+            ctx_layout=ctx_layout,
         )
 
     @staticmethod
     def spec(n_layers, batch, m_c, dec_capacity, n_groups, head_dim,
-             dtype=jnp.bfloat16, ctx_layout="mgk"):
+             dtype=jnp.bfloat16, ctx_layout="gmk"):
         shape = ((n_layers, m_c, n_groups, head_dim) if ctx_layout == "mgk"
                  else (n_layers, n_groups, m_c, head_dim))
         ctx = jax.ShapeDtypeStruct(shape, dtype)
@@ -112,12 +124,22 @@ class BifurcatedCache:
         return BifurcatedCache(
             k_ctx=ctx, v_ctx=ctx, k_dec=dec, v_dec=dec,
             dec_length=jax.ShapeDtypeStruct((), jnp.int32),
+            ctx_layout=ctx_layout,
         )
 
     @staticmethod
-    def from_prefill(k_ctx, v_ctx, batch, dec_capacity, dtype=jnp.bfloat16):
-        """Build from a single-context prefill result (L, m_c, g, hd)."""
+    def from_prefill(k_ctx, v_ctx, batch, dec_capacity, dtype=jnp.bfloat16,
+                     ctx_layout="gmk"):
+        """Build from a single-context prefill result (L, m_c, g, hd).
+
+        The prefill scan emits sequence-major KV; under the default "gmk"
+        layout the one-time transpose happens HERE (cache build) so that the
+        per-step decode hot path never pays it again.
+        """
         n_layers, _, n_groups, head_dim = k_ctx.shape
+        if ctx_layout == "gmk":
+            k_ctx = k_ctx.transpose(0, 2, 1, 3)  # (L, g, m_c, hd)
+            v_ctx = v_ctx.transpose(0, 2, 1, 3)
         dec = (n_layers, batch, dec_capacity, n_groups, head_dim)
         return BifurcatedCache(
             k_ctx=k_ctx.astype(dtype),
@@ -125,6 +147,7 @@ class BifurcatedCache:
             k_dec=jnp.zeros(dec, dtype),
             v_dec=jnp.zeros(dec, dtype),
             dec_length=jnp.zeros((), jnp.int32),
+            ctx_layout=ctx_layout,
         )
 
 

@@ -53,6 +53,10 @@ class QuantBifurcatedCache:
     v_dec: jnp.ndarray
     dec_length: jnp.ndarray
 
+    @property
+    def context_len(self) -> int:
+        return self.k_ctx.shape[1]  # int8 context arm is always "mgk"
+
     @staticmethod
     def spec(n_layers, batch, m_c, dec_capacity, n_groups, head_dim,
              dtype=jnp.bfloat16):

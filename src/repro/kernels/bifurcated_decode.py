@@ -1,32 +1,45 @@
-"""Pallas TPU kernel: fused bifurcated flash-decode (context arm).
+"""Pallas TPU kernels: fused bifurcated flash-decode.
 
 The paper's context GEMM (⟨q, K_c⟩, Eq. 3) is the memory-IO hot spot of
 shared-prefix batch decoding: K_c is the one tensor whose HBM traffic the
-technique eliminates b-fold. This kernel goes beyond the paper's 4-einsum
-formulation by fusing the softmax into the GEMM pair flash-decoding style:
+technique eliminates b-fold. Two kernels live here:
 
-  grid = (g, m_c / block_m) — for each kv group, stream K_c/V_c blocks
-  HBM -> VMEM exactly ONCE; all b*p query rows ride the MXU's row dimension
-  (batch becomes compute parallelism, not memory replication). Running
-  (max, sumexp, acc) live in fp32 VMEM scratch; b*h*m_c logits never touch
-  HBM (the einsum path materializes them: ~b*h*m_c*4 bytes saved on top of
-  the paper's saving).
+``fused_bifurcated_decode`` — the deployable single-pass path. One
+  ``pallas_call`` over grid ``(g, nb_ctx + 1)``: for each kv group the
+  K_c/V_c blocks stream HBM -> VMEM exactly once while all ``b*p*n`` query
+  rows ride the MXU's row dimension (batch becomes compute parallelism, not
+  memory replication); the FINAL grid step loads the per-sample decode cache,
+  folds its logits into the same running fp32 ``(max, sumexp, acc)`` VMEM
+  scratch with the decode-slot mask applied in-kernel, and writes the
+  NORMALIZED ``(g, rows, hd)`` output directly. Nothing but the output ever
+  touches HBM: no ``b*h*m_c`` logits (einsum path) and no fp32
+  ``acc/m/l`` partials (two-pass path) are materialized.
+
+``context_flash_partials`` — the historical two-pass building block (context
+  arm only, spills unnormalized partials to HBM for a host-side merge with
+  the einsum decode arm). Kept as the ``two_pass=True`` escape hatch in
+  ``ops.bifurcated_decode_attention`` and as a merge-correctness oracle.
 
 TPU mapping notes:
   * block_m is MXU/lane aligned (multiple of 128); K_c tail is masked via
     the static m_c closed over by the kernel.
   * per-row stats are kept as (rows, 128) replicated-lane tiles — the
     standard Mosaic idiom for rowwise scalars.
-  * rows = b * p (queries-per-group x batch): for b >= 8 this saturates the
-    8x128 MXU sublane tile even when p == 1 (MQA).
-
-The tiny per-sample decode arm (C_d ~ hundreds) stays on the einsum path;
-`ops.bifurcated_decode_attention` merges the two partials with the exact
-online-softmax combine (`core.bifurcated.merge_partials` semantics).
+  * rows = b * p * n (samples x queries-per-group x new tokens): for b >= 8
+    this saturates the 8x128 MXU sublane tile even when p == 1 (MQA).
+  * the decode arm is computed as ONE (rows, b*C_d) GEMM against the
+    concatenation of every sample's decode keys, with the cross-sample
+    pairs masked via iota — C_d is small, so the b-fold FLOP overhead is
+    noise next to the context arm while keeping the whole arm on the MXU.
+    The decode tile is (rows, b*C_d); for very large b*C_d the decode arm
+    would need its own grid axis (future work, irrelevant at paper scales).
+  * during the final (decode) grid step the context block index is pinned to
+    the previous block, so Pallas's revisiting rule skips the DMA.
 
 Validated on CPU in interpret mode against `ref.py` over a shape/dtype sweep
-(tests/test_kernels.py); intended layout for deployment: K_c stored
-(g, m_c, hd) so block DMA is contiguous.
+(tests/test_kernels.py, tests/test_fused_decode.py); intended layout for
+deployment: K_c stored (g, m_c, hd) ("gmk", the framework default) so block
+DMA is contiguous and no per-layer transpose copy is needed.
 """
 from __future__ import annotations
 
@@ -40,6 +53,170 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+
+def _online_update(s, v, acc_scr, m_scr, l_scr):
+    """One flash block step: fold logits ``s`` (rows, m) and values ``v``
+    (m, hd) into the running VMEM (acc, max, sumexp) scratch. Returns the
+    updated (acc, l) so a final grid step can normalize without re-reading
+    scratch. The single definition keeps the numerically delicate update
+    identical across both kernels and both arms."""
+    m_prev = m_scr[:, :1]             # (rows, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)            # (rows, m)
+    l_new = l_scr[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                  # (rows, hd)
+    acc_new = acc_scr[...] * corr + pv
+    acc_scr[...] = acc_new
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    return acc_new, l_new
+
+
+# ---------------------------------------------------------------------------
+# Single-pass fused kernel: context stream + decode arm + in-kernel merge
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(
+    q_ref,      # (1, rows, hd)
+    k_ref,      # (1, block_m, hd) — context block
+    v_ref,      # (1, block_m, hd)
+    kd_ref,     # (1, ld, hd)      — ALL samples' decode keys, group-major
+    vd_ref,     # (1, ld, hd)
+    bias_ref,   # (1, ld) f32      — decode-slot mask bias (0 / NEG_INF)
+    out_ref,    # out: (1, rows, hd) — normalized attention output
+    acc_scr,    # scratch (rows, hd) f32
+    m_scr,      # scratch (rows, 128) f32
+    l_scr,      # scratch (rows, 128) f32
+    *,
+    scale: float,
+    m_c: int,
+    block_m: int,
+    c_d: int,
+    pn: int,
+):
+    i = pl.program_id(1)
+    nb = pl.num_programs(1) - 1   # context blocks; step nb is the decode arm
+
+    @pl.when(i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0]                      # (rows, hd)
+
+    @pl.when(i < nb)
+    def _context_block():
+        k = k_ref[0]                  # (block_m, hd)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                      # (rows, block_m)
+
+        # mask the zero-padded K tail of the last block
+        pos = i * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < m_c, s, NEG_INF)
+        _online_update(s, v, acc_scr, m_scr, l_scr)
+
+    @pl.when(i == nb)
+    def _decode_arm_and_flush():
+        kd = kd_ref[0]                # (ld, hd)
+        vd = vd_ref[0]
+        s = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                      # (rows, ld)
+        s = s + bias_ref[...]          # slot validity + ld padding
+        # cross-sample mask: row r belongs to sample r // pn and may only
+        # attend to decode slots of the same sample (cols j // c_d).
+        row_s = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // pn
+        col_s = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) // c_d
+        s = jnp.where(row_s == col_s, s, NEG_INF)
+
+        acc, l_new = _online_update(s, vd, acc_scr, m_scr, l_scr)
+        out_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(out_ref.dtype)
+
+
+def fused_bifurcated_decode(
+    q: jnp.ndarray,        # (g, rows, hd)  rows = b * p * n
+    k_ctx: jnp.ndarray,    # (g, m_c, hd)
+    v_ctx: jnp.ndarray,    # (g, m_c, hd)
+    k_dec: jnp.ndarray,    # (g, b * c_d, hd) — group-major flattened decode
+    v_dec: jnp.ndarray,    # (g, b * c_d, hd)
+    dec_bias: jnp.ndarray, # (1, b * c_d) f32 — 0 for live slots, NEG_INF else
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    block_m: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-pallas_call bifurcated decode: returns normalized (g, rows, hd).
+
+    The only HBM output is the attention result in the query dtype — the
+    fp32 (acc, m, l) running state lives and dies in VMEM scratch.
+    """
+    g, rows, hd = q.shape
+    m_c = k_ctx.shape[1]
+    block_m = min(block_m, max(128, m_c))
+    pad = (-m_c) % block_m
+    if pad:
+        k_ctx = jnp.pad(k_ctx, ((0, 0), (0, pad), (0, 0)))
+        v_ctx = jnp.pad(v_ctx, ((0, 0), (0, pad), (0, 0)))
+    nb = k_ctx.shape[1] // block_m
+
+    ld = k_dec.shape[1]
+    ld_pad = (-ld) % 128   # lane-align the decode tile
+    if ld_pad:
+        k_dec = jnp.pad(k_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        v_dec = jnp.pad(v_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        dec_bias = jnp.pad(dec_bias, ((0, 0), (0, ld_pad)),
+                           constant_values=NEG_INF)
+    ld_full = ld + ld_pad
+
+    kernel = functools.partial(
+        _fused_kernel, scale=scale, m_c=m_c, block_m=block_m, c_d=c_d, pn=pn
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(g, nb + 1),
+        in_specs=[
+            pl.BlockSpec((1, rows, hd), lambda gi, i: (gi, 0, 0)),
+            # pin the ctx index during the decode step: same block index as
+            # the previous iteration => the revisiting rule skips the DMA.
+            pl.BlockSpec((1, block_m, hd),
+                         lambda gi, i: (gi, jnp.minimum(i, nb - 1), 0)),
+            pl.BlockSpec((1, block_m, hd),
+                         lambda gi, i: (gi, jnp.minimum(i, nb - 1), 0)),
+            pl.BlockSpec((1, ld_full, hd), lambda gi, i: (gi, 0, 0)),
+            pl.BlockSpec((1, ld_full, hd), lambda gi, i: (gi, 0, 0)),
+            pl.BlockSpec((1, ld_full), lambda gi, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, hd), lambda gi, i: (gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, rows, hd), q.dtype),
+        scratch_shapes=[
+            # fp32 VMEM accumulators — never spilled to HBM. Working set per
+            # grid step: rows*hd (q) + 2*block_m*hd (ctx kv) + 2*ld*hd
+            # (decode kv) + rows*(hd+256) (stats) floats; with rows=256,
+            # hd=128, block_m=512, ld=4096 that is ~3.1 MB << 16 MB VMEM.
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_ctx, v_ctx, k_dec, v_dec, dec_bias)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Two-pass building block (context arm only; legacy / oracle path)
+# ---------------------------------------------------------------------------
 
 def _ctx_flash_kernel(
     q_ref,      # (1, rows, hd)
@@ -76,20 +253,7 @@ def _ctx_flash_kernel(
     # mask the zero-padded K tail of the last block
     pos = i * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     s = jnp.where(pos < m_c, s, NEG_INF)
-
-    m_prev = m_scr[:, :1]             # (rows, 1)
-    m_cur = jnp.max(s, axis=-1, keepdims=True)
-    m_new = jnp.maximum(m_prev, m_cur)
-    corr = jnp.exp(m_prev - m_new)    # (rows, 1)
-    p = jnp.exp(s - m_new)            # (rows, block_m)
-    l_new = l_scr[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
-    pv = jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )                                  # (rows, hd)
-    acc_scr[...] = acc_scr[...] * corr + pv
-    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    _online_update(s, v, acc_scr, m_scr, l_scr)
 
     @pl.when(i == nb - 1)
     def _flush():
@@ -99,7 +263,7 @@ def _ctx_flash_kernel(
 
 
 def context_flash_partials(
-    q: jnp.ndarray,        # (g, rows, hd)  rows = b * p
+    q: jnp.ndarray,        # (g, rows, hd)  rows = b * p * n
     k_ctx: jnp.ndarray,    # (g, m_c, hd)
     v_ctx: jnp.ndarray,    # (g, m_c, hd)
     *,
@@ -107,7 +271,12 @@ def context_flash_partials(
     block_m: int = 512,
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns flash partials (acc (g,rows,hd) f32, m (g,rows), l (g,rows))."""
+    """Returns flash partials (acc (g,rows,hd) f32, m (g,rows), l (g,rows)).
+
+    Two-pass path: the partials are spilled to HBM and merged with the
+    einsum decode arm on the host side (ops.py, ``two_pass=True``). The
+    fused kernel above makes this spill unnecessary.
+    """
     g, rows, hd = q.shape
     m_c = k_ctx.shape[1]
     block_m = min(block_m, max(128, m_c))

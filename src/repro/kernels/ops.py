@@ -1,10 +1,31 @@
 """Jitted wrappers + dispatch for the Pallas kernels.
 
-`bifurcated_decode_attention` is the deployable fused path: the context arm
-runs the Pallas flash kernel (K_c/V_c streamed once for the whole batch);
-the small decode arm stays on einsums; both halves merge with the exact
-two-way online-softmax combine. Accepts the framework's cache layouts and
-handles the (g, m_c, hd) kernel layout internally.
+``bifurcated_decode_attention`` is the deployable path. By default it lowers
+to the SINGLE-pass fused kernel (``kernels.bifurcated_decode.
+fused_bifurcated_decode``): one ``pallas_call`` streams the K_c/V_c blocks,
+folds the per-sample decode arm into the same fp32 VMEM running
+``(max, sumexp, acc)`` state with the slot mask applied in-kernel, and
+writes the normalized output — no fp32 partials and no logits ever touch
+HBM, and no host-side merge or transposes remain on the hot path.
+
+``two_pass=True`` is the escape hatch to the historical pipeline: the
+context arm runs the partials kernel (spilling fp32 ``acc/m/l`` to HBM),
+the small decode arm stays on XLA einsums, and the two halves merge with
+the exact two-way online-softmax combine on the host.
+
+Both paths accept the framework's cache layouts ("mgk" ``(m_c, g, hd)`` or
+head-major "gmk" ``(g, m_c, hd)`` — zero-copy for the kernel) and any
+number ``n >= 1`` of fresh query positions per sample (speculative /
+draft-token decoding): ``n`` is folded into the kernel's row dimension
+(``rows = b*p*n``), matching ``core.bifurcated_attention`` semantics under
+a shared ``(b, C_d)`` decode mask. NOTE that a shared mask means attention
+WITHIN the fresh draft block is bidirectional — the framework's existing
+n>1 semantics (models/blocks.py builds exactly this mask); per-draft-token
+causal masks ((b, n, C_d) form) are not expressible in the fused kernel yet.
+
+``interpret=None`` (the default) resolves by backend: compiled Mosaic on
+TPU, interpret mode elsewhere — so the model/serve stack gets the real
+kernel on hardware without threading a flag through every layer.
 """
 from __future__ import annotations
 
@@ -14,17 +35,20 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bifurcated_decode import context_flash_partials
+from repro.kernels.bifurcated_decode import (
+    context_flash_partials,
+    fused_bifurcated_decode,
+)
 
 NEG_INF = -1e30
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale", "block_m", "interpret", "ctx_layout"),
+    static_argnames=("scale", "block_m", "interpret", "ctx_layout", "two_pass"),
 )
 def bifurcated_decode_attention(
-    q: jnp.ndarray,         # (b, g, p, 1, hd) — framework decode layout
+    q: jnp.ndarray,         # (b, g, p, n, hd) — framework decode layout
     k_ctx: jnp.ndarray,     # (m_c, g, hd) "mgk" or (g, m_c, hd) "gmk"
     v_ctx: jnp.ndarray,
     k_dec: jnp.ndarray,     # (b, c_d, g, hd)
@@ -33,41 +57,62 @@ def bifurcated_decode_attention(
     *,
     scale: Optional[float] = None,
     block_m: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     ctx_layout: str = "mgk",
+    two_pass: bool = False,
 ) -> jnp.ndarray:
     b, g, p, n, hd = q.shape
-    assert n == 1, "fused kernel path is n=1 decode; use einsum path for n>1"
+    c_d = k_dec.shape[1]
     scale = hd**-0.5 if scale is None else scale
+    if interpret is None:  # static arg: resolved once at trace time
+        interpret = jax.default_backend() != "tpu"
 
-    # ---- context arm: Pallas flash kernel, (g, rows, hd) layout ----
-    qk = q[:, :, :, 0, :].transpose(1, 0, 2, 3).reshape(g, b * p, hd)
+    # kernel-major query rows: r = (b_idx*p + p_idx)*n + n_idx
+    qk = q.transpose(1, 0, 2, 3, 4).reshape(g, b * p * n, hd)
     if ctx_layout == "gmk":  # already kernel-major: zero-copy
         kc, vc = k_ctx, v_ctx
     else:
         kc = k_ctx.transpose(1, 0, 2)  # (g, m_c, hd)
         vc = v_ctx.transpose(1, 0, 2)
+
+    if not two_pass:
+        # ---- single-pass fused kernel: decode arm + merge in-kernel ----
+        kd = k_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+        vd = v_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+        bias = jnp.where(dec_mask.reshape(1, b * c_d), 0.0, NEG_INF
+                         ).astype(jnp.float32)
+        out = fused_bifurcated_decode(
+            qk, kc, vc, kd, vd, bias,
+            scale=scale, c_d=c_d, pn=p * n,
+            block_m=block_m, interpret=interpret,
+        )  # (g, b*p*n, hd), normalized
+        out = out.reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
+        return out.astype(q.dtype)
+
+    # ---- two-pass escape hatch: partials kernel + einsum arm + merge ----
     acc_c, m_cx, l_c = context_flash_partials(
         qk, kc, vc, scale=scale, block_m=block_m, interpret=interpret
-    )  # (g, b*p, hd), (g, b*p), (g, b*p)
+    )  # (g, b*p*n, hd), (g, b*p*n), (g, b*p*n)
 
-    # ---- decode arm: einsum partials (c_d is small) ----
-    s_d = jnp.einsum("bgpk,bmgk->bgpm", q[:, :, :, 0, :], k_dec).astype(jnp.float32)
+    # decode arm: einsum partials (c_d is small)
+    s_d = jnp.einsum("bgpnk,bmgk->bgpnm", q, k_dec).astype(jnp.float32)
     s_d = s_d * scale
-    s_d = jnp.where(dec_mask[:, None, None, :], s_d, NEG_INF)
+    s_d = jnp.where(dec_mask[:, None, None, None, :], s_d, NEG_INF)
     m_d = jnp.max(s_d, axis=-1)
     m_d = jnp.maximum(m_d, NEG_INF / 2)
     e_d = jnp.exp(s_d - m_d[..., None])
     l_d = jnp.sum(e_d, axis=-1)
-    acc_d = jnp.einsum("bgpm,bmgv->bgpv", e_d.astype(v_dec.dtype), v_dec).astype(jnp.float32)
+    acc_d = jnp.einsum(
+        "bgpnm,bmgv->bgpnv", e_d.astype(v_dec.dtype), v_dec
+    ).astype(jnp.float32)
 
-    # ---- exact two-way merge ----
-    acc_cb = acc_c.reshape(g, b, p, hd).transpose(1, 0, 2, 3)
-    m_cb = m_cx.reshape(g, b, p).transpose(1, 0, 2)
-    l_cb = l_c.reshape(g, b, p).transpose(1, 0, 2)
+    # exact two-way merge
+    acc_cb = acc_c.reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
+    m_cb = m_cx.reshape(g, b, p, n).transpose(1, 0, 2, 3)
+    l_cb = l_c.reshape(g, b, p, n).transpose(1, 0, 2, 3)
     m_star = jnp.maximum(m_cb, m_d)
     corr_c = jnp.exp(m_cb - m_star)
     corr_d = jnp.exp(m_d - m_star)
     l_tot = l_cb * corr_c + l_d * corr_d
     out = (acc_cb * corr_c[..., None] + acc_d * corr_d[..., None]) / l_tot[..., None]
-    return out[:, :, :, None, :].astype(q.dtype)  # (b, g, p, 1, hd)
+    return out.astype(q.dtype)  # (b, g, p, n, hd)

@@ -53,7 +53,7 @@ def model_flops_estimate(cfg, n_params: int, kind: str, seq_len: int,
 
 def run_cell(arch: str, shape: str, *, multi_pod: bool, impl: str = "flash",
              bifurcated: bool = True, remat: str = "full",
-             train_attn: str = "chunked", ctx_layout: str = "mgk",
+             train_attn: str = "chunked", ctx_layout: str = "gmk",
              params_dtype: str = "default", ctx_quant: str = "none",
              verbose: bool = True) -> dict:
     if not S.cell_supported(arch, shape):
@@ -202,7 +202,7 @@ def main():
     ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
     ap.add_argument("--train-attn", default="chunked",
                     choices=["chunked", "flash"])
-    ap.add_argument("--ctx-layout", default="mgk", choices=["mgk", "gmk"])
+    ap.add_argument("--ctx-layout", default="gmk", choices=["mgk", "gmk"])
     ap.add_argument("--params-dtype", default="default",
                     choices=["default", "bf16"])
     ap.add_argument("--ctx-quant", default="none", choices=["none", "int8"])

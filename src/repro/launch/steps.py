@@ -70,16 +70,16 @@ def cache_pspec_tree(mesh, cache) -> object:
     ba = batch_axes(mesh)
 
     def spec_bif(c: BifurcatedCache):
-        # context m-dim is dim 1 ("mgk") or dim 2 ("gmk"): pick the larger
-        ctx_axes = [None, "model", None, None]
-        if c.k_ctx.shape[2] > c.k_ctx.shape[1]:
-            ctx_axes = [None, None, "model", None]
+        # shard the context sequence dim: dim 1 ("mgk") or dim 2 ("gmk")
+        ctx_axes = ([None, None, "model", None] if c.ctx_layout == "gmk"
+                    else [None, "model", None, None])
         return BifurcatedCache(
             k_ctx=spec_for_leaf(mesh, c.k_ctx.shape, ctx_axes),
             v_ctx=spec_for_leaf(mesh, c.v_ctx.shape, ctx_axes),
             k_dec=spec_for_leaf(mesh, c.k_dec.shape, [None, ba, "model", None, None]),
             v_dec=spec_for_leaf(mesh, c.v_dec.shape, [None, ba, "model", None, None]),
             dec_length=P(),
+            ctx_layout=c.ctx_layout,
         )
 
     def spec_std(c: DecodeCache):

@@ -331,6 +331,13 @@ def attention_decode(
                                    "k_dec": (b,Cd,g,hd), "v_dec": ...}
     ``position`` — absolute position of the new token(s); also the write
     index for the standard cache; decode-cache index is position - m_c.
+
+    n > 1 (speculative draft blocks): all paths share one (b, C_d) slot
+    mask, so attention WITHIN the fresh draft block is bidirectional —
+    draft token 0 sees tokens 1..n-1. Per-draft causal masks ((b, n, C_d),
+    supported by core.bifurcated_attention) are not wired through here or
+    expressible in the fused kernel yet; verify-then-accept speculative
+    schemes that require strict causality must decode token-by-token.
     """
     b, n = x.shape[:2]
     g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
@@ -373,8 +380,10 @@ def attention_decode(
                 decode_mask=jnp.broadcast_to(dec_valid, (b, cap)),
                 context_mask=ctx_valid,
             )
-        elif impl == "kernel" and n == 1 and window is None:
-            # fused Pallas flash-decode path (beyond-paper; kernels/ops.py)
+        elif impl == "kernel" and window is None:
+            # single-pass fused Pallas decode (beyond-paper; kernels/ops.py):
+            # context stream + decode arm + merge in ONE pallas_call, any n
+            # (speculative draft tokens ride the kernel's row dimension).
             from repro.kernels.ops import bifurcated_decode_attention
 
             o = bifurcated_decode_attention(

@@ -157,7 +157,8 @@ class EncDecModel:
         dec_capacity = dec_capacity or cfg.decode_capacity
         if bifurcated:
             self_cache = BifurcatedCache.spec(L, batch, capacity - dec_capacity,
-                                              dec_capacity, g, hd)
+                                              dec_capacity, g, hd,
+                                              ctx_layout=cfg.ctx_layout)
             cross = jax.ShapeDtypeStruct((L, n_enc, g, hd), jnp.bfloat16)
         else:
             self_cache = DecodeCache.spec(L, batch, capacity, g, hd)
@@ -200,7 +201,8 @@ class EncDecModel:
         if bifurcated:
             cache = {
                 "self": BifurcatedCache.from_prefill(
-                    ks[:, 0], vs[:, 0], sample_batch or b, dec_capacity
+                    ks[:, 0], vs[:, 0], sample_batch or b, dec_capacity,
+                    ctx_layout=cfg.ctx_layout,
                 ),
                 "cross_k": xks[:, 0], "cross_v": xvs[:, 0],
             }
@@ -223,7 +225,7 @@ class EncDecModel:
         bifurcated = isinstance(self_cache, BifurcatedCache)
         b, n = tokens.shape
         if bifurcated:
-            position = self_cache.k_ctx.shape[1] + self_cache.dec_length
+            position = self_cache.context_len + self_cache.dec_length
             lcaches = {"k_ctx": self_cache.k_ctx, "v_ctx": self_cache.v_ctx,
                        "k_dec": self_cache.k_dec, "v_dec": self_cache.v_dec}
         else:
@@ -267,7 +269,8 @@ class EncDecModel:
             new_self = BifurcatedCache(
                 k_ctx=self_cache.k_ctx, v_ctx=self_cache.v_ctx,
                 k_dec=new_lcaches["k_dec"], v_dec=new_lcaches["v_dec"],
-                dec_length=self_cache.dec_length + n)
+                dec_length=self_cache.dec_length + n,
+                ctx_layout=self_cache.ctx_layout)
         else:
             new_self = DecodeCache(k=new_lcaches["k"], v=new_lcaches["v"],
                                    length=self_cache.length + n)

@@ -126,7 +126,8 @@ class HybridModel:
         state = mamba_state_spec(cfg, self.n_super * cfg.attn_period + self.n_tail, batch)
         if bifurcated:
             attn = BifurcatedCache.spec(
-                self.n_super, batch, capacity - dec_capacity, dec_capacity, g, hd
+                self.n_super, batch, capacity - dec_capacity, dec_capacity, g, hd,
+                ctx_layout=cfg.ctx_layout,
             )
         else:
             attn = DecodeCache.spec(self.n_super, batch, capacity, g, hd)
@@ -220,11 +221,16 @@ class HybridModel:
         vs = jnp.stack(attn_vs)
         if bifurcated:
             attn_cache = cache["attn"]
+            m_c = attn_cache.context_len
+            kc, vc = ks[:, 0, :m_c], vs[:, 0, :m_c]  # (n_super, m_c, g, hd)
+            if attn_cache.ctx_layout == "gmk":
+                kc = kc.transpose(0, 2, 1, 3)        # (n_super, g, m_c, hd)
+                vc = vc.transpose(0, 2, 1, 3)
             attn_cache = BifurcatedCache(
-                k_ctx=ks[:, 0, : attn_cache.k_ctx.shape[1]],
-                v_ctx=vs[:, 0, : attn_cache.v_ctx.shape[1]],
+                k_ctx=kc, v_ctx=vc,
                 k_dec=attn_cache.k_dec, v_dec=attn_cache.v_dec,
                 dec_length=jnp.zeros((), jnp.int32),
+                ctx_layout=attn_cache.ctx_layout,
             )
         else:
             dc = cache["attn"]
@@ -252,7 +258,7 @@ class HybridModel:
 
         new_ssm, new_conv = [], []
         if bifurcated:
-            attn_pos = attn_cache.k_ctx.shape[1] + attn_cache.dec_length
+            attn_pos = attn_cache.context_len + attn_cache.dec_length
             lcaches = {"k_ctx": attn_cache.k_ctx, "v_ctx": attn_cache.v_ctx,
                        "k_dec": attn_cache.k_dec, "v_dec": attn_cache.v_dec}
         else:
@@ -290,6 +296,7 @@ class HybridModel:
                 k_ctx=attn_cache.k_ctx, v_ctx=attn_cache.v_ctx,
                 k_dec=stacked_lc["k_dec"], v_dec=stacked_lc["v_dec"],
                 dec_length=attn_cache.dec_length + tokens.shape[1],
+                ctx_layout=attn_cache.ctx_layout,
             )
         else:
             new_attn = DecodeCache(k=stacked_lc["k"], v=stacked_lc["v"],

@@ -172,8 +172,7 @@ class TransformerLM:
         x = self._embed(params, tokens)
         x = constrain(x, rules, "batch", None, None)
         if bifurcated:
-            m_dim = 2 if (cfg.ctx_layout == "gmk" and not quant) else 1
-            position = cache.k_ctx.shape[m_dim] + cache.dec_length
+            position = cache.context_len + cache.dec_length
             layer_caches = {
                 "k_ctx": cache.k_ctx, "v_ctx": cache.v_ctx,
                 "k_dec": cache.k_dec, "v_dec": cache.v_dec,
@@ -218,6 +217,7 @@ class TransformerLM:
                 k_ctx=cache.k_ctx, v_ctx=cache.v_ctx,
                 k_dec=new_caches["k_dec"], v_dec=new_caches["v_dec"],
                 dec_length=cache.dec_length + n,
+                ctx_layout=cache.ctx_layout,
             )
         else:
             new_cache = DecodeCache(

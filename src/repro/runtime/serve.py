@@ -3,9 +3,15 @@
 Pipeline (paper Figure 1, bottom):
   1. ``prefill`` the ONE shared context (batch=1) -> unbatched context KV;
   2. fork ``b`` samples: BifurcatedCache broadcasts nothing — the context
-     half stays (L, m_c, g, hd), only the small decode half is per-sample;
-  3. jitted ``serve_step`` loop: bifurcated attention + nucleus/temperature
-     sampling, buffers donated;
+     half stays head-major (L, g, m_c, hd), only the small decode half is
+     per-sample;
+  3. the WHOLE ``n_steps`` decode phase is ONE jitted dispatch: a
+     ``lax.scan`` over decode steps with the (cache, token, key, logp)
+     carry donated, tokens/logprobs stacked on-device. No per-token Python
+     -> XLA round trips; with ``use_kernel`` every layer-step inside the
+     scan is the single-pass fused Pallas kernel. ``loop="python"`` keeps
+     the historical per-token dispatch loop as a debugging/verification
+     fallback (same RNG stream, identical tokens).
   4. the BifurcationPolicy switch falls back to the fused standard cache for
      tiny workloads (paper FAQ #4), so enabling the feature is never a loss.
 
@@ -63,6 +69,15 @@ class ServeEngine:
             donate_argnums=(1,),
             static_argnames=("temperature", "top_p"),
         )
+        # the whole decode phase as ONE dispatch (lax.scan over steps);
+        # n_steps is static — one compile per generation length.
+        self._decode_scan = jax.jit(
+            self._decode_scan_body,
+            donate_argnums=(1,),
+            static_argnames=("n_steps", "temperature", "top_p"),
+        )
+        # python-visible dispatch counter for the decode phase (tested).
+        self.decode_dispatches = 0
 
     # ---- policy ----
     def should_bifurcate(self, batch: int, m_c: int) -> bool:
@@ -82,7 +97,8 @@ class ServeEngine:
             if bifurcated:
                 cache = BifurcatedCache.from_prefill(
                     cache1.k[:, 0], cache1.v[:, 0], batch,
-                    self.scfg.decode_capacity, dtype=cache1.k.dtype)
+                    self.scfg.decode_capacity, dtype=cache1.k.dtype,
+                    ctx_layout=cfg.ctx_layout)
             else:
                 L = cache1.k.shape[0]
                 pad = self.scfg.decode_capacity
@@ -136,7 +152,8 @@ class ServeEngine:
                         attn.k_dec, (attn.k_dec.shape[0], batch, *attn.k_dec.shape[2:])),
                     v_dec=jnp.broadcast_to(
                         attn.v_dec, (attn.v_dec.shape[0], batch, *attn.v_dec.shape[2:])),
-                    dec_length=attn.dec_length)
+                    dec_length=attn.dec_length,
+                    ctx_layout=attn.ctx_layout)
             else:
                 attn = DecodeCache(
                     k=jnp.broadcast_to(attn.k, (attn.k.shape[0], batch, *attn.k.shape[2:])),
@@ -157,9 +174,28 @@ class ServeEngine:
         tok_logp = jnp.take_along_axis(logp, next_tok[:, None], axis=-1)[:, 0]
         return (cache, next_tok[:, None], key, logp_sum + tok_logp), (next_tok, tok_logp)
 
+    def _decode_scan_body(self, params, carry, *, n_steps, temperature, top_p):
+        """The entire decode phase as one XLA computation: ``n_steps`` decode
+        steps under ``lax.scan`` (per-step RNG stream identical to the
+        python-loop path), tokens/logprobs stacked on-device."""
+
+        def step(c, _):
+            return self._decode_body(params, c, temperature=temperature,
+                                     top_p=top_p)
+
+        carry, (toks, lps) = jax.lax.scan(step, carry, None, length=n_steps)
+        return carry, (toks, lps)   # ys: (n_steps, b)
+
     def generate(self, params, context_tokens, *, n_steps: int,
-                 batch: Optional[int] = None, key=None, **prefill_kwargs
-                 ) -> GenerationResult:
+                 batch: Optional[int] = None, key=None, loop: str = "scan",
+                 **prefill_kwargs) -> GenerationResult:
+        """Prefill once, then decode ``n_steps`` tokens per sample.
+
+        ``loop="scan"`` (default) runs the whole decode phase as a single
+        jitted ``lax.scan`` dispatch; ``loop="python"`` is the historical
+        one-dispatch-per-token loop (same RNG stream, identical tokens) kept
+        for debugging and equivalence testing.
+        """
         scfg = self.scfg
         batch = batch or scfg.batch
         key = key if key is not None else jax.random.PRNGKey(scfg.seed)
@@ -169,17 +205,32 @@ class ServeEngine:
         tok = sample_tokens(sub, logits0, scfg.temperature, scfg.top_p)
         logp0 = jax.nn.log_softmax(logits0.astype(jnp.float32), axis=-1)
         lp = jnp.take_along_axis(logp0, tok[:, None], axis=-1)[:, 0]
-        # the carry is donated into _decode_jit — keep independent copies of
-        # anything we also retain on the host side
+        # the carry is donated into the decode dispatch — keep independent
+        # copies of anything we also retain on the host side
         carry = (cache, tok[:, None], key, lp + 0.0)
-        toks, lps = [tok], [lp]
-        for _ in range(n_steps - 1):
-            carry, (t, l) = self._decode_jit(
-                params, carry, temperature=scfg.temperature, top_p=scfg.top_p)
-            toks.append(t)
-            lps.append(l)
-        tokens = jnp.stack(toks, axis=1)
-        logprobs = jnp.stack(lps, axis=1)
+        if loop == "scan":
+            if n_steps > 1:
+                _, (ts, ls) = self._decode_scan(
+                    params, carry, n_steps=n_steps - 1,
+                    temperature=scfg.temperature, top_p=scfg.top_p)
+                self.decode_dispatches += 1
+                tokens = jnp.concatenate([tok[:, None], ts.T], axis=1)
+                logprobs = jnp.concatenate([lp[:, None], ls.T], axis=1)
+            else:
+                tokens, logprobs = tok[:, None], lp[:, None]
+        elif loop == "python":
+            toks, lps = [tok], [lp]
+            for _ in range(n_steps - 1):
+                carry, (t, l) = self._decode_jit(
+                    params, carry, temperature=scfg.temperature,
+                    top_p=scfg.top_p)
+                self.decode_dispatches += 1
+                toks.append(t)
+                lps.append(l)
+            tokens = jnp.stack(toks, axis=1)
+            logprobs = jnp.stack(lps, axis=1)
+        else:
+            raise ValueError(f"unknown loop mode: {loop!r}")
         return GenerationResult(
             tokens=tokens,
             mean_logprob=jnp.mean(logprobs, axis=1),

@@ -1,0 +1,181 @@
+"""Single-pass fused bifurcated decode kernel (kernels/bifurcated_decode.
+fused_bifurcated_decode via ops.bifurcated_decode_attention):
+
+  * interpret-mode exactness vs the monolithic-softmax oracle (ref.py) over
+    b x p x tail x mask x dtype sweeps (acceptance: <= 1e-5 f32, 2e-2 bf16);
+  * structural guarantee: ONE pallas_call, ONE output, no fp32 acc/m/l
+    partials in its out_shape;
+  * n > 1 (speculative draft tokens) folded into the kernel row dimension,
+    checked against core.bifurcated_attention;
+  * fused == two_pass escape hatch on identical inputs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bifurcated import bifurcated_attention
+from repro.kernels.ops import bifurcated_decode_attention
+from repro.kernels.ref import bifurcated_decode_ref
+
+# (b, p, m_c, c_d, block_m) — g/hd fixed small to keep interpret mode fast;
+# m_c values include non-multiples of block_m (tail masking in-kernel).
+SWEEP = [
+    (1, 1, 64, 8, 64),
+    (1, 4, 130, 4, 128),     # ragged ctx tail, single sample
+    (4, 1, 300, 16, 128),    # ragged tail, mid batch
+    (4, 4, 257, 7, 128),     # prime-ish sizes
+    (32, 1, 512, 8, 256),    # large batch (paper's regime), aligned ctx
+    (32, 4, 96, 24, 128),    # large batch, block_m > m_c
+]
+G, HD = 2, 32
+
+
+def make(b, p, m_c, c_d, dtype, seed=0, full_mask=False):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(b, G, p, HD), dtype)
+    kc = jnp.asarray(rng.randn(G, m_c, HD), dtype)
+    vc = jnp.asarray(rng.randn(G, m_c, HD), dtype)
+    kd = jnp.asarray(rng.randn(b, G, c_d, HD), dtype)
+    vd = jnp.asarray(rng.randn(b, G, c_d, HD), dtype)
+    if full_mask:
+        mask = jnp.ones((b, c_d), bool)
+    else:
+        # ragged per-sample decode lengths: partially-masked C_d slots
+        lens = rng.randint(0, c_d + 1, size=(b,))
+        lens[0] = max(1, lens[0])
+        mask = jnp.arange(c_d)[None, :] < jnp.asarray(lens)[:, None]
+    return q, kc, vc, kd, vd, mask
+
+
+def _fused(q, kc, vc, kd, vd, mask, block_m, **kw):
+    """Call through ops with framework ("mgk"/batch-major) cache layouts."""
+    return bifurcated_decode_attention(
+        q[:, :, :, None, :], kc.transpose(1, 0, 2), vc.transpose(1, 0, 2),
+        kd.transpose(0, 2, 1, 3), vd.transpose(0, 2, 1, 3), mask,
+        block_m=block_m, interpret=True, **kw)[:, :, :, 0, :]
+
+
+@pytest.mark.parametrize("shape", SWEEP)
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5), (jnp.bfloat16, 2e-2)])
+def test_fused_vs_oracle(shape, dtype, tol):
+    b, p, m_c, c_d, block_m = shape
+    q, kc, vc, kd, vd, mask = make(b, p, m_c, c_d, dtype, seed=sum(shape))
+    out = _fused(q, kc, vc, kd, vd, mask, block_m)
+    ref = bifurcated_decode_ref(q, kc, vc, kd, vd, mask, HD**-0.5)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", SWEEP[:3])
+def test_fused_matches_two_pass(shape):
+    b, p, m_c, c_d, block_m = shape
+    q, kc, vc, kd, vd, mask = make(b, p, m_c, c_d, jnp.float32, seed=7)
+    out_f = _fused(q, kc, vc, kd, vd, mask, block_m)
+    out_t = _fused(q, kc, vc, kd, vd, mask, block_m, two_pass=True)
+    np.testing.assert_allclose(out_f, out_t, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_gmk_layout_zero_copy_semantics():
+    """"gmk" (head-major) context input produces identical results."""
+    b, p, m_c, c_d = 4, 2, 100, 12
+    q, kc, vc, kd, vd, mask = make(b, p, m_c, c_d, jnp.float32, seed=3)
+    out_mgk = _fused(q, kc, vc, kd, vd, mask, 128)
+    out_gmk = bifurcated_decode_attention(
+        q[:, :, :, None, :], kc, vc,  # already (g, m_c, hd)
+        kd.transpose(0, 2, 1, 3), vd.transpose(0, 2, 1, 3), mask,
+        block_m=128, interpret=True, ctx_layout="gmk")[:, :, :, 0, :]
+    np.testing.assert_allclose(out_mgk, out_gmk, rtol=1e-6, atol=1e-6)
+
+
+# ---- structural guarantee: one pallas_call, normalized single output ----
+
+def _collect_pallas_calls(jaxpr):
+    calls = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            calls.append(eqn)
+        for v in eqn.params.values():
+            # duck-typed: ClosedJaxpr (has .jaxpr) / raw Jaxpr (has .eqns)
+            # moved modules across jax versions
+            if hasattr(v, "jaxpr"):
+                calls += _collect_pallas_calls(v.jaxpr)
+            elif hasattr(v, "eqns"):
+                calls += _collect_pallas_calls(v)
+    return calls
+
+
+def _pallas_calls_of(two_pass):
+    b, p, m_c, c_d = 2, 2, 64, 8
+    q, kc, vc, kd, vd, mask = make(b, p, m_c, c_d, jnp.bfloat16, seed=1,
+                                   full_mask=True)
+    jaxpr = jax.make_jaxpr(
+        lambda *a: bifurcated_decode_attention(*a, interpret=True,
+                                               two_pass=two_pass)
+    )(q[:, :, :, None, :], kc.transpose(1, 0, 2), vc.transpose(1, 0, 2),
+      kd.transpose(0, 2, 1, 3), vd.transpose(0, 2, 1, 3), mask)
+    return _collect_pallas_calls(jaxpr.jaxpr)
+
+
+def test_fused_is_single_pallas_call_no_partial_outputs():
+    calls = _pallas_calls_of(two_pass=False)
+    assert len(calls) == 1, f"expected ONE pallas_call, got {len(calls)}"
+    outs = calls[0].outvars
+    assert len(outs) == 1, f"fused kernel must write only the output: {outs}"
+    # normalized output in the query dtype — no fp32 acc/m/l spills
+    assert outs[0].aval.dtype == jnp.bfloat16, outs[0].aval
+
+
+def test_two_pass_spills_fp32_partials():
+    """The escape hatch keeps the historical 3-output partials kernel."""
+    calls = _pallas_calls_of(two_pass=True)
+    assert len(calls) == 1
+    outs = calls[0].outvars
+    assert len(outs) == 3  # acc, m, l
+    assert all(o.aval.dtype == jnp.float32 for o in outs)
+
+
+# ---- speculative n > 1 (satellite: n folded into kernel rows) ----
+
+@pytest.mark.parametrize("two_pass", [False, True])
+@pytest.mark.parametrize("n", [2, 4])
+def test_n_gt_1_matches_bifurcated_attention(two_pass, n):
+    b, g, p, hd, m_c, c_d = 3, 2, 2, 32, 100, 12
+    rng = np.random.RandomState(n)
+    q = jnp.asarray(rng.randn(b, g, p, n, hd), jnp.float32)
+    kc = jnp.asarray(rng.randn(m_c, g, hd), jnp.float32)
+    vc = jnp.asarray(rng.randn(m_c, g, hd), jnp.float32)
+    kd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.float32)
+    vd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.float32)
+    mask = jnp.broadcast_to(jnp.arange(c_d)[None] < c_d - 3, (b, c_d))
+    out = bifurcated_decode_attention(q, kc, vc, kd, vd, mask,
+                                      interpret=True, two_pass=two_pass)
+    ref = bifurcated_attention(q, kc, vc, kd, vd, decode_mask=mask)
+    assert out.shape == (b, g, p, n, hd)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_n_gt_1_through_model_kernel_impl():
+    """decode_step(impl="kernel") accepts n>1 draft blocks end-to-end."""
+    from repro.configs import get_config, reduced_config
+    from repro.core.kv_cache import BifurcatedCache
+    from repro.models import get_model
+
+    cfg = reduced_config(get_config("internlm2-1.8b"))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(2)
+    ctx = jnp.asarray(rng.randint(0, cfg.vocab_size, (1, 24)))
+    _, c1 = model.prefill(params, ctx, None)
+    b, n_g = 3, 4
+    cache = BifurcatedCache.from_prefill(c1.k[:, 0], c1.v[:, 0], b, 16,
+                                         dtype=c1.k.dtype,
+                                         ctx_layout=cfg.ctx_layout)
+    draft = jnp.asarray(rng.randint(0, cfg.vocab_size, (b, n_g)))
+    lk, _ = model.decode_step(params, cache, draft, None, impl="kernel")
+    le, _ = model.decode_step(params, cache, draft, None, impl="einsum")
+    assert lk.shape == (b, n_g, cfg.padded_vocab)
+    assert not bool(jnp.isnan(lk).any())
+    scale = float(jnp.max(jnp.abs(le)))
+    assert float(jnp.max(jnp.abs(lk - le))) < 0.05 * max(scale, 1.0)

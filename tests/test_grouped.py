@@ -2,7 +2,10 @@
 exactness vs per-group monolithic attention, ragged prefixes, IO dominance."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests only
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.attention import multigroup_attention
 from repro.core.grouped import (

@@ -11,7 +11,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests only
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bifurcated_attention, multigroup_attention
 from repro.core.bifurcated import _partial_softmax, merge_partials

@@ -65,7 +65,7 @@ def test_cache_memory_footprint_single_context():
     b, m_c, cd = 16, 48, 16
     _, cache = _engine(True, batch=b).prefill_shared(PARAMS, CTX, b)
     assert isinstance(cache, BifurcatedCache)
-    slots_bif = cache.k_ctx.shape[1] + b * cache.k_dec.shape[2]
+    slots_bif = cache.context_len + b * cache.decode_capacity
     _, std = _engine(False, batch=b).prefill_shared(PARAMS, CTX, b)
     slots_std = b * std.k.shape[2]
     assert slots_bif < slots_std / 3
@@ -89,6 +89,38 @@ def test_sample_tokens_greedy_and_topp():
     toks = [int(sample_tokens(jax.random.PRNGKey(i), logits, 1.0, 0.5)[0])
             for i in range(20)]
     assert set(toks) == {1}
+
+
+def test_scan_loop_matches_python_loop():
+    """The single-dispatch lax.scan decode phase reproduces the per-token
+    python loop EXACTLY (same RNG stream => identical tokens/logprobs)."""
+    r_scan = _engine(True).generate(PARAMS, CTX, n_steps=8,
+                                    key=jax.random.PRNGKey(11), loop="scan")
+    r_loop = _engine(True).generate(PARAMS, CTX, n_steps=8,
+                                    key=jax.random.PRNGKey(11), loop="python")
+    np.testing.assert_array_equal(np.asarray(r_scan.tokens),
+                                  np.asarray(r_loop.tokens))
+    np.testing.assert_allclose(np.asarray(r_scan.logprobs),
+                               np.asarray(r_loop.logprobs),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_phase_is_one_dispatch_one_compile():
+    """Acceptance: the decode phase of generate() is exactly ONE jitted
+    dispatch (lax.scan), and repeated same-shape generations hit the same
+    executable (compile count stays 1)."""
+    eng = _engine(True)
+    assert eng.decode_dispatches == 0
+    eng.generate(PARAMS, CTX, n_steps=8, key=jax.random.PRNGKey(0))
+    assert eng.decode_dispatches == 1
+    eng.generate(PARAMS, CTX, n_steps=8, key=jax.random.PRNGKey(1))
+    assert eng.decode_dispatches == 2          # one dispatch per generate
+    assert eng._decode_scan._cache_size() == 1  # ... but a single compile
+    # the python loop pays one dispatch per token instead
+    eng2 = _engine(True)
+    eng2.generate(PARAMS, CTX, n_steps=8, key=jax.random.PRNGKey(0),
+                  loop="python")
+    assert eng2.decode_dispatches == 7
 
 
 def test_speculative_n_tokens_decode():

@@ -64,7 +64,7 @@ def test_sharded_serve_step_compiles_on_8_device_mesh():
 
         cfg = reduced_config(get_config("internlm2-1.8b"))
         mesh = jax.make_mesh((2, 4), ("data", "model"))
-        with jax.sharding.set_mesh(mesh):
+        with mesh:
             model, step, rules = ST.build_serve(cfg, mesh, impl="flash")
             params = S.param_specs(model)
             io = S.decode_cache_specs(cfg, model, 64, 8, bifurcated=True)
@@ -102,7 +102,7 @@ def test_sharded_train_step_runs_on_8_device_mesh():
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         tcfg = TrainConfig(global_batch=8, seq_len=32, remat="none",
                            warmup_steps=2, total_steps=10)
-        with jax.sharding.set_mesh(mesh):
+        with mesh:
             model, step, rules = ST.build_train(cfg, mesh, tcfg)
             params = model.init(jax.random.PRNGKey(0))
             from repro.optim import adamw_init
