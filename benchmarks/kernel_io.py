@@ -2,20 +2,27 @@
 bifurcated decode vs the two-pass (partials-spill) kernel vs the 4-einsum
 paper path.
 
-Since real-TPU timing is unavailable here, we compare (a) exactness of both
-kernel paths in interpret mode, (b) modelled HBM traffic per implementation
+Since real-TPU timing is unavailable here, we compare (a) exactness of the
+kernel paths in interpret mode (bf16 fused, two-pass, and the int8-context
+fused_q8), (b) modelled HBM traffic per implementation
 (core.io_model.decode_impl_io_bytes): the einsum path round-trips fp32
 logits through HBM, the two-pass path round-trips the fp32 (acc, m, l)
-flash partials, the fused path spills NOTHING — KV + q + output only.
-Wall-clock grids live in benchmarks/latency_decode.py (BENCH_fused_decode)."""
+flash partials, the fused path spills NOTHING — KV + q + output only — and
+fused_q8 additionally streams the context arm at 1 byte/el (+ scales).
+Wall-clock grids live in benchmarks/latency_decode.py (BENCH_fused_decode,
+BENCH_quant_decode)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.io_model import decode_impl_io_bytes
-from repro.kernels.ops import bifurcated_decode_attention
+from repro.core.io_model import decode_impl_io_bytes, quantized_ctx_bytes
+from repro.core.quantized import quantize_ctx
+from repro.kernels.ops import (
+    bifurcated_decode_attention,
+    bifurcated_decode_attention_q8,
+)
 from repro.kernels.ref import bifurcated_decode_ref
 
 
@@ -41,19 +48,40 @@ def run(report):
         report(f"kernel_io/{name}_interpret_max_abs_err", err)
         assert err < 3e-2
 
+    # quantized-context fused kernel: int8 + scales, same single pallas_call
+    kq, ks = quantize_ctx(kc, fold_scale=hd**-0.5)
+    vq, vs = quantize_ctx(vc)
+    out_q8 = bifurcated_decode_attention_q8(
+        q[:, :, :, None, :], kq, vq, ks, vs,
+        kd.transpose(0, 2, 1, 3), vd.transpose(0, 2, 1, 3), mask,
+        interpret=True, ctx_layout="gmk")[:, :, :, 0, :]
+    err_q8 = float(jnp.max(jnp.abs(
+        out_q8.astype(jnp.float32) - ref.astype(jnp.float32))))
+    report("kernel_io/fused_q8_interpret_max_abs_err", err_q8)
+    assert err_q8 < 6e-2  # bf16 tolerance + int8 rounding
+
     # HBM traffic model (bytes), per layer-call:
     io = {
         impl: decode_impl_io_bytes(b=b, p=p, n=1, m_c=m_c, c_d=c_d, g=g,
                                    hd=hd, impl=impl)
-        for impl in ("einsum", "two_pass", "fused")
+        for impl in ("einsum", "einsum_q8", "two_pass", "fused", "fused_q8")
     }
     for impl, bytes_ in io.items():
         report(f"kernel_io/{impl}_path_bytes", bytes_)
     report("kernel_io/fused_vs_einsum_io_saving", io["einsum"] / io["fused"])
     report("kernel_io/fused_vs_two_pass_io_saving",
            io["two_pass"] / io["fused"])
-    # strict ordering: each generation of the path removes HBM round trips
-    assert io["fused"] < io["two_pass"] < io["einsum"]
+    report("kernel_io/fused_q8_vs_fused_io_saving",
+           io["fused"] / io["fused_q8"])
+    # context-arm-only traffic: the term quantization halves (~2x at hd=128)
+    ctx_saving = (2 * g * m_c * hd * 2) / quantized_ctx_bytes(
+        m_c=m_c, g=g, hd=hd)
+    report("kernel_io/ctx_arm_q8_saving", ctx_saving)
+    assert ctx_saving > 1.9
+    # strict ordering: each generation of the path removes HBM round trips,
+    # and the int8 context arm strictly undercuts its bf16 twin
+    assert io["fused_q8"] < io["fused"] < io["two_pass"] < io["einsum"]
+    assert io["einsum_q8"] < io["einsum"]
     assert io["einsum"] / io["fused"] > 1.2
 
     # vs the naive (non-bifurcated) cache: K_c replicated b-fold + logits

@@ -4,16 +4,21 @@ swept over batch x context. The GEMM restructuring is measurable on CPU too
 (the broadcast K_c read disappears); absolute numbers are CPU-scale, the
 RATIOS are the paper's object of study.
 
-Also sweeps the three bifurcated decode IMPLEMENTATIONS — fused single-pass
+Also sweeps the bifurcated decode IMPLEMENTATIONS — fused single-pass
 Pallas kernel vs two-pass (partials spill + host merge) vs paper 4-einsum —
 over a (b, m_c) grid and writes ``BENCH_fused_decode.json`` (wall-clock per
-call + modelled per-layer HBM bytes per path). Kernels run in interpret
-mode here, so the wall-clock columns are indicative only; the IO-model
-columns are the hardware-relevant object.
+call + modelled per-layer HBM bytes per path), plus the QUANTIZED-context
+sweep {fused, fused_q8, two_pass, einsum, einsum_q8} ->
+``BENCH_quant_decode.json`` (int8 context arm vs bf16; run standalone via
+``python benchmarks/latency_decode.py``, optionally ``BENCH_QUANT_FAST=1``
+for the CI subset). Kernels run in interpret mode here, so the wall-clock
+columns are indicative only; the IO-model columns are the
+hardware-relevant object.
 """
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 
@@ -24,8 +29,12 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.attention import decode_attention
 from repro.core.bifurcated import bifurcated_attention
-from repro.core.io_model import decode_impl_io_bytes
-from repro.kernels.ops import bifurcated_decode_attention
+from repro.core.io_model import decode_impl_io_bytes, quantized_ctx_bytes
+from repro.core.quantized import bifurcated_attention_q8, quantize_ctx
+from repro.kernels.ops import (
+    bifurcated_decode_attention,
+    bifurcated_decode_attention_q8,
+)
 
 PROXY = ModelConfig(
     name="7b-proxy", family="dense", n_layers=2, d_model=512,
@@ -35,10 +44,16 @@ PROXY = ModelConfig(
 # anchored to the repo root so the committed artifact is updated regardless
 # of the invoking cwd
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused_decode.json"
+BENCH_QUANT_JSON = BENCH_JSON.parent / "BENCH_quant_decode.json"
 
 # fused vs two-pass vs einsum sweep (>= 3x3 as the perf trajectory seed)
 GRID_B = (4, 16, 32)
 GRID_MC = (512, 2048, 4096)
+# early-decode capacity for the quantized sweep: the decode arm is
+# per-sample bf16 either way, so its share of the step grows with the
+# generated length — the context-arm quantization win is cleanest (and the
+# paper's long-shared-prefix regime most faithful) at small C_d.
+QUANT_CD = 32
 
 
 def _time(fn, *args, iters=5):
@@ -104,6 +119,95 @@ def _impl_grid(report):
     return rows_out
 
 
+def _quant_grid(report):
+    """{fused, fused_q8, two_pass, einsum, einsum_q8} over (b, m_c):
+    wall-clock + IO model -> BENCH_quant_decode.json. The int8 context arm
+    should halve the context traffic and cut end-to-end per-layer-step bytes
+    >= 1.6x vs bf16 fused at (b=16, m_c=4096) (asserted).
+
+    ``BENCH_QUANT_FAST=1`` restricts the grid to the acceptance point plus
+    one small cell — the CI artifact subset."""
+    rng = np.random.RandomState(2)
+    g, p, hd = PROXY.n_kv_heads, 1, PROXY.kq_dim
+    c_d = QUANT_CD
+    fast = os.environ.get("BENCH_QUANT_FAST", "") == "1"
+    grid_b = (16,) if fast else GRID_B
+    grid_mc = (512, 4096) if fast else GRID_MC
+    rows_out = []
+    for m_c in grid_mc:
+        kc = jnp.asarray(rng.randn(g, m_c, hd), jnp.bfloat16)   # "gmk"
+        vc = jnp.asarray(rng.randn(g, m_c, hd), jnp.bfloat16)
+        kq, ks = quantize_ctx(kc, fold_scale=hd**-0.5)          # (g, m_c)
+        vq, vs = quantize_ctx(vc)
+        for b in grid_b:
+            q = jnp.asarray(rng.randn(b, g, p, 1, hd), jnp.bfloat16)
+            kd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+            vd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+            mask = jnp.ones((b, c_d), bool)
+
+            fused = lambda *a: bifurcated_decode_attention(
+                *a, ctx_layout="gmk", block_m=1024, interpret=True)
+            two_pass = lambda *a: bifurcated_decode_attention(
+                *a, ctx_layout="gmk", block_m=1024, interpret=True,
+                two_pass=True)
+            einsum = jax.jit(lambda q, kc, vc, kd, vd, mask:
+                             bifurcated_attention(q, kc.transpose(1, 0, 2),
+                                                  vc.transpose(1, 0, 2),
+                                                  kd, vd, decode_mask=mask))
+            fused_q8 = lambda q, kd, vd, mask: bifurcated_decode_attention_q8(
+                q, kq, vq, ks, vs, kd, vd, mask,
+                ctx_layout="gmk", block_m=1024, interpret=True)
+            einsum_q8 = jax.jit(lambda q, kd, vd, mask:
+                                bifurcated_attention_q8(
+                                    q, kq, vq, ks, vs, kd, vd,
+                                    decode_mask=mask, ctx_layout="gmk"))
+            bf16_args = (q, kc, vc, kd, vd, mask)
+            q8_args = (q, kd, vd, mask)
+            row = {"b": b, "m_c": m_c, "c_d": c_d, "g": g, "p": p, "hd": hd}
+            for name, fn, args in (
+                    ("fused", fused, bf16_args),
+                    ("fused_q8", fused_q8, q8_args),
+                    ("two_pass", two_pass, bf16_args),
+                    ("einsum", einsum, bf16_args),
+                    ("einsum_q8", einsum_q8, q8_args)):
+                row[f"{name}_us"] = _time(fn, *args, iters=3) * 1e6
+                row[f"{name}_io_bytes"] = decode_impl_io_bytes(
+                    b=b, p=p, n=1, m_c=m_c, c_d=c_d, g=g, hd=hd, impl=name)
+                report(f"latency_decode/quant_ctx{m_c}_bs{b}_{name}_us",
+                       row[f"{name}_us"])
+            # context-arm-only traffic (bf16 vs int8+scales): the term the
+            # quantization targets — should be ~2x at production hd
+            ctx_bf16 = 2 * g * m_c * hd * 2
+            ctx_q8 = quantized_ctx_bytes(m_c=m_c, g=g, hd=hd)
+            row["ctx_arm_bytes_bf16"] = ctx_bf16
+            row["ctx_arm_bytes_q8"] = ctx_q8
+            row["ctx_arm_saving"] = ctx_bf16 / ctx_q8
+            row["q8_io_saving_vs_fused"] = (
+                row["fused_io_bytes"] / row["fused_q8_io_bytes"])
+            report(f"latency_decode/quant_ctx{m_c}_bs{b}_io_saving",
+                   row["q8_io_saving_vs_fused"])
+            rows_out.append(row)
+    # acceptance point: b=16, m_c=4096 — end-to-end per-layer-step >= 1.6x
+    accept = [r for r in rows_out if r["b"] == 16 and r["m_c"] == 4096]
+    assert accept and accept[0]["q8_io_saving_vs_fused"] >= 1.6, accept
+    payload = {
+        "meta": {
+            "device": jax.devices()[0].platform,
+            "kernel_interpret_mode": True,
+            "fast_subset": fast,
+            "note": "interpret-mode kernel wall-clock is indicative only; "
+                    "*_io_bytes is the modelled per-layer HBM traffic "
+                    "(core.io_model.decode_impl_io_bytes). c_d is the "
+                    "early-decode capacity; the bf16 decode arm's share "
+                    "grows with generated length.",
+        },
+        "grid": rows_out,
+    }
+    BENCH_QUANT_JSON.write_text(json.dumps(payload, indent=2))
+    report("latency_decode/quant_bench_json_rows", len(rows_out))
+    return rows_out
+
+
 def run(report):
     rng = np.random.RandomState(0)
     g, p, hd = PROXY.n_kv_heads, 1, PROXY.kq_dim
@@ -137,4 +241,9 @@ def run(report):
     assert results[(8192, 32)] >= results[(8192, 4)] * 0.9
 
     _impl_grid(report)
+    _quant_grid(report)
     return results
+
+
+if __name__ == "__main__":  # standalone: emit BENCH_quant_decode.json only
+    _quant_grid(lambda name, value: print(f"{name},{value}"))

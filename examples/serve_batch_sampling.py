@@ -29,6 +29,10 @@ def main():
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--context", type=int, default=256)
     ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--cache-dtype", default="bfloat16",
+                    choices=["bfloat16", "int8"],
+                    help="context-arm KV dtype (int8: quantized shared "
+                         "prefix, core/quantized.py)")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
@@ -44,7 +48,7 @@ def main():
             from repro.core.policy import BifurcationPolicy
 
             scfg = ServeConfig(batch=batch, decode_capacity=args.steps + 8,
-                               bifurcated=bif)
+                               bifurcated=bif, cache_dtype=args.cache_dtype)
             # demo model is reduced-size: force past the production IO
             # threshold so the comparison exercises the real bifurcated path
             engine = ServeEngine(model, cfg, scfg,

@@ -204,4 +204,8 @@ class ServeConfig:
     bifurcated: bool = True
     # single-pass fused Pallas decode kernel vs paper-faithful einsums
     use_kernel: bool = False
+    # context-arm cache dtype: "bfloat16" | "int8" (per-(token, head)
+    # symmetric scales, core/quantized.py — ~2x context KV traffic/storage
+    # reduction; the per-sample decode arm stays bf16 either way)
+    cache_dtype: str = "bfloat16"
     seed: int = 0

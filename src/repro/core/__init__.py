@@ -14,6 +14,11 @@ from repro.core.bifurcated import (
 from repro.core.grouped import grouped_bifurcated_attention
 from repro.core.kv_cache import BifurcatedCache, DecodeCache, StateCache, update_layer_cache
 from repro.core.policy import BifurcationPolicy
+from repro.core.quantized import (
+    QuantBifurcatedCache,
+    bifurcated_attention_q8,
+    ctx_cache_family,
+)
 
 __all__ = [
     "multigroup_attention",
@@ -26,6 +31,9 @@ __all__ = [
     "merge_partials",
     "DecodeCache",
     "BifurcatedCache",
+    "QuantBifurcatedCache",
+    "bifurcated_attention_q8",
+    "ctx_cache_family",
     "StateCache",
     "update_layer_cache",
     "BifurcationPolicy",

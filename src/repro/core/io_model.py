@@ -48,35 +48,56 @@ def decode_step_io(cfg, *, b, m_c, m_d, bifurcated, bytes_per_el=2) -> DecodeIO:
                     act_bytes=act)
 
 
+def quantized_ctx_bytes(*, m_c, g, hd, value_bytes=1, scale_bytes=4) -> int:
+    """Per-layer context-arm bytes under per-(token, head) quantization:
+    int8 K_c + V_c values plus one f32 scale per (token, head) per tensor."""
+    return 2 * g * m_c * (hd * value_bytes + scale_bytes)
+
+
 def decode_impl_io_bytes(*, b, p, n, m_c, c_d, g, hd, impl,
                          bytes_per_el=2) -> int:
     """Per-layer HBM traffic of one bifurcated decode step by IMPLEMENTATION
-    (all three read KV once — Eq. 6 — they differ in intermediate spills):
+    (all read KV once — Eq. 6 — they differ in intermediate spills and in
+    the context arm's bytes/element):
 
-      "einsum":   + fp32 (b,g,p,n,m_c+c_d) logits written AND read back
-                  around the XLA softmax (two extra passes over the logits);
-      "two_pass": + fp32 flash partials acc (g,rows,hd) and m/l
-                  ((g,rows,128) lane-replicated tiles) spilled by the
-                  context kernel and read back by the host-side merge, plus
-                  the einsum decode arm's fp32 (b,g,p,n,c_d) logits;
-      "fused":    KV + q + normalized output only — nothing else touches
-                  HBM (single pallas_call, in-VMEM merge). The (rows, b*c_d)
-                  decode tile costs extra FLOPs, not extra reads: the b*c_d
-                  decode slots are DMA'd once per group either way.
+      "einsum":    + fp32 (b,g,p,n,m_c+c_d) logits written AND read back
+                   around the XLA softmax (two extra passes over the logits);
+      "two_pass":  + fp32 flash partials acc (g,rows,hd) and m/l
+                   ((g,rows,128) lane-replicated tiles) spilled by the
+                   context kernel and read back by the host-side merge, plus
+                   the einsum decode arm's fp32 (b,g,p,n,c_d) logits;
+      "fused":     KV + q + normalized output only — nothing else touches
+                   HBM (single pallas_call, in-VMEM merge). The (rows, b*c_d)
+                   decode tile costs extra FLOPs, not extra reads: the b*c_d
+                   decode slots are DMA'd once per group either way.
+      "einsum_q8": the einsum path with an int8 context arm — context KV at
+                   1 byte/el + f32 per-(token, head) scales; the logits
+                   round trip is unchanged (quantization shrinks KV reads,
+                   not activation spills).
+      "fused_q8":  the fused kernel with the int8 context arm — the
+                   remaining dominant traffic term (context KV) halves;
+                   decode arm, q, and output are untouched bf16.
     """
     rows = b * p * n
     kv = 2 * g * (m_c + b * c_d) * hd * bytes_per_el
+    kv_q8 = (quantized_ctx_bytes(m_c=m_c, g=g, hd=hd)
+             + 2 * g * b * c_d * hd * bytes_per_el)
     q_io = rows * g * hd * bytes_per_el
     out_io = rows * g * hd * bytes_per_el
     if impl == "einsum":
         logits = rows * g * (m_c + c_d) * 4
         return kv + q_io + out_io + 2 * logits
+    if impl == "einsum_q8":
+        logits = rows * g * (m_c + c_d) * 4
+        return kv_q8 + q_io + out_io + 2 * logits
     if impl == "two_pass":
         partials = g * rows * (hd + 2 * 128) * 4
         dec_logits = rows * g * c_d * 4
         return kv + q_io + out_io + 2 * partials + 2 * dec_logits
     if impl == "fused":
         return kv + q_io + out_io
+    if impl == "fused_q8":
+        return kv_q8 + q_io + out_io
     raise ValueError(impl)
 
 

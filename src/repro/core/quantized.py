@@ -8,9 +8,21 @@ symmetric int8 scales keep the dequantization exact-per-channel:
     K_c ≈ K_q * s_k,   logits_c = (q · K_q) * s_k      (scale folded in)
     out_c = ((w * s_v) · V_q)                           (scale folded in)
 
-Traffic for the context arm drops 2x vs bf16 (4x vs fp16 papers); the
+The attention logit scale (head_dim**-0.5) is ALSO pre-folded into ``s_k``
+at quantize time (``from_prefill``), so neither the einsum reference nor the
+Pallas kernel pays a separate broadcast multiply per context block on the
+hot loop.
+
+Traffic for the context arm drops ~2x vs bf16 (4x vs fp16 papers); the
 decode arm and weights are untouched. Exactness: within int8 rounding —
-validated against the fp path in tests/test_quantized.py.
+validated against the fp path in tests/test_quantized.py and the fused
+kernel in tests/test_fused_q8.py.
+
+Layouts mirror ``BifurcatedCache``: head-major "gmk" ``(L, g, m_c, hd)``
+(default — contiguous block DMA for the fused Pallas kernel) or
+sequence-major "mgk" ``(L, m_c, g, hd)``; scales follow ``(L, g, m_c)`` /
+``(L, m_c, g)`` respectively. The two cache families are drop-in
+interchangeable (same ``spec``/``from_prefill`` parameter surface).
 """
 from __future__ import annotations
 
@@ -24,13 +36,19 @@ from repro.core.bifurcated import merge_partials, _partial_softmax
 from repro.core.masks import NEG_INF, mask_to_bias
 
 
-def quantize_ctx(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: (m, g, hd) -> (int8 values (m, g, hd), f32 scales (m, g))."""
+def quantize_ctx(x: jnp.ndarray, fold_scale: float = 1.0
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., hd) -> (int8 values (..., hd), f32 scales (...)).
+
+    ``fold_scale`` is multiplied into the returned scales — used to pre-fold
+    the attention logit scale (head_dim**-0.5) into ``s_k`` at quantize time
+    so the decode hot loop never multiplies by it again.
+    """
     xf = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0  # (m, g)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0  # (...)
     scale = jnp.maximum(scale, 1e-8)
     q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
-    return q, scale
+    return q, scale * fold_scale
 
 
 def dequantize_ctx(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
@@ -42,8 +60,16 @@ def dequantize_ctx(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
 class QuantBifurcatedCache:
     """BifurcatedCache with an int8 context arm.
 
-    k_ctx/v_ctx: (L, m_c, g, hd) int8; k_scale/v_scale: (L, m_c, g) f32;
-    decode arm stays bf16 (small, frequently rewritten)."""
+    k_ctx/v_ctx: int8, (L, g, m_c, hd) under "gmk" (default) or
+    (L, m_c, g, hd) under "mgk"; k_scale/v_scale: f32 per-(token, head)
+    scales, (L, g, m_c) / (L, m_c, g) following the layout. ``k_scale``
+    carries the attention logit scale pre-folded (see ``from_prefill``).
+    The decode arm stays bf16 (small, frequently rewritten).
+
+    ``ctx_layout`` is a STATIC pytree field, exactly as on
+    ``BifurcatedCache``: layout-mismatched trees fail loudly at structure
+    comparison instead of silently misreading shapes.
+    """
 
     k_ctx: jnp.ndarray
     v_ctx: jnp.ndarray
@@ -52,61 +78,116 @@ class QuantBifurcatedCache:
     k_dec: jnp.ndarray
     v_dec: jnp.ndarray
     dec_length: jnp.ndarray
+    ctx_layout: str = dataclasses.field(default="gmk",
+                                        metadata=dict(static=True))
 
     @property
     def context_len(self) -> int:
-        return self.k_ctx.shape[1]  # int8 context arm is always "mgk"
+        return self.k_ctx.shape[2 if self.ctx_layout == "gmk" else 1]
+
+    @property
+    def decode_capacity(self) -> int:
+        return self.k_dec.shape[2]
 
     @staticmethod
     def spec(n_layers, batch, m_c, dec_capacity, n_groups, head_dim,
-             dtype=jnp.bfloat16):
-        ctx = jax.ShapeDtypeStruct((n_layers, m_c, n_groups, head_dim), jnp.int8)
-        sc = jax.ShapeDtypeStruct((n_layers, m_c, n_groups), jnp.float32)
+             dtype=jnp.bfloat16, ctx_layout="gmk"):
+        ctx_shape = ((n_layers, m_c, n_groups, head_dim) if ctx_layout == "mgk"
+                     else (n_layers, n_groups, m_c, head_dim))
+        sc_shape = ((n_layers, m_c, n_groups) if ctx_layout == "mgk"
+                    else (n_layers, n_groups, m_c))
+        ctx = jax.ShapeDtypeStruct(ctx_shape, jnp.int8)
+        sc = jax.ShapeDtypeStruct(sc_shape, jnp.float32)
         dec = jax.ShapeDtypeStruct(
             (n_layers, batch, dec_capacity, n_groups, head_dim), dtype)
         return QuantBifurcatedCache(
             k_ctx=ctx, v_ctx=ctx, k_scale=sc, v_scale=sc, k_dec=dec, v_dec=dec,
             dec_length=jax.ShapeDtypeStruct((), jnp.int32),
+            ctx_layout=ctx_layout,
         )
 
     @staticmethod
-    def from_prefill(k_ctx, v_ctx, batch, dec_capacity, dtype=jnp.bfloat16):
-        """k_ctx/v_ctx: (L, m_c, g, hd) float — quantize per layer."""
-        kq, ks = jax.vmap(quantize_ctx)(k_ctx)
-        vq, vs = jax.vmap(quantize_ctx)(v_ctx)
+    def from_prefill(k_ctx, v_ctx, batch, dec_capacity, dtype=jnp.bfloat16,
+                     ctx_layout="gmk"):
+        """k_ctx/v_ctx: (L, m_c, g, hd) float (the prefill scan's layout) —
+        quantize + transpose ONCE at cache build, like
+        ``BifurcatedCache.from_prefill``; the decode hot path never pays
+        either again. The attention logit scale hd**-0.5 is pre-folded into
+        ``k_scale`` here (satellite: one fewer broadcast multiply per block).
+        """
         L, m_c, g, hd = k_ctx.shape
+        if ctx_layout == "gmk":
+            k_ctx = k_ctx.transpose(0, 2, 1, 3)  # (L, g, m_c, hd)
+            v_ctx = v_ctx.transpose(0, 2, 1, 3)
+        kq, ks = quantize_ctx(k_ctx, fold_scale=hd**-0.5)
+        vq, vs = quantize_ctx(v_ctx)
         dec = (L, batch, dec_capacity, g, hd)
         return QuantBifurcatedCache(
             k_ctx=kq, v_ctx=vq, k_scale=ks, v_scale=vs,
             k_dec=jnp.zeros(dec, dtype), v_dec=jnp.zeros(dec, dtype),
             dec_length=jnp.zeros((), jnp.int32),
+            ctx_layout=ctx_layout,
         )
 
 
+def ctx_cache_family(ctx_quant: str = "none"):
+    """Map a context-quantization mode to its cache class. The two families
+    deliberately share the ``spec``/``from_prefill`` parameter surface
+    (``dtype`` sizes the bf16 decode arm in both), so callers select the
+    family here and use one code path for everything else."""
+    from repro.core.kv_cache import BifurcatedCache
+
+    if ctx_quant == "int8":
+        return QuantBifurcatedCache
+    if ctx_quant == "none":
+        return BifurcatedCache
+    raise ValueError(f"unknown ctx_quant mode: {ctx_quant!r}")
+
+
 def bifurcated_attention_q8(
-    q: jnp.ndarray,          # (b, g, p, n, k)
-    k_ctx_q: jnp.ndarray,    # (m_c, g, hd) int8
+    q: jnp.ndarray,           # (b, g, p, n, k)
+    k_ctx_q: jnp.ndarray,     # (m_c, g, hd) int8 "mgk" | (g, m_c, hd) "gmk"
     v_ctx_q: jnp.ndarray,
-    k_scale: jnp.ndarray,    # (m_c, g) f32
-    v_scale: jnp.ndarray,
-    k_decode: jnp.ndarray,   # (b, C_d, g, hd) bf16
+    k_scale_folded: jnp.ndarray,  # (m_c, g) f32 "mgk" | (g, m_c) "gmk";
+    v_scale: jnp.ndarray,         #   MUST carry the logit scale pre-folded
+    k_decode: jnp.ndarray,    # (b, C_d, g, hd) bf16
     v_decode: jnp.ndarray,
     *,
     decode_mask: Optional[jnp.ndarray] = None,
     context_mask: Optional[jnp.ndarray] = None,
     scale: Optional[float] = None,
+    ctx_layout: str = "mgk",
 ) -> jnp.ndarray:
     """Flash-merge bifurcated attention with an int8 context arm. Scales are
     folded into logits (K) and weights (V) — no dequantized KV tensor is
-    ever materialized."""
+    ever materialized.
+
+    CONTRACT: ``k_scale_folded`` must carry the attention logit scale
+    (hd**-0.5) pre-folded — quantize with ``quantize_ctx(k, fold_scale=
+    hd**-0.5)`` or build the cache via ``QuantBifurcatedCache.from_prefill``
+    (which does this). The context logits are NOT multiplied by ``scale``
+    here; ``scale`` applies to the decode arm only. Passing raw
+    ``quantize_ctx(k)`` scales makes the context logits sqrt(hd)x too hot.
+    """
     head_dim = q.shape[-1]
     scale = head_dim**-0.5 if scale is None else scale
+    k_scale = k_scale_folded
 
-    # context logits: (q · K_q) * s_k, contraction in int8->f32
-    logits_c = jnp.einsum(
-        "bgpnk,mgk->bgpnm", q.astype(jnp.float32), k_ctx_q.astype(jnp.float32)
-    )
-    logits_c = logits_c * k_scale.T[None, :, None, None, :] * scale
+    # context logits: (q · K_q) * s_k — contraction in f32, NO extra
+    # logit-scale multiply (pre-folded into s_k at quantize time)
+    if ctx_layout == "gmk":
+        logits_c = jnp.einsum(
+            "bgpnk,gmk->bgpnm", q.astype(jnp.float32),
+            k_ctx_q.astype(jnp.float32))
+        s_k = k_scale[None, :, None, None, :]       # (g, m_c) -> bcast
+        s_v = v_scale[None, :, None, None, :]
+    else:
+        logits_c = jnp.einsum(
+            "bgpnk,mgk->bgpnm", q.astype(jnp.float32),
+            k_ctx_q.astype(jnp.float32))
+        s_k = k_scale.T[None, :, None, None, :]     # (m_c, g) -> bcast
+        s_v = v_scale.T[None, :, None, None, :]
+    logits_c = logits_c * s_k
     if context_mask is not None:
         logits_c = logits_c + mask_to_bias(context_mask)[None, None, None, None, :]
 
@@ -115,10 +196,9 @@ def bifurcated_attention_q8(
     e_c = jnp.exp(logits_c - m_c)
     l_c = jnp.sum(e_c, axis=-1, keepdims=True)
     # fold v scales into the weights, contract against int8 V
-    e_scaled = e_c * v_scale.T[None, :, None, None, :]
-    acc_c = jnp.einsum(
-        "bgpnm,mgv->bgpnv", e_scaled, v_ctx_q.astype(jnp.float32)
-    )
+    e_scaled = e_c * s_v
+    eq_v = "bgpnm,gmv->bgpnv" if ctx_layout == "gmk" else "bgpnm,mgv->bgpnv"
+    acc_c = jnp.einsum(eq_v, e_scaled, v_ctx_q.astype(jnp.float32))
     part_c = (m_c, l_c, acc_c)
 
     logits_d = jnp.einsum("bgpnk,bmgk->bgpnm", q, k_decode).astype(jnp.float32)

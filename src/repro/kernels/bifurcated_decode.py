@@ -2,7 +2,7 @@
 
 The paper's context GEMM (⟨q, K_c⟩, Eq. 3) is the memory-IO hot spot of
 shared-prefix batch decoding: K_c is the one tensor whose HBM traffic the
-technique eliminates b-fold. Two kernels live here:
+technique eliminates b-fold. Three kernels live here:
 
 ``fused_bifurcated_decode`` — the deployable single-pass path. One
   ``pallas_call`` over grid ``(g, nb_ctx + 1)``: for each kv group the
@@ -14,6 +14,14 @@ technique eliminates b-fold. Two kernels live here:
   NORMALIZED ``(g, rows, hd)`` output directly. Nothing but the output ever
   touches HBM: no ``b*h*m_c`` logits (einsum path) and no fp32
   ``acc/m/l`` partials (two-pass path) are materialized.
+
+``fused_bifurcated_decode_q8`` — the same single-pass structure with an
+  INT8 context arm: K_c/V_c blocks stream as int8 plus per-(token, head)
+  f32 scale vectors (k_scale carries the logit scale pre-folded), are
+  dequantized in-register — scales fold into the logits (K) and the softmax
+  weights (V) — and merge into the identical fp32 VMEM running state. The
+  dominant remaining HBM term (context KV) halves; no dequantized KV tensor
+  ever exists in HBM.
 
 ``context_flash_partials`` — the historical two-pass building block (context
   arm only, spills unnormalized partials to HBM for a host-side merge with
@@ -54,20 +62,25 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _online_update(s, v, acc_scr, m_scr, l_scr):
+def _online_update(s, v, acc_scr, m_scr, l_scr, p_scale=None):
     """One flash block step: fold logits ``s`` (rows, m) and values ``v``
     (m, hd) into the running VMEM (acc, max, sumexp) scratch. Returns the
     updated (acc, l) so a final grid step can normalize without re-reading
     scratch. The single definition keeps the numerically delicate update
-    identical across both kernels and both arms."""
+    identical across all kernels and both arms.
+
+    ``p_scale`` (1, m): optional per-column multiplier folded into the
+    softmax weights BEFORE the value contraction (the quantized arm's
+    ``w * s_v`` fold) — the sumexp ``l`` stays unscaled."""
     m_prev = m_scr[:, :1]             # (rows, 1)
     m_cur = jnp.max(s, axis=-1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
     corr = jnp.exp(m_prev - m_new)
     p = jnp.exp(s - m_new)            # (rows, m)
     l_new = l_scr[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv_in = p if p_scale is None else p * p_scale
     pv = jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        pv_in.astype(v.dtype), v, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )                                  # (rows, hd)
     acc_new = acc_scr[...] * corr + pv
@@ -211,6 +224,162 @@ def fused_bifurcated_decode(
         ],
         interpret=interpret,
     )(q, k_ctx, v_ctx, k_dec, v_dec, dec_bias)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Single-pass fused kernel, int8 context arm (quantized-context decode)
+# ---------------------------------------------------------------------------
+
+def _fused_q8_kernel(
+    q_ref,      # (1, rows, hd)
+    k_ref,      # (1, block_m, hd) int8 — quantized context block
+    v_ref,      # (1, block_m, hd) int8
+    ks_ref,     # (1, block_m) f32 — per-(token, head) K scales, logit scale
+                #   PRE-FOLDED at quantize time (no multiply by `scale` here)
+    vs_ref,     # (1, block_m) f32 — per-(token, head) V scales
+    kd_ref,     # (1, ld, hd) bf16 — ALL samples' decode keys, group-major
+    vd_ref,     # (1, ld, hd)
+    bias_ref,   # (1, ld) f32      — decode-slot mask bias (0 / NEG_INF)
+    out_ref,    # out: (1, rows, hd) — normalized attention output
+    acc_scr,    # scratch (rows, hd) f32
+    m_scr,      # scratch (rows, 128) f32
+    l_scr,      # scratch (rows, 128) f32
+    *,
+    scale: float,
+    m_c: int,
+    block_m: int,
+    c_d: int,
+    pn: int,
+):
+    """Quantized twin of ``_fused_kernel``: the context K/V blocks arrive as
+    int8 + f32 scales and are dequantized IN-REGISTER — the scales fold into
+    the logits (K) and the softmax weights (V), so no dequantized KV tensor
+    ever exists, in HBM or VMEM. The decode arm and the running fp32
+    (max, sumexp, acc) state are identical to the bf16 kernel."""
+    i = pl.program_id(1)
+    nb = pl.num_programs(1) - 1   # context blocks; step nb is the decode arm
+
+    @pl.when(i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0]                      # (rows, hd)
+
+    @pl.when(i < nb)
+    def _context_block():
+        k = k_ref[0].astype(jnp.float32)   # int8 -> f32, in-register
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                              # (rows, block_m) — raw q·K_q
+        s = s * ks_ref[...]            # fold s_k (logit scale pre-folded)
+
+        # mask the zero-padded K tail of the last block
+        pos = i * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < m_c, s, NEG_INF)
+        _online_update(s, v, acc_scr, m_scr, l_scr, p_scale=vs_ref[...])
+
+    @pl.when(i == nb)
+    def _decode_arm_and_flush():
+        kd = kd_ref[0]                # (ld, hd) bf16
+        vd = vd_ref[0]
+        s = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                      # (rows, ld)
+        s = s + bias_ref[...]          # slot validity + ld padding
+        row_s = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // pn
+        col_s = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) // c_d
+        s = jnp.where(row_s == col_s, s, NEG_INF)
+
+        acc, l_new = _online_update(s, vd, acc_scr, m_scr, l_scr)
+        out_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(out_ref.dtype)
+
+
+def fused_bifurcated_decode_q8(
+    q: jnp.ndarray,        # (g, rows, hd)  rows = b * p * n
+    k_ctx_q: jnp.ndarray,  # (g, m_c, hd) int8
+    v_ctx_q: jnp.ndarray,  # (g, m_c, hd) int8
+    k_scale_folded: jnp.ndarray,  # (g, m_c) f32 — MUST carry the logit
+    v_scale: jnp.ndarray,         #   scale (hd**-0.5) pre-folded
+    k_dec: jnp.ndarray,    # (g, b * c_d, hd) — group-major flattened decode
+    v_dec: jnp.ndarray,    # (g, b * c_d, hd)
+    dec_bias: jnp.ndarray, # (1, b * c_d) f32 — 0 for live slots, NEG_INF else
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    block_m: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-pallas_call quantized-context bifurcated decode.
+
+    The context arm streams at 1 byte/element (+4 bytes/(token, head) of
+    scales) instead of 2 — the dominant remaining HBM term after PR 1 —
+    while the output and the fp32 VMEM running state match the bf16 kernel
+    bit-for-bit in structure: the only HBM output is the normalized
+    attention result in the query dtype.
+    """
+    k_scale = k_scale_folded
+    g, rows, hd = q.shape
+    m_c = k_ctx_q.shape[1]
+    block_m = min(block_m, max(128, m_c))
+    pad = (-m_c) % block_m
+    if pad:
+        k_ctx_q = jnp.pad(k_ctx_q, ((0, 0), (0, pad), (0, 0)))
+        v_ctx_q = jnp.pad(v_ctx_q, ((0, 0), (0, pad), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad)))
+    nb = k_ctx_q.shape[1] // block_m
+
+    ld = k_dec.shape[1]
+    ld_pad = (-ld) % 128   # lane-align the decode tile
+    if ld_pad:
+        k_dec = jnp.pad(k_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        v_dec = jnp.pad(v_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        dec_bias = jnp.pad(dec_bias, ((0, 0), (0, ld_pad)),
+                           constant_values=NEG_INF)
+    ld_full = ld + ld_pad
+
+    kernel = functools.partial(
+        _fused_q8_kernel, scale=scale, m_c=m_c, block_m=block_m, c_d=c_d,
+        pn=pn,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(g, nb + 1),
+        in_specs=[
+            pl.BlockSpec((1, rows, hd), lambda gi, i: (gi, 0, 0)),
+            # pin the ctx index during the decode step: same block index as
+            # the previous iteration => the revisiting rule skips the DMA.
+            pl.BlockSpec((1, block_m, hd),
+                         lambda gi, i: (gi, jnp.minimum(i, nb - 1), 0)),
+            pl.BlockSpec((1, block_m, hd),
+                         lambda gi, i: (gi, jnp.minimum(i, nb - 1), 0)),
+            pl.BlockSpec((1, block_m),
+                         lambda gi, i: (gi, jnp.minimum(i, nb - 1))),
+            pl.BlockSpec((1, block_m),
+                         lambda gi, i: (gi, jnp.minimum(i, nb - 1))),
+            pl.BlockSpec((1, ld_full, hd), lambda gi, i: (gi, 0, 0)),
+            pl.BlockSpec((1, ld_full, hd), lambda gi, i: (gi, 0, 0)),
+            pl.BlockSpec((1, ld_full), lambda gi, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, hd), lambda gi, i: (gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, rows, hd), q.dtype),
+        scratch_shapes=[
+            # fp32 VMEM accumulators — never spilled to HBM. The int8 ctx
+            # blocks halve the per-step DMA footprint vs the bf16 kernel;
+            # scale rows add 2*block_m floats (noise).
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_ctx_q, v_ctx_q, k_scale, v_scale, k_dec, v_dec, dec_bias)
     return out
 
 

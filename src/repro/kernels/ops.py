@@ -26,6 +26,11 @@ causal masks ((b, n, C_d) form) are not expressible in the fused kernel yet.
 ``interpret=None`` (the default) resolves by backend: compiled Mosaic on
 TPU, interpret mode elsewhere — so the model/serve stack gets the real
 kernel on hardware without threading a flag through every layer.
+
+``bifurcated_decode_attention_q8`` is the quantized-context twin: the same
+single-pass fused structure, but the context arm streams int8 K_c/V_c plus
+per-(token, head) scales (k_scale pre-folded with the logit scale) and
+dequantizes in-register — the context read costs half the bytes.
 """
 from __future__ import annotations
 
@@ -38,6 +43,7 @@ import jax.numpy as jnp
 from repro.kernels.bifurcated_decode import (
     context_flash_partials,
     fused_bifurcated_decode,
+    fused_bifurcated_decode_q8,
 )
 
 NEG_INF = -1e30
@@ -116,3 +122,59 @@ def bifurcated_decode_attention(
     l_tot = l_cb * corr_c + l_d * corr_d
     out = (acc_cb * corr_c[..., None] + acc_d * corr_d[..., None]) / l_tot[..., None]
     return out.astype(q.dtype)  # (b, g, p, n, hd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_m", "interpret", "ctx_layout"),
+)
+def bifurcated_decode_attention_q8(
+    q: jnp.ndarray,         # (b, g, p, n, hd) — framework decode layout
+    k_ctx_q: jnp.ndarray,   # int8: (m_c, g, hd) "mgk" or (g, m_c, hd) "gmk"
+    v_ctx_q: jnp.ndarray,
+    k_scale_folded: jnp.ndarray,  # f32: (m_c, g) "mgk" or (g, m_c) "gmk";
+    v_scale: jnp.ndarray,         #   MUST carry the logit scale pre-folded
+    k_dec: jnp.ndarray,     # (b, c_d, g, hd) bf16
+    v_dec: jnp.ndarray,
+    dec_mask: jnp.ndarray,  # (b, c_d) bool
+    *,
+    scale: Optional[float] = None,
+    block_m: int = 512,
+    interpret: Optional[bool] = None,
+    ctx_layout: str = "gmk",
+) -> jnp.ndarray:
+    """Quantized-context twin of ``bifurcated_decode_attention``: one
+    pallas_call streams the int8 K_c/V_c blocks + per-(token, head) scales,
+    dequantizes in-register, and merges the bf16 decode arm into the same
+    fp32 VMEM running state. No dequantized KV tensor and no fp32 partials
+    ever touch HBM. ``scale`` applies to the decode arm only — the context
+    logit scale must arrive pre-folded in ``k_scale_folded`` (use
+    ``quantize_ctx(k, fold_scale=hd**-0.5)`` / ``from_prefill``)."""
+    k_scale = k_scale_folded
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    scale = hd**-0.5 if scale is None else scale
+    if interpret is None:  # static arg: resolved once at trace time
+        interpret = jax.default_backend() != "tpu"
+
+    # kernel-major query rows: r = (b_idx*p + p_idx)*n + n_idx
+    qk = q.transpose(1, 0, 2, 3, 4).reshape(g, b * p * n, hd)
+    if ctx_layout == "gmk":  # already kernel-major: zero-copy
+        kc, vc, ks, vs = k_ctx_q, v_ctx_q, k_scale, v_scale
+    else:
+        kc = k_ctx_q.transpose(1, 0, 2)  # (g, m_c, hd)
+        vc = v_ctx_q.transpose(1, 0, 2)
+        ks = k_scale.T                   # (g, m_c)
+        vs = v_scale.T
+
+    kd = k_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+    vd = v_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+    bias = jnp.where(dec_mask.reshape(1, b * c_d), 0.0, NEG_INF
+                     ).astype(jnp.float32)
+    out = fused_bifurcated_decode_q8(
+        qk, kc, vc, ks, vs, kd, vd, bias,
+        scale=scale, c_d=c_d, pn=p * n,
+        block_m=block_m, interpret=interpret,
+    )  # (g, b*p*n, hd), normalized
+    out = out.reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
+    return out.astype(q.dtype)

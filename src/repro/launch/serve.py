@@ -30,6 +30,10 @@ def main():
     ap.add_argument("--no-bifurcated", action="store_true")
     ap.add_argument("--kernel", action="store_true",
                     help="use the fused Pallas decode kernel")
+    ap.add_argument("--cache-dtype", default="bfloat16",
+                    choices=["bfloat16", "int8"],
+                    help="context-arm KV dtype; int8 streams the shared "
+                         "prefix at half the bytes (core/quantized.py)")
     ap.add_argument("--top-k", type=int, default=3)
     args = ap.parse_args()
 
@@ -40,6 +44,7 @@ def main():
         batch=args.batch, context_len=args.context,
         decode_capacity=max(16, args.steps + 8),
         bifurcated=not args.no_bifurcated, use_kernel=args.kernel,
+        cache_dtype=args.cache_dtype,
     )
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -63,6 +68,7 @@ def main():
     jax.block_until_ready(result.tokens)
     dt = time.perf_counter() - t0
     print(f"arch={cfg.name} bifurcated={engine.should_bifurcate(args.batch, args.context)} "
+          f"cache_dtype={scfg.cache_dtype} "
           f"batch={args.batch} ctx={args.context} steps={args.steps}")
     print(f"wall {dt*1e3:.1f} ms  ({dt/args.steps*1e3:.2f} ms/step incl. prefill)")
     best = rank_by_mean_logprob(result, top_k=args.top_k)

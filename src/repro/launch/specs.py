@@ -104,7 +104,8 @@ def decode_cache_specs(cfg: ModelConfig, model, seq_len: int, batch: int,
     if cfg.family == "encdec":
         cache = model.make_cache_spec(batch, seq_len, bifurcated=bifurcated,
                                       dec_capacity=dec_cap,
-                                      n_enc=WHISPER_ENC_FRAMES_DECODE)
+                                      n_enc=WHISPER_ENC_FRAMES_DECODE,
+                                      ctx_quant=ctx_quant)
         return {"cache": cache, "tokens": _i32((batch, 1))}
     if cfg.family == "xlstm":
         cache = model.make_cache_spec(batch, seq_len)
@@ -112,7 +113,8 @@ def decode_cache_specs(cfg: ModelConfig, model, seq_len: int, batch: int,
     if cfg.family == "hybrid":
         capacity = seq_len
         cache = model.make_cache_spec(batch, capacity, bifurcated=bifurcated,
-                                      dec_capacity=dec_cap)
+                                      dec_capacity=dec_cap,
+                                      ctx_quant=ctx_quant)
         return {"cache": cache, "tokens": _i32((batch, 1))}
     raise ValueError(cfg.family)
 

@@ -93,12 +93,24 @@ def cache_pspec_tree(mesh, cache) -> object:
         from repro.core.quantized import QuantBifurcatedCache
 
         if isinstance(node, QuantBifurcatedCache):
-            ctx = spec_for_leaf(mesh, node.k_ctx.shape, [None, "model", None, None])
-            sc = spec_for_leaf(mesh, node.k_scale.shape, [None, "model", None])
+            # shard the context sequence dim of the int8 values AND the f32
+            # scale leaves identically (flash-decoding style), layout-aware:
+            # "gmk" (L, g, m_c, hd)/(L, g, m_c) vs "mgk" (L, m_c, g, hd)/
+            # (L, m_c, g) — mismatched value/scale shards would break the
+            # in-kernel per-column fold.
+            if node.ctx_layout == "gmk":
+                ctx_axes, sc_axes = ([None, None, "model", None],
+                                     [None, None, "model"])
+            else:
+                ctx_axes, sc_axes = ([None, "model", None, None],
+                                     [None, "model", None])
+            ctx = spec_for_leaf(mesh, node.k_ctx.shape, ctx_axes)
+            sc = spec_for_leaf(mesh, node.k_scale.shape, sc_axes)
             dec = spec_for_leaf(mesh, node.k_dec.shape, [None, ba, "model", None, None])
             return QuantBifurcatedCache(
                 k_ctx=ctx, v_ctx=ctx, k_scale=sc, v_scale=sc,
-                k_dec=dec, v_dec=dec, dec_length=P())
+                k_dec=dec, v_dec=dec, dec_length=P(),
+                ctx_layout=node.ctx_layout)
         if isinstance(node, BifurcatedCache):
             return spec_bif(node)
         if isinstance(node, DecodeCache):

@@ -327,8 +327,11 @@ def attention_decode(
     """One incremental-decoding step for one layer.
 
     ``layer_cache`` (standard):   {"k": (b,C,g,hd), "v": ...}
-    ``layer_cache`` (bifurcated): {"k_ctx": (m_c,g,hd), "v_ctx": ...,
-                                   "k_dec": (b,Cd,g,hd), "v_dec": ...}
+    ``layer_cache`` (bifurcated): {"k_ctx": (m_c,g,hd) | (g,m_c,hd), "v_ctx":
+                                   ..., "k_dec": (b,Cd,g,hd), "v_dec": ...}
+      — plus {"k_scale", "v_scale"} (layout-shaped per-(token, head) f32)
+      when the context arm is int8-quantized (core/quantized.py); the
+      context layout follows ``cfg.ctx_layout`` for BOTH cache families.
     ``position`` — absolute position of the new token(s); also the write
     index for the standard cache; decode-cache index is position - m_c.
 
@@ -352,7 +355,7 @@ def attention_decode(
     window = cfg.sliding_window
     if bifurcated:
         quant = "k_scale" in layer_cache  # int8 context arm (core/quantized.py)
-        gmk = (not quant) and cfg.ctx_layout == "gmk"
+        gmk = cfg.ctx_layout == "gmk"     # both cache families carry ctx_layout
         m_c = layer_cache["k_ctx"].shape[1 if gmk else 0]
         dec_idx = position - m_c
         k_dec, v_dec = update_layer_cache(
@@ -371,15 +374,28 @@ def attention_decode(
         k_ctx = constrain(layer_cache["k_ctx"], rules, *ctx_axes)
         v_ctx = constrain(layer_cache["v_ctx"], rules, *ctx_axes)
         if quant:
-            from repro.core.quantized import bifurcated_attention_q8
+            sc_axes = (None, "kv_seq") if gmk else ("kv_seq", None)
+            k_s = constrain(layer_cache["k_scale"], rules, *sc_axes)
+            v_s = constrain(layer_cache["v_scale"], rules, *sc_axes)
+            if impl == "kernel" and window is None:
+                # single-pass fused q8 Pallas decode: int8 context blocks +
+                # scales stream through VMEM, dequantized in-register, merged
+                # with the bf16 decode arm in ONE pallas_call (kernels/ops.py)
+                from repro.kernels.ops import bifurcated_decode_attention_q8
 
-            k_s = constrain(layer_cache["k_scale"], rules, "kv_seq", None)
-            v_s = constrain(layer_cache["v_scale"], rules, "kv_seq", None)
-            o = bifurcated_attention_q8(
-                q, k_ctx, v_ctx, k_s, v_s, k_dec, v_dec,
-                decode_mask=jnp.broadcast_to(dec_valid, (b, cap)),
-                context_mask=ctx_valid,
-            )
+                o = bifurcated_decode_attention_q8(
+                    q, k_ctx, v_ctx, k_s, v_s, k_dec, v_dec,
+                    jnp.broadcast_to(dec_valid, (b, cap)),
+                    ctx_layout=cfg.ctx_layout,
+                )
+            else:
+                from repro.core.quantized import bifurcated_attention_q8
+
+                o = bifurcated_attention_q8(
+                    q, k_ctx, v_ctx, k_s, v_s, k_dec, v_dec,
+                    decode_mask=jnp.broadcast_to(dec_valid, (b, cap)),
+                    context_mask=ctx_valid, ctx_layout=cfg.ctx_layout,
+                )
         elif impl == "kernel" and window is None:
             # single-pass fused Pallas decode (beyond-paper; kernels/ops.py):
             # context stream + decode arm + merge in ONE pallas_call, any n

@@ -12,6 +12,7 @@ Bifurcation applies twice during shared-prefix batch sampling:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -150,15 +151,17 @@ class EncDecModel:
 
     # ---- serving ----
     def make_cache_spec(self, batch, capacity, *, bifurcated, dec_capacity=None,
-                        n_enc: int = 1500):
+                        n_enc: int = 1500, ctx_quant: str = "none"):
         cfg = self.cfg
         g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
         L = cfg.n_layers
         dec_capacity = dec_capacity or cfg.decode_capacity
         if bifurcated:
-            self_cache = BifurcatedCache.spec(L, batch, capacity - dec_capacity,
-                                              dec_capacity, g, hd,
-                                              ctx_layout=cfg.ctx_layout)
+            from repro.core.quantized import ctx_cache_family
+
+            self_cache = ctx_cache_family(ctx_quant).spec(
+                L, batch, capacity - dec_capacity, dec_capacity, g, hd,
+                ctx_layout=cfg.ctx_layout)
             cross = jax.ShapeDtypeStruct((L, n_enc, g, hd), jnp.bfloat16)
         else:
             self_cache = DecodeCache.spec(L, batch, capacity, g, hd)
@@ -167,7 +170,7 @@ class EncDecModel:
 
     def prefill(self, params, tokens, rules: Optional[MeshRules],
                 frames=None, capacity=None, bifurcated=False, dec_capacity=None,
-                sample_batch=None):
+                sample_batch=None, ctx_quant: str = "none"):
         """Encode frames, cross-KV once, then teacher-force the decoder prompt."""
         cfg = self.cfg
         b, n = tokens.shape
@@ -199,11 +202,12 @@ class EncDecModel:
         xks, xvs = jnp.stack(xks), jnp.stack(xvs)      # (L, b, m_enc, g, hd)
         g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
         if bifurcated:
+            from repro.core.quantized import ctx_cache_family
+
             cache = {
-                "self": BifurcatedCache.from_prefill(
+                "self": ctx_cache_family(ctx_quant).from_prefill(
                     ks[:, 0], vs[:, 0], sample_batch or b, dec_capacity,
-                    ctx_layout=cfg.ctx_layout,
-                ),
+                    ctx_layout=cfg.ctx_layout),
                 "cross_k": xks[:, 0], "cross_v": xvs[:, 0],
             }
         else:
@@ -221,13 +225,19 @@ class EncDecModel:
     def decode_step(self, params, cache, tokens, rules: Optional[MeshRules],
                     *, impl: str = "einsum"):
         cfg = self.cfg
+        from repro.core.quantized import QuantBifurcatedCache
+
         self_cache = cache["self"]
-        bifurcated = isinstance(self_cache, BifurcatedCache)
+        quant = isinstance(self_cache, QuantBifurcatedCache)
+        bifurcated = isinstance(self_cache, BifurcatedCache) or quant
         b, n = tokens.shape
         if bifurcated:
             position = self_cache.context_len + self_cache.dec_length
             lcaches = {"k_ctx": self_cache.k_ctx, "v_ctx": self_cache.v_ctx,
                        "k_dec": self_cache.k_dec, "v_dec": self_cache.v_dec}
+            if quant:
+                lcaches["k_scale"] = self_cache.k_scale
+                lcaches["v_scale"] = self_cache.v_scale
         else:
             position = self_cache.length
             lcaches = {"k": self_cache.k, "v": self_cache.v}
@@ -265,12 +275,11 @@ class EncDecModel:
         )
         y = apply_norm(cfg, params["final_norm"], y)
         logits = self._unembed(params, y, rules)
-        if bifurcated:
-            new_self = BifurcatedCache(
-                k_ctx=self_cache.k_ctx, v_ctx=self_cache.v_ctx,
-                k_dec=new_lcaches["k_dec"], v_dec=new_lcaches["v_dec"],
-                dec_length=self_cache.dec_length + n,
-                ctx_layout=self_cache.ctx_layout)
+        if bifurcated:  # both cache families: only the decode arm advances
+            new_self = dataclasses.replace(
+                self_cache, k_dec=new_lcaches["k_dec"],
+                v_dec=new_lcaches["v_dec"],
+                dec_length=self_cache.dec_length + n)
         else:
             new_self = DecodeCache(k=new_lcaches["k"], v=new_lcaches["v"],
                                    length=self_cache.length + n)

@@ -10,6 +10,7 @@ shared-prefix batch decoding (DESIGN.md §Arch-applicability).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -119,35 +120,41 @@ class HybridModel:
         return self._unembed(params, x, rules), jnp.zeros((), jnp.float32)
 
     # ---- serving ----
-    def make_cache_spec(self, batch, capacity, *, bifurcated, dec_capacity=None):
+    def make_cache_spec(self, batch, capacity, *, bifurcated, dec_capacity=None,
+                        ctx_quant: str = "none"):
         cfg = self.cfg
         g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
         dec_capacity = dec_capacity or cfg.decode_capacity
         state = mamba_state_spec(cfg, self.n_super * cfg.attn_period + self.n_tail, batch)
         if bifurcated:
-            attn = BifurcatedCache.spec(
-                self.n_super, batch, capacity - dec_capacity, dec_capacity, g, hd,
-                ctx_layout=cfg.ctx_layout,
-            )
+            from repro.core.quantized import ctx_cache_family
+
+            attn = ctx_cache_family(ctx_quant).spec(
+                self.n_super, batch, capacity - dec_capacity, dec_capacity,
+                g, hd, ctx_layout=cfg.ctx_layout)
         else:
             attn = DecodeCache.spec(self.n_super, batch, capacity, g, hd)
         return {"attn": attn, "mamba": state,
                 "position": jax.ShapeDtypeStruct((), jnp.int32)}
 
-    def init_cache(self, batch, capacity, *, bifurcated, dec_capacity=None):
+    def init_cache(self, batch, capacity, *, bifurcated, dec_capacity=None,
+                   ctx_quant: str = "none"):
         spec = self.make_cache_spec(batch, capacity, bifurcated=bifurcated,
-                                    dec_capacity=dec_capacity)
+                                    dec_capacity=dec_capacity,
+                                    ctx_quant=ctx_quant)
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
 
     def prefill(self, params, tokens, rules: Optional[MeshRules], capacity=None,
-                dec_capacity=None, bifurcated=False):
+                dec_capacity=None, bifurcated=False, ctx_quant: str = "none"):
         """Sequential-free prefill: mamba states via chunked scan, attention
         KVs computed in full, then packed into the serve cache."""
         cfg = self.cfg
         b, n = tokens.shape
-        capacity = capacity or (n + cfg.decode_capacity)
+        dec_capacity = dec_capacity or cfg.decode_capacity
+        capacity = capacity or (n + dec_capacity)
         cache = self.init_cache(b, capacity, bifurcated=bifurcated,
-                                dec_capacity=dec_capacity)
+                                dec_capacity=dec_capacity,
+                                ctx_quant=ctx_quant)
         x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
         positions = jnp.arange(n)
         # NOTE: prefill runs the mamba stack chunk-parallel but keeps the
@@ -220,18 +227,15 @@ class HybridModel:
         ks = jnp.stack(attn_ks)  # (n_super, b, n, g, hd)
         vs = jnp.stack(attn_vs)
         if bifurcated:
+            from repro.core.quantized import ctx_cache_family
+
             attn_cache = cache["attn"]
             m_c = attn_cache.context_len
-            kc, vc = ks[:, 0, :m_c], vs[:, 0, :m_c]  # (n_super, m_c, g, hd)
-            if attn_cache.ctx_layout == "gmk":
-                kc = kc.transpose(0, 2, 1, 3)        # (n_super, g, m_c, hd)
-                vc = vc.transpose(0, 2, 1, 3)
-            attn_cache = BifurcatedCache(
-                k_ctx=kc, v_ctx=vc,
-                k_dec=attn_cache.k_dec, v_dec=attn_cache.v_dec,
-                dec_length=jnp.zeros((), jnp.int32),
-                ctx_layout=attn_cache.ctx_layout,
-            )
+            # from_prefill handles the one-time layout transpose (and, for
+            # int8, the quantization with the pre-folded k scale)
+            attn_cache = ctx_cache_family(ctx_quant).from_prefill(
+                ks[:, 0, :m_c], vs[:, 0, :m_c], b,
+                attn_cache.decode_capacity, ctx_layout=attn_cache.ctx_layout)
         else:
             dc = cache["attn"]
             pad = dc.k.shape[2] - n
@@ -247,7 +251,10 @@ class HybridModel:
     def decode_step(self, params, cache, tokens, rules: Optional[MeshRules],
                     *, impl: str = "einsum"):
         cfg = self.cfg
-        bifurcated = isinstance(cache["attn"], BifurcatedCache)
+        from repro.core.quantized import QuantBifurcatedCache
+
+        quant = isinstance(cache["attn"], QuantBifurcatedCache)
+        bifurcated = isinstance(cache["attn"], BifurcatedCache) or quant
         x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
         position = cache["position"]
         mamba_state = cache["mamba"]
@@ -261,6 +268,9 @@ class HybridModel:
             attn_pos = attn_cache.context_len + attn_cache.dec_length
             lcaches = {"k_ctx": attn_cache.k_ctx, "v_ctx": attn_cache.v_ctx,
                        "k_dec": attn_cache.k_dec, "v_dec": attn_cache.v_dec}
+            if quant:
+                lcaches["k_scale"] = attn_cache.k_scale
+                lcaches["v_scale"] = attn_cache.v_scale
         else:
             attn_pos = attn_cache.length
             lcaches = {"k": attn_cache.k, "v": attn_cache.v}
@@ -291,12 +301,11 @@ class HybridModel:
         x = apply_norm(cfg, params["final_norm"], x)
         logits = self._unembed(params, x, rules)
         stacked_lc = jax.tree.map(lambda *xs: jnp.stack(xs), *new_lcaches)
-        if bifurcated:
-            new_attn = BifurcatedCache(
-                k_ctx=attn_cache.k_ctx, v_ctx=attn_cache.v_ctx,
-                k_dec=stacked_lc["k_dec"], v_dec=stacked_lc["v_dec"],
+        if bifurcated:  # both cache families: only the decode arm advances
+            new_attn = dataclasses.replace(
+                attn_cache, k_dec=stacked_lc["k_dec"],
+                v_dec=stacked_lc["v_dec"],
                 dec_length=attn_cache.dec_length + tokens.shape[1],
-                ctx_layout=attn_cache.ctx_layout,
             )
         else:
             new_attn = DecodeCache(k=stacked_lc["k"], v=stacked_lc["v"],

@@ -8,6 +8,7 @@ context token.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Tuple
 
@@ -205,19 +206,10 @@ class TransformerLM:
         x = apply_norm(cfg, params["final_norm"], x)
         logits = self._unembed(params, x, rules)
         n = tokens.shape[1]
-        if quant:
-            new_cache = QuantBifurcatedCache(
-                k_ctx=cache.k_ctx, v_ctx=cache.v_ctx,
-                k_scale=cache.k_scale, v_scale=cache.v_scale,
-                k_dec=new_caches["k_dec"], v_dec=new_caches["v_dec"],
+        if bifurcated:  # both cache families: only the decode arm advances
+            new_cache = dataclasses.replace(
+                cache, k_dec=new_caches["k_dec"], v_dec=new_caches["v_dec"],
                 dec_length=cache.dec_length + n,
-            )
-        elif bifurcated:
-            new_cache = BifurcatedCache(
-                k_ctx=cache.k_ctx, v_ctx=cache.v_ctx,
-                k_dec=new_caches["k_dec"], v_dec=new_caches["v_dec"],
-                dec_length=cache.dec_length + n,
-                ctx_layout=cache.ctx_layout,
             )
         else:
             new_cache = DecodeCache(
@@ -231,15 +223,10 @@ class TransformerLM:
         cfg = self.cfg
         g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
         if bifurcated:
-            dec_capacity = dec_capacity or cfg.decode_capacity
-            if ctx_quant == "int8":
-                from repro.core.quantized import QuantBifurcatedCache
+            from repro.core.quantized import ctx_cache_family
 
-                return QuantBifurcatedCache.spec(
-                    cfg.n_layers, batch, capacity - dec_capacity, dec_capacity,
-                    g, hd)
-            return BifurcatedCache.spec(
-                cfg.n_layers, batch, capacity - dec_capacity, dec_capacity, g, hd,
-                ctx_layout=cfg.ctx_layout,
-            )
+            dec_capacity = dec_capacity or cfg.decode_capacity
+            return ctx_cache_family(ctx_quant).spec(
+                cfg.n_layers, batch, capacity - dec_capacity, dec_capacity,
+                g, hd, ctx_layout=cfg.ctx_layout)
         return DecodeCache.spec(cfg.n_layers, batch, capacity, g, hd)

@@ -95,7 +95,16 @@ class ServeEngine:
         if cfg.family in ("dense", "moe", "vlm"):
             logits, cache1 = model.prefill(params, context_tokens, self.rules, **kwargs)
             if bifurcated:
-                cache = BifurcatedCache.from_prefill(
+                # cache_dtype="int8" selects the quantized family: the int8
+                # context arm is quantized ONCE at cache build (write-once
+                # read-many), the decode arm stays bf16, and the jitted scan
+                # decode dispatch is unchanged (registered pytree, static
+                # ctx_layout, donated like the bf16 carry).
+                from repro.core.quantized import ctx_cache_family
+
+                fam = ctx_cache_family(
+                    "int8" if self.scfg.cache_dtype == "int8" else "none")
+                cache = fam.from_prefill(
                     cache1.k[:, 0], cache1.v[:, 0], batch,
                     self.scfg.decode_capacity, dtype=cache1.k.dtype,
                     ctx_layout=cfg.ctx_layout)
@@ -108,6 +117,10 @@ class ServeEngine:
                             ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
                 cache = DecodeCache(k=k, v=v, length=cache1.length)
         elif cfg.family == "encdec":
+            # size the decode arm from the SERVE config, like the dense path
+            kwargs.setdefault("dec_capacity", self.scfg.decode_capacity)
+            if bifurcated and self.scfg.cache_dtype == "int8":
+                kwargs.setdefault("ctx_quant", "int8")
             logits, cache = model.prefill(
                 params, context_tokens, self.rules, bifurcated=bifurcated, **kwargs)
             if not bifurcated:
@@ -115,6 +128,15 @@ class ServeEngine:
                     lambda x: jnp.broadcast_to(x, (x.shape[0], batch, *x.shape[2:]))
                     if hasattr(x, "ndim") and x.ndim >= 3 else x, cache)
         else:  # state caches: broadcast final state to the sample batch
+            if cfg.family == "hybrid":
+                # align the model's attn-cache family with the engine's
+                # policy decision + cache dtype (the shared attention block
+                # is the only quantizable arm of a hybrid), and size the
+                # decode arm from the SERVE config like the dense path
+                kwargs.setdefault("bifurcated", bifurcated)
+                kwargs.setdefault("dec_capacity", self.scfg.decode_capacity)
+                if kwargs["bifurcated"] and self.scfg.cache_dtype == "int8":
+                    kwargs.setdefault("ctx_quant", "int8")
             logits, cache1 = model.prefill(params, context_tokens, self.rules, **kwargs)
             def bcast(x):
                 if not hasattr(x, "ndim") or x.ndim < 2:
@@ -141,19 +163,21 @@ class ServeEngine:
                 "position": cache["position"],
             }
         if cfg.family == "hybrid":
+            from repro.core.quantized import QuantBifurcatedCache
+
             mam = jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (x.shape[0], batch, *x.shape[2:])),
                 cache["mamba"])
             attn = cache["attn"]
-            if isinstance(attn, BifurcatedCache):
-                attn = BifurcatedCache(
-                    k_ctx=attn.k_ctx, v_ctx=attn.v_ctx,
+            if isinstance(attn, (BifurcatedCache, QuantBifurcatedCache)):
+                # both bifurcated families: only the per-sample decode arm
+                # broadcasts; context values (and scales) stay unbatched
+                attn = dataclasses.replace(
+                    attn,
                     k_dec=jnp.broadcast_to(
                         attn.k_dec, (attn.k_dec.shape[0], batch, *attn.k_dec.shape[2:])),
                     v_dec=jnp.broadcast_to(
-                        attn.v_dec, (attn.v_dec.shape[0], batch, *attn.v_dec.shape[2:])),
-                    dec_length=attn.dec_length,
-                    ctx_layout=attn.ctx_layout)
+                        attn.v_dec, (attn.v_dec.shape[0], batch, *attn.v_dec.shape[2:])))
             else:
                 attn = DecodeCache(
                     k=jnp.broadcast_to(attn.k, (attn.k.shape[0], batch, *attn.k.shape[2:])),

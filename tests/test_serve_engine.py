@@ -16,11 +16,13 @@ PARAMS = MODEL.init(jax.random.PRNGKey(0))
 CTX = jnp.asarray(np.random.RandomState(0).randint(0, CFG.vocab_size, (1, 48)))
 
 
-def _engine(bifurcated, use_kernel=False, batch=6):
+def _engine(bifurcated, use_kernel=False, batch=6, cache_dtype="bfloat16",
+            temperature=0.8):
     from repro.core.policy import BifurcationPolicy
 
-    scfg = ServeConfig(batch=batch, decode_capacity=16, temperature=0.8,
-                       top_p=0.95, bifurcated=bifurcated, use_kernel=use_kernel)
+    scfg = ServeConfig(batch=batch, decode_capacity=16, temperature=temperature,
+                       top_p=0.95, bifurcated=bifurcated, use_kernel=use_kernel,
+                       cache_dtype=cache_dtype)
     # reduced configs sit below the production IO threshold; force the
     # requested mode so tests exercise the real bifurcated path
     policy = BifurcationPolicy(enabled=bifurcated, min_io_saving_bytes=0)
@@ -121,6 +123,36 @@ def test_decode_phase_is_one_dispatch_one_compile():
     eng2.generate(PARAMS, CTX, n_steps=8, key=jax.random.PRNGKey(0),
                   loop="python")
     assert eng2.decode_dispatches == 7
+
+
+def test_int8_cache_greedy_matches_bf16():
+    """Acceptance: ServeEngine(cache_dtype="int8") decodes through the SAME
+    jitted lax.scan dispatch (donated quantized carry) and greedy (argmax)
+    tokens are identical to the bf16 cache on a small model."""
+    from repro.core.quantized import QuantBifurcatedCache
+
+    eng_q8 = _engine(True, cache_dtype="int8", temperature=0.0)
+    eng_fp = _engine(True, temperature=0.0)
+    _, cache = eng_q8.prefill_shared(PARAMS, CTX, 6)
+    assert isinstance(cache, QuantBifurcatedCache)
+    assert cache.k_ctx.dtype == jnp.int8
+    r_q8 = eng_q8.generate(PARAMS, CTX, n_steps=8, key=jax.random.PRNGKey(9))
+    r_fp = eng_fp.generate(PARAMS, CTX, n_steps=8, key=jax.random.PRNGKey(9))
+    np.testing.assert_array_equal(np.asarray(r_q8.tokens),
+                                  np.asarray(r_fp.tokens))
+    # int8 path is still one fused decode dispatch (scan), not per-token
+    assert eng_q8.decode_dispatches == 1
+
+
+def test_int8_cache_scan_matches_python_loop():
+    """The donated quantized carry survives the lax.scan round trip: same
+    tokens as the per-token python dispatch loop."""
+    r_scan = _engine(True, cache_dtype="int8").generate(
+        PARAMS, CTX, n_steps=6, key=jax.random.PRNGKey(13), loop="scan")
+    r_loop = _engine(True, cache_dtype="int8").generate(
+        PARAMS, CTX, n_steps=6, key=jax.random.PRNGKey(13), loop="python")
+    np.testing.assert_array_equal(np.asarray(r_scan.tokens),
+                                  np.asarray(r_loop.tokens))
 
 
 def test_speculative_n_tokens_decode():

@@ -88,6 +88,44 @@ def test_sharded_serve_step_compiles_on_8_device_mesh():
     assert out["arg_bytes"] > 0
 
 
+def test_sharded_serve_step_compiles_with_int8_cache():
+    """The quantized-context cache (int8 values + f32 scale leaves, both
+    sequence-sharded over "model") lowers and compiles through the same
+    sharded serve_step; the cache argument footprint lands well under the
+    bf16 cache's."""
+    out = _run_subprocess("""
+        import json, jax, jax.numpy as jnp
+        from repro.configs import get_config, reduced_config
+        from repro.launch import specs as S, steps as ST
+
+        cfg = reduced_config(get_config("internlm2-1.8b"))
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        sizes = {}
+        with mesh:
+            model, step, rules = ST.build_serve(cfg, mesh, impl="flash")
+            params = S.param_specs(model)
+            for quant in ("none", "int8"):
+                io = S.decode_cache_specs(cfg, model, 64, 8, bifurcated=True,
+                                          ctx_quant=quant)
+                psh = ST.to_named(mesh, ST.param_pspec_tree(params, rules))
+                csh = ST.to_named(mesh, ST.cache_pspec_tree(mesh, io["cache"]))
+                tsh = ST.to_named(mesh, ST.batch_pspec_tree(
+                    mesh, {"tokens": io["tokens"]}))["tokens"]
+                ksh = ST.to_named(mesh, jax.sharding.PartitionSpec(None))
+                key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+                compiled = jax.jit(step, in_shardings=(psh, csh, tsh, ksh),
+                                   donate_argnums=(1,)).lower(
+                    params, io["cache"], io["tokens"], key).compile()
+                cache_bytes = sum(
+                    l.size * l.dtype.itemsize
+                    for l in jax.tree.leaves(io["cache"]))
+                sizes[quant] = cache_bytes
+        print(json.dumps(sizes))
+    """)
+    # ctx arm halves; decode arm unchanged — total strictly smaller
+    assert out["int8"] < out["none"]
+
+
 def test_sharded_train_step_runs_on_8_device_mesh():
     """Actually EXECUTE (not just compile) one sharded train step on 8
     forced host devices — proves shardings are not just compile-coherent."""
