@@ -29,11 +29,17 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.attention import decode_attention
 from repro.core.bifurcated import bifurcated_attention
-from repro.core.io_model import decode_impl_io_bytes, quantized_ctx_bytes
+from repro.core.io_model import (
+    decode_impl_io_bytes,
+    forest_decode_io_bytes,
+    quantized_ctx_bytes,
+)
 from repro.core.quantized import bifurcated_attention_q8, quantize_ctx
 from repro.kernels.ops import (
     bifurcated_decode_attention,
     bifurcated_decode_attention_q8,
+    grouped_bifurcated_decode_attention,
+    grouped_bifurcated_decode_attention_q8,
 )
 
 PROXY = ModelConfig(
@@ -45,6 +51,7 @@ PROXY = ModelConfig(
 # of the invoking cwd
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused_decode.json"
 BENCH_QUANT_JSON = BENCH_JSON.parent / "BENCH_quant_decode.json"
+BENCH_MULTIPREFIX_JSON = BENCH_JSON.parent / "BENCH_multiprefix.json"
 
 # fused vs two-pass vs einsum sweep (>= 3x3 as the perf trajectory seed)
 GRID_B = (4, 16, 32)
@@ -208,6 +215,91 @@ def _quant_grid(report):
     return rows_out
 
 
+def _multiprefix_grid(report):
+    """Forest decoding sweep: G ∈ {1, 2, 8} prefix groups x (b, m_c), the
+    grouped kernel (bf16 + q8) vs the per-slot replay baseline, wall-clock
+    (interpret mode, indicative) + the per-group IO model
+    (core.io_model.forest_decode_io_bytes) -> BENCH_multiprefix.json.
+
+    ``m_c`` is the PER-GROUP prefix length: total context bytes scale with
+    G while the per-slot saving stays b/G-fold per group — the paper's
+    argument applied per prefix group (Hydragen-adjacent). At G == 1 the
+    grouped kernel must agree with the single-prefix fused kernel
+    bit-for-bit (asserted here; token-level equality is the differential
+    harness's job).
+
+    ``BENCH_MULTIPREFIX_FAST=1`` restricts the grid to one (b, m_c) cell —
+    the CI artifact subset."""
+    rng = np.random.RandomState(3)
+    g, p, hd = PROXY.n_kv_heads, 1, PROXY.kq_dim
+    c_d = 32
+    fast = os.environ.get("BENCH_MULTIPREFIX_FAST", "") == "1"
+    grid_b = (16,) if fast else (8, 16)
+    grid_mc = (512,) if fast else (512, 2048)
+    rows_out = []
+    for m_c in grid_mc:
+        for b in grid_b:
+            for G in (1, 2, 8):
+                kc = jnp.asarray(rng.randn(G, g, m_c, hd), jnp.bfloat16)
+                vc = jnp.asarray(rng.randn(G, g, m_c, hd), jnp.bfloat16)
+                kq, ks = quantize_ctx(kc, fold_scale=hd**-0.5)
+                vq, vs = quantize_ctx(vc)
+                q = jnp.asarray(rng.randn(b, g, p, 1, hd), jnp.bfloat16)
+                kd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+                vd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+                mask = jnp.ones((b, c_d), bool)
+                gids = jnp.asarray(np.arange(b) % G, jnp.int32)
+                clens = jnp.full((G,), m_c, jnp.int32)
+
+                grouped = lambda: grouped_bifurcated_decode_attention(
+                    q, kc, vc, gids, clens, kd, vd, mask,
+                    ctx_layout="gmk", block_m=1024, interpret=True)
+                grouped_q8 = lambda: grouped_bifurcated_decode_attention_q8(
+                    q, kq, vq, ks, vs, gids, clens, kd, vd, mask,
+                    ctx_layout="gmk", block_m=1024, interpret=True)
+                row = {"G": G, "b": b, "m_c": m_c, "c_d": c_d, "g": g,
+                       "p": p, "hd": hd}
+                for name, fn in (("grouped", grouped),
+                                 ("grouped_q8", grouped_q8)):
+                    row[f"{name}_us"] = _time(fn, iters=3) * 1e6
+                    io = forest_decode_io_bytes(
+                        group_sizes=[int(np.sum(np.asarray(gids) == i))
+                                     for i in range(G)],
+                        ctx_lens=[m_c] * G, c_d=c_d, g=g, hd=hd, p=p, n=1,
+                        impl=name)
+                    row[f"{name}_io_bytes"] = io["total"]
+                    row[f"{name}_per_group_bytes"] = io["per_group"]
+                    row[f"{name}_io_saving_vs_standard"] = io["io_saving"]
+                    report(f"latency_decode/forest_G{G}_ctx{m_c}_bs{b}_"
+                           f"{name}_us", row[f"{name}_us"])
+                    report(f"latency_decode/forest_G{G}_ctx{m_c}_bs{b}_"
+                           f"{name}_io_saving",
+                           row[f"{name}_io_saving_vs_standard"])
+                if G == 1:
+                    fused = bifurcated_decode_attention(
+                        q, kc[0], vc[0], kd, vd, mask,
+                        ctx_layout="gmk", block_m=1024, interpret=True)
+                    assert bool(jnp.all(grouped() == fused)), \
+                        "G=1 grouped kernel must reduce to the fused path"
+                rows_out.append(row)
+    payload = {
+        "meta": {
+            "device": jax.devices()[0].platform,
+            "kernel_interpret_mode": True,
+            "fast_subset": fast,
+            "note": "interpret-mode wall-clock is indicative only; "
+                    "*_io_bytes is the modelled per-layer HBM traffic "
+                    "(core.io_model.forest_decode_io_bytes). m_c is the "
+                    "PER-GROUP prefix length; io_saving is vs the "
+                    "non-bifurcated per-slot replay of the same mix.",
+        },
+        "grid": rows_out,
+    }
+    BENCH_MULTIPREFIX_JSON.write_text(json.dumps(payload, indent=2))
+    report("latency_decode/multiprefix_bench_json_rows", len(rows_out))
+    return rows_out
+
+
 def run(report):
     rng = np.random.RandomState(0)
     g, p, hd = PROXY.n_kv_heads, 1, PROXY.kq_dim
@@ -242,8 +334,11 @@ def run(report):
 
     _impl_grid(report)
     _quant_grid(report)
+    _multiprefix_grid(report)
     return results
 
 
-if __name__ == "__main__":  # standalone: emit BENCH_quant_decode.json only
+if __name__ == "__main__":
+    # standalone: emit BENCH_quant_decode.json + BENCH_multiprefix.json only
     _quant_grid(lambda name, value: print(f"{name},{value}"))
+    _multiprefix_grid(lambda name, value: print(f"{name},{value}"))

@@ -1,4 +1,5 @@
 from repro.configs.base import (
+    ForestConfig,
     MeshRules,
     ModelConfig,
     MoEConfig,
@@ -10,5 +11,5 @@ from repro.configs.registry import ARCH_IDS, get_config, reduced_config
 
 __all__ = [
     "ModelConfig", "MoEConfig", "SSMConfig", "MeshRules", "TrainConfig",
-    "ServeConfig", "ARCH_IDS", "get_config", "reduced_config",
+    "ServeConfig", "ForestConfig", "ARCH_IDS", "get_config", "reduced_config",
 ]

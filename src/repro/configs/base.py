@@ -209,3 +209,30 @@ class ServeConfig:
     # reduction; the per-sample decode arm stays bf16 either way)
     cache_dtype: str = "bfloat16"
     seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ForestConfig:
+    """Continuous-batching (multi-prefix forest) serve configuration.
+
+    The forest engine serves G concurrent shared-prefix requests from one
+    decode batch of ``slots`` samples: each admitted request prefills into a
+    free context segment (capacity ``ctx_capacity`` tokens) and fans out
+    over free decode slots. All of this is runtime DATA — the decode
+    dispatch compiles once for (slots, n_groups, ctx_capacity,
+    decode_capacity) and serves any admit/retire sequence.
+    """
+
+    n_groups: int = 4            # context segments (G)
+    slots: int = 16              # decode slots (flat batch b)
+    ctx_capacity: int = 512      # per-segment context capacity (tokens)
+    decode_capacity: int = 64    # per-slot decode capacity (tokens)
+    eos_token: int = -1          # retire a slot when it samples this; -1: off
+    pad_token: int = 0           # emitted by retired slots
+    temperature: float = 0.0     # greedy by default (continuous serving)
+    top_p: float = 1.0
+    use_kernel: bool = False     # grouped fused Pallas kernel vs einsum ref
+    # context-segment dtype: "bfloat16" | "int8" (segments quantize once at
+    # admission — write-once read-many, per prefix group)
+    cache_dtype: str = "bfloat16"
+    seed: int = 0

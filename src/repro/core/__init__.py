@@ -9,15 +9,25 @@ from repro.core.attention import (
 from repro.core.bifurcated import (
     bifurcated_attention,
     bifurcated_attention_flash,
+    forest_bifurcated_attention,
     merge_partials,
 )
 from repro.core.grouped import grouped_bifurcated_attention
-from repro.core.kv_cache import BifurcatedCache, DecodeCache, StateCache, update_layer_cache
+from repro.core.kv_cache import (
+    BifurcatedCache,
+    DecodeCache,
+    GroupedBifurcatedCache,
+    StateCache,
+    update_layer_cache,
+)
 from repro.core.policy import BifurcationPolicy
 from repro.core.quantized import (
+    GroupedQuantBifurcatedCache,
     QuantBifurcatedCache,
     bifurcated_attention_q8,
     ctx_cache_family,
+    forest_bifurcated_attention_q8,
+    forest_cache_family,
 )
 
 __all__ = [
@@ -27,13 +37,18 @@ __all__ = [
     "merge_heads",
     "bifurcated_attention",
     "bifurcated_attention_flash",
+    "forest_bifurcated_attention",
+    "forest_bifurcated_attention_q8",
     "grouped_bifurcated_attention",
     "merge_partials",
     "DecodeCache",
     "BifurcatedCache",
+    "GroupedBifurcatedCache",
     "QuantBifurcatedCache",
+    "GroupedQuantBifurcatedCache",
     "bifurcated_attention_q8",
     "ctx_cache_family",
+    "forest_cache_family",
     "StateCache",
     "update_layer_cache",
     "BifurcationPolicy",

@@ -161,3 +161,55 @@ def bifurcated_attention_flash(
                               ctx_layout=ctx_layout)
     part_d = _partial_softmax(logits_d, v_decode, batched=True)
     return merge_partials([part_c, part_d]).astype(q.dtype)
+
+
+def forest_bifurcated_attention(
+    q: jnp.ndarray,          # (b, g, p, n, k) — flat slot batch
+    k_context: jnp.ndarray,  # (G, m_c, g, k) "mgk" | (G, g, m_c, k) "gmk"
+    v_context: jnp.ndarray,
+    group_ids: jnp.ndarray,  # (b,) i32 — slot -> prefix-group assignment
+    ctx_lens: jnp.ndarray,   # (G,) i32 — live (ragged) prefix lengths
+    k_decode: jnp.ndarray,   # (b, C_d, g, k)
+    v_decode: jnp.ndarray,
+    *,
+    decode_mask: Optional[jnp.ndarray] = None,  # (b, C_d) bool
+    scale: Optional[float] = None,
+    ctx_layout: str = "gmk",
+) -> jnp.ndarray:
+    """Einsum reference for multi-prefix FOREST decoding (the grouped Pallas
+    kernel's semantics): one flat slot batch where slot ``b`` attends over
+    ``[context[group_ids[b]][:ctx_lens[group_ids[b]]] ⊕ decode[b]]``.
+
+    Unlike ``core.grouped.grouped_bifurcated_attention`` (which requires a
+    rectangular (G, s, ...) layout — the same number of samples per group),
+    the assignment here is an arbitrary ``(b,) -> group`` map, which is what
+    a continuous-batching slot table produces: groups admit and retire
+    independently, so group populations are ragged. The per-sample context
+    gather materializes a (b, m_c, ...) tensor — this is a CORRECTNESS
+    reference; the IO claim lives in the kernel, which reads each segment
+    once.
+    """
+    head_dim = q.shape[-1]
+    scale = head_dim**-0.5 if scale is None else scale
+    if ctx_layout == "gmk":
+        m_c = k_context.shape[2]
+        kc = jnp.take(k_context, group_ids, axis=0)  # (b, g, m_c, k)
+        vc = jnp.take(v_context, group_ids, axis=0).transpose(0, 2, 1, 3)
+        eq_qk = "bgpnk,bgmk->bgpnm"
+    else:
+        m_c = k_context.shape[1]
+        kc = jnp.take(k_context, group_ids, axis=0)  # (b, m_c, g, k)
+        vc = jnp.take(v_context, group_ids, axis=0)
+        eq_qk = "bgpnk,bmgk->bgpnm"
+
+    logits_c = jnp.einsum(eq_qk, q, kc).astype(jnp.float32) * scale
+    valid_c = jnp.arange(m_c)[None, :] < jnp.take(ctx_lens, group_ids)[:, None]
+    logits_c = logits_c + mask_to_bias(valid_c)[:, None, None, None, :]
+    logits_d = jnp.einsum("bgpnk,bmgk->bgpnm", q, k_decode
+                          ).astype(jnp.float32) * scale
+    if decode_mask is not None:
+        logits_d = logits_d + mask_to_bias(decode_mask)[:, None, None, None, :]
+
+    part_c = _partial_softmax(logits_c, vc, batched=True)
+    part_d = _partial_softmax(logits_d, v_decode, batched=True)
+    return merge_partials([part_c, part_d]).astype(q.dtype)

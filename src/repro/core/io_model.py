@@ -101,6 +101,72 @@ def decode_impl_io_bytes(*, b, p, n, m_c, c_d, g, hd, impl,
     raise ValueError(impl)
 
 
+def forest_decode_io_bytes(*, group_sizes, ctx_lens, c_d, g, hd, p=1, n=1,
+                           impl="grouped", bytes_per_el=2,
+                           ctx_capacity: Optional[int] = None) -> dict:
+    """Per-GROUP byte accounting for one multi-prefix (forest) decode step,
+    per layer. Extends Eq. 5-6 to G concurrent prefix groups with ragged
+    populations and lengths: group ``i`` serves ``group_sizes[i]`` decode
+    slots over a ``ctx_lens[i]``-token shared prefix.
+
+      grouped:    each group's context read ONCE (bf16), per-slot decode
+                  arms as usual — the paper's b-fold saving, per group.
+      grouped_q8: the same with int8 context segments + f32 per-(token,
+                  head) scales (context arm at ~half the bytes).
+      standard:   the non-bifurcated baseline — every slot re-reads its
+                  group's full prefix.
+
+    By default the context term counts the LIVE ``ctx_lens[i]`` tokens —
+    the algorithmic traffic, which a length-aware kernel (block-level early
+    exit on fully-masked blocks) would achieve. The CURRENT grouped kernel
+    streams every segment's full padded capacity (masked tails are DMA'd,
+    then NEG_INF'd in-register): pass ``ctx_capacity=<segment capacity>``
+    to account that envelope instead — every listed group then reads
+    ``ctx_capacity`` tokens regardless of its live length (include freed
+    segments as ``(0, 0)`` entries to model the whole slot table). The two
+    accountings coincide exactly when every segment is full
+    (``ctx_lens == capacity``, the benchmark grid's case).
+
+    Returns {"per_group": [bytes...], "total": int, "standard_total": int,
+    "io_saving": float} — ``per_group`` is the chosen impl's per-group
+    traffic (context + that group's decode arms), ``standard_total`` the
+    baseline for the same traffic mix (always live-length: a per-slot
+    replay reads only live tokens), so the saving survives a MIXED batch:
+    sum_G s_i*(m_i + c_d) vs sum_G (m_read_i + s_i*c_d).
+    """
+    if len(group_sizes) != len(ctx_lens):
+        raise ValueError("group_sizes and ctx_lens must align")
+    per_group = []
+    standard_total = 0
+    for s_i, m_i in zip(group_sizes, ctx_lens):
+        # the padded envelope applies to the grouped kernel's segment
+        # stream only; a per-slot replay ("standard") reads live tokens
+        m_read = (ctx_capacity
+                  if ctx_capacity is not None and impl != "standard"
+                  else m_i)
+        if impl == "grouped_q8":
+            ctx = quantized_ctx_bytes(m_c=m_read, g=g, hd=hd)
+        elif impl in ("grouped", "standard"):
+            ctx = 2 * g * m_read * hd * bytes_per_el
+        else:
+            raise ValueError(impl)
+        dec = 2 * g * s_i * c_d * hd * bytes_per_el
+        per_group.append((s_i * ctx + dec) if impl == "standard"
+                         else (ctx + dec))
+        standard_total += 2 * g * s_i * (m_i + c_d) * hd * bytes_per_el
+    b = sum(group_sizes)
+    rows = b * p * n
+    q_io = rows * g * hd * bytes_per_el
+    out_io = rows * g * hd * bytes_per_el
+    total = sum(per_group) + q_io + out_io
+    return {
+        "per_group": per_group,
+        "total": total,
+        "standard_total": standard_total + q_io + out_io,
+        "io_saving": (standard_total + q_io + out_io) / max(total, 1),
+    }
+
+
 def kv_speedup(*, b, m_c, m_d) -> float:
     """Pure KV-IO speedup bound: b(m_c+m_d) / (m_c + b m_d)."""
     return b * (m_c + m_d) / (m_c + b * m_d)

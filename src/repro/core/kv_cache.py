@@ -153,6 +153,142 @@ class BifurcatedCache:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class GroupedBifurcatedCache:
+    """Multi-prefix (forest) bifurcated KV cache — G context segments in one
+    batch, continuous-batching ready.
+
+    The paper's cache holds ONE shared context; production traffic is a
+    forest of concurrent requests, each fanning out its own shared prefix.
+    This cache packs G fixed-capacity context segments (written once per
+    admitted request, read-only afterwards) plus a per-SLOT decode arm:
+
+      k_ctx/v_ctx — per ``ctx_layout``:
+          "gmk" (default): (L, G, g, m_c, hd) — head-major, contiguous
+          block DMA for the grouped fused Pallas kernel.
+          "mgk":           (L, G, m_c, g, hd) — sequence-major einsum layout.
+      ctx_lens:  (G,) i32 — live (ragged) prefix length per segment; segments
+                 admit/retire by VALUE (no shape change, no recompile).
+      group_ids: (b,) i32 — decode-slot -> segment assignment.
+      k_dec/v_dec: (L, b, C_d, g, hd) — per-slot decode continuation.
+      dec_lens:  (b,) i32 — per-slot decode length (slots admitted at
+                 different times sit at different depths).
+
+    All admission state (ctx_lens / group_ids / dec_lens and the segment
+    contents) is DATA, not shape — the jitted decode dispatch compiles once
+    and serves any admit/retire sequence.
+    """
+
+    k_ctx: jnp.ndarray
+    v_ctx: jnp.ndarray
+    ctx_lens: jnp.ndarray
+    group_ids: jnp.ndarray
+    k_dec: jnp.ndarray
+    v_dec: jnp.ndarray
+    dec_lens: jnp.ndarray
+    ctx_layout: str = dataclasses.field(default="gmk",
+                                        metadata=dict(static=True))
+
+    @property
+    def n_groups(self) -> int:
+        return self.k_ctx.shape[1]
+
+    @property
+    def context_capacity(self) -> int:
+        return self.k_ctx.shape[3 if self.ctx_layout == "gmk" else 2]
+
+    @property
+    def n_slots(self) -> int:
+        return self.k_dec.shape[1]
+
+    @property
+    def decode_capacity(self) -> int:
+        return self.k_dec.shape[2]
+
+    @staticmethod
+    def _ctx_shape(n_layers, n_groups, m_c, n_kv, head_dim, ctx_layout):
+        return ((n_layers, n_groups, m_c, n_kv, head_dim)
+                if ctx_layout == "mgk"
+                else (n_layers, n_groups, n_kv, m_c, head_dim))
+
+    @staticmethod
+    def init(n_layers, n_groups, slots, m_c, dec_capacity, n_kv, head_dim,
+             dtype=jnp.bfloat16, ctx_layout="gmk"):
+        ctx = GroupedBifurcatedCache._ctx_shape(
+            n_layers, n_groups, m_c, n_kv, head_dim, ctx_layout)
+        dec = (n_layers, slots, dec_capacity, n_kv, head_dim)
+        return GroupedBifurcatedCache(
+            k_ctx=jnp.zeros(ctx, dtype),
+            v_ctx=jnp.zeros(ctx, dtype),
+            ctx_lens=jnp.zeros((n_groups,), jnp.int32),
+            group_ids=jnp.zeros((slots,), jnp.int32),
+            k_dec=jnp.zeros(dec, dtype),
+            v_dec=jnp.zeros(dec, dtype),
+            dec_lens=jnp.zeros((slots,), jnp.int32),
+            ctx_layout=ctx_layout,
+        )
+
+    @staticmethod
+    def spec(n_layers, n_groups, slots, m_c, dec_capacity, n_kv, head_dim,
+             dtype=jnp.bfloat16, ctx_layout="gmk"):
+        ctx = jax.ShapeDtypeStruct(GroupedBifurcatedCache._ctx_shape(
+            n_layers, n_groups, m_c, n_kv, head_dim, ctx_layout), dtype)
+        dec = jax.ShapeDtypeStruct(
+            (n_layers, slots, dec_capacity, n_kv, head_dim), dtype)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        return GroupedBifurcatedCache(
+            k_ctx=ctx, v_ctx=ctx, ctx_lens=i32(n_groups),
+            group_ids=i32(slots), k_dec=dec, v_dec=dec, dec_lens=i32(slots),
+            ctx_layout=ctx_layout,
+        )
+
+    def write_context(self, k_ctx, v_ctx, group_idx):
+        """Admit a prefilled context into segment ``group_idx`` (traced ok).
+
+        k_ctx/v_ctx: (L, m_new, g, hd) — the prefill scan's sequence-major
+        layout, m_new <= context_capacity. The one-time transpose (under
+        "gmk") and the zero-pad to segment capacity happen HERE, exactly as
+        in ``BifurcatedCache.from_prefill`` — the decode hot path never pays
+        them. Purely functional; only ``ctx_lens[group_idx]`` and the
+        segment contents change, so the jitted decode dispatch is reusable
+        as-is (no recompile).
+        """
+        L, m_new, g, hd = k_ctx.shape
+        cap = self.context_capacity
+        if m_new > cap:
+            raise ValueError(f"context of {m_new} tokens > capacity {cap}")
+        if self.ctx_layout == "gmk":
+            k_new = k_ctx.transpose(0, 2, 1, 3)  # (L, g, m_new, hd)
+            v_new = v_ctx.transpose(0, 2, 1, 3)
+            pad = ((0, 0), (0, 0), (0, cap - m_new), (0, 0))
+        else:
+            k_new, v_new = k_ctx, v_ctx
+            pad = ((0, 0), (0, cap - m_new), (0, 0), (0, 0))
+        k_new = jnp.pad(k_new.astype(self.k_ctx.dtype), pad)[:, None]
+        v_new = jnp.pad(v_new.astype(self.v_ctx.dtype), pad)[:, None]
+        start = (0, group_idx) + (0,) * (self.k_ctx.ndim - 2)
+        return dataclasses.replace(
+            self,
+            k_ctx=jax.lax.dynamic_update_slice(self.k_ctx, k_new, start),
+            v_ctx=jax.lax.dynamic_update_slice(self.v_ctx, v_new, start),
+            ctx_lens=self.ctx_lens.at[group_idx].set(m_new),
+        )
+
+    def assign_slots(self, slot_mask, group_idx):
+        """Point the slots selected by ``slot_mask`` (b,) at segment
+        ``group_idx`` and reset their decode arms (admit-into-retired-slot
+        reuse: stale decode KVs of the previous occupant are zeroed)."""
+        wipe = slot_mask[None, :, None, None, None]
+        return dataclasses.replace(
+            self,
+            group_ids=jnp.where(slot_mask, group_idx, self.group_ids),
+            dec_lens=jnp.where(slot_mask, 0, self.dec_lens),
+            k_dec=jnp.where(wipe, 0, self.k_dec),
+            v_dec=jnp.where(wipe, 0, self.v_dec),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class StateCache:
     """Recurrent-state cache for attention-free blocks (mLSTM / Mamba2 / sLSTM).
 

@@ -130,6 +130,161 @@ class QuantBifurcatedCache:
         )
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GroupedQuantBifurcatedCache:
+    """GroupedBifurcatedCache with int8 context segments (multi-prefix
+    forest, quantized context arms).
+
+    k_ctx/v_ctx: int8, (L, G, g, m_c, hd) under "gmk" (default) or
+    (L, G, m_c, g, hd) under "mgk"; k_scale/v_scale: f32 per-(token, head)
+    scales, (L, G, g, m_c) / (L, G, m_c, g) following the layout — k_scale
+    carries the attention logit scale pre-folded, exactly as on
+    ``QuantBifurcatedCache``. Segments are quantized ONCE at admission
+    (``write_context``): write-once read-many, the ideal quantization
+    target, now per prefix group. Admission state (ctx_lens / group_ids /
+    dec_lens) is data, not shape — one decode compile serves any
+    admit/retire sequence.
+    """
+
+    k_ctx: jnp.ndarray
+    v_ctx: jnp.ndarray
+    k_scale: jnp.ndarray
+    v_scale: jnp.ndarray
+    ctx_lens: jnp.ndarray
+    group_ids: jnp.ndarray
+    k_dec: jnp.ndarray
+    v_dec: jnp.ndarray
+    dec_lens: jnp.ndarray
+    ctx_layout: str = dataclasses.field(default="gmk",
+                                        metadata=dict(static=True))
+
+    @property
+    def n_groups(self) -> int:
+        return self.k_ctx.shape[1]
+
+    @property
+    def context_capacity(self) -> int:
+        return self.k_ctx.shape[3 if self.ctx_layout == "gmk" else 2]
+
+    @property
+    def n_slots(self) -> int:
+        return self.k_dec.shape[1]
+
+    @property
+    def decode_capacity(self) -> int:
+        return self.k_dec.shape[2]
+
+    @staticmethod
+    def _shapes(n_layers, n_groups, m_c, n_kv, head_dim, ctx_layout):
+        if ctx_layout == "mgk":
+            return ((n_layers, n_groups, m_c, n_kv, head_dim),
+                    (n_layers, n_groups, m_c, n_kv))
+        return ((n_layers, n_groups, n_kv, m_c, head_dim),
+                (n_layers, n_groups, n_kv, m_c))
+
+    @staticmethod
+    def init(n_layers, n_groups, slots, m_c, dec_capacity, n_kv, head_dim,
+             dtype=jnp.bfloat16, ctx_layout="gmk"):
+        ctx_shape, sc_shape = GroupedQuantBifurcatedCache._shapes(
+            n_layers, n_groups, m_c, n_kv, head_dim, ctx_layout)
+        dec = (n_layers, slots, dec_capacity, n_kv, head_dim)
+        return GroupedQuantBifurcatedCache(
+            k_ctx=jnp.zeros(ctx_shape, jnp.int8),
+            v_ctx=jnp.zeros(ctx_shape, jnp.int8),
+            k_scale=jnp.zeros(sc_shape, jnp.float32),
+            v_scale=jnp.zeros(sc_shape, jnp.float32),
+            ctx_lens=jnp.zeros((n_groups,), jnp.int32),
+            group_ids=jnp.zeros((slots,), jnp.int32),
+            k_dec=jnp.zeros(dec, dtype),
+            v_dec=jnp.zeros(dec, dtype),
+            dec_lens=jnp.zeros((slots,), jnp.int32),
+            ctx_layout=ctx_layout,
+        )
+
+    @staticmethod
+    def spec(n_layers, n_groups, slots, m_c, dec_capacity, n_kv, head_dim,
+             dtype=jnp.bfloat16, ctx_layout="gmk"):
+        ctx_shape, sc_shape = GroupedQuantBifurcatedCache._shapes(
+            n_layers, n_groups, m_c, n_kv, head_dim, ctx_layout)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        return GroupedQuantBifurcatedCache(
+            k_ctx=jax.ShapeDtypeStruct(ctx_shape, jnp.int8),
+            v_ctx=jax.ShapeDtypeStruct(ctx_shape, jnp.int8),
+            k_scale=jax.ShapeDtypeStruct(sc_shape, jnp.float32),
+            v_scale=jax.ShapeDtypeStruct(sc_shape, jnp.float32),
+            ctx_lens=i32(n_groups), group_ids=i32(slots),
+            k_dec=jax.ShapeDtypeStruct(
+                (n_layers, slots, dec_capacity, n_kv, head_dim), dtype),
+            v_dec=jax.ShapeDtypeStruct(
+                (n_layers, slots, dec_capacity, n_kv, head_dim), dtype),
+            dec_lens=i32(slots), ctx_layout=ctx_layout,
+        )
+
+    def write_context(self, k_ctx, v_ctx, group_idx):
+        """Admit + quantize a prefilled context into segment ``group_idx``.
+
+        k_ctx/v_ctx: (L, m_new, g, hd) float (the prefill scan's layout).
+        Quantize + transpose happen once here; the logit scale hd**-0.5 is
+        pre-folded into k_scale. Padded positions carry zero scales (their
+        logits are masked by ctx_lens in both the kernel and the einsum
+        reference, so the zeros are never softmaxed in)."""
+        L, m_new, g, hd = k_ctx.shape
+        cap = self.context_capacity
+        if m_new > cap:
+            raise ValueError(f"context of {m_new} tokens > capacity {cap}")
+        if self.ctx_layout == "gmk":
+            k_new = k_ctx.transpose(0, 2, 1, 3)  # (L, g, m_new, hd)
+            v_new = v_ctx.transpose(0, 2, 1, 3)
+            vpad = ((0, 0), (0, 0), (0, cap - m_new), (0, 0))
+            spad = ((0, 0), (0, 0), (0, cap - m_new))
+        else:
+            k_new, v_new = k_ctx, v_ctx
+            vpad = ((0, 0), (0, cap - m_new), (0, 0), (0, 0))
+            spad = ((0, 0), (0, cap - m_new), (0, 0))
+        kq, ks = quantize_ctx(k_new, fold_scale=hd**-0.5)
+        vq, vs = quantize_ctx(v_new)
+        kq = jnp.pad(kq, vpad)[:, None]
+        vq = jnp.pad(vq, vpad)[:, None]
+        ks = jnp.pad(ks, spad)[:, None]
+        vs = jnp.pad(vs, spad)[:, None]
+        vstart = (0, group_idx) + (0,) * (self.k_ctx.ndim - 2)
+        sstart = (0, group_idx) + (0,) * (self.k_scale.ndim - 2)
+        return dataclasses.replace(
+            self,
+            k_ctx=jax.lax.dynamic_update_slice(self.k_ctx, kq, vstart),
+            v_ctx=jax.lax.dynamic_update_slice(self.v_ctx, vq, vstart),
+            k_scale=jax.lax.dynamic_update_slice(self.k_scale, ks, sstart),
+            v_scale=jax.lax.dynamic_update_slice(self.v_scale, vs, sstart),
+            ctx_lens=self.ctx_lens.at[group_idx].set(m_new),
+        )
+
+    def assign_slots(self, slot_mask, group_idx):
+        """Same slot-table update as ``GroupedBifurcatedCache.assign_slots``:
+        retarget the masked slots and wipe their stale decode arms."""
+        wipe = slot_mask[None, :, None, None, None]
+        return dataclasses.replace(
+            self,
+            group_ids=jnp.where(slot_mask, group_idx, self.group_ids),
+            dec_lens=jnp.where(slot_mask, 0, self.dec_lens),
+            k_dec=jnp.where(wipe, 0, self.k_dec),
+            v_dec=jnp.where(wipe, 0, self.v_dec),
+        )
+
+
+def forest_cache_family(ctx_quant: str = "none"):
+    """Grouped (multi-prefix) analogue of ``ctx_cache_family``: same
+    ``spec``/``init``/``write_context``/``assign_slots`` surface across the
+    bf16 and int8 families, selected here."""
+    from repro.core.kv_cache import GroupedBifurcatedCache
+
+    if ctx_quant == "int8":
+        return GroupedQuantBifurcatedCache
+    if ctx_quant == "none":
+        return GroupedBifurcatedCache
+    raise ValueError(f"unknown ctx_quant mode: {ctx_quant!r}")
+
+
 def ctx_cache_family(ctx_quant: str = "none"):
     """Map a context-quantization mode to its cache class. The two families
     deliberately share the ``spec``/``from_prefill`` parameter surface
@@ -200,6 +355,71 @@ def bifurcated_attention_q8(
     eq_v = "bgpnm,gmv->bgpnv" if ctx_layout == "gmk" else "bgpnm,mgv->bgpnv"
     acc_c = jnp.einsum(eq_v, e_scaled, v_ctx_q.astype(jnp.float32))
     part_c = (m_c, l_c, acc_c)
+
+    logits_d = jnp.einsum("bgpnk,bmgk->bgpnm", q, k_decode).astype(jnp.float32)
+    logits_d = logits_d * scale
+    if decode_mask is not None:
+        logits_d = logits_d + mask_to_bias(decode_mask)[:, None, None, None, :]
+    part_d = _partial_softmax(logits_d, v_decode, batched=True)
+    return merge_partials([part_c, part_d]).astype(q.dtype)
+
+
+def forest_bifurcated_attention_q8(
+    q: jnp.ndarray,           # (b, g, p, n, k) — flat slot batch
+    k_ctx_q: jnp.ndarray,     # int8 (G, m_c, g, hd) "mgk" | (G, g, m_c, hd)
+    v_ctx_q: jnp.ndarray,
+    k_scale_folded: jnp.ndarray,  # f32 (G, m_c, g) | (G, g, m_c); MUST
+    v_scale: jnp.ndarray,         #   carry the logit scale pre-folded
+    group_ids: jnp.ndarray,   # (b,) i32 — slot -> prefix-group assignment
+    ctx_lens: jnp.ndarray,    # (G,) i32 — live (ragged) prefix lengths
+    k_decode: jnp.ndarray,    # (b, C_d, g, hd) bf16
+    v_decode: jnp.ndarray,
+    *,
+    decode_mask: Optional[jnp.ndarray] = None,  # (b, C_d) bool
+    scale: Optional[float] = None,
+    ctx_layout: str = "gmk",
+) -> jnp.ndarray:
+    """Einsum reference for the grouped q8 kernel: the flat-batch forest
+    semantics of ``core.bifurcated.forest_bifurcated_attention`` with int8
+    context segments + scale-folded dequantization. The per-sample gather
+    materializes (b, m_c, ...) tensors — correctness reference only; the
+    same CONTRACT as ``bifurcated_attention_q8`` applies (k scales carry
+    the logit scale pre-folded, ``scale`` touches the decode arm only)."""
+    head_dim = q.shape[-1]
+    scale = head_dim**-0.5 if scale is None else scale
+
+    if ctx_layout == "gmk":
+        m_c = k_ctx_q.shape[2]
+        kc = jnp.take(k_ctx_q, group_ids, axis=0)    # (b, g, m_c, hd)
+        vc = jnp.take(v_ctx_q, group_ids, axis=0)
+        s_k = jnp.take(k_scale_folded, group_ids, axis=0)  # (b, g, m_c)
+        s_v = jnp.take(v_scale, group_ids, axis=0)
+        logits_c = jnp.einsum("bgpnk,bgmk->bgpnm", q.astype(jnp.float32),
+                              kc.astype(jnp.float32))
+        s_k = s_k[:, :, None, None, :]
+        s_v = s_v[:, :, None, None, :]
+        vc = vc.transpose(0, 2, 1, 3)                # (b, m_c, g, hd)
+    else:
+        m_c = k_ctx_q.shape[1]
+        kc = jnp.take(k_ctx_q, group_ids, axis=0)    # (b, m_c, g, hd)
+        vc = jnp.take(v_ctx_q, group_ids, axis=0)
+        s_k = jnp.take(k_scale_folded, group_ids, axis=0)  # (b, m_c, g)
+        s_v = jnp.take(v_scale, group_ids, axis=0)
+        logits_c = jnp.einsum("bgpnk,bmgk->bgpnm", q.astype(jnp.float32),
+                              kc.astype(jnp.float32))
+        s_k = s_k.transpose(0, 2, 1)[:, :, None, None, :]
+        s_v = s_v.transpose(0, 2, 1)[:, :, None, None, :]
+    logits_c = logits_c * s_k
+    valid_c = jnp.arange(m_c)[None, :] < jnp.take(ctx_lens, group_ids)[:, None]
+    logits_c = logits_c + mask_to_bias(valid_c)[:, None, None, None, :]
+
+    m_cx = jnp.max(logits_c, axis=-1, keepdims=True)
+    m_cx = jnp.maximum(m_cx, NEG_INF / 2)
+    e_c = jnp.exp(logits_c - m_cx)
+    l_c = jnp.sum(e_c, axis=-1, keepdims=True)
+    e_scaled = e_c * s_v
+    acc_c = jnp.einsum("bgpnm,bmgv->bgpnv", e_scaled, vc.astype(jnp.float32))
+    part_c = (m_cx, l_c, acc_c)
 
     logits_d = jnp.einsum("bgpnk,bmgk->bgpnm", q, k_decode).astype(jnp.float32)
     logits_d = logits_d * scale

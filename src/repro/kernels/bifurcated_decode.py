@@ -2,7 +2,7 @@
 
 The paper's context GEMM (⟨q, K_c⟩, Eq. 3) is the memory-IO hot spot of
 shared-prefix batch decoding: K_c is the one tensor whose HBM traffic the
-technique eliminates b-fold. Three kernels live here:
+technique eliminates b-fold. Five kernels live here:
 
 ``fused_bifurcated_decode`` — the deployable single-pass path. One
   ``pallas_call`` over grid ``(g, nb_ctx + 1)``: for each kv group the
@@ -22,6 +22,17 @@ technique eliminates b-fold. Three kernels live here:
   weights (V) — and merge into the identical fp32 VMEM running state. The
   dominant remaining HBM term (context KV) halves; no dequantized KV tensor
   ever exists in HBM.
+
+``grouped_fused_bifurcated_decode`` / ``..._q8`` — the multi-prefix FOREST
+  twins: the grid gains a prefix-group axis (g, G, nb) and G context
+  segments stream through VMEM in turn, each DMA'd from HBM once per kv
+  head per step no matter how many decode slots share that prefix. Rows
+  not assigned to the current group and ragged per-group context tails are
+  masked in-kernel (lane-replicated ``(rows, 128)`` assignment + a
+  ``(G, m_c)`` length bias — admission state is DATA, so continuous
+  batching never recompiles); the decode arm + normalize fold into the
+  last grid step. At G == 1 both reduce bit-identically to the
+  single-prefix kernels above.
 
 ``context_flash_partials`` — the historical two-pass building block (context
   arm only, spills unnormalized partials to HBM for a host-side merge with
@@ -380,6 +391,301 @@ def fused_bifurcated_decode_q8(
         ],
         interpret=interpret,
     )(q, k_ctx_q, v_ctx_q, k_scale, v_scale, k_dec, v_dec, dec_bias)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Grouped (multi-prefix forest) fused kernels: G context segments per batch
+# ---------------------------------------------------------------------------
+
+def _grouped_fused_kernel(
+    q_ref,      # (1, rows, hd)
+    k_ref,      # (1, 1, block_m, hd) — context block of group gi
+    v_ref,      # (1, 1, block_m, hd)
+    grp_ref,    # (rows, 128) i32 — lane-replicated row -> group assignment
+    cb_ref,     # (1, block_m) f32 — per-group ragged-tail bias (0 / NEG_INF)
+    kd_ref,     # (1, ld, hd)      — ALL slots' decode keys, group-major
+    vd_ref,     # (1, ld, hd)
+    bias_ref,   # (1, ld) f32      — decode-slot mask bias (0 / NEG_INF)
+    out_ref,    # out: (1, rows, hd) — normalized attention output
+    acc_scr,    # scratch (rows, hd) f32
+    m_scr,      # scratch (rows, 128) f32
+    l_scr,      # scratch (rows, 128) f32
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+):
+    """Forest twin of ``_fused_kernel``: the grid gains a prefix-group axis
+    (g, G, nb). For each kv head the G context segments stream through VMEM
+    IN TURN — each group's K_c/V_c blocks are DMA'd from HBM exactly once
+    per head regardless of how many decode slots share that prefix — while
+    ALL ``rows`` ride the MXU row dimension every step. Rows not assigned
+    to the current group are masked to NEG_INF via the lane-replicated
+    ``grp_ref`` assignment (so they contribute exp(-inf)=0 to the running
+    state, exactly like a masked column); the per-group ragged context tail
+    is masked by ``cb_ref``, a (G, m_c_pad) bias sliced per block. The
+    decode arm + normalize fold into the LAST grid step, so the running
+    fp32 (max, sumexp, acc) state never leaves VMEM."""
+    gi = pl.program_id(1)
+    i = pl.program_id(2)
+    n_groups = pl.num_programs(1)
+    nb = pl.num_programs(2)
+
+    @pl.when((gi == 0) & (i == 0))
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0]                      # (rows, hd)
+    k = k_ref[0, 0]                   # (block_m, hd)
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                          # (rows, block_m)
+    # ragged per-group tail (0 / NEG_INF, covers the zero-padded capacity)
+    s = s + cb_ref[...]
+    # row -> group assignment: only rows decoding THIS prefix contribute
+    assigned = grp_ref[:, :1] == gi    # (rows, 1)
+    s = jnp.where(assigned, s, NEG_INF)
+    _online_update(s, v, acc_scr, m_scr, l_scr)
+
+    @pl.when((gi == n_groups - 1) & (i == nb - 1))
+    def _decode_arm_and_flush():
+        kd = kd_ref[0]                # (ld, hd)
+        vd = vd_ref[0]
+        sd = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                      # (rows, ld)
+        sd = sd + bias_ref[...]        # slot validity + ld padding
+        # cross-slot mask: row r belongs to slot r // pn and may only
+        # attend to decode slots of the same sample (cols j // c_d).
+        row_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 0) // pn
+        col_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 1) // c_d
+        sd = jnp.where(row_s == col_s, sd, NEG_INF)
+
+        acc, l_new = _online_update(sd, vd, acc_scr, m_scr, l_scr)
+        out_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(out_ref.dtype)
+
+
+def grouped_fused_bifurcated_decode(
+    q: jnp.ndarray,         # (g, rows, hd)  rows = b * p * n
+    k_ctx: jnp.ndarray,     # (G, g, m_c, hd)
+    v_ctx: jnp.ndarray,     # (G, g, m_c, hd)
+    row_group: jnp.ndarray, # (rows, 128) i32 lane-replicated row -> group
+    ctx_bias: jnp.ndarray,  # (G, m_c) f32 — 0 within ctx_lens[G], NEG_INF past
+    k_dec: jnp.ndarray,     # (g, b * c_d, hd) — group-major flattened decode
+    v_dec: jnp.ndarray,     # (g, b * c_d, hd)
+    dec_bias: jnp.ndarray,  # (1, b * c_d) f32 — 0 for live slots, NEG_INF else
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    block_m: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-pallas_call multi-prefix decode: returns normalized (g, rows, hd).
+
+    HBM traffic per layer-step: each of the G context segments once
+    (sum_G m_c), the b*c_d decode slots once, q and the output — the same
+    no-spill structure as ``fused_bifurcated_decode``, which this reduces to
+    exactly (token-identically) at G == 1.
+    """
+    n_groups, g, m_c, hd = k_ctx.shape
+    rows = q.shape[1]
+    block_m = min(block_m, max(128, m_c))
+    pad = (-m_c) % block_m
+    if pad:
+        k_ctx = jnp.pad(k_ctx, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_ctx = jnp.pad(v_ctx, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        ctx_bias = jnp.pad(ctx_bias, ((0, 0), (0, pad)),
+                           constant_values=NEG_INF)
+    nb = k_ctx.shape[2] // block_m
+
+    ld = k_dec.shape[1]
+    ld_pad = (-ld) % 128   # lane-align the decode tile
+    if ld_pad:
+        k_dec = jnp.pad(k_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        v_dec = jnp.pad(v_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        dec_bias = jnp.pad(dec_bias, ((0, 0), (0, ld_pad)),
+                           constant_values=NEG_INF)
+    ld_full = ld + ld_pad
+
+    kernel = functools.partial(
+        _grouped_fused_kernel, scale=scale, c_d=c_d, pn=pn
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(g, n_groups, nb),
+        in_specs=[
+            pl.BlockSpec((1, rows, hd), lambda gk, gi, i: (gk, 0, 0)),
+            pl.BlockSpec((1, 1, block_m, hd),
+                         lambda gk, gi, i: (gi, gk, i, 0)),
+            pl.BlockSpec((1, 1, block_m, hd),
+                         lambda gk, gi, i: (gi, gk, i, 0)),
+            pl.BlockSpec((rows, 128), lambda gk, gi, i: (0, 0)),
+            pl.BlockSpec((1, block_m), lambda gk, gi, i: (gi, i)),
+            pl.BlockSpec((1, ld_full, hd), lambda gk, gi, i: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full, hd), lambda gk, gi, i: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full), lambda gk, gi, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, hd), lambda gk, gi, i: (gk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, rows, hd), q.dtype),
+        scratch_shapes=[
+            # fp32 VMEM accumulators — never spilled to HBM; same working
+            # set as the single-prefix kernel (the G axis adds grid steps,
+            # not VMEM residency).
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_ctx, v_ctx, row_group, ctx_bias, k_dec, v_dec, dec_bias)
+    return out
+
+
+def _grouped_fused_q8_kernel(
+    q_ref,      # (1, rows, hd)
+    k_ref,      # (1, 1, block_m, hd) int8 — quantized context block
+    v_ref,      # (1, 1, block_m, hd) int8
+    ks_ref,     # (1, 1, block_m) f32 — per-(token, head) K scales, logit
+                #   scale PRE-FOLDED at quantize time
+    vs_ref,     # (1, 1, block_m) f32
+    grp_ref,    # (rows, 128) i32 — lane-replicated row -> group assignment
+    cb_ref,     # (1, block_m) f32 — per-group ragged-tail bias (0 / NEG_INF)
+    kd_ref,     # (1, ld, hd) bf16 — ALL slots' decode keys, group-major
+    vd_ref,     # (1, ld, hd)
+    bias_ref,   # (1, ld) f32      — decode-slot mask bias (0 / NEG_INF)
+    out_ref,    # out: (1, rows, hd)
+    acc_scr,    # scratch (rows, hd) f32
+    m_scr,      # scratch (rows, 128) f32
+    l_scr,      # scratch (rows, 128) f32
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+):
+    """Quantized twin of ``_grouped_fused_kernel``: int8 context segments +
+    per-(token, head) scales dequantized in-register, identical running
+    fp32 VMEM state and in-kernel decode-arm merge."""
+    gi = pl.program_id(1)
+    i = pl.program_id(2)
+    n_groups = pl.num_programs(1)
+    nb = pl.num_programs(2)
+
+    @pl.when((gi == 0) & (i == 0))
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0]                      # (rows, hd)
+    k = k_ref[0, 0].astype(jnp.float32)   # int8 -> f32, in-register
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                  # (rows, block_m) — raw q·K_q
+    s = s * ks_ref[0]                  # fold s_k (logit scale pre-folded)
+    s = s + cb_ref[...]                # ragged per-group tail
+    assigned = grp_ref[:, :1] == gi    # (rows, 1)
+    s = jnp.where(assigned, s, NEG_INF)
+    _online_update(s, v, acc_scr, m_scr, l_scr, p_scale=vs_ref[0])
+
+    @pl.when((gi == n_groups - 1) & (i == nb - 1))
+    def _decode_arm_and_flush():
+        kd = kd_ref[0]                # (ld, hd) bf16
+        vd = vd_ref[0]
+        sd = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                      # (rows, ld)
+        sd = sd + bias_ref[...]
+        row_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 0) // pn
+        col_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 1) // c_d
+        sd = jnp.where(row_s == col_s, sd, NEG_INF)
+
+        acc, l_new = _online_update(sd, vd, acc_scr, m_scr, l_scr)
+        out_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(out_ref.dtype)
+
+
+def grouped_fused_bifurcated_decode_q8(
+    q: jnp.ndarray,         # (g, rows, hd)  rows = b * p * n
+    k_ctx_q: jnp.ndarray,   # (G, g, m_c, hd) int8
+    v_ctx_q: jnp.ndarray,   # (G, g, m_c, hd) int8
+    k_scale_folded: jnp.ndarray,  # (G, g, m_c) f32 — logit scale pre-folded
+    v_scale: jnp.ndarray,         # (G, g, m_c) f32
+    row_group: jnp.ndarray, # (rows, 128) i32 lane-replicated row -> group
+    ctx_bias: jnp.ndarray,  # (G, m_c) f32 — 0 within ctx_lens[G], NEG_INF past
+    k_dec: jnp.ndarray,     # (g, b * c_d, hd) bf16
+    v_dec: jnp.ndarray,     # (g, b * c_d, hd)
+    dec_bias: jnp.ndarray,  # (1, b * c_d) f32
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    block_m: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-pallas_call quantized multi-prefix decode: every context
+    segment streams as int8 + f32 scale vectors (half the dominant HBM
+    term), no dequantized KV tensor or fp32 partial ever exists in HBM."""
+    k_scale = k_scale_folded
+    n_groups, g, m_c, hd = k_ctx_q.shape
+    rows = q.shape[1]
+    block_m = min(block_m, max(128, m_c))
+    pad = (-m_c) % block_m
+    if pad:
+        k_ctx_q = jnp.pad(k_ctx_q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_ctx_q = jnp.pad(v_ctx_q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad)))
+        ctx_bias = jnp.pad(ctx_bias, ((0, 0), (0, pad)),
+                           constant_values=NEG_INF)
+    nb = k_ctx_q.shape[2] // block_m
+
+    ld = k_dec.shape[1]
+    ld_pad = (-ld) % 128   # lane-align the decode tile
+    if ld_pad:
+        k_dec = jnp.pad(k_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        v_dec = jnp.pad(v_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        dec_bias = jnp.pad(dec_bias, ((0, 0), (0, ld_pad)),
+                           constant_values=NEG_INF)
+    ld_full = ld + ld_pad
+
+    kernel = functools.partial(
+        _grouped_fused_q8_kernel, scale=scale, c_d=c_d, pn=pn
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(g, n_groups, nb),
+        in_specs=[
+            pl.BlockSpec((1, rows, hd), lambda gk, gi, i: (gk, 0, 0)),
+            pl.BlockSpec((1, 1, block_m, hd),
+                         lambda gk, gi, i: (gi, gk, i, 0)),
+            pl.BlockSpec((1, 1, block_m, hd),
+                         lambda gk, gi, i: (gi, gk, i, 0)),
+            pl.BlockSpec((1, 1, block_m), lambda gk, gi, i: (gi, gk, i)),
+            pl.BlockSpec((1, 1, block_m), lambda gk, gi, i: (gi, gk, i)),
+            pl.BlockSpec((rows, 128), lambda gk, gi, i: (0, 0)),
+            pl.BlockSpec((1, block_m), lambda gk, gi, i: (gi, i)),
+            pl.BlockSpec((1, ld_full, hd), lambda gk, gi, i: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full, hd), lambda gk, gi, i: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full), lambda gk, gi, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, hd), lambda gk, gi, i: (gk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, rows, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_ctx_q, v_ctx_q, k_scale, v_scale, row_group, ctx_bias,
+      k_dec, v_dec, dec_bias)
     return out
 
 

@@ -31,6 +31,13 @@ kernel on hardware without threading a flag through every layer.
 single-pass fused structure, but the context arm streams int8 K_c/V_c plus
 per-(token, head) scales (k_scale pre-folded with the logit scale) and
 dequantizes in-register — the context read costs half the bytes.
+
+``grouped_bifurcated_decode_attention`` / ``..._q8`` are the multi-prefix
+FOREST dispatchers: G shared-context segments in one batch with a
+``(b,) -> group`` slot assignment and ragged per-group lengths — all
+runtime data, so one compile serves any admit/retire sequence of the
+continuous-batching engine (runtime/serve.ForestServeEngine). At G == 1
+they are token-identical to the single-prefix dispatchers.
 """
 from __future__ import annotations
 
@@ -44,6 +51,8 @@ from repro.kernels.bifurcated_decode import (
     context_flash_partials,
     fused_bifurcated_decode,
     fused_bifurcated_decode_q8,
+    grouped_fused_bifurcated_decode,
+    grouped_fused_bifurcated_decode_q8,
 )
 
 NEG_INF = -1e30
@@ -173,6 +182,126 @@ def bifurcated_decode_attention_q8(
                      ).astype(jnp.float32)
     out = fused_bifurcated_decode_q8(
         qk, kc, vc, ks, vs, kd, vd, bias,
+        scale=scale, c_d=c_d, pn=p * n,
+        block_m=block_m, interpret=interpret,
+    )  # (g, b*p*n, hd), normalized
+    out = out.reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
+    return out.astype(q.dtype)
+
+
+def _forest_operands(q, group_ids, ctx_lens, k_dec, v_dec, dec_mask, m_c):
+    """Shared grouped-dispatch plumbing: kernel-major q rows, lane-replicated
+    row -> group assignment, per-group ragged context bias, group-major
+    flattened decode arm + slot-validity bias."""
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    qk = q.transpose(1, 0, 2, 3, 4).reshape(g, b * p * n, hd)
+    # row r = (b_idx*p + p_idx)*n + n_idx belongs to sample r // (p*n)
+    row_group = jnp.broadcast_to(
+        jnp.repeat(group_ids.astype(jnp.int32), p * n)[:, None],
+        (b * p * n, 128))
+    ctx_bias = jnp.where(
+        jnp.arange(m_c)[None, :] < ctx_lens[:, None], 0.0, NEG_INF
+    ).astype(jnp.float32)                        # (G, m_c)
+    kd = k_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+    vd = v_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+    bias = jnp.where(dec_mask.reshape(1, b * c_d), 0.0, NEG_INF
+                     ).astype(jnp.float32)
+    return qk, row_group, ctx_bias, kd, vd, bias
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_m", "interpret", "ctx_layout"),
+)
+def grouped_bifurcated_decode_attention(
+    q: jnp.ndarray,          # (b, g, p, n, hd) — framework decode layout
+    k_ctx: jnp.ndarray,      # (G, m_c, g, hd) "mgk" or (G, g, m_c, hd) "gmk"
+    v_ctx: jnp.ndarray,
+    group_ids: jnp.ndarray,  # (b,) i32 — slot -> prefix-group assignment
+    ctx_lens: jnp.ndarray,   # (G,) i32 — live (ragged) prefix lengths
+    k_dec: jnp.ndarray,      # (b, c_d, g, hd)
+    v_dec: jnp.ndarray,
+    dec_mask: jnp.ndarray,   # (b, c_d) bool
+    *,
+    scale: Optional[float] = None,
+    block_m: int = 512,
+    interpret: Optional[bool] = None,
+    ctx_layout: str = "gmk",
+) -> jnp.ndarray:
+    """Multi-prefix (forest) fused decode dispatcher: G shared-context
+    segments in ONE batch, each decode slot assigned to one group via
+    ``group_ids``. Lowers to the single-pallas_call grouped kernel — every
+    group's K_c/V_c streams from HBM once per kv head, ragged tails and the
+    row assignment are masked in-kernel, and at G == 1 the computation is
+    token-identical to ``bifurcated_decode_attention`` (same block
+    schedule, same online-softmax update order)."""
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    scale = hd**-0.5 if scale is None else scale
+    if interpret is None:  # static arg: resolved once at trace time
+        interpret = jax.default_backend() != "tpu"
+
+    if ctx_layout == "gmk":  # already kernel-major: zero-copy
+        kc, vc = k_ctx, v_ctx
+    else:
+        kc = k_ctx.transpose(0, 2, 1, 3)  # (G, g, m_c, hd)
+        vc = v_ctx.transpose(0, 2, 1, 3)
+    m_c = kc.shape[2]
+    qk, row_group, ctx_bias, kd, vd, bias = _forest_operands(
+        q, group_ids, ctx_lens, k_dec, v_dec, dec_mask, m_c)
+    out = grouped_fused_bifurcated_decode(
+        qk, kc, vc, row_group, ctx_bias, kd, vd, bias,
+        scale=scale, c_d=c_d, pn=p * n,
+        block_m=block_m, interpret=interpret,
+    )  # (g, b*p*n, hd), normalized
+    out = out.reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
+    return out.astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_m", "interpret", "ctx_layout"),
+)
+def grouped_bifurcated_decode_attention_q8(
+    q: jnp.ndarray,          # (b, g, p, n, hd) — framework decode layout
+    k_ctx_q: jnp.ndarray,    # int8: (G, m_c, g, hd) "mgk" | (G, g, m_c, hd)
+    v_ctx_q: jnp.ndarray,
+    k_scale_folded: jnp.ndarray,  # f32: (G, m_c, g) | (G, g, m_c); MUST
+    v_scale: jnp.ndarray,         #   carry the logit scale pre-folded
+    group_ids: jnp.ndarray,  # (b,) i32
+    ctx_lens: jnp.ndarray,   # (G,) i32
+    k_dec: jnp.ndarray,      # (b, c_d, g, hd) bf16
+    v_dec: jnp.ndarray,
+    dec_mask: jnp.ndarray,   # (b, c_d) bool
+    *,
+    scale: Optional[float] = None,
+    block_m: int = 512,
+    interpret: Optional[bool] = None,
+    ctx_layout: str = "gmk",
+) -> jnp.ndarray:
+    """Quantized-context twin of ``grouped_bifurcated_decode_attention``:
+    int8 context segments + per-(token, head) scales (k pre-folded with the
+    logit scale), dequantized in-register inside the grouped kernel."""
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    scale = hd**-0.5 if scale is None else scale
+    if interpret is None:  # static arg: resolved once at trace time
+        interpret = jax.default_backend() != "tpu"
+
+    if ctx_layout == "gmk":  # already kernel-major: zero-copy
+        kc, vc = k_ctx_q, v_ctx_q
+        ks, vs = k_scale_folded, v_scale
+    else:
+        kc = k_ctx_q.transpose(0, 2, 1, 3)   # (G, g, m_c, hd)
+        vc = v_ctx_q.transpose(0, 2, 1, 3)
+        ks = k_scale_folded.transpose(0, 2, 1)  # (G, g, m_c)
+        vs = v_scale.transpose(0, 2, 1)
+    m_c = kc.shape[2]
+    qk, row_group, ctx_bias, kd, vd, bias = _forest_operands(
+        q, group_ids, ctx_lens, k_dec, v_dec, dec_mask, m_c)
+    out = grouped_fused_bifurcated_decode_q8(
+        qk, kc, vc, ks, vs, row_group, ctx_bias, kd, vd, bias,
         scale=scale, c_d=c_d, pn=p * n,
         block_m=block_m, interpret=interpret,
     )  # (g, b*p*n, hd), normalized

@@ -119,6 +119,23 @@ def decode_cache_specs(cfg: ModelConfig, model, seq_len: int, batch: int,
     raise ValueError(cfg.family)
 
 
+def forest_decode_cache_specs(cfg: ModelConfig, model, *, slots: int,
+                              n_groups: int, ctx_capacity: int,
+                              dec_capacity: Optional[int] = None,
+                              ctx_quant: str = "none") -> dict:
+    """Continuous-batching serve_step inputs: grouped (multi-prefix) cache
+    + one new token per slot. Attention-bearing families only (the forest
+    slot table targets full-attention serving; state-cache archs broadcast
+    their prefill state instead — DESIGN.md §Arch-applicability)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"forest decoding targets dense/moe/vlm families, got {cfg.family}")
+    cache = model.make_forest_cache_spec(
+        slots, n_groups, ctx_capacity, dec_capacity=dec_capacity,
+        ctx_quant=ctx_quant)
+    return {"cache": cache, "tokens": _i32((slots, 1))}
+
+
 def param_specs(model) -> dict:
     """Abstract params via eval_shape: zero allocation."""
     return jax.eval_shape(model.init, jax.random.PRNGKey(0))

@@ -17,7 +17,11 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import MeshRules, ModelConfig, TrainConfig
-from repro.core.kv_cache import BifurcatedCache, DecodeCache
+from repro.core.kv_cache import (
+    BifurcatedCache,
+    DecodeCache,
+    GroupedBifurcatedCache,
+)
 from repro.distributed.sharding import param_pspec_tree
 from repro.launch import specs as S
 from repro.models import get_model
@@ -89,9 +93,53 @@ def cache_pspec_tree(mesh, cache) -> object:
             length=P(),
         )
 
-    def walk(node):
-        from repro.core.quantized import QuantBifurcatedCache
+    def spec_forest(c: GroupedBifurcatedCache):
+        # G context segments: shard the context SEQUENCE dim over "model"
+        # (flash-decoding style) — dim 3 under "gmk" (L, G, g, m_c, hd),
+        # dim 2 under "mgk" (L, G, m_c, g, hd); the segment axis G stays
+        # replicated (segments admit/retire independently — resharding a
+        # group axis on every admit would defeat the compile-once loop).
+        ctx_axes = ([None, None, None, "model", None] if c.ctx_layout == "gmk"
+                    else [None, None, "model", None, None])
+        dec_axes = [None, ba, "model", None, None]
+        return GroupedBifurcatedCache(
+            k_ctx=spec_for_leaf(mesh, c.k_ctx.shape, ctx_axes),
+            v_ctx=spec_for_leaf(mesh, c.v_ctx.shape, ctx_axes),
+            ctx_lens=P(), group_ids=P(),
+            k_dec=spec_for_leaf(mesh, c.k_dec.shape, dec_axes),
+            v_dec=spec_for_leaf(mesh, c.v_dec.shape, dec_axes),
+            dec_lens=P(),
+            ctx_layout=c.ctx_layout,
+        )
 
+    def walk(node):
+        from repro.core.quantized import (
+            GroupedQuantBifurcatedCache,
+            QuantBifurcatedCache,
+        )
+
+        if isinstance(node, GroupedQuantBifurcatedCache):
+            # int8 segment values + f32 scale leaves shard the context
+            # sequence dim IDENTICALLY (mismatched value/scale shards would
+            # break the in-kernel per-column fold), layout-aware with the
+            # extra leading G axis; G itself stays replicated as above.
+            if node.ctx_layout == "gmk":
+                ctx_axes = [None, None, None, "model", None]
+                sc_axes = [None, None, None, "model"]
+            else:
+                ctx_axes = [None, None, "model", None, None]
+                sc_axes = [None, None, "model", None]
+            ctx = spec_for_leaf(mesh, node.k_ctx.shape, ctx_axes)
+            sc = spec_for_leaf(mesh, node.k_scale.shape, sc_axes)
+            dec = spec_for_leaf(mesh, node.k_dec.shape,
+                                [None, ba, "model", None, None])
+            return GroupedQuantBifurcatedCache(
+                k_ctx=ctx, v_ctx=ctx, k_scale=sc, v_scale=sc,
+                ctx_lens=P(), group_ids=P(),
+                k_dec=dec, v_dec=dec, dec_lens=P(),
+                ctx_layout=node.ctx_layout)
+        if isinstance(node, GroupedBifurcatedCache):
+            return spec_forest(node)
         if isinstance(node, QuantBifurcatedCache):
             # shard the context sequence dim of the int8 values AND the f32
             # scale leaves identically (flash-decoding style), layout-aware:

@@ -438,3 +438,106 @@ def attention_decode(
 
     o = o.transpose(0, 3, 1, 2, 4).reshape(b, n, cfg.n_heads_padded * hd)
     return o @ params["wo"].astype(x.dtype), new_cache
+
+
+def _scatter_decode_slots(cache_arr, new, starts):
+    """Write (b, n, g, hd) new KVs at PER-SLOT offsets ``starts`` (b,) into
+    a (b, C_d, g, hd) decode cache — the continuous-batching analogue of
+    ``update_layer_cache`` (slots admitted at different times sit at
+    different decode depths)."""
+    return jax.vmap(
+        lambda c, kn, s: lax.dynamic_update_slice(
+            c, kn.astype(c.dtype), (s, 0, 0))
+    )(cache_arr, new, starts)
+
+
+def attention_decode_forest(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,
+    layer_cache: dict,
+    *,
+    group_ids: jnp.ndarray,  # (b,) i32 — slot -> prefix-group assignment
+    ctx_lens: jnp.ndarray,   # (G,) i32 — live (ragged) prefix lengths
+    dec_lens: jnp.ndarray,   # (b,) i32 — per-slot decode depth
+    rules: Optional[MeshRules],
+    impl: str = "einsum",    # einsum (forest flash reference) | kernel
+) -> Tuple[jnp.ndarray, dict]:
+    """One incremental-decoding step for one layer over a PREFIX FOREST:
+    G shared-context segments and b decode slots, each slot attending over
+    ``context[group_ids[b]] ⊕ decode[b]``.
+
+    ``layer_cache``: {"k_ctx": (G, g, m_c, hd) "gmk" | (G, m_c, g, hd)
+    "mgk", "v_ctx": ..., "k_dec": (b, C_d, g, hd), "v_dec": ...} — plus
+    {"k_scale", "v_scale"} ((G, g, m_c) / (G, m_c, g)) when the context
+    segments are int8-quantized.
+
+    Differences from the single-prefix ``attention_decode``: positions,
+    decode-cache write offsets and decode-slot masks are all PER SLOT
+    (``ctx_lens[group_ids] + dec_lens``), and the attention dispatch is the
+    grouped kernel / forest einsum reference. Sliding-window configs are
+    not wired (the forest slot table targets full-attention serving).
+    """
+    if cfg.sliding_window is not None:
+        raise NotImplementedError(
+            "forest decoding does not support sliding-window configs")
+    b, n = x.shape[:2]
+    g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
+    p = cfg.n_heads_padded // g
+    q, k_new, v_new = _project_qkv(cfg, params, x)
+    pos_b = jnp.take(ctx_lens, group_ids) + dec_lens       # (b,)
+    if cfg.rope_theta > 0:
+        pos = pos_b[:, None] + jnp.arange(n)[None, :]      # (b, n)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    q = q.reshape(b, n, g, p, hd).transpose(0, 2, 3, 1, 4)  # (b,g,p,n,hd)
+
+    quant = "k_scale" in layer_cache
+    gmk = cfg.ctx_layout == "gmk"
+    k_dec = _scatter_decode_slots(layer_cache["k_dec"], k_new, dec_lens)
+    v_dec = _scatter_decode_slots(layer_cache["v_dec"], v_new, dec_lens)
+    cap = k_dec.shape[1]
+    slot = jnp.arange(cap)[None, :]
+    dec_valid = slot <= dec_lens[:, None] + n - 1           # (b, C_d)
+
+    ctx_axes = ((None, None, "kv_seq", None) if gmk
+                else (None, "kv_seq", None, None))
+    k_ctx = constrain(layer_cache["k_ctx"], rules, *ctx_axes)
+    v_ctx = constrain(layer_cache["v_ctx"], rules, *ctx_axes)
+    if quant:
+        sc_axes = (None, None, "kv_seq") if gmk else (None, "kv_seq", None)
+        k_s = constrain(layer_cache["k_scale"], rules, *sc_axes)
+        v_s = constrain(layer_cache["v_scale"], rules, *sc_axes)
+        if impl == "kernel":
+            from repro.kernels.ops import grouped_bifurcated_decode_attention_q8
+
+            o = grouped_bifurcated_decode_attention_q8(
+                q, k_ctx, v_ctx, k_s, v_s, group_ids, ctx_lens,
+                k_dec, v_dec, dec_valid, ctx_layout=cfg.ctx_layout,
+            )
+        else:
+            from repro.core.quantized import forest_bifurcated_attention_q8
+
+            o = forest_bifurcated_attention_q8(
+                q, k_ctx, v_ctx, k_s, v_s, group_ids, ctx_lens,
+                k_dec, v_dec, decode_mask=dec_valid,
+                ctx_layout=cfg.ctx_layout,
+            )
+    elif impl == "kernel":
+        from repro.kernels.ops import grouped_bifurcated_decode_attention
+
+        o = grouped_bifurcated_decode_attention(
+            q, k_ctx, v_ctx, group_ids, ctx_lens, k_dec, v_dec, dec_valid,
+            ctx_layout=cfg.ctx_layout,
+        )
+    else:
+        from repro.core.bifurcated import forest_bifurcated_attention
+
+        o = forest_bifurcated_attention(
+            q, k_ctx, v_ctx, group_ids, ctx_lens, k_dec, v_dec,
+            decode_mask=dec_valid, ctx_layout=cfg.ctx_layout,
+        )
+    new_cache = {**layer_cache, "k_dec": k_dec, "v_dec": v_dec}
+
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, n, cfg.n_heads_padded * hd)
+    return o @ params["wo"].astype(x.dtype), new_cache

@@ -166,8 +166,16 @@ class TransformerLM:
                     *, impl: str = "einsum"):
         """tokens: (b, n) new token ids. Returns (logits (b, n, V), cache')."""
         cfg = self.cfg
-        from repro.core.quantized import QuantBifurcatedCache
+        from repro.core.kv_cache import GroupedBifurcatedCache
+        from repro.core.quantized import (
+            GroupedQuantBifurcatedCache,
+            QuantBifurcatedCache,
+        )
 
+        if isinstance(cache, (GroupedBifurcatedCache,
+                              GroupedQuantBifurcatedCache)):
+            return self._decode_step_forest(params, cache, tokens, rules,
+                                            impl=impl)
         quant = isinstance(cache, QuantBifurcatedCache)
         bifurcated = isinstance(cache, BifurcatedCache) or quant
         x = self._embed(params, tokens)
@@ -217,7 +225,66 @@ class TransformerLM:
             )
         return logits, new_cache
 
+    def _decode_step_forest(self, params, cache, tokens,
+                            rules: Optional[MeshRules], *, impl: str):
+        """Grouped-cache decode: b slots over G prefix segments, per-slot
+        positions/depths. The forest bookkeeping (group_ids / ctx_lens /
+        dec_lens) has no layer axis, so it rides the layer scan by closure;
+        ``impl="kernel"`` lowers every layer-step to the grouped fused
+        Pallas kernel."""
+        cfg = self.cfg
+        from repro.models.blocks import attention_decode_forest
+
+        x = self._embed(params, tokens)
+        x = constrain(x, rules, "batch", None, None)
+        layer_caches = {
+            "k_ctx": cache.k_ctx, "v_ctx": cache.v_ctx,
+            "k_dec": cache.k_dec, "v_dec": cache.v_dec,
+        }
+        if hasattr(cache, "k_scale"):
+            layer_caches["k_scale"] = cache.k_scale
+            layer_caches["v_scale"] = cache.v_scale
+
+        def body(x, inp):
+            layer, lcache = inp
+            h = apply_norm(cfg, layer["ln1"], x)
+            a, new_lcache = attention_decode_forest(
+                cfg, layer["attn"], h, lcache,
+                group_ids=cache.group_ids, ctx_lens=cache.ctx_lens,
+                dec_lens=cache.dec_lens, rules=rules, impl=impl,
+            )
+            x = x + a
+            h2 = apply_norm(cfg, layer["ln2"], x)
+            if cfg.moe is not None:
+                m = moe_decode(cfg, layer["moe"], h2, rules)
+            else:
+                m = apply_mlp(cfg, layer["mlp"], h2, rules)
+            x = x + m
+            return x, new_lcache
+
+        x, new_caches = lax.scan(body, x, (params["layers"], layer_caches))
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x, rules)
+        n = tokens.shape[1]
+        new_cache = dataclasses.replace(
+            cache, k_dec=new_caches["k_dec"], v_dec=new_caches["v_dec"],
+            dec_lens=cache.dec_lens + n,
+        )
+        return logits, new_cache
+
     # ---- cache constructors (dry-run + serving) ----
+    def make_forest_cache_spec(self, slots, n_groups, ctx_capacity,
+                               dec_capacity=None, ctx_quant: str = "none"):
+        """Abstract GroupedBifurcatedCache / GroupedQuantBifurcatedCache for
+        the dry-run CLIs and sharding-spec builders."""
+        cfg = self.cfg
+        from repro.core.quantized import forest_cache_family
+
+        dec_capacity = dec_capacity or cfg.decode_capacity
+        return forest_cache_family(ctx_quant).spec(
+            cfg.n_layers, n_groups, slots, ctx_capacity, dec_capacity,
+            cfg.n_kv_heads_padded, cfg.kq_dim, ctx_layout=cfg.ctx_layout)
+
     def make_cache_spec(self, batch, capacity, *, bifurcated, dec_capacity=None,
                         ctx_quant: str = "none"):
         cfg = self.cfg

@@ -17,6 +17,11 @@ Pipeline (paper Figure 1, bottom):
 
 Also provides greedy/temperature sampling with top-p, and per-sample
 mean-logprob tracking used for pass@top-k style reranking (paper §5.4).
+
+``ForestServeEngine`` (below) is the continuous-batching generalization:
+many concurrent shared-prefix requests (a prefix FOREST) served from one
+slot table over grouped caches, with admit/retire as pure value updates so
+the jitted decode scan compiles once for the whole serve lifetime.
 """
 from __future__ import annotations
 
@@ -27,7 +32,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import MeshRules, ModelConfig, ServeConfig
+from repro.configs.base import ForestConfig, MeshRules, ModelConfig, ServeConfig
 from repro.core.kv_cache import BifurcatedCache, DecodeCache
 from repro.core.policy import BifurcationPolicy
 
@@ -263,15 +268,257 @@ class ServeEngine:
 
 
 def rank_by_mean_logprob(result: GenerationResult, top_k: int = 3):
-    """Deduplicate + rank samples by mean log-probability (paper §5.4)."""
+    """Deduplicate + rank samples by mean log-probability (paper §5.4).
+
+    Ties are broken by sample index (stable argsort), so equal-score
+    samples rank in submission order; duplicate token rows keep only their
+    best-ranked occurrence. Zero-step results rank everything by score."""
     import numpy as np
 
     toks = np.asarray(result.tokens)
     scores = np.asarray(result.mean_logprob)
     seen, order = set(), []
-    for i in np.argsort(-scores):
+    for i in np.argsort(-scores, kind="stable"):
         key = toks[i].tobytes()
         if key not in seen:
             seen.add(key)
-            order.append(i)
+            order.append(int(i))
     return order[:top_k]
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching forest engine (multi-prefix serving)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ForestState:
+    """Device-side slot-table state carried through the jitted decode scan.
+
+    Everything that changes at admit/retire time is a VALUE here (masks,
+    counters, cache contents) — never a shape — which is what lets one
+    compiled decode dispatch survive the whole serve lifetime.
+    """
+
+    cache: object            # GroupedBifurcatedCache | GroupedQuant...
+    tokens: jnp.ndarray      # (b, 1) i32 — last sampled token per slot
+    active: jnp.ndarray      # (b,) bool — slot is live (not retired/free)
+    steps: jnp.ndarray       # (b,) i32  — decode steps emitted per slot
+    key: jnp.ndarray         # PRNG key for sampling
+
+
+class ForestServeEngine:
+    """Continuous-batching serve loop over a prefix forest (beyond-paper).
+
+    The paper's engine serves ONE shared context per batch; production
+    traffic is a forest — many requests, each fanning out samples over its
+    own prefix, admitted and retired at different times. This engine keeps
+    a slot table of ``fcfg.slots`` decode lanes over ``fcfg.n_groups``
+    shared-context segments:
+
+      admit   — prefill a new request's context (batch=1), write it into a
+                free segment (``write_context``: quantize/transpose once,
+                by value), point free slots at it, sample each slot's first
+                token from the prefill logits. No decode recompile.
+      decode  — ``step_chunk`` runs n_steps of the whole slot table as ONE
+                jitted ``lax.scan`` dispatch with the ForestState carry
+                donated. Per-slot step counts and EOS retirement live
+                INSIDE the carry: a slot that samples ``eos_token`` flips
+                its own ``active`` bit mid-scan and emits ``pad_token``
+                from then on (its lane keeps stepping — masked, isolated
+                by the cross-slot decode mask — so shapes never change).
+      retire  — host-side bookkeeping: segments whose slots have all gone
+                inactive free up for the next admit; retired slots are
+                reusable immediately (``assign_slots`` wipes their stale
+                decode arm).
+    """
+
+    def __init__(self, model, cfg: ModelConfig, fcfg: ForestConfig,
+                 rules: Optional[MeshRules] = None):
+        self.model = model
+        self.cfg = cfg
+        self.fcfg = fcfg
+        self.rules = rules
+        self._chunk = jax.jit(
+            self._chunk_body, donate_argnums=(1,), static_argnames=("n_steps",)
+        )
+        self.decode_dispatches = 0
+        # host-side slot table mirrors (admission policy only — the decode
+        # math depends exclusively on device-side ForestState values)
+        self.group_live = [False] * fcfg.n_groups
+        self.outputs = {s: [] for s in range(fcfg.slots)}   # slot -> tokens
+        self.logps = {s: [] for s in range(fcfg.slots)}
+        self.slot_group = [-1] * fcfg.slots
+
+    # ---- lifecycle ----
+    def init_state(self) -> ForestState:
+        from repro.core.quantized import forest_cache_family
+
+        cfg, fcfg = self.cfg, self.fcfg
+        fam = forest_cache_family(
+            "int8" if fcfg.cache_dtype == "int8" else "none")
+        cache = fam.init(
+            cfg.n_layers, fcfg.n_groups, fcfg.slots, fcfg.ctx_capacity,
+            fcfg.decode_capacity, cfg.n_kv_heads_padded, cfg.kq_dim,
+            ctx_layout=cfg.ctx_layout)
+        b = fcfg.slots
+        return ForestState(
+            cache=cache,
+            tokens=jnp.zeros((b, 1), jnp.int32),
+            active=jnp.zeros((b,), bool),
+            steps=jnp.zeros((b,), jnp.int32),
+            key=jax.random.PRNGKey(fcfg.seed),
+        )
+
+    def free_groups(self):
+        return [g for g, live in enumerate(self.group_live) if not live]
+
+    def free_slots(self, state: ForestState):
+        """Slots safe to (re)assign: never admitted, or belonging to a
+        RETIRED group. An EOS'd slot of a still-live group is NOT free —
+        its finished output must stay readable via ``result()`` until
+        ``retire_groups`` frees the whole group (reassigning it would
+        silently clobber the host-side output lists)."""
+        import numpy as np
+
+        inactive = ~np.asarray(state.active)
+        return [int(s) for s in np.where(inactive)[0]
+                if self.slot_group[s] < 0
+                or not self.group_live[self.slot_group[s]]]
+
+    def admit(self, params, state: ForestState, context_tokens,
+              n_samples: int) -> tuple:
+        """Admit one request: prefill its context into a free segment, fan
+        ``n_samples`` slots out over it, sample their first token from the
+        prefill logits. Returns (state, slot_ids). EOS-at-step-0: a first
+        token equal to ``eos_token`` retires the slot before it ever enters
+        the decode loop (its emitted sequence is just the EOS)."""
+        fcfg = self.fcfg
+        free_g = self.free_groups()
+        free_s = self.free_slots(state)
+        if not free_g:
+            raise RuntimeError("no free context segment — retire first")
+        if len(free_s) < n_samples:
+            raise RuntimeError(
+                f"need {n_samples} free slots, have {len(free_s)}")
+        gidx, slots = free_g[0], free_s[:n_samples]
+
+        logits0, cache1 = self.model.prefill(
+            params, context_tokens, self.rules)
+        cache = state.cache.write_context(cache1.k[:, 0], cache1.v[:, 0], gidx)
+        slot_ids = jnp.asarray(slots, jnp.int32)
+        slot_mask = jnp.zeros((fcfg.slots,), bool).at[slot_ids].set(True)
+        cache = cache.assign_slots(slot_mask, gidx)
+
+        key, sub = jax.random.split(state.key)
+        logits_b = jnp.broadcast_to(logits0, (n_samples, logits0.shape[-1]))
+        tok = sample_tokens(sub, logits_b, fcfg.temperature, fcfg.top_p)
+        logp0 = jax.nn.log_softmax(logits_b.astype(jnp.float32), axis=-1)
+        lp = jnp.take_along_axis(logp0, tok[:, None], axis=-1)[:, 0]
+        live = tok != fcfg.eos_token if fcfg.eos_token >= 0 else \
+            jnp.ones_like(tok, bool)
+
+        state = ForestState(
+            cache=cache,
+            tokens=state.tokens.at[slot_ids, 0].set(tok),
+            active=state.active.at[slot_ids].set(live),
+            steps=state.steps.at[slot_ids].set(0),
+            key=key,
+        )
+        self.group_live[gidx] = True
+        for i, s in enumerate(slots):
+            self.slot_group[s] = gidx
+            self.outputs[s] = [int(tok[i])]
+            self.logps[s] = [float(lp[i])]
+        return state, slots
+
+    # ---- decode ----
+    def _decode_one(self, params, state: ForestState):
+        """One forest decode step: advance every slot one token, gate the
+        emission + slot-table updates on each slot's live bit."""
+        fcfg = self.fcfg
+        key, sub = jax.random.split(state.key)
+        logits, cache = self.model.decode_step(
+            params, state.cache, state.tokens, self.rules,
+            impl="kernel" if fcfg.use_kernel else "einsum")
+        logits = logits[:, -1]
+        sampled = sample_tokens(sub, logits, fcfg.temperature, fcfg.top_p)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        tok_logp = jnp.take_along_axis(logp, sampled[:, None], axis=-1)[:, 0]
+        emit = state.active
+        tok = jnp.where(emit, sampled, fcfg.pad_token)
+        active = emit & (sampled != fcfg.eos_token) if fcfg.eos_token >= 0 \
+            else emit
+        new = ForestState(
+            cache=cache,
+            tokens=tok[:, None],
+            active=active,
+            steps=state.steps + emit.astype(jnp.int32),
+            key=key,
+        )
+        return new, (tok, tok_logp, emit)
+
+    def _chunk_body(self, params, state: ForestState, *, n_steps: int):
+        def step(s, _):
+            return self._decode_one(params, s)
+
+        return jax.lax.scan(step, state, None, length=n_steps)
+
+    def step_chunk(self, params, state: ForestState, n_steps: int):
+        """Run ``n_steps`` decode steps for the whole slot table as ONE
+        jitted dispatch (donated carry). Appends each live slot's emitted
+        tokens to the host-side output lists and returns the new state.
+
+        Raises if the chunk would push any LIVE slot past its decode
+        capacity: the per-slot KV write clamps at the last cache slot, so
+        decoding past capacity silently corrupts that slot's decode arm —
+        retire or shorten the chunk instead. (Slots admitted mid-lifetime
+        sit at different depths; the guard tracks the deepest live one.)"""
+        import numpy as np
+
+        active = np.asarray(state.active)
+        if active.any():
+            deepest = int(np.asarray(state.cache.dec_lens)[active].max())
+            cap = state.cache.decode_capacity
+            if deepest + n_steps > cap:
+                raise RuntimeError(
+                    f"chunk of {n_steps} steps would overflow "
+                    f"decode_capacity={cap} (deepest live slot at "
+                    f"{deepest}); retire slots or shorten the chunk")
+        state, (toks, lps, emits) = self._chunk(params, state,
+                                                n_steps=n_steps)
+        self.decode_dispatches += 1
+        toks, lps, emits = (np.asarray(toks), np.asarray(lps),
+                            np.asarray(emits))
+        for t in range(toks.shape[0]):
+            for s in range(toks.shape[1]):
+                if emits[t, s]:
+                    self.outputs[s].append(int(toks[t, s]))
+                    self.logps[s].append(float(lps[t, s]))
+        return state
+
+    # ---- retire ----
+    def retire_groups(self, state: ForestState):
+        """Free every segment whose slots have all gone inactive. Returns
+        the list of retired group ids; their slots become reusable by the
+        next ``admit`` (which wipes the stale decode arms)."""
+        import numpy as np
+
+        active = np.asarray(state.active)
+        retired = []
+        for g in range(self.fcfg.n_groups):
+            if not self.group_live[g]:
+                continue
+            slots = [s for s in range(self.fcfg.slots)
+                     if self.slot_group[s] == g]
+            if not any(active[s] for s in slots):
+                self.group_live[g] = False
+                retired.append(g)
+        return retired
+
+    def result(self, slot: int) -> GenerationResult:
+        """Per-slot GenerationResult view over the host-side output lists."""
+        toks = jnp.asarray(self.outputs[slot])[None, :]
+        lps = jnp.asarray(self.logps[slot])[None, :]
+        return GenerationResult(
+            tokens=toks, mean_logprob=jnp.mean(lps, axis=1), logprobs=lps)

@@ -1,0 +1,299 @@
+"""Differential test harness for the bifurcated-decode implementation stack.
+
+ONE parametrized harness runs every implementation — {fused, fused_q8,
+two_pass, einsum, einsum_q8, grouped, grouped_q8} — on IDENTICAL inputs
+(tests/conftest.make_decode_case) and cross-checks:
+
+  * every implementation against the fp32 monolithic-softmax oracle
+    (standard attention over [broadcast K_c ⊕ K_d]) with per-dtype /
+    per-quantization tolerances;
+  * every PAIR of implementations against each other (catching agreeing-
+    but-wrong regressions the oracle check alone can miss), with the pair
+    tolerance = max of the two members';
+  * the q8 pair (fused_q8 vs einsum_q8) at fp32 tightness — same
+    scale-folded math, different execution order;
+  * the grouped (multi-prefix forest) kernel at G == 1 BIT-IDENTICAL to
+    the single-prefix fused kernel — the ISSUE's reduction acceptance.
+
+The case list sweeps b x p x n x ragged m_c x partial C_d masks x both ctx
+layouts x {f32, bf16}. When ``hypothesis`` is installed (CI installs it; a
+fixed-seed derandomized profile is registered in conftest.py) an additional
+fuzz pass generates adversarial shapes/seeds on top of the fixed grid.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_decode_case
+from repro.core.attention import decode_attention
+from repro.core.bifurcated import bifurcated_attention
+from repro.core.quantized import bifurcated_attention_q8, quantize_ctx
+from repro.kernels.ops import (
+    bifurcated_decode_attention,
+    bifurcated_decode_attention_q8,
+    grouped_bifurcated_decode_attention,
+    grouped_bifurcated_decode_attention_q8,
+)
+
+G, HD = 2, 32
+
+
+# ---------------------------------------------------------------------------
+# Implementations under test: case dict -> (b, g, p, n, hd) output
+# ---------------------------------------------------------------------------
+
+def _q8_operands(case, ctx_layout):
+    kq, ks = quantize_ctx(case["kc"], fold_scale=HD**-0.5)  # (m_c, g)
+    vq, vs = quantize_ctx(case["vc"])
+    if ctx_layout == "gmk":
+        return kq.transpose(1, 0, 2), vq.transpose(1, 0, 2), ks.T, vs.T
+    return kq, vq, ks, vs
+
+
+def _ctx(case, ctx_layout):
+    if ctx_layout == "gmk":
+        return case["kc"].transpose(1, 0, 2), case["vc"].transpose(1, 0, 2)
+    return case["kc"], case["vc"]
+
+
+def impl_einsum(case, ctx_layout, block_m):
+    del block_m
+    if ctx_layout == "gmk":  # paper 4-einsum reference is mgk-only
+        from repro.core.bifurcated import bifurcated_attention_flash
+
+        kc, vc = _ctx(case, ctx_layout)
+        return bifurcated_attention_flash(
+            case["q"], kc, vc, case["kd"], case["vd"],
+            decode_mask=case["mask"], ctx_layout="gmk")
+    return bifurcated_attention(
+        case["q"], case["kc"], case["vc"], case["kd"], case["vd"],
+        decode_mask=case["mask"])
+
+
+def impl_einsum_q8(case, ctx_layout, block_m):
+    del block_m
+    kq, vq, ks, vs = _q8_operands(case, ctx_layout)
+    return bifurcated_attention_q8(
+        case["q"], kq, vq, ks, vs, case["kd"], case["vd"],
+        decode_mask=case["mask"], ctx_layout=ctx_layout)
+
+
+def impl_fused(case, ctx_layout, block_m):
+    kc, vc = _ctx(case, ctx_layout)
+    return bifurcated_decode_attention(
+        case["q"], kc, vc, case["kd"], case["vd"], case["mask"],
+        block_m=block_m, interpret=True, ctx_layout=ctx_layout)
+
+
+def impl_two_pass(case, ctx_layout, block_m):
+    kc, vc = _ctx(case, ctx_layout)
+    return bifurcated_decode_attention(
+        case["q"], kc, vc, case["kd"], case["vd"], case["mask"],
+        block_m=block_m, interpret=True, ctx_layout=ctx_layout,
+        two_pass=True)
+
+
+def impl_fused_q8(case, ctx_layout, block_m):
+    kq, vq, ks, vs = _q8_operands(case, ctx_layout)
+    return bifurcated_decode_attention_q8(
+        case["q"], kq, vq, ks, vs, case["kd"], case["vd"], case["mask"],
+        block_m=block_m, interpret=True, ctx_layout=ctx_layout)
+
+
+def _grouped_operands(case, ctx_layout):
+    """Single-prefix case lifted to the forest dispatch: G=1 segment, all
+    slots assigned to it, full context length."""
+    b = case["q"].shape[0]
+    m_c = case["kc"].shape[0]
+    gids = jnp.zeros((b,), jnp.int32)
+    clens = jnp.asarray([m_c], jnp.int32)
+    return gids, clens
+
+
+def impl_grouped(case, ctx_layout, block_m):
+    kc, vc = _ctx(case, ctx_layout)
+    gids, clens = _grouped_operands(case, ctx_layout)
+    return grouped_bifurcated_decode_attention(
+        case["q"], kc[None], vc[None], gids, clens,
+        case["kd"], case["vd"], case["mask"],
+        block_m=block_m, interpret=True, ctx_layout=ctx_layout)
+
+
+def impl_grouped_q8(case, ctx_layout, block_m):
+    kq, vq, ks, vs = _q8_operands(case, ctx_layout)
+    gids, clens = _grouped_operands(case, ctx_layout)
+    return grouped_bifurcated_decode_attention_q8(
+        case["q"], kq[None], vq[None], ks[None], vs[None], gids, clens,
+        case["kd"], case["vd"], case["mask"],
+        block_m=block_m, interpret=True, ctx_layout=ctx_layout)
+
+
+# name -> (fn, is_quantized). Quantized impls carry the int8 rounding error
+# against the fp32 oracle; non-quantized ones only their dtype's.
+IMPLS = {
+    "einsum": (impl_einsum, False),
+    "einsum_q8": (impl_einsum_q8, True),
+    "fused": (impl_fused, False),
+    "two_pass": (impl_two_pass, False),
+    "fused_q8": (impl_fused_q8, True),
+    "grouped": (impl_grouped, False),
+    "grouped_q8": (impl_grouped_q8, True),
+}
+
+# per-dtype tolerance for exact (non-quantized) implementations
+DTYPE_TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+Q8_TOL = 3e-2   # int8 rounding bound vs the UNquantized fp32 oracle
+
+
+def oracle(case):
+    """fp32 monolithic softmax over [broadcast K_c ⊕ K_d] — ground truth."""
+    f32 = lambda x: x.astype(jnp.float32)
+    b = case["q"].shape[0]
+    m_c = case["kc"].shape[0]
+    K = jnp.concatenate(
+        [jnp.broadcast_to(f32(case["kc"])[None], (b, *case["kc"].shape)),
+         f32(case["kd"])], axis=1)
+    V = jnp.concatenate(
+        [jnp.broadcast_to(f32(case["vc"])[None], (b, *case["vc"].shape)),
+         f32(case["vd"])], axis=1)
+    valid = jnp.concatenate(
+        [jnp.ones((b, m_c), bool), case["mask"]], axis=1)
+    return decode_attention(f32(case["q"]), K, V, valid_mask=valid)
+
+
+def _tol(name, dtype):
+    _, quant = IMPLS[name]
+    return Q8_TOL if quant else DTYPE_TOL[dtype]
+
+
+def run_differential(case, *, dtype, ctx_layout, block_m):
+    """Run every impl on one case; cross-check each vs the oracle and all
+    pairs against each other. Returns the outputs for extra assertions."""
+    ref = np.asarray(oracle(case), np.float32)
+    scale = max(float(np.max(np.abs(ref))), 1.0)
+    outs = {}
+    for name, (fn, _) in IMPLS.items():
+        out = np.asarray(fn(case, ctx_layout, block_m), np.float32)
+        assert out.shape == ref.shape, (name, out.shape, ref.shape)
+        assert not np.isnan(out).any(), f"{name} produced NaNs"
+        err = np.max(np.abs(out - ref))
+        tol = _tol(name, dtype)
+        assert err <= tol * scale, f"{name} vs oracle: {err} > {tol}*{scale}"
+        outs[name] = out
+    names = sorted(outs)
+    for i, a in enumerate(names):
+        for bname in names[i + 1:]:
+            tol = max(_tol(a, dtype), _tol(bname, dtype))
+            err = np.max(np.abs(outs[a] - outs[bname]))
+            assert err <= 2 * tol * scale, \
+                f"{a} vs {bname}: {err} > 2*{tol}*{scale}"
+    return outs
+
+
+# (b, p, n, m_c, c_d, block_m) — m_c values include non-multiples of
+# block_m (ragged ctx tails masked in-kernel) and block_m > m_c cells.
+CASES = [
+    (1, 1, 1, 64, 8, 64),
+    (1, 4, 1, 130, 4, 128),     # ragged ctx tail, single sample
+    (4, 1, 1, 300, 16, 128),    # ragged tail, mid batch
+    (4, 4, 1, 257, 7, 128),     # prime-ish sizes
+    (32, 1, 1, 512, 8, 256),    # large batch (paper's regime), aligned ctx
+    (32, 4, 1, 96, 24, 128),    # large batch, block_m > m_c
+    (3, 2, 4, 100, 12, 128),    # speculative n > 1 rows
+]
+
+
+@pytest.mark.parametrize("shape", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("ctx_layout", ["mgk", "gmk"])
+def test_differential_all_impls(shape, dtype, ctx_layout):
+    b, p, n, m_c, c_d, block_m = shape
+    case = make_decode_case(b, p, m_c, c_d, g=G, hd=HD, n=n, dtype=dtype,
+                            seed=sum(shape))
+    outs = run_differential(case, dtype=dtype, ctx_layout=ctx_layout,
+                            block_m=block_m)
+    if dtype == jnp.float32:
+        # same scale-folded math, different execution order: fp32-tight
+        # agreement (bf16 inputs round differently per path and are covered
+        # by the generic pairwise tolerance above)
+        np.testing.assert_allclose(outs["fused_q8"], outs["einsum_q8"],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(outs["grouped_q8"], outs["fused_q8"],
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", CASES[:4])
+@pytest.mark.parametrize("ctx_layout", ["mgk", "gmk"])
+def test_grouped_g1_bit_identical_to_fused(shape, ctx_layout):
+    """ISSUE acceptance: at G == 1 the grouped (forest) kernel reduces
+    EXACTLY — bit-for-bit, not just within tolerance — to the single-prefix
+    fused kernel (same block schedule, same online-update order)."""
+    b, p, n, m_c, c_d, block_m = shape
+    case = make_decode_case(b, p, m_c, c_d, g=G, hd=HD, n=n,
+                            dtype=jnp.bfloat16, seed=sum(shape))
+    out_g = impl_grouped(case, ctx_layout, block_m)
+    out_f = impl_fused(case, ctx_layout, block_m)
+    np.testing.assert_array_equal(np.asarray(out_g), np.asarray(out_f))
+    out_gq = impl_grouped_q8(case, ctx_layout, block_m)
+    out_fq = impl_fused_q8(case, ctx_layout, block_m)
+    np.testing.assert_array_equal(np.asarray(out_gq), np.asarray(out_fq))
+
+
+def test_grouped_multi_prefix_vs_per_group_fused():
+    """G > 1: the forest kernel on a mixed batch must agree with running
+    the single-prefix fused kernel once per group on that group's rows."""
+    rng = np.random.RandomState(5)
+    b, p, n, c_d = 6, 2, 1, 8
+    n_groups, cap = 3, 160
+    q = jnp.asarray(rng.randn(b, G, p, n, HD), jnp.float32)
+    kc = jnp.asarray(rng.randn(n_groups, G, cap, HD), jnp.float32)   # gmk
+    vc = jnp.asarray(rng.randn(n_groups, G, cap, HD), jnp.float32)
+    kd = jnp.asarray(rng.randn(b, c_d, G, HD), jnp.float32)
+    vd = jnp.asarray(rng.randn(b, c_d, G, HD), jnp.float32)
+    mask = jnp.arange(c_d)[None, :] < jnp.asarray(
+        rng.randint(1, c_d + 1, size=(b,)))[:, None]
+    gids = jnp.asarray([0, 1, 2, 0, 1, 0], jnp.int32)
+    clens = jnp.asarray([160, 37, 96], jnp.int32)
+
+    out = grouped_bifurcated_decode_attention(
+        q, kc, vc, gids, clens, kd, vd, mask,
+        block_m=64, interpret=True, ctx_layout="gmk")
+    for gi in range(n_groups):
+        rows = np.where(np.asarray(gids) == gi)[0]
+        m_i = int(clens[gi])
+        ref = bifurcated_decode_attention(
+            q[rows], kc[gi, :, :m_i], vc[gi, :, :m_i],
+            kd[rows], vd[rows], mask[rows],
+            block_m=64, interpret=True, ctx_layout="gmk")
+        np.testing.assert_allclose(np.asarray(out[rows]), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Optional hypothesis fuzz pass (CI: fixed-seed derandomized profile)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+
+if HAS_HYPOTHESIS:
+    @given(
+        b=st.integers(1, 8), p=st.integers(1, 3), n=st.integers(1, 3),
+        m_c=st.integers(2, 160), c_d=st.integers(1, 12),
+        full_mask=st.booleans(), gmk=st.booleans(),
+        seed=st.integers(0, 10_000),
+    )
+    def test_differential_fuzz(b, p, n, m_c, c_d, full_mask, gmk, seed):
+        """Hypothesis-driven shapes/seeds through the same harness (f32 so
+        disagreements are decisive, smaller dims so interpret mode stays
+        fast)."""
+        case = make_decode_case(b, p, m_c, c_d, g=G, hd=HD, n=n,
+                                dtype=jnp.float32, seed=seed,
+                                full_mask=full_mask)
+        run_differential(case, dtype=jnp.float32,
+                         ctx_layout="gmk" if gmk else "mgk", block_m=128)

@@ -1,135 +1,61 @@
-"""Single-pass fused bifurcated decode kernel (kernels/bifurcated_decode.
-fused_bifurcated_decode via ops.bifurcated_decode_attention):
+"""Single-pass fused bifurcated decode kernel — kernel-specific guarantees.
 
-  * interpret-mode exactness vs the monolithic-softmax oracle (ref.py) over
-    b x p x tail x mask x dtype sweeps (acceptance: <= 1e-5 f32, 2e-2 bf16);
-  * structural guarantee: ONE pallas_call, ONE output, no fp32 acc/m/l
-    partials in its out_shape;
-  * n > 1 (speculative draft tokens) folded into the kernel row dimension,
-    checked against core.bifurcated_attention;
-  * fused == two_pass escape hatch on identical inputs.
+Exactness sweeps vs the fp32 oracle / the other implementations moved to
+the differential harness (tests/test_differential.py), which runs every
+impl on identical inputs from tests/conftest.make_decode_case. This file
+keeps what is specific to the FUSED kernel:
+
+  * structural no-HBM-spill guarantee (conftest.assert_no_hbm_spill): ONE
+    pallas_call, one normalized output in the query dtype — vs the two-pass
+    escape hatch, which spills the historical fp32 partials;
+  * n > 1 (speculative draft tokens) through the MODEL's decode_step;
+  * the fused == two_pass merge identity on one canonical case.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import assert_no_hbm_spill, collect_pallas_calls, make_decode_case
 from repro.core.bifurcated import bifurcated_attention
 from repro.kernels.ops import bifurcated_decode_attention
-from repro.kernels.ref import bifurcated_decode_ref
 
-# (b, p, m_c, c_d, block_m) — g/hd fixed small to keep interpret mode fast;
-# m_c values include non-multiples of block_m (tail masking in-kernel).
-SWEEP = [
-    (1, 1, 64, 8, 64),
-    (1, 4, 130, 4, 128),     # ragged ctx tail, single sample
-    (4, 1, 300, 16, 128),    # ragged tail, mid batch
-    (4, 4, 257, 7, 128),     # prime-ish sizes
-    (32, 1, 512, 8, 256),    # large batch (paper's regime), aligned ctx
-    (32, 4, 96, 24, 128),    # large batch, block_m > m_c
-]
 G, HD = 2, 32
 
 
-def make(b, p, m_c, c_d, dtype, seed=0, full_mask=False):
-    rng = np.random.RandomState(seed)
-    q = jnp.asarray(rng.randn(b, G, p, HD), dtype)
-    kc = jnp.asarray(rng.randn(G, m_c, HD), dtype)
-    vc = jnp.asarray(rng.randn(G, m_c, HD), dtype)
-    kd = jnp.asarray(rng.randn(b, G, c_d, HD), dtype)
-    vd = jnp.asarray(rng.randn(b, G, c_d, HD), dtype)
-    if full_mask:
-        mask = jnp.ones((b, c_d), bool)
-    else:
-        # ragged per-sample decode lengths: partially-masked C_d slots
-        lens = rng.randint(0, c_d + 1, size=(b,))
-        lens[0] = max(1, lens[0])
-        mask = jnp.arange(c_d)[None, :] < jnp.asarray(lens)[:, None]
-    return q, kc, vc, kd, vd, mask
-
-
-def _fused(q, kc, vc, kd, vd, mask, block_m, **kw):
-    """Call through ops with framework ("mgk"/batch-major) cache layouts."""
+def _fused(case, block_m, **kw):
     return bifurcated_decode_attention(
-        q[:, :, :, None, :], kc.transpose(1, 0, 2), vc.transpose(1, 0, 2),
-        kd.transpose(0, 2, 1, 3), vd.transpose(0, 2, 1, 3), mask,
-        block_m=block_m, interpret=True, **kw)[:, :, :, 0, :]
+        case["q"], case["kc"], case["vc"], case["kd"], case["vd"],
+        case["mask"], block_m=block_m, interpret=True, **kw)
 
 
-@pytest.mark.parametrize("shape", SWEEP)
-@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5), (jnp.bfloat16, 2e-2)])
-def test_fused_vs_oracle(shape, dtype, tol):
-    b, p, m_c, c_d, block_m = shape
-    q, kc, vc, kd, vd, mask = make(b, p, m_c, c_d, dtype, seed=sum(shape))
-    out = _fused(q, kc, vc, kd, vd, mask, block_m)
-    ref = bifurcated_decode_ref(q, kc, vc, kd, vd, mask, HD**-0.5)
-    np.testing.assert_allclose(
-        np.asarray(out, np.float32), np.asarray(ref, np.float32),
-        rtol=tol, atol=tol)
-
-
-@pytest.mark.parametrize("shape", SWEEP[:3])
-def test_fused_matches_two_pass(shape):
-    b, p, m_c, c_d, block_m = shape
-    q, kc, vc, kd, vd, mask = make(b, p, m_c, c_d, jnp.float32, seed=7)
-    out_f = _fused(q, kc, vc, kd, vd, mask, block_m)
-    out_t = _fused(q, kc, vc, kd, vd, mask, block_m, two_pass=True)
-    np.testing.assert_allclose(out_f, out_t, rtol=1e-5, atol=1e-5)
-
-
-def test_fused_gmk_layout_zero_copy_semantics():
-    """"gmk" (head-major) context input produces identical results."""
-    b, p, m_c, c_d = 4, 2, 100, 12
-    q, kc, vc, kd, vd, mask = make(b, p, m_c, c_d, jnp.float32, seed=3)
-    out_mgk = _fused(q, kc, vc, kd, vd, mask, 128)
-    out_gmk = bifurcated_decode_attention(
-        q[:, :, :, None, :], kc, vc,  # already (g, m_c, hd)
-        kd.transpose(0, 2, 1, 3), vd.transpose(0, 2, 1, 3), mask,
-        block_m=128, interpret=True, ctx_layout="gmk")[:, :, :, 0, :]
-    np.testing.assert_allclose(out_mgk, out_gmk, rtol=1e-6, atol=1e-6)
+def test_fused_matches_two_pass():
+    case = make_decode_case(4, 2, 300, 16, g=G, hd=HD, seed=7)
+    out_f = _fused(case, 128)
+    out_t = _fused(case, 128, two_pass=True)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_t),
+                               rtol=1e-5, atol=1e-5)
 
 
 # ---- structural guarantee: one pallas_call, normalized single output ----
 
-def _collect_pallas_calls(jaxpr):
-    calls = []
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            calls.append(eqn)
-        for v in eqn.params.values():
-            # duck-typed: ClosedJaxpr (has .jaxpr) / raw Jaxpr (has .eqns)
-            # moved modules across jax versions
-            if hasattr(v, "jaxpr"):
-                calls += _collect_pallas_calls(v.jaxpr)
-            elif hasattr(v, "eqns"):
-                calls += _collect_pallas_calls(v)
-    return calls
-
-
-def _pallas_calls_of(two_pass):
-    b, p, m_c, c_d = 2, 2, 64, 8
-    q, kc, vc, kd, vd, mask = make(b, p, m_c, c_d, jnp.bfloat16, seed=1,
-                                   full_mask=True)
-    jaxpr = jax.make_jaxpr(
+def _jaxpr_of(two_pass):
+    case = make_decode_case(2, 2, 64, 8, g=G, hd=HD, dtype=jnp.bfloat16,
+                            seed=1, full_mask=True)
+    return jax.make_jaxpr(
         lambda *a: bifurcated_decode_attention(*a, interpret=True,
                                                two_pass=two_pass)
-    )(q[:, :, :, None, :], kc.transpose(1, 0, 2), vc.transpose(1, 0, 2),
-      kd.transpose(0, 2, 1, 3), vd.transpose(0, 2, 1, 3), mask)
-    return _collect_pallas_calls(jaxpr.jaxpr)
+    )(case["q"], case["kc"], case["vc"], case["kd"], case["vd"],
+      case["mask"]).jaxpr
 
 
 def test_fused_is_single_pallas_call_no_partial_outputs():
-    calls = _pallas_calls_of(two_pass=False)
-    assert len(calls) == 1, f"expected ONE pallas_call, got {len(calls)}"
-    outs = calls[0].outvars
-    assert len(outs) == 1, f"fused kernel must write only the output: {outs}"
-    # normalized output in the query dtype — no fp32 acc/m/l spills
-    assert outs[0].aval.dtype == jnp.bfloat16, outs[0].aval
+    assert_no_hbm_spill(_jaxpr_of(two_pass=False), out_dtype=jnp.bfloat16)
 
 
 def test_two_pass_spills_fp32_partials():
     """The escape hatch keeps the historical 3-output partials kernel."""
-    calls = _pallas_calls_of(two_pass=True)
+    calls = collect_pallas_calls(_jaxpr_of(two_pass=True))
     assert len(calls) == 1
     outs = calls[0].outvars
     assert len(outs) == 3  # acc, m, l
@@ -141,19 +67,14 @@ def test_two_pass_spills_fp32_partials():
 @pytest.mark.parametrize("two_pass", [False, True])
 @pytest.mark.parametrize("n", [2, 4])
 def test_n_gt_1_matches_bifurcated_attention(two_pass, n):
-    b, g, p, hd, m_c, c_d = 3, 2, 2, 32, 100, 12
-    rng = np.random.RandomState(n)
-    q = jnp.asarray(rng.randn(b, g, p, n, hd), jnp.float32)
-    kc = jnp.asarray(rng.randn(m_c, g, hd), jnp.float32)
-    vc = jnp.asarray(rng.randn(m_c, g, hd), jnp.float32)
-    kd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.float32)
-    vd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.float32)
-    mask = jnp.broadcast_to(jnp.arange(c_d)[None] < c_d - 3, (b, c_d))
-    out = bifurcated_decode_attention(q, kc, vc, kd, vd, mask,
-                                      interpret=True, two_pass=two_pass)
-    ref = bifurcated_attention(q, kc, vc, kd, vd, decode_mask=mask)
-    assert out.shape == (b, g, p, n, hd)
-    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    case = make_decode_case(3, 2, 100, 12, g=G, hd=HD, n=n, seed=n)
+    out = _fused(case, 512, two_pass=two_pass)
+    ref = bifurcated_attention(case["q"], case["kc"], case["vc"],
+                               case["kd"], case["vd"],
+                               decode_mask=case["mask"])
+    assert out.shape == case["q"].shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_n_gt_1_through_model_kernel_impl():

@@ -1,165 +1,85 @@
-"""Quantized-context fused decode kernel (kernels/bifurcated_decode.
-fused_bifurcated_decode_q8 via ops.bifurcated_decode_attention_q8):
+"""Quantized-context fused decode kernel — kernel-specific guarantees.
 
-  * interpret-mode sweep vs the einsum q8 reference
-    (core.quantized.bifurcated_attention_q8) — the kernel implements the
-    same scale-folded math, so agreement is fp32-exactness-tight;
-  * quantization-error bound vs the fp32 oracle (monolithic softmax over
-    the UNquantized cache): <= 2e-2 relative for int8;
-  * structural guarantee: ONE pallas_call whose context operands enter as
-    int8 (+ f32 scale vectors) — no dequantized K_c/V_c tensor and no fp32
-    partials in HBM;
-  * speculative n > 1 rows and ragged / partially-masked decode arms.
+Exactness sweeps vs the einsum q8 reference and the fp32 oracle moved to
+the differential harness (tests/test_differential.py, impls "fused_q8" /
+"einsum_q8" / "grouped_q8" on shared conftest fixtures). This file keeps
+what is specific to the q8 KERNELS:
+
+  * structural guarantee (conftest.assert_no_hbm_spill(q8=True)): ONE
+    pallas_call whose context operands enter as int8 (+ f32 scale vectors,
+    no head_dim axis) — no dequantized K_c/V_c buffer exists anywhere in
+    the jaxpr, no fp32 partials in HBM — applied to BOTH the single-prefix
+    and the grouped (multi-prefix forest) q8 kernels;
+  * speculative n > 1 rows against the einsum q8 reference.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.bifurcated import bifurcated_attention
+from conftest import assert_no_hbm_spill, make_decode_case
 from repro.core.quantized import bifurcated_attention_q8, quantize_ctx
-from repro.kernels.ops import bifurcated_decode_attention_q8
+from repro.kernels.ops import (
+    bifurcated_decode_attention_q8,
+    grouped_bifurcated_decode_attention_q8,
+)
 
-# (b, p, m_c, c_d, block_m) — m_c values include non-multiples of block_m
-# (tail masking in-kernel, scale rows zero-padded alongside the values).
-SWEEP = [
-    (1, 1, 64, 8, 64),
-    (1, 4, 130, 4, 128),     # ragged ctx tail, single sample
-    (4, 1, 300, 16, 128),    # ragged tail, mid batch
-    (4, 4, 257, 7, 128),     # prime-ish sizes
-    (32, 1, 512, 8, 256),    # large batch (paper's regime), aligned ctx
-    (32, 4, 96, 24, 128),    # large batch, block_m > m_c
-]
 G, HD = 2, 32
 
 
-def make(b, p, m_c, c_d, seed=0, full_mask=False):
-    rng = np.random.RandomState(seed)
-    q = jnp.asarray(rng.randn(b, G, p, 1, HD), jnp.float32)
-    kc = jnp.asarray(rng.randn(m_c, G, HD), jnp.float32)
-    vc = jnp.asarray(rng.randn(m_c, G, HD), jnp.float32)
-    kd = jnp.asarray(rng.randn(b, c_d, G, HD), jnp.float32)
-    vd = jnp.asarray(rng.randn(b, c_d, G, HD), jnp.float32)
-    if full_mask:
-        mask = jnp.ones((b, c_d), bool)
-    else:
-        # ragged per-sample decode lengths: partially-masked C_d slots
-        lens = rng.randint(0, c_d + 1, size=(b,))
-        lens[0] = max(1, lens[0])
-        mask = jnp.arange(c_d)[None, :] < jnp.asarray(lens)[:, None]
-    kq, ks = quantize_ctx(kc, fold_scale=HD**-0.5)  # (m_c, G)
-    vq, vs = quantize_ctx(vc)
-    return q, kc, vc, kq, vq, ks, vs, kd, vd, mask
-
-
-def _kernel(q, kq, vq, ks, vs, kd, vd, mask, block_m, ctx_layout="mgk"):
-    if ctx_layout == "gmk":
-        kq, vq = kq.transpose(1, 0, 2), vq.transpose(1, 0, 2)
-        ks, vs = ks.T, vs.T
-    return bifurcated_decode_attention_q8(
-        q, kq, vq, ks, vs, kd, vd, mask,
-        block_m=block_m, interpret=True, ctx_layout=ctx_layout)
-
-
-@pytest.mark.parametrize("shape", SWEEP)
-def test_fused_q8_vs_einsum_reference(shape):
-    """Same scale-folded math, different execution order: tight agreement."""
-    b, p, m_c, c_d, block_m = shape
-    q, _, _, kq, vq, ks, vs, kd, vd, mask = make(b, p, m_c, c_d,
-                                                 seed=sum(shape))
-    out = _kernel(q, kq, vq, ks, vs, kd, vd, mask, block_m)
-    ref = bifurcated_attention_q8(q, kq, vq, ks, vs, kd, vd, decode_mask=mask)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               rtol=1e-5, atol=1e-5)
-
-
-@pytest.mark.parametrize("shape", SWEEP)
-def test_fused_q8_vs_fp32_oracle_quant_bound(shape):
-    """Quantization-error bound vs the UNquantized fp32 monolithic softmax:
-    <= 2e-2 relative for per-(token, head) int8."""
-    b, p, m_c, c_d, block_m = shape
-    q, kc, vc, kq, vq, ks, vs, kd, vd, mask = make(b, p, m_c, c_d,
-                                                   seed=sum(shape) + 1)
-    out = _kernel(q, kq, vq, ks, vs, kd, vd, mask, block_m)
-    oracle = bifurcated_attention(q, kc, vc, kd, vd, decode_mask=mask)
-    scale = float(jnp.max(jnp.abs(oracle)))
-    err = float(jnp.max(jnp.abs(out - oracle)))
-    assert err <= 2e-2 * max(scale, 1.0), (err, scale)
-
-
-def test_fused_q8_gmk_layout_zero_copy_semantics():
-    b, p, m_c, c_d = 4, 2, 100, 12
-    q, _, _, kq, vq, ks, vs, kd, vd, mask = make(b, p, m_c, c_d, seed=3)
-    out_mgk = _kernel(q, kq, vq, ks, vs, kd, vd, mask, 128, "mgk")
-    out_gmk = _kernel(q, kq, vq, ks, vs, kd, vd, mask, 128, "gmk")
-    np.testing.assert_allclose(np.asarray(out_mgk), np.asarray(out_gmk),
-                               rtol=1e-6, atol=1e-6)
+def _quantized(case):
+    kq, ks = quantize_ctx(case["kc"], fold_scale=HD**-0.5)  # (m_c, G)
+    vq, vs = quantize_ctx(case["vc"])
+    return kq, vq, ks, vs
 
 
 @pytest.mark.parametrize("n", [2, 4])
 def test_fused_q8_n_gt_1_speculative_rows(n):
     """Draft-token rows fold into the kernel row dimension like the bf16
     kernel; checked against the einsum q8 reference."""
-    b, p, m_c, c_d = 3, 2, 100, 12
-    rng = np.random.RandomState(n)
-    q = jnp.asarray(rng.randn(b, G, p, n, HD), jnp.float32)
-    kc = jnp.asarray(rng.randn(m_c, G, HD), jnp.float32)
-    vc = jnp.asarray(rng.randn(m_c, G, HD), jnp.float32)
-    kd = jnp.asarray(rng.randn(b, c_d, G, HD), jnp.float32)
-    vd = jnp.asarray(rng.randn(b, c_d, G, HD), jnp.float32)
-    mask = jnp.broadcast_to(jnp.arange(c_d)[None] < c_d - 3, (b, c_d))
-    kq, ks = quantize_ctx(kc, fold_scale=HD**-0.5)
-    vq, vs = quantize_ctx(vc)
-    out = bifurcated_decode_attention_q8(q, kq, vq, ks, vs, kd, vd, mask,
-                                         interpret=True, ctx_layout="mgk")
-    ref = bifurcated_attention_q8(q, kq, vq, ks, vs, kd, vd, decode_mask=mask)
-    assert out.shape == (b, G, p, n, HD)
+    case = make_decode_case(3, 2, 100, 12, g=G, hd=HD, n=n, seed=n)
+    kq, vq, ks, vs = _quantized(case)
+    out = bifurcated_decode_attention_q8(
+        case["q"], kq, vq, ks, vs, case["kd"], case["vd"], case["mask"],
+        interpret=True, ctx_layout="mgk")
+    ref = bifurcated_attention_q8(case["q"], kq, vq, ks, vs,
+                                  case["kd"], case["vd"],
+                                  decode_mask=case["mask"])
+    assert out.shape == case["q"].shape
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
 
 
 # ---- structural guarantee: int8 stays int8 all the way into the kernel ----
 
-def _collect_pallas_calls(jaxpr):
-    calls = []
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            calls.append(eqn)
-        for v in eqn.params.values():
-            if hasattr(v, "jaxpr"):
-                calls += _collect_pallas_calls(v.jaxpr)
-            elif hasattr(v, "eqns"):
-                calls += _collect_pallas_calls(v)
-    return calls
+def _bf16_case():
+    case = make_decode_case(2, 2, 64, 8, g=G, hd=HD, seed=1, full_mask=True)
+    kq, vq, ks, vs = _quantized(case)
+    q = case["q"].astype(jnp.bfloat16)
+    kd = case["kd"].astype(jnp.bfloat16)
+    vd = case["vd"].astype(jnp.bfloat16)
+    return q, kq, vq, ks, vs, kd, vd, case["mask"]
 
 
 def test_fused_q8_single_pallas_call_no_dequant_in_hbm():
-    """ONE pallas_call; its context operands are int8 (+ f32 scale VECTORS,
-    no hd axis) — i.e. no dequantized (m_c, hd)-shaped float K_c/V_c buffer
-    exists anywhere in the jaxpr — and the only output is the normalized
-    attention result in the query dtype (no fp32 partials)."""
-    b, p, m_c, c_d = 2, 2, 64, 8
-    q, _, _, kq, vq, ks, vs, kd, vd, mask = make(b, p, m_c, c_d, seed=1,
-                                                 full_mask=True)
-    q = q.astype(jnp.bfloat16)
-    kd, vd = kd.astype(jnp.bfloat16), vd.astype(jnp.bfloat16)
+    q, kq, vq, ks, vs, kd, vd, mask = _bf16_case()
     jaxpr = jax.make_jaxpr(
         lambda *a: bifurcated_decode_attention_q8(*a, interpret=True,
                                                   ctx_layout="mgk")
-    )(q, kq, vq, ks, vs, kd, vd, mask)
-    calls = _collect_pallas_calls(jaxpr.jaxpr)
-    assert len(calls) == 1, f"expected ONE pallas_call, got {len(calls)}"
-    call = calls[0]
-    in_avals = [v.aval for v in call.invars]
-    assert sum(a.dtype == jnp.int8 for a in in_avals) == 2, in_avals  # K_q, V_q
-    # the only FLOAT tensors with a head_dim axis entering the kernel are
-    # q and the bf16 decode arm — the context values enter exclusively as
-    # int8 (+ rank-2 scale vectors), so no dequantized K_c/V_c buffer is
-    # ever an HBM operand
-    float_hd = [a for a in in_avals
-                if a.dtype != jnp.int8 and a.ndim == 3
-                and a.shape[-1] == q.shape[-1]]
-    assert len(float_hd) == 3, float_hd            # q, k_dec, v_dec
-    outs = call.outvars
-    assert len(outs) == 1, f"q8 kernel must write only the output: {outs}"
-    assert outs[0].aval.dtype == jnp.bfloat16, outs[0].aval  # no fp32 spills
+    )(q, kq, vq, ks, vs, kd, vd, mask).jaxpr
+    assert_no_hbm_spill(jaxpr, out_dtype=jnp.bfloat16, hd=HD, q8=True)
+
+
+def test_grouped_q8_single_pallas_call_no_dequant_in_hbm():
+    """The multi-prefix forest q8 kernel keeps the same guarantee: int8
+    segment values + rank-3 scale tensors in, one bf16 output out."""
+    q, kq, vq, ks, vs, kd, vd, mask = _bf16_case()
+    b = q.shape[0]
+    gids = jnp.zeros((b,), jnp.int32)
+    clens = jnp.asarray([kq.shape[0]], jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda *a: grouped_bifurcated_decode_attention_q8(
+            *a, interpret=True, ctx_layout="mgk")
+    )(q, kq[None], vq[None], ks[None], vs[None], gids, clens, kd, vd,
+      mask).jaxpr
+    assert_no_hbm_spill(jaxpr, out_dtype=jnp.bfloat16, hd=HD, q8=True)

@@ -10,6 +10,8 @@ from repro.kernels.bifurcated_decode import context_flash_partials
 from repro.kernels.ops import bifurcated_decode_attention
 from repro.kernels.ref import bifurcated_decode_ref, context_partial_ref
 
+pytestmark = pytest.mark.slow  # CI runs the slow tier in its own step
+
 # (b, g, p, hd, m_c, c_d, block_m)
 SWEEP = [
     (2, 2, 2, 16, 64, 8, 32),

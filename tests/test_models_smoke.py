@@ -9,6 +9,8 @@ from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.core.kv_cache import BifurcatedCache, DecodeCache
 from repro.models import get_model
 
+pytestmark = pytest.mark.slow  # CI runs the slow tier in its own step
+
 KEY = jax.random.PRNGKey(0)
 
 

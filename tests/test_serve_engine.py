@@ -10,6 +10,8 @@ from repro.core import BifurcatedCache
 from repro.models import get_model
 from repro.runtime.serve import ServeEngine, rank_by_mean_logprob, sample_tokens
 
+pytestmark = pytest.mark.slow  # CI runs the slow tier in its own step
+
 CFG = reduced_config(get_config("internlm2-1.8b"))
 MODEL = get_model(CFG)
 PARAMS = MODEL.init(jax.random.PRNGKey(0))
@@ -82,6 +84,51 @@ def test_rerank_dedups_and_orders():
     assert order[0] == 2            # best score first
     assert len(order) == 3          # duplicate row dropped
     assert set(order) == {2, 0, 3} or set(order) == {2, 1, 3}
+
+
+def test_rerank_ties_break_by_sample_index():
+    """Equal-score samples rank in submission order (stable sort), and only
+    the best-ranked occurrence of a duplicate row survives."""
+    class R:
+        tokens = jnp.asarray([[9, 9], [1, 2], [1, 2], [3, 4]])
+        mean_logprob = jnp.asarray([-1.0, -1.0, -1.0, -1.0])
+
+    order = rank_by_mean_logprob(R(), top_k=4)
+    assert order == [0, 1, 3]        # all tied: index order, dup row 2 gone
+
+
+def test_rerank_empty_steps():
+    """Zero generated tokens (n_steps=0 shapes): every row is the same
+    empty sequence — one representative survives, ranked by score."""
+    class R:
+        tokens = jnp.zeros((3, 0), jnp.int32)
+        mean_logprob = jnp.asarray([-2.0, -0.5, -1.0])
+
+    order = rank_by_mean_logprob(R(), top_k=3)
+    assert order == [1]
+
+
+def test_should_bifurcate_threshold_boundaries():
+    """The policy switch is exact at its boundaries: savings straddling
+    min_io_saving_bytes and batches straddling min_batch flip the decision
+    (paper FAQ #4 made precise)."""
+    from repro.core.policy import BifurcationPolicy
+
+    pol = BifurcationPolicy(enabled=True, min_batch=2,
+                            min_io_saving_bytes=1 << 20)
+    kw = dict(n_groups=8, head_dim=128, bytes_per_el=2)
+    # saving = 2*g*k*m_c*(b-1)*bytes: solve m_c for EXACTLY 1 MiB at b=2
+    m_exact = (1 << 20) // (2 * 8 * 128 * 1 * 2)
+    assert pol.io_saving_bytes(batch=2, m_c=m_exact, **kw) == 1 << 20
+    assert pol.should_bifurcate(batch=2, m_c=m_exact, **kw)         # ==
+    assert not pol.should_bifurcate(batch=2, m_c=m_exact - 1, **kw)  # 1 below
+    assert pol.should_bifurcate(batch=2, m_c=m_exact + 1, **kw)      # 1 above
+    # batch boundary: min_batch is inclusive, below it never bifurcates
+    assert not pol.should_bifurcate(batch=1, m_c=1 << 20, **kw)
+    assert pol.should_bifurcate(batch=2, m_c=1 << 20, **kw)
+    # disabled policy rejects even the paper's sweet spot
+    off = BifurcationPolicy(enabled=False, min_io_saving_bytes=0)
+    assert not off.should_bifurcate(batch=32, m_c=1 << 20, **kw)
 
 
 def test_sample_tokens_greedy_and_topp():

@@ -12,6 +12,8 @@ from repro.data import SyntheticLMDataset
 from repro.models import get_model
 from repro.runtime.train_loop import run_training
 
+pytestmark = pytest.mark.slow  # CI runs the slow tier in its own step
+
 CFG = reduced_config(get_config("internlm2-1.8b"))
 TCFG = TrainConfig(global_batch=8, seq_len=32, learning_rate=2e-3,
                    warmup_steps=5, total_steps=60, checkpoint_every=20,
