@@ -9,11 +9,13 @@ Pallas kernel vs two-pass (partials spill + host merge) vs paper 4-einsum —
 over a (b, m_c) grid and writes ``BENCH_fused_decode.json`` (wall-clock per
 call + modelled per-layer HBM bytes per path), plus the QUANTIZED-context
 sweep {fused, fused_q8, two_pass, einsum, einsum_q8} ->
-``BENCH_quant_decode.json`` (int8 context arm vs bf16; run standalone via
-``python benchmarks/latency_decode.py``, optionally ``BENCH_QUANT_FAST=1``
-for the CI subset). Kernels run in interpret mode here, so the wall-clock
-columns are indicative only; the IO-model columns are the
-hardware-relevant object.
+``BENCH_quant_decode.json`` (int8 context arm vs bf16), the multi-prefix
+forest sweep -> ``BENCH_multiprefix.json``, and the hierarchical cascade
+sweep L in {1, 2, 3} -> ``BENCH_tree.json``. Run standalone via
+``python benchmarks/latency_decode.py [--grid quant|multiprefix|tree|all]``
+(see ``--help``; ``BENCH_*_FAST=1`` env vars select the CI subsets).
+Kernels run in interpret mode here, so the wall-clock columns are
+indicative only; the IO-model columns are the hardware-relevant object.
 """
 from __future__ import annotations
 
@@ -33,6 +35,7 @@ from repro.core.io_model import (
     decode_impl_io_bytes,
     forest_decode_io_bytes,
     quantized_ctx_bytes,
+    tree_decode_io_bytes,
 )
 from repro.core.quantized import bifurcated_attention_q8, quantize_ctx
 from repro.kernels.ops import (
@@ -40,6 +43,8 @@ from repro.kernels.ops import (
     bifurcated_decode_attention_q8,
     grouped_bifurcated_decode_attention,
     grouped_bifurcated_decode_attention_q8,
+    tree_bifurcated_decode_attention,
+    tree_bifurcated_decode_attention_q8,
 )
 
 PROXY = ModelConfig(
@@ -52,6 +57,7 @@ PROXY = ModelConfig(
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused_decode.json"
 BENCH_QUANT_JSON = BENCH_JSON.parent / "BENCH_quant_decode.json"
 BENCH_MULTIPREFIX_JSON = BENCH_JSON.parent / "BENCH_multiprefix.json"
+BENCH_TREE_JSON = BENCH_JSON.parent / "BENCH_tree.json"
 
 # fused vs two-pass vs einsum sweep (>= 3x3 as the perf trajectory seed)
 GRID_B = (4, 16, 32)
@@ -300,6 +306,124 @@ def _multiprefix_grid(report):
     return rows_out
 
 
+def _tree_traffic(L, b, m_c):
+    """One benchmark traffic mix per bifurcation level count L:
+      L=1 — the paper's workload: ONE shared prefix, all b slots on it;
+      L=2 — flat forest: 4 independent prefixes, slots round-robin;
+      L=3 — trie: one shared ROOT + 4 children, each path root->child.
+    ``m_c`` is the per-NODE token count. Returns (node count, node_lens,
+    per-slot path tuples, (depth, b) path table)."""
+    if L == 1:
+        n_nodes, paths = 1, [(0,) for _ in range(b)]
+    elif L == 2:
+        n_nodes = 4
+        paths = [(i % 4,) for i in range(b)]
+    elif L == 3:
+        n_nodes = 5           # node 0 = root, 1..4 = children
+        paths = [(0, 1 + i % 4) for i in range(b)]
+    else:
+        raise ValueError(L)
+    depth = max(len(pth) for pth in paths)
+    table = np.full((depth, b), -1, np.int64)
+    for s, pth in enumerate(paths):
+        table[:len(pth), s] = pth
+    return n_nodes, [m_c] * n_nodes, paths, jnp.asarray(table, jnp.int32)
+
+
+def _tree_grid(report):
+    """Hierarchical (cascade) decoding sweep: L ∈ {1, 2, 3} bifurcation
+    levels x (b, m_c), the tree kernel (bf16 + q8) against the FLAT-forest
+    replay of the same traffic, wall-clock (interpret mode, indicative) +
+    the per-node IO model (core.io_model.tree_decode_io_bytes) ->
+    BENCH_tree.json.
+
+    The acceptance metric is the L=3 row: a shared root + 4 children reads
+    the root ONCE per step under the trie but once PER DISTINCT PATH under
+    the flat forest — modeled HBM bytes/step must be strictly lower
+    (asserted). At L=2 the trie degenerates to the flat forest exactly and
+    at L=1 to the single shared prefix, so those rows double as the
+    reduction sanity check (bit-identity itself is the differential
+    harness's job).
+
+    ``BENCH_TREE_FAST=1`` restricts the grid to one (b, m_c) cell — the
+    CI artifact subset."""
+    rng = np.random.RandomState(4)
+    g, p, hd = PROXY.n_kv_heads, 1, PROXY.kq_dim
+    c_d = 32
+    fast = os.environ.get("BENCH_TREE_FAST", "") == "1"
+    grid_b = (16,) if fast else (8, 16)
+    grid_mc = (512,) if fast else (512, 2048)
+    rows_out = []
+    for m_c in grid_mc:
+        for b in grid_b:
+            for L in (1, 2, 3):
+                n_nodes, node_lens, slot_paths, table = \
+                    _tree_traffic(L, b, m_c)
+                kc = jnp.asarray(rng.randn(n_nodes, g, m_c, hd), jnp.bfloat16)
+                vc = jnp.asarray(rng.randn(n_nodes, g, m_c, hd), jnp.bfloat16)
+                kq, ks = quantize_ctx(kc, fold_scale=hd**-0.5)
+                vq, vs = quantize_ctx(vc)
+                q = jnp.asarray(rng.randn(b, g, p, 1, hd), jnp.bfloat16)
+                kd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+                vd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+                mask = jnp.ones((b, c_d), bool)
+                nlens = jnp.asarray(node_lens, jnp.int32)
+
+                tree = lambda: tree_bifurcated_decode_attention(
+                    q, kc, vc, table, nlens, kd, vd, mask,
+                    ctx_layout="gmk", block_m=1024, interpret=True)
+                tree_q8 = lambda: tree_bifurcated_decode_attention_q8(
+                    q, kq, vq, ks, vs, table, nlens, kd, vd, mask,
+                    ctx_layout="gmk", block_m=1024, interpret=True)
+                row = {"L": L, "n_nodes": n_nodes, "b": b, "m_c": m_c,
+                       "c_d": c_d, "g": g, "p": p, "hd": hd}
+                for name, fn in (("tree", tree), ("tree_q8", tree_q8)):
+                    row[f"{name}_us"] = _time(fn, iters=3) * 1e6
+                    io = tree_decode_io_bytes(
+                        paths=slot_paths, node_lens=node_lens, c_d=c_d,
+                        g=g, hd=hd, p=p, n=1, impl=name)
+                    row[f"{name}_io_bytes"] = io["total"]
+                    row[f"{name}_forest_io_bytes"] = io["forest_total"]
+                    row[f"{name}_io_saving_vs_forest"] = \
+                        io["io_saving_vs_forest"]
+                    row[f"{name}_io_saving_vs_standard"] = \
+                        io["io_saving_vs_standard"]
+                    report(f"latency_decode/tree_L{L}_ctx{m_c}_bs{b}_"
+                           f"{name}_us", row[f"{name}_us"])
+                    report(f"latency_decode/tree_L{L}_ctx{m_c}_bs{b}_"
+                           f"{name}_io_saving_vs_forest",
+                           row[f"{name}_io_saving_vs_forest"])
+                rows_out.append(row)
+    # acceptance: the L=3 trie must beat the flat-forest replay of the
+    # same traffic in modeled HBM bytes/step at EVERY grid point (the
+    # shared root is read once instead of once per distinct path)
+    for r in rows_out:
+        if r["L"] == 3:
+            assert r["tree_io_bytes"] < r["tree_forest_io_bytes"], r
+    # L<=2 tries ARE flat forests: the accounting must coincide exactly
+    for r in rows_out:
+        if r["L"] <= 2:
+            assert r["tree_io_bytes"] == r["tree_forest_io_bytes"], r
+    payload = {
+        "meta": {
+            "device": jax.devices()[0].platform,
+            "kernel_interpret_mode": True,
+            "fast_subset": fast,
+            "note": "interpret-mode wall-clock is indicative only; "
+                    "*_io_bytes is the modelled per-layer HBM traffic "
+                    "(core.io_model.tree_decode_io_bytes). m_c is the "
+                    "PER-NODE token count; L=1 is the paper's single "
+                    "shared prefix, L=2 a flat 4-prefix forest, L=3 a "
+                    "shared root + 4 children; *_forest_io_bytes replays "
+                    "the same traffic through flat per-path segments.",
+        },
+        "grid": rows_out,
+    }
+    BENCH_TREE_JSON.write_text(json.dumps(payload, indent=2))
+    report("latency_decode/tree_bench_json_rows", len(rows_out))
+    return rows_out
+
+
 def run(report):
     rng = np.random.RandomState(0)
     g, p, hd = PROXY.n_kv_heads, 1, PROXY.kq_dim
@@ -335,10 +459,48 @@ def run(report):
     _impl_grid(report)
     _quant_grid(report)
     _multiprefix_grid(report)
+    _tree_grid(report)
     return results
 
 
+def main(argv=None):
+    """Standalone CLI: run the artifact-emitting grids without the full
+    SDPA-vs-bifurcated sweep (which `benchmarks.run` owns)."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="latency_decode",
+        description=(
+            "Bifurcated-decode implementation benchmarks (CPU, Pallas "
+            "interpret mode): wall-clock per call plus the modelled "
+            "per-layer HBM bytes/step from core.io_model. Grids: 'quant' "
+            "{fused,fused_q8,two_pass,einsum,einsum_q8} -> "
+            "BENCH_quant_decode.json; 'multiprefix' flat-forest G in "
+            "{1,2,8} -> BENCH_multiprefix.json; 'tree' cascade L in "
+            "{1,2,3} (single prefix / flat forest / shared root + "
+            "children) -> BENCH_tree.json. Wall-clock columns are "
+            "indicative only off-TPU; the *_io_bytes columns are the "
+            "hardware-relevant object (paper Table 1 / Eq. 5-6 analog)."),
+        epilog=(
+            "Env subsets for CI: BENCH_QUANT_FAST=1, "
+            "BENCH_MULTIPREFIX_FAST=1, BENCH_TREE_FAST=1 restrict each "
+            "grid to its acceptance cells. The full paper-shaped sweep "
+            "(SDPA vs bifurcated + BENCH_fused_decode.json) runs via "
+            "`python -m benchmarks.run --only latency_decode`."))
+    ap.add_argument(
+        "--grid", choices=["quant", "multiprefix", "tree", "all"],
+        default="all",
+        help="which sweep(s) to run / which BENCH_*.json to (re)emit")
+    args = ap.parse_args(argv)
+
+    rep = lambda name, value: print(f"{name},{value}")
+    if args.grid in ("quant", "all"):
+        _quant_grid(rep)
+    if args.grid in ("multiprefix", "all"):
+        _multiprefix_grid(rep)
+    if args.grid in ("tree", "all"):
+        _tree_grid(rep)
+
+
 if __name__ == "__main__":
-    # standalone: emit BENCH_quant_decode.json + BENCH_multiprefix.json only
-    _quant_grid(lambda name, value: print(f"{name},{value}"))
-    _multiprefix_grid(lambda name, value: print(f"{name},{value}"))
+    main()

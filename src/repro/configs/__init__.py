@@ -6,10 +6,12 @@ from repro.configs.base import (
     ServeConfig,
     SSMConfig,
     TrainConfig,
+    TreeConfig,
 )
 from repro.configs.registry import ARCH_IDS, get_config, reduced_config
 
 __all__ = [
     "ModelConfig", "MoEConfig", "SSMConfig", "MeshRules", "TrainConfig",
-    "ServeConfig", "ForestConfig", "ARCH_IDS", "get_config", "reduced_config",
+    "ServeConfig", "ForestConfig", "TreeConfig", "ARCH_IDS", "get_config",
+    "reduced_config",
 ]

@@ -196,6 +196,15 @@ class TrainConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
+    """Single-prefix batch-sampling serve configuration (the paper's
+    workload, ``runtime.serve.ServeEngine``): ONE shared context of up to
+    ``context_len`` tokens, ``batch`` samples decoding in lockstep, each
+    with a ``decode_capacity``-token per-sample arm. ``bifurcated``
+    enables the split cache (policy may still fall back for tiny
+    workloads); ``use_kernel`` lowers decode layer-steps to the fused
+    Pallas kernel; ``cache_dtype`` selects the context arm's storage
+    ("bfloat16" | "int8" with per-(token, head) f32 scales)."""
+
     batch: int = 16              # samples per shared context
     context_len: int = 8192
     decode_capacity: int = 256
@@ -207,6 +216,40 @@ class ServeConfig:
     # context-arm cache dtype: "bfloat16" | "int8" (per-(token, head)
     # symmetric scales, core/quantized.py — ~2x context KV traffic/storage
     # reduction; the per-sample decode arm stays bf16 either way)
+    cache_dtype: str = "bfloat16"
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeConfig:
+    """Hierarchical prefix-trie (cascade) serve configuration.
+
+    The tree engine serves requests whose prompts decompose into a PATH of
+    shared segments (system prompt -> few-shot template -> per-request
+    prompt). Admission matches the longest existing prefix path in the
+    trie, prefills only ONCE per request, writes each NEW node's KV slice
+    into a free node segment (capacity ``node_capacity`` tokens each), and
+    fans samples out over free decode slots. The decode dispatch compiles
+    once for the (slots, n_nodes, depth, node_capacity, decode_capacity)
+    envelope — every admit/retire is a value update, never a shape change.
+
+    ``depth`` is the maximum trie depth (static path-table height); a
+    request may use fewer levels (unused levels are -1 in the path table).
+    At depth == 1 the engine degenerates to flat-forest serving.
+    """
+
+    n_nodes: int = 8             # trie-node segments (N)
+    depth: int = 3               # static path-table height (max trie depth)
+    slots: int = 16              # decode slots (flat batch b)
+    node_capacity: int = 256     # per-node context capacity (tokens)
+    decode_capacity: int = 64    # per-slot decode capacity (tokens)
+    eos_token: int = -1          # retire a slot when it samples this; -1: off
+    pad_token: int = 0           # emitted by retired slots
+    temperature: float = 0.0     # greedy by default (continuous serving)
+    top_p: float = 1.0
+    use_kernel: bool = False     # tree fused Pallas kernel vs einsum ref
+    # node-segment dtype: "bfloat16" | "int8" (nodes quantize once at
+    # admission — write-once read-many, per trie node)
     cache_dtype: str = "bfloat16"
     seed: int = 0
 

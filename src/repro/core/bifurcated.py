@@ -213,3 +213,74 @@ def forest_bifurcated_attention(
     part_c = _partial_softmax(logits_c, vc, batched=True)
     part_d = _partial_softmax(logits_d, v_decode, batched=True)
     return merge_partials([part_c, part_d]).astype(q.dtype)
+
+
+def tree_bifurcated_attention(
+    q: jnp.ndarray,          # (b, g, p, n, k) — flat slot batch
+    k_context: jnp.ndarray,  # (N, m_c, g, k) "mgk" | (N, g, m_c, k) "gmk"
+    v_context: jnp.ndarray,
+    paths: jnp.ndarray,      # (depth, b) i32 — slot -> trie-node id per
+                             #   level, -1 = level unused by that slot
+    node_lens: jnp.ndarray,  # (N,) i32 — live (ragged) node lengths
+    k_decode: jnp.ndarray,   # (b, C_d, g, k)
+    v_decode: jnp.ndarray,
+    *,
+    decode_mask: Optional[jnp.ndarray] = None,  # (b, C_d) bool
+    scale: Optional[float] = None,
+    ctx_layout: str = "gmk",
+) -> jnp.ndarray:
+    """Einsum reference for hierarchical (prefix-trie / cascade) decoding —
+    the tree Pallas kernel's semantics: slot ``b`` attends over the
+    concatenation of every trie node on its path,
+
+        [node[paths[0][b]] ⊕ node[paths[1][b]] ⊕ ... ⊕ decode[b]],
+
+    with -1 path entries contributing nothing. One partial softmax per trie
+    LEVEL (a per-slot gather of that level's node), merged with the decode
+    arm by the standard online-softmax combine — numerically equivalent to
+    one softmax over the concatenated keys. The per-level gathers
+    materialize (b, m_c, ...) tensors: this is a CORRECTNESS reference; the
+    IO claim lives in the kernel, which reads each node once per step.
+
+    SET semantics, matching the kernel: a node id repeated at several
+    levels of one path contributes ONCE (levels duplicating an earlier
+    level are masked out here; the kernel's OR-membership dedupes by
+    construction). Trie paths never repeat a node, so this only matters
+    for hand-built path tables.
+
+    At depth == 1 this is exactly ``forest_bifurcated_attention`` with
+    ``paths[0]`` as the group assignment.
+    """
+    head_dim = q.shape[-1]
+    scale = head_dim**-0.5 if scale is None else scale
+    depth = paths.shape[0]
+    n_nodes = k_context.shape[0]
+    m_c = k_context.shape[2 if ctx_layout == "gmk" else 1]
+
+    parts = []
+    for lvl in range(depth):
+        ids = paths[lvl]                              # (b,) may be -1
+        for prev in range(lvl):   # set semantics: drop duplicated levels
+            ids = jnp.where(ids == paths[prev], -1, ids)
+        safe = jnp.clip(ids, 0, n_nodes - 1)
+        if ctx_layout == "gmk":
+            kc = jnp.take(k_context, safe, axis=0)    # (b, g, m_c, k)
+            vc = jnp.take(v_context, safe, axis=0).transpose(0, 2, 1, 3)
+            logits = jnp.einsum("bgpnk,bgmk->bgpnm", q, kc
+                                ).astype(jnp.float32) * scale
+        else:
+            kc = jnp.take(k_context, safe, axis=0)    # (b, m_c, g, k)
+            vc = jnp.take(v_context, safe, axis=0)
+            logits = jnp.einsum("bgpnk,bmgk->bgpnm", q, kc
+                                ).astype(jnp.float32) * scale
+        valid = (ids >= 0)[:, None] & (
+            jnp.arange(m_c)[None, :] < jnp.take(node_lens, safe)[:, None])
+        logits = logits + mask_to_bias(valid)[:, None, None, None, :]
+        parts.append(_partial_softmax(logits, vc, batched=True))
+
+    logits_d = jnp.einsum("bgpnk,bmgk->bgpnm", q, k_decode
+                          ).astype(jnp.float32) * scale
+    if decode_mask is not None:
+        logits_d = logits_d + mask_to_bias(decode_mask)[:, None, None, None, :]
+    parts.append(_partial_softmax(logits_d, v_decode, batched=True))
+    return merge_partials(parts).astype(q.dtype)

@@ -167,6 +167,88 @@ def forest_decode_io_bytes(*, group_sizes, ctx_lens, c_d, g, hd, p=1, n=1,
     }
 
 
+def tree_decode_io_bytes(*, paths, node_lens, c_d, g, hd, p=1, n=1,
+                         impl="tree", bytes_per_el=2,
+                         node_capacity: Optional[int] = None,
+                         n_nodes: Optional[int] = None) -> dict:
+    """Per-NODE byte accounting for one hierarchical (prefix-trie) decode
+    step, per layer — the cascade extension of ``forest_decode_io_bytes``.
+
+    ``paths``: one entry per decode slot, each a sequence of trie-node ids
+    (root first; variable length <= the static depth). ``node_lens[i]`` is
+    node ``i``'s live token count.
+
+      tree:     every node REFERENCED by >= 1 slot is read ONCE (bf16),
+                per-slot decode arms as usual — ancestors shared by many
+                paths are read once, not once per distinct full prefix.
+      tree_q8:  the same with int8 node segments + f32 per-(token, head)
+                scales (context arm at ~half the bytes).
+
+    By default the context term counts the LIVE ``node_lens`` tokens of
+    nodes referenced by >= 1 slot (the algorithmic traffic, which a
+    length-aware kernel with block-level early exit would achieve). The
+    CURRENT kernel's grid is (g, N, nb): it streams EVERY node segment's
+    padded capacity, referenced or not — to account that envelope pass
+    ``node_capacity=<segment capacity>`` AND ``n_nodes=<total segments in
+    the cache>`` (defaults to the referenced set when omitted). The two
+    accountings coincide when every node is full and referenced (the
+    benchmark grid's case).
+
+    Returns {"per_node": {node_id: bytes}, "total": int,
+    "forest_total": int, "standard_total": int, "io_saving_vs_forest":
+    float, "io_saving_vs_standard": float}:
+
+      forest_total   — the FLAT-forest replay of the same traffic: one
+                       grouped segment per DISTINCT full path, holding the
+                       path's concatenated prefix (what PR 3's engine
+                       would store), each read once. The trie wins exactly
+                       the bytes of ancestors shared across distinct paths.
+      standard_total — the non-bifurcated baseline: every slot re-reads
+                       its full concatenated prefix.
+    """
+    paths = [tuple(pth) for pth in paths]
+    if impl not in ("tree", "tree_q8"):
+        raise ValueError(impl)
+    used = sorted({nid for pth in paths for nid in pth})
+    if node_capacity is not None and n_nodes is not None:
+        used = list(range(n_nodes))   # the kernel DMAs every segment
+    per_node = {}
+    for nid in used:
+        m_read = node_capacity if node_capacity is not None \
+            else int(node_lens[nid])
+        if impl == "tree_q8":
+            per_node[nid] = quantized_ctx_bytes(m_c=m_read, g=g, hd=hd)
+        else:
+            per_node[nid] = 2 * g * m_read * hd * bytes_per_el
+    b = len(paths)
+    rows = b * p * n
+    dec = 2 * g * b * c_d * hd * bytes_per_el
+    q_io = rows * g * hd * bytes_per_el
+    out_io = rows * g * hd * bytes_per_el
+    total = sum(per_node.values()) + dec + q_io + out_io
+
+    # flat-forest replay: one segment per DISTINCT full path (live length)
+    path_len = lambda pth: sum(int(node_lens[nid]) for nid in pth)
+    forest_ctx = sum(path_len(pth) for pth in sorted(set(paths)))
+    if impl == "tree_q8":
+        forest_ctx_bytes = quantized_ctx_bytes(m_c=forest_ctx, g=g, hd=hd)
+    else:
+        forest_ctx_bytes = 2 * g * forest_ctx * hd * bytes_per_el
+    forest_total = forest_ctx_bytes + dec + q_io + out_io
+
+    # non-bifurcated baseline: every slot replays its full prefix (bf16)
+    standard_ctx = sum(path_len(pth) + c_d for pth in paths)
+    standard_total = 2 * g * standard_ctx * hd * bytes_per_el + q_io + out_io
+    return {
+        "per_node": per_node,
+        "total": total,
+        "forest_total": forest_total,
+        "standard_total": standard_total,
+        "io_saving_vs_forest": forest_total / max(total, 1),
+        "io_saving_vs_standard": standard_total / max(total, 1),
+    }
+
+
 def kv_speedup(*, b, m_c, m_d) -> float:
     """Pure KV-IO speedup bound: b(m_c+m_d) / (m_c + b m_d)."""
     return b * (m_c + m_d) / (m_c + b * m_d)

@@ -1,6 +1,6 @@
 """KV-cache containers for incremental decoding.
 
-Two cache families, both stacked over layers (leading ``L`` axis) so that the
+All cache families are stacked over layers (leading ``L`` axis) so that the
 model can ``lax.scan`` over layers:
 
   * ``DecodeCache``      — the standard batched cache (b present on every slot).
@@ -12,7 +12,14 @@ model can ``lax.scan`` over layers:
     bifurcated GEMM (and its b-fold HBM saving) possible; it also cuts cache
     *storage* from b·(m_c+C_d) to m_c + b·C_d slots (paper §5.2.2 notes the
     memory-capacity side benefit).
+  * ``GroupedBifurcatedCache`` — the multi-prefix FOREST cache: G
+    fixed-capacity context segments + a flat slot table (continuous
+    batching; all admission state is data, never shape).
+  * ``PrefixTreeCache``  — the hierarchical prefix-TRIE cache: N node
+    segments + a static-depth slot -> node path table (cascade decoding);
+    the forest cache is its depth == 1 special case.
 
+(int8-context twins of the bifurcated families live in core/quantized.py.)
 All updates are functional (return a new cache).
 """
 from __future__ import annotations
@@ -39,6 +46,8 @@ class DecodeCache:
 
     @staticmethod
     def init(n_layers, batch, capacity, n_groups, head_dim, dtype=jnp.bfloat16):
+        """Concrete all-zeros cache: k/v (L, b, C, g, hd) in ``dtype``
+        (default bf16), length a scalar i32."""
         shape = (n_layers, batch, capacity, n_groups, head_dim)
         return DecodeCache(
             k=jnp.zeros(shape, dtype),
@@ -48,6 +57,8 @@ class DecodeCache:
 
     @staticmethod
     def spec(n_layers, batch, capacity, n_groups, head_dim, dtype=jnp.bfloat16):
+        """Abstract (ShapeDtypeStruct) twin of ``init`` — same pytree
+        structure, zero allocation; for dry-run CLIs and sharding specs."""
         shape = (n_layers, batch, capacity, n_groups, head_dim)
         arr = jax.ShapeDtypeStruct(shape, dtype)
         return DecodeCache(k=arr, v=arr, length=jax.ShapeDtypeStruct((), jnp.int32))
@@ -102,6 +113,9 @@ class BifurcatedCache:
     @staticmethod
     def init(n_layers, batch, m_c, dec_capacity, n_groups, head_dim,
              dtype=jnp.bfloat16, ctx_layout="gmk"):
+        """Concrete all-zeros cache in ``dtype``: context (L, g, m_c, hd)
+        under "gmk" (head-major default) / (L, m_c, g, hd) under "mgk",
+        decode arm (L, b, C_d, g, hd), dec_length scalar i32."""
         ctx = ((n_layers, m_c, n_groups, head_dim) if ctx_layout == "mgk"
                else (n_layers, n_groups, m_c, head_dim))
         dec = (n_layers, batch, dec_capacity, n_groups, head_dim)
@@ -117,6 +131,9 @@ class BifurcatedCache:
     @staticmethod
     def spec(n_layers, batch, m_c, dec_capacity, n_groups, head_dim,
              dtype=jnp.bfloat16, ctx_layout="gmk"):
+        """Abstract (ShapeDtypeStruct) twin of ``init`` — same parameter
+        surface as ``QuantBifurcatedCache.spec`` so the families are
+        drop-in interchangeable via ``ctx_cache_family``."""
         shape = ((n_layers, m_c, n_groups, head_dim) if ctx_layout == "mgk"
                  else (n_layers, n_groups, m_c, head_dim))
         ctx = jax.ShapeDtypeStruct(shape, dtype)
@@ -213,6 +230,10 @@ class GroupedBifurcatedCache:
     @staticmethod
     def init(n_layers, n_groups, slots, m_c, dec_capacity, n_kv, head_dim,
              dtype=jnp.bfloat16, ctx_layout="gmk"):
+        """Concrete all-zeros cache in ``dtype``: G context segments
+        (L, G, g, m_c, hd) under "gmk" / (L, G, m_c, g, hd) under "mgk",
+        decode arm (L, slots, C_d, g, hd), i32 bookkeeping (ctx_lens (G,),
+        group_ids/dec_lens (slots,))."""
         ctx = GroupedBifurcatedCache._ctx_shape(
             n_layers, n_groups, m_c, n_kv, head_dim, ctx_layout)
         dec = (n_layers, slots, dec_capacity, n_kv, head_dim)
@@ -230,6 +251,8 @@ class GroupedBifurcatedCache:
     @staticmethod
     def spec(n_layers, n_groups, slots, m_c, dec_capacity, n_kv, head_dim,
              dtype=jnp.bfloat16, ctx_layout="gmk"):
+        """Abstract (ShapeDtypeStruct) twin of ``init`` — same parameter
+        surface as the int8 family (``forest_cache_family``)."""
         ctx = jax.ShapeDtypeStruct(GroupedBifurcatedCache._ctx_shape(
             n_layers, n_groups, m_c, n_kv, head_dim, ctx_layout), dtype)
         dec = jax.ShapeDtypeStruct(
@@ -285,6 +308,170 @@ class GroupedBifurcatedCache:
             k_dec=jnp.where(wipe, 0, self.k_dec),
             v_dec=jnp.where(wipe, 0, self.v_dec),
         )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PrefixTreeCache:
+    """Hierarchical prefix-TRIE bifurcated KV cache (cascade decoding) —
+    the L-level generalization of ``GroupedBifurcatedCache``.
+
+    Real traffic shares prefixes hierarchically (system prompt -> few-shot
+    template -> per-request prompt); a flat forest stores each distinct
+    full prefix once, but prefixes that share an ANCESTOR still replicate
+    the ancestor's KV per group. This cache stores the trie itself: N
+    fixed-capacity node segments, and per decode slot a static-depth PATH
+    of node ids — the slot attends over the concatenation of the nodes on
+    its path plus its own decode arm.
+
+      k_ctx/v_ctx — per ``ctx_layout``:
+          "gmk" (default): (L, N, g, m_c, hd) — head-major, contiguous
+          block DMA for the tree fused Pallas kernel.
+          "mgk":           (L, N, m_c, g, hd) — sequence-major einsum layout.
+      node_lens: (N,) i32 — live (ragged) token count per node; nodes
+                 admit/retire by VALUE (no shape change, no recompile).
+      paths:   (depth, b) i32 — slot -> node id per trie level, -1 = level
+               unused by that slot. ``depth`` is the only static knob: one
+               decode compile per (N, slots, depth, capacities) envelope.
+      k_dec/v_dec: (L, b, C_d, g, hd) — per-slot decode continuation.
+      dec_lens:  (b,) i32 — per-slot decode depth.
+
+    A node's KV must be computed with its ancestors in context (prefill
+    the concatenated sequence, then write each node its token slice) —
+    node identity is (ancestor path, tokens), which is what makes node
+    REUSE across requests exact. All admission state (paths / node_lens /
+    dec_lens and node contents) is DATA, not shape. At depth == 1 this is
+    exactly the grouped (forest) cache with ``paths[0]`` as ``group_ids``.
+    """
+
+    k_ctx: jnp.ndarray
+    v_ctx: jnp.ndarray
+    node_lens: jnp.ndarray
+    paths: jnp.ndarray
+    k_dec: jnp.ndarray
+    v_dec: jnp.ndarray
+    dec_lens: jnp.ndarray
+    ctx_layout: str = dataclasses.field(default="gmk",
+                                        metadata=dict(static=True))
+
+    @property
+    def n_nodes(self) -> int:
+        return self.k_ctx.shape[1]
+
+    @property
+    def depth(self) -> int:
+        return self.paths.shape[0]
+
+    @property
+    def node_capacity(self) -> int:
+        return self.k_ctx.shape[3 if self.ctx_layout == "gmk" else 2]
+
+    @property
+    def n_slots(self) -> int:
+        return self.k_dec.shape[1]
+
+    @property
+    def decode_capacity(self) -> int:
+        return self.k_dec.shape[2]
+
+    @staticmethod
+    def _ctx_shape(n_layers, n_nodes, m_c, n_kv, head_dim, ctx_layout):
+        return ((n_layers, n_nodes, m_c, n_kv, head_dim)
+                if ctx_layout == "mgk"
+                else (n_layers, n_nodes, n_kv, m_c, head_dim))
+
+    @staticmethod
+    def init(n_layers, n_nodes, depth, slots, m_c, dec_capacity, n_kv,
+             head_dim, dtype=jnp.bfloat16, ctx_layout="gmk"):
+        """Concrete all-zeros cache. ``m_c`` is the per-NODE capacity;
+        ``depth`` the static path-table height; ``paths`` start at -1
+        (no slot attends any node until ``assign_paths``)."""
+        ctx = PrefixTreeCache._ctx_shape(
+            n_layers, n_nodes, m_c, n_kv, head_dim, ctx_layout)
+        dec = (n_layers, slots, dec_capacity, n_kv, head_dim)
+        return PrefixTreeCache(
+            k_ctx=jnp.zeros(ctx, dtype),
+            v_ctx=jnp.zeros(ctx, dtype),
+            node_lens=jnp.zeros((n_nodes,), jnp.int32),
+            paths=jnp.full((depth, slots), -1, jnp.int32),
+            k_dec=jnp.zeros(dec, dtype),
+            v_dec=jnp.zeros(dec, dtype),
+            dec_lens=jnp.zeros((slots,), jnp.int32),
+            ctx_layout=ctx_layout,
+        )
+
+    @staticmethod
+    def spec(n_layers, n_nodes, depth, slots, m_c, dec_capacity, n_kv,
+             head_dim, dtype=jnp.bfloat16, ctx_layout="gmk"):
+        """Abstract (ShapeDtypeStruct) twin of ``init`` — same parameter
+        surface, zero allocation; used by dry-run CLIs and sharding-spec
+        builders."""
+        ctx = jax.ShapeDtypeStruct(PrefixTreeCache._ctx_shape(
+            n_layers, n_nodes, m_c, n_kv, head_dim, ctx_layout), dtype)
+        dec = jax.ShapeDtypeStruct(
+            (n_layers, slots, dec_capacity, n_kv, head_dim), dtype)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        return PrefixTreeCache(
+            k_ctx=ctx, v_ctx=ctx, node_lens=i32(n_nodes),
+            paths=i32(depth, slots), k_dec=dec, v_dec=dec,
+            dec_lens=i32(slots), ctx_layout=ctx_layout,
+        )
+
+    def write_node(self, k_ctx, v_ctx, node_idx):
+        """Admit a prefilled KV slice into trie node ``node_idx`` (traced ok).
+
+        k_ctx/v_ctx: (L, m_new, g, hd) — the prefill scan's sequence-major
+        layout, m_new <= node_capacity; the slice must have been computed
+        WITH the node's ancestors in context (prefill the concatenation,
+        write the suffix), so positions and attention history are baked in.
+        The one-time transpose (under "gmk") and zero-pad to capacity
+        happen here, exactly as in ``GroupedBifurcatedCache.write_context``
+        — purely functional, value-only (no recompile).
+        """
+        L, m_new, g, hd = k_ctx.shape
+        cap = self.node_capacity
+        if m_new > cap:
+            raise ValueError(f"node slice of {m_new} tokens > capacity {cap}")
+        if self.ctx_layout == "gmk":
+            k_new = k_ctx.transpose(0, 2, 1, 3)  # (L, g, m_new, hd)
+            v_new = v_ctx.transpose(0, 2, 1, 3)
+            pad = ((0, 0), (0, 0), (0, cap - m_new), (0, 0))
+        else:
+            k_new, v_new = k_ctx, v_ctx
+            pad = ((0, 0), (0, cap - m_new), (0, 0), (0, 0))
+        k_new = jnp.pad(k_new.astype(self.k_ctx.dtype), pad)[:, None]
+        v_new = jnp.pad(v_new.astype(self.v_ctx.dtype), pad)[:, None]
+        start = (0, node_idx) + (0,) * (self.k_ctx.ndim - 2)
+        return dataclasses.replace(
+            self,
+            k_ctx=jax.lax.dynamic_update_slice(self.k_ctx, k_new, start),
+            v_ctx=jax.lax.dynamic_update_slice(self.v_ctx, v_new, start),
+            node_lens=self.node_lens.at[node_idx].set(m_new),
+        )
+
+    def assign_paths(self, slot_mask, path_column):
+        """Point the slots selected by ``slot_mask`` (b,) at the trie path
+        ``path_column`` ((depth,) i32, -1 for unused levels) and reset
+        their decode arms (admit-into-retired-slot reuse: stale decode KVs
+        of the previous occupant are zeroed)."""
+        wipe = slot_mask[None, :, None, None, None]
+        return dataclasses.replace(
+            self,
+            paths=jnp.where(slot_mask[None, :], path_column[:, None],
+                            self.paths),
+            dec_lens=jnp.where(slot_mask, 0, self.dec_lens),
+            k_dec=jnp.where(wipe, 0, self.k_dec),
+            v_dec=jnp.where(wipe, 0, self.v_dec),
+        )
+
+    def slot_context_lens(self):
+        """(b,) i32 — total live context per slot: sum of the node lengths
+        along its path (-1 levels contribute zero). This is each slot's
+        absolute decode position base (RoPE offset)."""
+        safe = jnp.clip(self.paths, 0, self.n_nodes - 1)
+        per_level = jnp.where(self.paths >= 0,
+                              jnp.take(self.node_lens, safe), 0)
+        return jnp.sum(per_level, axis=0).astype(jnp.int32)
 
 
 @jax.tree_util.register_dataclass

@@ -92,6 +92,10 @@ class QuantBifurcatedCache:
     @staticmethod
     def spec(n_layers, batch, m_c, dec_capacity, n_groups, head_dim,
              dtype=jnp.bfloat16, ctx_layout="gmk"):
+        """Abstract cache: int8 context values (layout-shaped as the
+        class docstring), f32 per-(token, head) scales, ``dtype`` (bf16)
+        decode arm — the same parameter surface as
+        ``BifurcatedCache.spec`` (``dtype`` sizes the decode arm only)."""
         ctx_shape = ((n_layers, m_c, n_groups, head_dim) if ctx_layout == "mgk"
                      else (n_layers, n_groups, m_c, head_dim))
         sc_shape = ((n_layers, m_c, n_groups) if ctx_layout == "mgk"
@@ -186,6 +190,10 @@ class GroupedQuantBifurcatedCache:
     @staticmethod
     def init(n_layers, n_groups, slots, m_c, dec_capacity, n_kv, head_dim,
              dtype=jnp.bfloat16, ctx_layout="gmk"):
+        """Concrete all-zeros cache: int8 segment values + f32 scales
+        (shapes per the class docstring), ``dtype`` (bf16) decode arm,
+        i32 slot-table bookkeeping — same parameter surface as
+        ``GroupedBifurcatedCache.init``."""
         ctx_shape, sc_shape = GroupedQuantBifurcatedCache._shapes(
             n_layers, n_groups, m_c, n_kv, head_dim, ctx_layout)
         dec = (n_layers, slots, dec_capacity, n_kv, head_dim)
@@ -205,6 +213,8 @@ class GroupedQuantBifurcatedCache:
     @staticmethod
     def spec(n_layers, n_groups, slots, m_c, dec_capacity, n_kv, head_dim,
              dtype=jnp.bfloat16, ctx_layout="gmk"):
+        """Abstract (ShapeDtypeStruct) twin of ``init`` — zero
+        allocation, for dry-run CLIs and sharding-spec builders."""
         ctx_shape, sc_shape = GroupedQuantBifurcatedCache._shapes(
             n_layers, n_groups, m_c, n_kv, head_dim, ctx_layout)
         i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
@@ -270,6 +280,179 @@ class GroupedQuantBifurcatedCache:
             k_dec=jnp.where(wipe, 0, self.k_dec),
             v_dec=jnp.where(wipe, 0, self.v_dec),
         )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantPrefixTreeCache:
+    """PrefixTreeCache with int8 trie-node segments (hierarchical cascade,
+    quantized context arms).
+
+    k_ctx/v_ctx: int8, (L, N, g, m_c, hd) under "gmk" (default) or
+    (L, N, m_c, g, hd) under "mgk"; k_scale/v_scale: f32 per-(token, head)
+    scales, (L, N, g, m_c) / (L, N, m_c, g) following the layout — k_scale
+    carries the attention logit scale pre-folded, exactly as on
+    ``QuantBifurcatedCache``. Nodes quantize ONCE at admission
+    (``write_node``): write-once read-many, the ideal quantization target,
+    now per trie node. All admission state (paths / node_lens / dec_lens)
+    is data, not shape — one decode compile per trie depth.
+    """
+
+    k_ctx: jnp.ndarray
+    v_ctx: jnp.ndarray
+    k_scale: jnp.ndarray
+    v_scale: jnp.ndarray
+    node_lens: jnp.ndarray
+    paths: jnp.ndarray
+    k_dec: jnp.ndarray
+    v_dec: jnp.ndarray
+    dec_lens: jnp.ndarray
+    ctx_layout: str = dataclasses.field(default="gmk",
+                                        metadata=dict(static=True))
+
+    @property
+    def n_nodes(self) -> int:
+        return self.k_ctx.shape[1]
+
+    @property
+    def depth(self) -> int:
+        return self.paths.shape[0]
+
+    @property
+    def node_capacity(self) -> int:
+        return self.k_ctx.shape[3 if self.ctx_layout == "gmk" else 2]
+
+    @property
+    def n_slots(self) -> int:
+        return self.k_dec.shape[1]
+
+    @property
+    def decode_capacity(self) -> int:
+        return self.k_dec.shape[2]
+
+    @staticmethod
+    def _shapes(n_layers, n_nodes, m_c, n_kv, head_dim, ctx_layout):
+        if ctx_layout == "mgk":
+            return ((n_layers, n_nodes, m_c, n_kv, head_dim),
+                    (n_layers, n_nodes, m_c, n_kv))
+        return ((n_layers, n_nodes, n_kv, m_c, head_dim),
+                (n_layers, n_nodes, n_kv, m_c))
+
+    @staticmethod
+    def init(n_layers, n_nodes, depth, slots, m_c, dec_capacity, n_kv,
+             head_dim, dtype=jnp.bfloat16, ctx_layout="gmk"):
+        """Concrete all-zeros cache (``dtype`` sizes the bf16 decode arm;
+        node values are int8 + f32 scales). Same parameter surface as
+        ``PrefixTreeCache.init`` — the families are drop-in interchangeable
+        via ``tree_cache_family``."""
+        ctx_shape, sc_shape = QuantPrefixTreeCache._shapes(
+            n_layers, n_nodes, m_c, n_kv, head_dim, ctx_layout)
+        dec = (n_layers, slots, dec_capacity, n_kv, head_dim)
+        return QuantPrefixTreeCache(
+            k_ctx=jnp.zeros(ctx_shape, jnp.int8),
+            v_ctx=jnp.zeros(ctx_shape, jnp.int8),
+            k_scale=jnp.zeros(sc_shape, jnp.float32),
+            v_scale=jnp.zeros(sc_shape, jnp.float32),
+            node_lens=jnp.zeros((n_nodes,), jnp.int32),
+            paths=jnp.full((depth, slots), -1, jnp.int32),
+            k_dec=jnp.zeros(dec, dtype),
+            v_dec=jnp.zeros(dec, dtype),
+            dec_lens=jnp.zeros((slots,), jnp.int32),
+            ctx_layout=ctx_layout,
+        )
+
+    @staticmethod
+    def spec(n_layers, n_nodes, depth, slots, m_c, dec_capacity, n_kv,
+             head_dim, dtype=jnp.bfloat16, ctx_layout="gmk"):
+        """Abstract (ShapeDtypeStruct) twin of ``init``: zero allocation,
+        same pytree structure — for dry-run CLIs and sharding builders."""
+        ctx_shape, sc_shape = QuantPrefixTreeCache._shapes(
+            n_layers, n_nodes, m_c, n_kv, head_dim, ctx_layout)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        return QuantPrefixTreeCache(
+            k_ctx=jax.ShapeDtypeStruct(ctx_shape, jnp.int8),
+            v_ctx=jax.ShapeDtypeStruct(ctx_shape, jnp.int8),
+            k_scale=jax.ShapeDtypeStruct(sc_shape, jnp.float32),
+            v_scale=jax.ShapeDtypeStruct(sc_shape, jnp.float32),
+            node_lens=i32(n_nodes), paths=i32(depth, slots),
+            k_dec=jax.ShapeDtypeStruct(
+                (n_layers, slots, dec_capacity, n_kv, head_dim), dtype),
+            v_dec=jax.ShapeDtypeStruct(
+                (n_layers, slots, dec_capacity, n_kv, head_dim), dtype),
+            dec_lens=i32(slots), ctx_layout=ctx_layout,
+        )
+
+    def write_node(self, k_ctx, v_ctx, node_idx):
+        """Admit + quantize a prefilled KV slice into node ``node_idx``.
+
+        k_ctx/v_ctx: (L, m_new, g, hd) float (the prefill scan's layout),
+        computed WITH the node's ancestors in context. Quantize + transpose
+        happen once here; the logit scale hd**-0.5 is pre-folded into
+        k_scale. Padded positions carry zero scales (their logits are
+        masked by node_lens in both the kernel and the einsum reference)."""
+        L, m_new, g, hd = k_ctx.shape
+        cap = self.node_capacity
+        if m_new > cap:
+            raise ValueError(f"node slice of {m_new} tokens > capacity {cap}")
+        if self.ctx_layout == "gmk":
+            k_new = k_ctx.transpose(0, 2, 1, 3)  # (L, g, m_new, hd)
+            v_new = v_ctx.transpose(0, 2, 1, 3)
+            vpad = ((0, 0), (0, 0), (0, cap - m_new), (0, 0))
+            spad = ((0, 0), (0, 0), (0, cap - m_new))
+        else:
+            k_new, v_new = k_ctx, v_ctx
+            vpad = ((0, 0), (0, cap - m_new), (0, 0), (0, 0))
+            spad = ((0, 0), (0, cap - m_new), (0, 0))
+        kq, ks = quantize_ctx(k_new, fold_scale=hd**-0.5)
+        vq, vs = quantize_ctx(v_new)
+        kq = jnp.pad(kq, vpad)[:, None]
+        vq = jnp.pad(vq, vpad)[:, None]
+        ks = jnp.pad(ks, spad)[:, None]
+        vs = jnp.pad(vs, spad)[:, None]
+        vstart = (0, node_idx) + (0,) * (self.k_ctx.ndim - 2)
+        sstart = (0, node_idx) + (0,) * (self.k_scale.ndim - 2)
+        return dataclasses.replace(
+            self,
+            k_ctx=jax.lax.dynamic_update_slice(self.k_ctx, kq, vstart),
+            v_ctx=jax.lax.dynamic_update_slice(self.v_ctx, vq, vstart),
+            k_scale=jax.lax.dynamic_update_slice(self.k_scale, ks, sstart),
+            v_scale=jax.lax.dynamic_update_slice(self.v_scale, vs, sstart),
+            node_lens=self.node_lens.at[node_idx].set(m_new),
+        )
+
+    def assign_paths(self, slot_mask, path_column):
+        """Same slot-table update as ``PrefixTreeCache.assign_paths``:
+        retarget the masked slots' paths and wipe their stale decode arms."""
+        wipe = slot_mask[None, :, None, None, None]
+        return dataclasses.replace(
+            self,
+            paths=jnp.where(slot_mask[None, :], path_column[:, None],
+                            self.paths),
+            dec_lens=jnp.where(slot_mask, 0, self.dec_lens),
+            k_dec=jnp.where(wipe, 0, self.k_dec),
+            v_dec=jnp.where(wipe, 0, self.v_dec),
+        )
+
+    def slot_context_lens(self):
+        """(b,) i32 — total live context per slot (path node lengths
+        summed; -1 levels contribute zero)."""
+        safe = jnp.clip(self.paths, 0, self.n_nodes - 1)
+        per_level = jnp.where(self.paths >= 0,
+                              jnp.take(self.node_lens, safe), 0)
+        return jnp.sum(per_level, axis=0).astype(jnp.int32)
+
+
+def tree_cache_family(ctx_quant: str = "none"):
+    """Prefix-trie analogue of ``forest_cache_family``: same ``spec``/
+    ``init``/``write_node``/``assign_paths`` surface across the bf16 and
+    int8 families, selected here."""
+    from repro.core.kv_cache import PrefixTreeCache
+
+    if ctx_quant == "int8":
+        return QuantPrefixTreeCache
+    if ctx_quant == "none":
+        return PrefixTreeCache
+    raise ValueError(f"unknown ctx_quant mode: {ctx_quant!r}")
 
 
 def forest_cache_family(ctx_quant: str = "none"):
@@ -427,3 +610,82 @@ def forest_bifurcated_attention_q8(
         logits_d = logits_d + mask_to_bias(decode_mask)[:, None, None, None, :]
     part_d = _partial_softmax(logits_d, v_decode, batched=True)
     return merge_partials([part_c, part_d]).astype(q.dtype)
+
+
+def tree_bifurcated_attention_q8(
+    q: jnp.ndarray,           # (b, g, p, n, k) — flat slot batch
+    k_ctx_q: jnp.ndarray,     # int8 (N, m_c, g, hd) "mgk" | (N, g, m_c, hd)
+    v_ctx_q: jnp.ndarray,
+    k_scale_folded: jnp.ndarray,  # f32 (N, m_c, g) | (N, g, m_c); MUST
+    v_scale: jnp.ndarray,         #   carry the logit scale pre-folded
+    paths: jnp.ndarray,       # (depth, b) i32 — -1 = level unused
+    node_lens: jnp.ndarray,   # (N,) i32 — live (ragged) node lengths
+    k_decode: jnp.ndarray,    # (b, C_d, g, hd) bf16
+    v_decode: jnp.ndarray,
+    *,
+    decode_mask: Optional[jnp.ndarray] = None,  # (b, C_d) bool
+    scale: Optional[float] = None,
+    ctx_layout: str = "gmk",
+) -> jnp.ndarray:
+    """Einsum reference for the tree q8 kernel: the hierarchical cascade
+    semantics of ``core.bifurcated.tree_bifurcated_attention`` with int8
+    trie-node segments + scale-folded dequantization — one partial softmax
+    per trie level, merged with the decode arm. The per-level gathers
+    materialize (b, m_c, ...) tensors — correctness reference only; the
+    same CONTRACT as ``bifurcated_attention_q8`` applies (k scales carry
+    the logit scale pre-folded, ``scale`` touches the decode arm only)
+    and the same SET semantics as ``tree_bifurcated_attention`` (a node
+    repeated at several levels of one path contributes once, matching the
+    kernel's OR-membership). At depth == 1 this is exactly
+    ``forest_bifurcated_attention_q8``."""
+    head_dim = q.shape[-1]
+    scale = head_dim**-0.5 if scale is None else scale
+    depth = paths.shape[0]
+    n_nodes = k_ctx_q.shape[0]
+    m_c = k_ctx_q.shape[2 if ctx_layout == "gmk" else 1]
+
+    parts = []
+    for lvl in range(depth):
+        ids = paths[lvl]                              # (b,) may be -1
+        for prev in range(lvl):   # set semantics: drop duplicated levels
+            ids = jnp.where(ids == paths[prev], -1, ids)
+        safe = jnp.clip(ids, 0, n_nodes - 1)
+        if ctx_layout == "gmk":
+            kc = jnp.take(k_ctx_q, safe, axis=0)      # (b, g, m_c, hd)
+            vc = jnp.take(v_ctx_q, safe, axis=0)
+            s_k = jnp.take(k_scale_folded, safe, axis=0)  # (b, g, m_c)
+            s_v = jnp.take(v_scale, safe, axis=0)
+            logits = jnp.einsum("bgpnk,bgmk->bgpnm", q.astype(jnp.float32),
+                                kc.astype(jnp.float32))
+            s_k = s_k[:, :, None, None, :]
+            s_v = s_v[:, :, None, None, :]
+            vc = vc.transpose(0, 2, 1, 3)             # (b, m_c, g, hd)
+        else:
+            kc = jnp.take(k_ctx_q, safe, axis=0)      # (b, m_c, g, hd)
+            vc = jnp.take(v_ctx_q, safe, axis=0)
+            s_k = jnp.take(k_scale_folded, safe, axis=0)  # (b, m_c, g)
+            s_v = jnp.take(v_scale, safe, axis=0)
+            logits = jnp.einsum("bgpnk,bmgk->bgpnm", q.astype(jnp.float32),
+                                kc.astype(jnp.float32))
+            s_k = s_k.transpose(0, 2, 1)[:, :, None, None, :]
+            s_v = s_v.transpose(0, 2, 1)[:, :, None, None, :]
+        logits = logits * s_k
+        valid = (ids >= 0)[:, None] & (
+            jnp.arange(m_c)[None, :] < jnp.take(node_lens, safe)[:, None])
+        logits = logits + mask_to_bias(valid)[:, None, None, None, :]
+
+        m_lv = jnp.max(logits, axis=-1, keepdims=True)
+        m_lv = jnp.maximum(m_lv, NEG_INF / 2)
+        e_lv = jnp.exp(logits - m_lv)
+        l_lv = jnp.sum(e_lv, axis=-1, keepdims=True)
+        e_scaled = e_lv * s_v
+        acc_lv = jnp.einsum("bgpnm,bmgv->bgpnv", e_scaled,
+                            vc.astype(jnp.float32))
+        parts.append((m_lv, l_lv, acc_lv))
+
+    logits_d = jnp.einsum("bgpnk,bmgk->bgpnm", q, k_decode
+                          ).astype(jnp.float32) * scale
+    if decode_mask is not None:
+        logits_d = logits_d + mask_to_bias(decode_mask)[:, None, None, None, :]
+    parts.append(_partial_softmax(logits_d, v_decode, batched=True))
+    return merge_partials(parts).astype(q.dtype)

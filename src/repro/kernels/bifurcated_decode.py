@@ -2,7 +2,7 @@
 
 The paper's context GEMM (⟨q, K_c⟩, Eq. 3) is the memory-IO hot spot of
 shared-prefix batch decoding: K_c is the one tensor whose HBM traffic the
-technique eliminates b-fold. Five kernels live here:
+technique eliminates b-fold. Seven kernels live here:
 
 ``fused_bifurcated_decode`` — the deployable single-pass path. One
   ``pallas_call`` over grid ``(g, nb_ctx + 1)``: for each kv group the
@@ -33,6 +33,15 @@ technique eliminates b-fold. Five kernels live here:
   batching never recompiles); the decode arm + normalize fold into the
   last grid step. At G == 1 both reduce bit-identically to the
   single-prefix kernels above.
+
+``tree_fused_bifurcated_decode`` / ``..._q8`` — the hierarchical CASCADE
+  twins (Hydragen / CoDec lineage): the segment grid axis runs over the N
+  nodes of a prefix TRIE and each row accumulates every node on its
+  static-depth ancestor path (a lane-replicated ``(depth, rows, 128)`` path
+  table, OR-membership unrolled over the static depth). Each node's K/V is
+  DMA'd from HBM once per kv head per step no matter how many paths
+  traverse it — the flat forest kernels above are the depth == 1 special
+  case and the reduction is bit-identical.
 
 ``context_flash_partials`` — the historical two-pass building block (context
   arm only, spills unnormalized partials to HBM for a host-side merge with
@@ -685,6 +694,321 @@ def grouped_fused_bifurcated_decode_q8(
         ],
         interpret=interpret,
     )(q, k_ctx_q, v_ctx_q, k_scale, v_scale, row_group, ctx_bias,
+      k_dec, v_dec, dec_bias)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tree (hierarchical prefix-trie / cascade) fused kernels: N trie nodes,
+# static-depth slot -> node paths
+# ---------------------------------------------------------------------------
+
+def _tree_fused_kernel(
+    q_ref,      # (1, rows, hd)
+    k_ref,      # (1, 1, block_m, hd) — context block of trie node ni
+    v_ref,      # (1, 1, block_m, hd)
+    path_ref,   # (depth, rows, 128) i32 — lane-replicated row -> node id per
+                #   trie level (-1 = level unused by that row)
+    cb_ref,     # (1, block_m) f32 — per-node ragged-tail bias (0 / NEG_INF)
+    kd_ref,     # (1, ld, hd)      — ALL slots' decode keys, group-major
+    vd_ref,     # (1, ld, hd)
+    bias_ref,   # (1, ld) f32      — decode-slot mask bias (0 / NEG_INF)
+    out_ref,    # out: (1, rows, hd) — normalized attention output
+    acc_scr,    # scratch (rows, hd) f32
+    m_scr,      # scratch (rows, 128) f32
+    l_scr,      # scratch (rows, 128) f32
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    depth: int,
+):
+    """Cascade (prefix-trie) generalization of ``_grouped_fused_kernel``:
+    the grid's segment axis runs over the N trie NODES, and a row joins the
+    accumulation of every node on its ancestor PATH instead of exactly one
+    group. Membership is the OR over the static ``depth`` path levels —
+    at depth == 1 the emitted op sequence is identical to the forest kernel
+    (one comparison), which is what makes the L=2 reduction bit-exact.
+
+    Softmax exactness across levels needs no special handling: a masked
+    node's block contributes ``exp(NEG_INF - m) == 0`` once the row has seen
+    any real column, and the running (max, sumexp, acc) state accumulated
+    BEFORE the row's first real column is wiped by the ``corr = exp(m_prev -
+    m_new) == 0`` rescale the moment one arrives — so streaming the nodes
+    in arbitrary order is exact, and each node's K/V is DMA'd from HBM once
+    per kv head per step no matter how many paths (rows) traverse it."""
+    ni = pl.program_id(1)
+    i = pl.program_id(2)
+    n_nodes = pl.num_programs(1)
+    nb = pl.num_programs(2)
+
+    @pl.when((ni == 0) & (i == 0))
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0]                      # (rows, hd)
+    k = k_ref[0, 0]                   # (block_m, hd)
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                          # (rows, block_m)
+    # ragged per-node tail (0 / NEG_INF, covers the zero-padded capacity)
+    s = s + cb_ref[...]
+    # path membership: a row contributes iff node ni sits on its path at
+    # ANY level (unrolled over the static depth; -1 never matches).
+    assigned = path_ref[0][:, :1] == ni   # (rows, 1)
+    for lvl in range(1, depth):
+        assigned |= path_ref[lvl][:, :1] == ni
+    s = jnp.where(assigned, s, NEG_INF)
+    _online_update(s, v, acc_scr, m_scr, l_scr)
+
+    @pl.when((ni == n_nodes - 1) & (i == nb - 1))
+    def _decode_arm_and_flush():
+        kd = kd_ref[0]                # (ld, hd)
+        vd = vd_ref[0]
+        sd = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                      # (rows, ld)
+        sd = sd + bias_ref[...]        # slot validity + ld padding
+        # cross-slot mask: row r belongs to slot r // pn and may only
+        # attend to decode slots of the same sample (cols j // c_d).
+        row_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 0) // pn
+        col_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 1) // c_d
+        sd = jnp.where(row_s == col_s, sd, NEG_INF)
+
+        acc, l_new = _online_update(sd, vd, acc_scr, m_scr, l_scr)
+        out_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(out_ref.dtype)
+
+
+def tree_fused_bifurcated_decode(
+    q: jnp.ndarray,         # (g, rows, hd)  rows = b * p * n
+    k_ctx: jnp.ndarray,     # (N, g, m_c, hd) — trie-node KV segments
+    v_ctx: jnp.ndarray,     # (N, g, m_c, hd)
+    path_rows: jnp.ndarray, # (depth, rows, 128) i32 lane-replicated
+                            #   row -> node id per level (-1 = unused)
+    ctx_bias: jnp.ndarray,  # (N, m_c) f32 — 0 within node_lens[N], NEG_INF past
+    k_dec: jnp.ndarray,     # (g, b * c_d, hd) — group-major flattened decode
+    v_dec: jnp.ndarray,     # (g, b * c_d, hd)
+    dec_bias: jnp.ndarray,  # (1, b * c_d) f32 — 0 for live slots, NEG_INF else
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    block_m: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-pallas_call hierarchical (L-level cascade) decode: returns the
+    normalized (g, rows, hd) attention output.
+
+    HBM traffic per layer-step: each of the N trie nodes' K/V segments once
+    (sum_N m_c) — NOT once per path that traverses them — plus the b*c_d
+    decode slots, q, the (depth, rows, 128) path table, and the output; the
+    same no-spill structure as ``grouped_fused_bifurcated_decode``, which
+    this reduces to exactly (bit-identically) at depth == 1, and hence to
+    ``fused_bifurcated_decode`` at depth == 1 with a single node.
+    """
+    depth = path_rows.shape[0]
+    n_nodes, g, m_c, hd = k_ctx.shape
+    rows = q.shape[1]
+    block_m = min(block_m, max(128, m_c))
+    pad = (-m_c) % block_m
+    if pad:
+        k_ctx = jnp.pad(k_ctx, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_ctx = jnp.pad(v_ctx, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        ctx_bias = jnp.pad(ctx_bias, ((0, 0), (0, pad)),
+                           constant_values=NEG_INF)
+    nb = k_ctx.shape[2] // block_m
+
+    ld = k_dec.shape[1]
+    ld_pad = (-ld) % 128   # lane-align the decode tile
+    if ld_pad:
+        k_dec = jnp.pad(k_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        v_dec = jnp.pad(v_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        dec_bias = jnp.pad(dec_bias, ((0, 0), (0, ld_pad)),
+                           constant_values=NEG_INF)
+    ld_full = ld + ld_pad
+
+    kernel = functools.partial(
+        _tree_fused_kernel, scale=scale, c_d=c_d, pn=pn, depth=depth
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(g, n_nodes, nb),
+        in_specs=[
+            pl.BlockSpec((1, rows, hd), lambda gk, ni, i: (gk, 0, 0)),
+            pl.BlockSpec((1, 1, block_m, hd),
+                         lambda gk, ni, i: (ni, gk, i, 0)),
+            pl.BlockSpec((1, 1, block_m, hd),
+                         lambda gk, ni, i: (ni, gk, i, 0)),
+            pl.BlockSpec((depth, rows, 128), lambda gk, ni, i: (0, 0, 0)),
+            pl.BlockSpec((1, block_m), lambda gk, ni, i: (ni, i)),
+            pl.BlockSpec((1, ld_full, hd), lambda gk, ni, i: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full, hd), lambda gk, ni, i: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full), lambda gk, ni, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, hd), lambda gk, ni, i: (gk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, rows, hd), q.dtype),
+        scratch_shapes=[
+            # fp32 VMEM accumulators — never spilled to HBM; the node axis
+            # adds grid steps, not VMEM residency (same working set as the
+            # forest kernel plus the small static path table).
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_ctx, v_ctx, path_rows, ctx_bias, k_dec, v_dec, dec_bias)
+    return out
+
+
+def _tree_fused_q8_kernel(
+    q_ref,      # (1, rows, hd)
+    k_ref,      # (1, 1, block_m, hd) int8 — quantized node context block
+    v_ref,      # (1, 1, block_m, hd) int8
+    ks_ref,     # (1, 1, block_m) f32 — per-(token, head) K scales, logit
+                #   scale PRE-FOLDED at quantize time
+    vs_ref,     # (1, 1, block_m) f32
+    path_ref,   # (depth, rows, 128) i32 — lane-replicated row -> node id
+    cb_ref,     # (1, block_m) f32 — per-node ragged-tail bias (0 / NEG_INF)
+    kd_ref,     # (1, ld, hd) bf16 — ALL slots' decode keys, group-major
+    vd_ref,     # (1, ld, hd)
+    bias_ref,   # (1, ld) f32      — decode-slot mask bias (0 / NEG_INF)
+    out_ref,    # out: (1, rows, hd)
+    acc_scr,    # scratch (rows, hd) f32
+    m_scr,      # scratch (rows, 128) f32
+    l_scr,      # scratch (rows, 128) f32
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    depth: int,
+):
+    """Quantized twin of ``_tree_fused_kernel``: int8 trie-node segments +
+    per-(token, head) scales dequantized in-register, identical running
+    fp32 VMEM state and in-kernel decode-arm merge."""
+    ni = pl.program_id(1)
+    i = pl.program_id(2)
+    n_nodes = pl.num_programs(1)
+    nb = pl.num_programs(2)
+
+    @pl.when((ni == 0) & (i == 0))
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0]                      # (rows, hd)
+    k = k_ref[0, 0].astype(jnp.float32)   # int8 -> f32, in-register
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                  # (rows, block_m) — raw q·K_q
+    s = s * ks_ref[0]                  # fold s_k (logit scale pre-folded)
+    s = s + cb_ref[...]                # ragged per-node tail
+    assigned = path_ref[0][:, :1] == ni   # (rows, 1)
+    for lvl in range(1, depth):
+        assigned |= path_ref[lvl][:, :1] == ni
+    s = jnp.where(assigned, s, NEG_INF)
+    _online_update(s, v, acc_scr, m_scr, l_scr, p_scale=vs_ref[0])
+
+    @pl.when((ni == n_nodes - 1) & (i == nb - 1))
+    def _decode_arm_and_flush():
+        kd = kd_ref[0]                # (ld, hd) bf16
+        vd = vd_ref[0]
+        sd = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                      # (rows, ld)
+        sd = sd + bias_ref[...]
+        row_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 0) // pn
+        col_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 1) // c_d
+        sd = jnp.where(row_s == col_s, sd, NEG_INF)
+
+        acc, l_new = _online_update(sd, vd, acc_scr, m_scr, l_scr)
+        out_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(out_ref.dtype)
+
+
+def tree_fused_bifurcated_decode_q8(
+    q: jnp.ndarray,         # (g, rows, hd)  rows = b * p * n
+    k_ctx_q: jnp.ndarray,   # (N, g, m_c, hd) int8 — trie-node KV segments
+    v_ctx_q: jnp.ndarray,   # (N, g, m_c, hd) int8
+    k_scale_folded: jnp.ndarray,  # (N, g, m_c) f32 — logit scale pre-folded
+    v_scale: jnp.ndarray,         # (N, g, m_c) f32
+    path_rows: jnp.ndarray, # (depth, rows, 128) i32 lane-replicated
+    ctx_bias: jnp.ndarray,  # (N, m_c) f32 — 0 within node_lens[N], NEG_INF past
+    k_dec: jnp.ndarray,     # (g, b * c_d, hd) bf16
+    v_dec: jnp.ndarray,     # (g, b * c_d, hd)
+    dec_bias: jnp.ndarray,  # (1, b * c_d) f32
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    block_m: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-pallas_call quantized hierarchical decode: every trie node
+    streams as int8 + f32 scale vectors (half the dominant HBM term), no
+    dequantized KV tensor or fp32 partial ever exists in HBM. Reduces
+    bit-identically to ``grouped_fused_bifurcated_decode_q8`` at depth == 1.
+    """
+    k_scale = k_scale_folded
+    depth = path_rows.shape[0]
+    n_nodes, g, m_c, hd = k_ctx_q.shape
+    rows = q.shape[1]
+    block_m = min(block_m, max(128, m_c))
+    pad = (-m_c) % block_m
+    if pad:
+        k_ctx_q = jnp.pad(k_ctx_q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_ctx_q = jnp.pad(v_ctx_q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad)))
+        ctx_bias = jnp.pad(ctx_bias, ((0, 0), (0, pad)),
+                           constant_values=NEG_INF)
+    nb = k_ctx_q.shape[2] // block_m
+
+    ld = k_dec.shape[1]
+    ld_pad = (-ld) % 128   # lane-align the decode tile
+    if ld_pad:
+        k_dec = jnp.pad(k_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        v_dec = jnp.pad(v_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        dec_bias = jnp.pad(dec_bias, ((0, 0), (0, ld_pad)),
+                           constant_values=NEG_INF)
+    ld_full = ld + ld_pad
+
+    kernel = functools.partial(
+        _tree_fused_q8_kernel, scale=scale, c_d=c_d, pn=pn, depth=depth
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(g, n_nodes, nb),
+        in_specs=[
+            pl.BlockSpec((1, rows, hd), lambda gk, ni, i: (gk, 0, 0)),
+            pl.BlockSpec((1, 1, block_m, hd),
+                         lambda gk, ni, i: (ni, gk, i, 0)),
+            pl.BlockSpec((1, 1, block_m, hd),
+                         lambda gk, ni, i: (ni, gk, i, 0)),
+            pl.BlockSpec((1, 1, block_m), lambda gk, ni, i: (ni, gk, i)),
+            pl.BlockSpec((1, 1, block_m), lambda gk, ni, i: (ni, gk, i)),
+            pl.BlockSpec((depth, rows, 128), lambda gk, ni, i: (0, 0, 0)),
+            pl.BlockSpec((1, block_m), lambda gk, ni, i: (ni, i)),
+            pl.BlockSpec((1, ld_full, hd), lambda gk, ni, i: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full, hd), lambda gk, ni, i: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full), lambda gk, ni, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, hd), lambda gk, ni, i: (gk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, rows, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_ctx_q, v_ctx_q, k_scale, v_scale, path_rows, ctx_bias,
       k_dec, v_dec, dec_bias)
     return out
 

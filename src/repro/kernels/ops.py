@@ -38,6 +38,14 @@ FOREST dispatchers: G shared-context segments in one batch with a
 runtime data, so one compile serves any admit/retire sequence of the
 continuous-batching engine (runtime/serve.ForestServeEngine). At G == 1
 they are token-identical to the single-prefix dispatchers.
+
+``tree_bifurcated_decode_attention`` / ``..._q8`` are the hierarchical
+CASCADE dispatchers: N trie-node segments and a static-depth ``(depth, b)``
+slot -> node path table (-1 = unused level), so a slot attends over the
+concatenation of every node on its path. The path table, node lengths and
+node contents are all runtime data; ``depth`` is the only new static —
+one compile per trie depth. At depth == 1 they are token-identical to the
+grouped dispatchers (and hence, with one node, to the single-prefix ones).
 """
 from __future__ import annotations
 
@@ -53,6 +61,8 @@ from repro.kernels.bifurcated_decode import (
     fused_bifurcated_decode_q8,
     grouped_fused_bifurcated_decode,
     grouped_fused_bifurcated_decode_q8,
+    tree_fused_bifurcated_decode,
+    tree_fused_bifurcated_decode_q8,
 )
 
 NEG_INF = -1e30
@@ -76,6 +86,23 @@ def bifurcated_decode_attention(
     ctx_layout: str = "mgk",
     two_pass: bool = False,
 ) -> jnp.ndarray:
+    """Single-prefix bifurcated decode dispatcher (the deployable path).
+
+    Shapes/dtypes (framework layouts; any float dtype, bf16 in serving):
+      q:        (b, g, p, n, hd) — b samples, g kv heads, p query heads
+                per kv head, n fresh positions (speculative drafts).
+      k_ctx/v_ctx: shared context, NO batch axis — (m_c, g, hd) under
+                ``ctx_layout="mgk"`` (sequence-major) or (g, m_c, hd)
+                under "gmk" (head-major; zero-copy for the kernel).
+      k_dec/v_dec: (b, c_d, g, hd) per-sample decode continuation.
+      dec_mask: (b, c_d) bool — live decode slots.
+    Returns (b, g, p, n, hd) in q's dtype, softmax-normalized over
+    [context ⊕ live decode slots].
+
+    Default lowers to the single-pass fused Pallas kernel (no fp32
+    partials or logits in HBM); ``two_pass=True`` is the historical
+    partials-spill + host-merge escape hatch. ``interpret=None`` resolves
+    by backend (compiled Mosaic on TPU, interpret elsewhere)."""
     b, g, p, n, hd = q.shape
     c_d = k_dec.shape[1]
     scale = hd**-0.5 if scale is None else scale
@@ -302,6 +329,136 @@ def grouped_bifurcated_decode_attention_q8(
         q, group_ids, ctx_lens, k_dec, v_dec, dec_mask, m_c)
     out = grouped_fused_bifurcated_decode_q8(
         qk, kc, vc, ks, vs, row_group, ctx_bias, kd, vd, bias,
+        scale=scale, c_d=c_d, pn=p * n,
+        block_m=block_m, interpret=interpret,
+    )  # (g, b*p*n, hd), normalized
+    out = out.reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
+    return out.astype(q.dtype)
+
+
+def _tree_operands(q, paths, node_lens, k_dec, v_dec, dec_mask, m_c):
+    """Shared tree-dispatch plumbing: kernel-major q rows, lane-replicated
+    per-level row -> node assignment, per-node ragged context bias,
+    group-major flattened decode arm + slot-validity bias.
+
+    ``paths`` is (depth, b) i32 (-1 = unused level); it expands to the
+    kernel's (depth, rows, 128) lane-replicated table with row
+    r = (b_idx*p + p_idx)*n + n_idx inheriting slot b_idx's path."""
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    depth = paths.shape[0]
+    qk = q.transpose(1, 0, 2, 3, 4).reshape(g, b * p * n, hd)
+    pr = jnp.repeat(paths.astype(jnp.int32), p * n, axis=1)  # (depth, rows)
+    path_rows = jnp.broadcast_to(pr[:, :, None], (depth, b * p * n, 128))
+    ctx_bias = jnp.where(
+        jnp.arange(m_c)[None, :] < node_lens[:, None], 0.0, NEG_INF
+    ).astype(jnp.float32)                        # (N, m_c)
+    kd = k_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+    vd = v_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+    bias = jnp.where(dec_mask.reshape(1, b * c_d), 0.0, NEG_INF
+                     ).astype(jnp.float32)
+    return qk, path_rows, ctx_bias, kd, vd, bias
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_m", "interpret", "ctx_layout"),
+)
+def tree_bifurcated_decode_attention(
+    q: jnp.ndarray,          # (b, g, p, n, hd) — framework decode layout
+    k_ctx: jnp.ndarray,      # (N, m_c, g, hd) "mgk" or (N, g, m_c, hd) "gmk"
+    v_ctx: jnp.ndarray,
+    paths: jnp.ndarray,      # (depth, b) i32 — slot -> node id per trie
+                             #   level, -1 = level unused by that slot
+    node_lens: jnp.ndarray,  # (N,) i32 — live (ragged) node lengths
+    k_dec: jnp.ndarray,      # (b, c_d, g, hd)
+    v_dec: jnp.ndarray,
+    dec_mask: jnp.ndarray,   # (b, c_d) bool
+    *,
+    scale: Optional[float] = None,
+    block_m: int = 512,
+    interpret: Optional[bool] = None,
+    ctx_layout: str = "gmk",
+) -> jnp.ndarray:
+    """Hierarchical (prefix-trie / cascade) fused decode dispatcher: N
+    trie-node segments in ONE batch, each decode slot attending over the
+    CONCATENATION of the nodes on its ``paths`` column (system prompt ->
+    few-shot template -> per-request prompt, etc.) plus its own decode arm.
+    Lowers to the single-pallas_call tree kernel — every node's K/V streams
+    from HBM once per kv head per step regardless of how many paths
+    traverse it. All trie state (paths / node_lens / node contents) is
+    runtime DATA; only ``depth`` (the path-table height) is static. At
+    depth == 1 the computation is token-identical to
+    ``grouped_bifurcated_decode_attention`` (same grid, same masking, same
+    online-softmax update order)."""
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    scale = hd**-0.5 if scale is None else scale
+    if interpret is None:  # static arg: resolved once at trace time
+        interpret = jax.default_backend() != "tpu"
+
+    if ctx_layout == "gmk":  # already kernel-major: zero-copy
+        kc, vc = k_ctx, v_ctx
+    else:
+        kc = k_ctx.transpose(0, 2, 1, 3)  # (N, g, m_c, hd)
+        vc = v_ctx.transpose(0, 2, 1, 3)
+    m_c = kc.shape[2]
+    qk, path_rows, ctx_bias, kd, vd, bias = _tree_operands(
+        q, paths, node_lens, k_dec, v_dec, dec_mask, m_c)
+    out = tree_fused_bifurcated_decode(
+        qk, kc, vc, path_rows, ctx_bias, kd, vd, bias,
+        scale=scale, c_d=c_d, pn=p * n,
+        block_m=block_m, interpret=interpret,
+    )  # (g, b*p*n, hd), normalized
+    out = out.reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
+    return out.astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_m", "interpret", "ctx_layout"),
+)
+def tree_bifurcated_decode_attention_q8(
+    q: jnp.ndarray,          # (b, g, p, n, hd) — framework decode layout
+    k_ctx_q: jnp.ndarray,    # int8: (N, m_c, g, hd) "mgk" | (N, g, m_c, hd)
+    v_ctx_q: jnp.ndarray,
+    k_scale_folded: jnp.ndarray,  # f32: (N, m_c, g) | (N, g, m_c); MUST
+    v_scale: jnp.ndarray,         #   carry the logit scale pre-folded
+    paths: jnp.ndarray,      # (depth, b) i32 — -1 = level unused
+    node_lens: jnp.ndarray,  # (N,) i32
+    k_dec: jnp.ndarray,      # (b, c_d, g, hd) bf16
+    v_dec: jnp.ndarray,
+    dec_mask: jnp.ndarray,   # (b, c_d) bool
+    *,
+    scale: Optional[float] = None,
+    block_m: int = 512,
+    interpret: Optional[bool] = None,
+    ctx_layout: str = "gmk",
+) -> jnp.ndarray:
+    """Quantized-context twin of ``tree_bifurcated_decode_attention``:
+    int8 trie-node segments + per-(token, head) scales (k pre-folded with
+    the logit scale), dequantized in-register inside the tree kernel. At
+    depth == 1 token-identical to
+    ``grouped_bifurcated_decode_attention_q8``."""
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    scale = hd**-0.5 if scale is None else scale
+    if interpret is None:  # static arg: resolved once at trace time
+        interpret = jax.default_backend() != "tpu"
+
+    if ctx_layout == "gmk":  # already kernel-major: zero-copy
+        kc, vc = k_ctx_q, v_ctx_q
+        ks, vs = k_scale_folded, v_scale
+    else:
+        kc = k_ctx_q.transpose(0, 2, 1, 3)   # (N, g, m_c, hd)
+        vc = v_ctx_q.transpose(0, 2, 1, 3)
+        ks = k_scale_folded.transpose(0, 2, 1)  # (N, g, m_c)
+        vs = v_scale.transpose(0, 2, 1)
+    m_c = kc.shape[2]
+    qk, path_rows, ctx_bias, kd, vd, bias = _tree_operands(
+        q, paths, node_lens, k_dec, v_dec, dec_mask, m_c)
+    out = tree_fused_bifurcated_decode_q8(
+        qk, kc, vc, ks, vs, path_rows, ctx_bias, kd, vd, bias,
         scale=scale, c_d=c_d, pn=p * n,
         block_m=block_m, interpret=interpret,
     )  # (g, b*p*n, hd), normalized

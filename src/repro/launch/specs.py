@@ -136,6 +136,22 @@ def forest_decode_cache_specs(cfg: ModelConfig, model, *, slots: int,
     return {"cache": cache, "tokens": _i32((slots, 1))}
 
 
+def tree_decode_cache_specs(cfg: ModelConfig, model, *, slots: int,
+                            n_nodes: int, depth: int, node_capacity: int,
+                            dec_capacity: Optional[int] = None,
+                            ctx_quant: str = "none") -> dict:
+    """Hierarchical (prefix-trie) serve_step inputs: tree cache + one new
+    token per slot. Attention-bearing families only, like the forest specs
+    (the trie slot table targets full-attention serving)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"tree decoding targets dense/moe/vlm families, got {cfg.family}")
+    cache = model.make_tree_cache_spec(
+        slots, n_nodes, depth, node_capacity, dec_capacity=dec_capacity,
+        ctx_quant=ctx_quant)
+    return {"cache": cache, "tokens": _i32((slots, 1))}
+
+
 def param_specs(model) -> dict:
     """Abstract params via eval_shape: zero allocation."""
     return jax.eval_shape(model.init, jax.random.PRNGKey(0))

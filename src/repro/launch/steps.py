@@ -21,6 +21,7 @@ from repro.core.kv_cache import (
     BifurcatedCache,
     DecodeCache,
     GroupedBifurcatedCache,
+    PrefixTreeCache,
 )
 from repro.distributed.sharding import param_pspec_tree
 from repro.launch import specs as S
@@ -112,12 +113,55 @@ def cache_pspec_tree(mesh, cache) -> object:
             ctx_layout=c.ctx_layout,
         )
 
+    def spec_tree(c: PrefixTreeCache):
+        # N trie-node segments: shard the context SEQUENCE dim over
+        # "model" exactly as the forest cache — dim 3 under "gmk"
+        # (L, N, g, m_c, hd), dim 2 under "mgk" (L, N, m_c, g, hd); the
+        # node axis N stays replicated (nodes admit/retire independently,
+        # resharding per admit would defeat the compile-once loop) and the
+        # path table / node lengths are tiny replicated bookkeeping.
+        ctx_axes = ([None, None, None, "model", None] if c.ctx_layout == "gmk"
+                    else [None, None, "model", None, None])
+        dec_axes = [None, ba, "model", None, None]
+        return PrefixTreeCache(
+            k_ctx=spec_for_leaf(mesh, c.k_ctx.shape, ctx_axes),
+            v_ctx=spec_for_leaf(mesh, c.v_ctx.shape, ctx_axes),
+            node_lens=P(), paths=P(),
+            k_dec=spec_for_leaf(mesh, c.k_dec.shape, dec_axes),
+            v_dec=spec_for_leaf(mesh, c.v_dec.shape, dec_axes),
+            dec_lens=P(),
+            ctx_layout=c.ctx_layout,
+        )
+
     def walk(node):
         from repro.core.quantized import (
             GroupedQuantBifurcatedCache,
             QuantBifurcatedCache,
+            QuantPrefixTreeCache,
         )
 
+        if isinstance(node, QuantPrefixTreeCache):
+            # int8 node values + f32 scale leaves shard the context
+            # sequence dim IDENTICALLY (mismatched value/scale shards
+            # would break the in-kernel per-column fold), layout-aware
+            # with the extra leading N axis; N itself stays replicated.
+            if node.ctx_layout == "gmk":
+                ctx_axes = [None, None, None, "model", None]
+                sc_axes = [None, None, None, "model"]
+            else:
+                ctx_axes = [None, None, "model", None, None]
+                sc_axes = [None, None, "model", None]
+            ctx = spec_for_leaf(mesh, node.k_ctx.shape, ctx_axes)
+            sc = spec_for_leaf(mesh, node.k_scale.shape, sc_axes)
+            dec = spec_for_leaf(mesh, node.k_dec.shape,
+                                [None, ba, "model", None, None])
+            return QuantPrefixTreeCache(
+                k_ctx=ctx, v_ctx=ctx, k_scale=sc, v_scale=sc,
+                node_lens=P(), paths=P(),
+                k_dec=dec, v_dec=dec, dec_lens=P(),
+                ctx_layout=node.ctx_layout)
+        if isinstance(node, PrefixTreeCache):
+            return spec_tree(node)
         if isinstance(node, GroupedQuantBifurcatedCache):
             # int8 segment values + f32 scale leaves shard the context
             # sequence dim IDENTICALLY (mismatched value/scale shards would

@@ -541,3 +541,97 @@ def attention_decode_forest(
 
     o = o.transpose(0, 3, 1, 2, 4).reshape(b, n, cfg.n_heads_padded * hd)
     return o @ params["wo"].astype(x.dtype), new_cache
+
+
+def attention_decode_tree(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,
+    layer_cache: dict,
+    *,
+    paths: jnp.ndarray,      # (depth, b) i32 — slot -> node id per level
+    node_lens: jnp.ndarray,  # (N,) i32 — live (ragged) node lengths
+    ctx_lens_b: jnp.ndarray, # (b,) i32 — per-slot TOTAL path context length
+    dec_lens: jnp.ndarray,   # (b,) i32 — per-slot decode depth
+    rules: Optional[MeshRules],
+    impl: str = "einsum",    # einsum (tree cascade reference) | kernel
+) -> Tuple[jnp.ndarray, dict]:
+    """One incremental-decoding step for one layer over a PREFIX TRIE:
+    N node segments and b decode slots, each slot attending over the
+    concatenation of the nodes on its ``paths`` column ⊕ its decode arm.
+
+    ``layer_cache``: {"k_ctx": (N, g, m_c, hd) "gmk" | (N, m_c, g, hd)
+    "mgk", "v_ctx": ..., "k_dec": (b, C_d, g, hd), "v_dec": ...} — plus
+    {"k_scale", "v_scale"} ((N, g, m_c) / (N, m_c, g)) when the node
+    segments are int8-quantized.
+
+    Differences from ``attention_decode_forest``: the per-slot absolute
+    position base is the SUM of the path's node lengths (``ctx_lens_b``,
+    precomputed once per step by the caller — it has no layer axis), and
+    the attention dispatch is the tree kernel / cascade einsum reference.
+    Sliding-window configs are not wired (the trie targets full-attention
+    serving, like the forest path).
+    """
+    if cfg.sliding_window is not None:
+        raise NotImplementedError(
+            "tree decoding does not support sliding-window configs")
+    b, n = x.shape[:2]
+    g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
+    p = cfg.n_heads_padded // g
+    q, k_new, v_new = _project_qkv(cfg, params, x)
+    pos_b = ctx_lens_b + dec_lens                           # (b,)
+    if cfg.rope_theta > 0:
+        pos = pos_b[:, None] + jnp.arange(n)[None, :]       # (b, n)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    q = q.reshape(b, n, g, p, hd).transpose(0, 2, 3, 1, 4)  # (b,g,p,n,hd)
+
+    quant = "k_scale" in layer_cache
+    k_dec = _scatter_decode_slots(layer_cache["k_dec"], k_new, dec_lens)
+    v_dec = _scatter_decode_slots(layer_cache["v_dec"], v_new, dec_lens)
+    cap = k_dec.shape[1]
+    slot = jnp.arange(cap)[None, :]
+    dec_valid = slot <= dec_lens[:, None] + n - 1           # (b, C_d)
+
+    gmk = cfg.ctx_layout == "gmk"
+    ctx_axes = ((None, None, "kv_seq", None) if gmk
+                else (None, "kv_seq", None, None))
+    k_ctx = constrain(layer_cache["k_ctx"], rules, *ctx_axes)
+    v_ctx = constrain(layer_cache["v_ctx"], rules, *ctx_axes)
+    if quant:
+        sc_axes = (None, None, "kv_seq") if gmk else (None, "kv_seq", None)
+        k_s = constrain(layer_cache["k_scale"], rules, *sc_axes)
+        v_s = constrain(layer_cache["v_scale"], rules, *sc_axes)
+        if impl == "kernel":
+            from repro.kernels.ops import tree_bifurcated_decode_attention_q8
+
+            o = tree_bifurcated_decode_attention_q8(
+                q, k_ctx, v_ctx, k_s, v_s, paths, node_lens,
+                k_dec, v_dec, dec_valid, ctx_layout=cfg.ctx_layout,
+            )
+        else:
+            from repro.core.quantized import tree_bifurcated_attention_q8
+
+            o = tree_bifurcated_attention_q8(
+                q, k_ctx, v_ctx, k_s, v_s, paths, node_lens,
+                k_dec, v_dec, decode_mask=dec_valid,
+                ctx_layout=cfg.ctx_layout,
+            )
+    elif impl == "kernel":
+        from repro.kernels.ops import tree_bifurcated_decode_attention
+
+        o = tree_bifurcated_decode_attention(
+            q, k_ctx, v_ctx, paths, node_lens, k_dec, v_dec, dec_valid,
+            ctx_layout=cfg.ctx_layout,
+        )
+    else:
+        from repro.core.bifurcated import tree_bifurcated_attention
+
+        o = tree_bifurcated_attention(
+            q, k_ctx, v_ctx, paths, node_lens, k_dec, v_dec,
+            decode_mask=dec_valid, ctx_layout=cfg.ctx_layout,
+        )
+    new_cache = {**layer_cache, "k_dec": k_dec, "v_dec": v_dec}
+
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, n, cfg.n_heads_padded * hd)
+    return o @ params["wo"].astype(x.dtype), new_cache

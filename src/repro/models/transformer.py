@@ -1,7 +1,9 @@
 """Decoder-only transformer LM covering the dense / moe / vlm families.
 
-Layers are scan-stacked; the decode path supports both the standard batched
-KV cache and the paper's BifurcatedCache. VLM (internvl2) prepends stub
+Layers are scan-stacked; the decode path supports the standard batched
+KV cache, the paper's BifurcatedCache, the multi-prefix grouped (forest)
+caches and the hierarchical prefix-trie caches (cascade decoding) — the
+cache TYPE selects the decode path. VLM (internvl2) prepends stub
 patch embeddings to the token embeddings — the image tokens become part of
 the shared prefix and are covered by bifurcated attention like any other
 context token.
@@ -166,12 +168,16 @@ class TransformerLM:
                     *, impl: str = "einsum"):
         """tokens: (b, n) new token ids. Returns (logits (b, n, V), cache')."""
         cfg = self.cfg
-        from repro.core.kv_cache import GroupedBifurcatedCache
+        from repro.core.kv_cache import GroupedBifurcatedCache, PrefixTreeCache
         from repro.core.quantized import (
             GroupedQuantBifurcatedCache,
             QuantBifurcatedCache,
+            QuantPrefixTreeCache,
         )
 
+        if isinstance(cache, (PrefixTreeCache, QuantPrefixTreeCache)):
+            return self._decode_step_tree(params, cache, tokens, rules,
+                                          impl=impl)
         if isinstance(cache, (GroupedBifurcatedCache,
                               GroupedQuantBifurcatedCache)):
             return self._decode_step_forest(params, cache, tokens, rules,
@@ -272,7 +278,70 @@ class TransformerLM:
         )
         return logits, new_cache
 
+    def _decode_step_tree(self, params, cache, tokens,
+                          rules: Optional[MeshRules], *, impl: str):
+        """Prefix-trie decode: b slots over N node segments, each slot
+        attending over the concatenation of the nodes on its static-depth
+        path. The trie bookkeeping (paths / node_lens / dec_lens and the
+        per-slot total context length) has no layer axis, so it rides the
+        layer scan by closure; ``impl="kernel"`` lowers every layer-step to
+        the tree fused Pallas kernel."""
+        cfg = self.cfg
+        from repro.models.blocks import attention_decode_tree
+
+        x = self._embed(params, tokens)
+        x = constrain(x, rules, "batch", None, None)
+        layer_caches = {
+            "k_ctx": cache.k_ctx, "v_ctx": cache.v_ctx,
+            "k_dec": cache.k_dec, "v_dec": cache.v_dec,
+        }
+        if hasattr(cache, "k_scale"):
+            layer_caches["k_scale"] = cache.k_scale
+            layer_caches["v_scale"] = cache.v_scale
+        ctx_lens_b = cache.slot_context_lens()   # (b,) — once per step
+
+        def body(x, inp):
+            layer, lcache = inp
+            h = apply_norm(cfg, layer["ln1"], x)
+            a, new_lcache = attention_decode_tree(
+                cfg, layer["attn"], h, lcache,
+                paths=cache.paths, node_lens=cache.node_lens,
+                ctx_lens_b=ctx_lens_b, dec_lens=cache.dec_lens,
+                rules=rules, impl=impl,
+            )
+            x = x + a
+            h2 = apply_norm(cfg, layer["ln2"], x)
+            if cfg.moe is not None:
+                m = moe_decode(cfg, layer["moe"], h2, rules)
+            else:
+                m = apply_mlp(cfg, layer["mlp"], h2, rules)
+            x = x + m
+            return x, new_lcache
+
+        x, new_caches = lax.scan(body, x, (params["layers"], layer_caches))
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x, rules)
+        n = tokens.shape[1]
+        new_cache = dataclasses.replace(
+            cache, k_dec=new_caches["k_dec"], v_dec=new_caches["v_dec"],
+            dec_lens=cache.dec_lens + n,
+        )
+        return logits, new_cache
+
     # ---- cache constructors (dry-run + serving) ----
+    def make_tree_cache_spec(self, slots, n_nodes, depth, node_capacity,
+                             dec_capacity=None, ctx_quant: str = "none"):
+        """Abstract PrefixTreeCache / QuantPrefixTreeCache for the dry-run
+        CLIs and sharding-spec builders. ``depth`` is the static path-table
+        height; everything else about the trie is runtime data."""
+        cfg = self.cfg
+        from repro.core.quantized import tree_cache_family
+
+        dec_capacity = dec_capacity or cfg.decode_capacity
+        return tree_cache_family(ctx_quant).spec(
+            cfg.n_layers, n_nodes, depth, slots, node_capacity, dec_capacity,
+            cfg.n_kv_heads_padded, cfg.kq_dim, ctx_layout=cfg.ctx_layout)
+
     def make_forest_cache_spec(self, slots, n_groups, ctx_capacity,
                                dec_capacity=None, ctx_quant: str = "none"):
         """Abstract GroupedBifurcatedCache / GroupedQuantBifurcatedCache for

@@ -22,6 +22,13 @@ mean-logprob tracking used for pass@top-k style reranking (paper §5.4).
 many concurrent shared-prefix requests (a prefix FOREST) served from one
 slot table over grouped caches, with admit/retire as pure value updates so
 the jitted decode scan compiles once for the whole serve lifetime.
+
+``TreeServeEngine`` generalizes it once more: requests arrive as a PATH of
+shared segments (system prompt -> few-shot template -> user prompt) and
+admission matches the longest existing prefix path in a trie of KV node
+segments — shared ancestors are stored and streamed once, not once per
+request (cascade decoding, Hydragen/CoDec lineage). Same compile-once
+slot-table machinery (``_SlotTableEngine``), different admission policy.
 """
 from __future__ import annotations
 
@@ -32,7 +39,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ForestConfig, MeshRules, ModelConfig, ServeConfig
+from repro.configs.base import (
+    ForestConfig,
+    MeshRules,
+    ModelConfig,
+    ServeConfig,
+    TreeConfig,
+)
 from repro.core.kv_cache import BifurcatedCache, DecodeCache
 from repro.core.policy import BifurcationPolicy
 
@@ -307,7 +320,123 @@ class ForestState:
     key: jnp.ndarray         # PRNG key for sampling
 
 
-class ForestServeEngine:
+class _SlotTableEngine:
+    """Shared decode machinery for the slot-table serve engines
+    (``ForestServeEngine`` over a flat prefix forest,
+    ``TreeServeEngine`` over a hierarchical prefix trie).
+
+    Subclasses own admission (how a request's context lands in the cache
+    and slots get pointed at it) and retirement bookkeeping; everything
+    here — the jitted scan chunk with the donated carry, in-carry EOS
+    retirement, the decode-capacity guard, host-side output collection —
+    depends only on the ``ecfg`` fields common to ``ForestConfig`` and
+    ``TreeConfig`` (slots / temperature / top_p / use_kernel / eos_token /
+    pad_token) and on the cache's ``dec_lens`` / ``decode_capacity``
+    surface, which all slot-table cache families share.
+    """
+
+    def __init__(self, model, cfg: ModelConfig, ecfg,
+                 rules: Optional[MeshRules] = None):
+        self.model = model
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.rules = rules
+        self._chunk = jax.jit(
+            self._chunk_body, donate_argnums=(1,), static_argnames=("n_steps",)
+        )
+        self.decode_dispatches = 0
+        # host-side output mirrors (admission policy only — the decode
+        # math depends exclusively on device-side state values)
+        self.outputs = {s: [] for s in range(ecfg.slots)}   # slot -> tokens
+        self.logps = {s: [] for s in range(ecfg.slots)}
+
+    # ---- decode ----
+    def _decode_one(self, params, state: ForestState):
+        """One slot-table decode step: advance every slot one token, gate
+        the emission + slot-table updates on each slot's live bit."""
+        ecfg = self.ecfg
+        key, sub = jax.random.split(state.key)
+        logits, cache = self.model.decode_step(
+            params, state.cache, state.tokens, self.rules,
+            impl="kernel" if ecfg.use_kernel else "einsum")
+        logits = logits[:, -1]
+        sampled = sample_tokens(sub, logits, ecfg.temperature, ecfg.top_p)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        tok_logp = jnp.take_along_axis(logp, sampled[:, None], axis=-1)[:, 0]
+        emit = state.active
+        tok = jnp.where(emit, sampled, ecfg.pad_token)
+        active = emit & (sampled != ecfg.eos_token) if ecfg.eos_token >= 0 \
+            else emit
+        new = ForestState(
+            cache=cache,
+            tokens=tok[:, None],
+            active=active,
+            steps=state.steps + emit.astype(jnp.int32),
+            key=key,
+        )
+        return new, (tok, tok_logp, emit)
+
+    def _chunk_body(self, params, state: ForestState, *, n_steps: int):
+        def step(s, _):
+            return self._decode_one(params, s)
+
+        return jax.lax.scan(step, state, None, length=n_steps)
+
+    def step_chunk(self, params, state: ForestState, n_steps: int):
+        """Run ``n_steps`` decode steps for the whole slot table as ONE
+        jitted dispatch (donated carry). Appends each live slot's emitted
+        tokens to the host-side output lists and returns the new state.
+
+        Raises if the chunk would push any LIVE slot past its decode
+        capacity: the per-slot KV write clamps at the last cache slot, so
+        decoding past capacity silently corrupts that slot's decode arm —
+        retire or shorten the chunk instead. (Slots admitted mid-lifetime
+        sit at different depths; the guard tracks the deepest live one.)"""
+        import numpy as np
+
+        active = np.asarray(state.active)
+        if active.any():
+            deepest = int(np.asarray(state.cache.dec_lens)[active].max())
+            cap = state.cache.decode_capacity
+            if deepest + n_steps > cap:
+                raise RuntimeError(
+                    f"chunk of {n_steps} steps would overflow "
+                    f"decode_capacity={cap} (deepest live slot at "
+                    f"{deepest}); retire slots or shorten the chunk")
+        state, (toks, lps, emits) = self._chunk(params, state,
+                                                n_steps=n_steps)
+        self.decode_dispatches += 1
+        toks, lps, emits = (np.asarray(toks), np.asarray(lps),
+                            np.asarray(emits))
+        for t in range(toks.shape[0]):
+            for s in range(toks.shape[1]):
+                if emits[t, s]:
+                    self.outputs[s].append(int(toks[t, s]))
+                    self.logps[s].append(float(lps[t, s]))
+        return state
+
+    def _sample_first(self, key, logits0, n_samples):
+        """Sample each fanned-out slot's first token from the shared
+        prefill logits; returns (tokens (n,), logps (n,), live (n,) bool)
+        with EOS-at-step-0 already folded into ``live``."""
+        ecfg = self.ecfg
+        logits_b = jnp.broadcast_to(logits0, (n_samples, logits0.shape[-1]))
+        tok = sample_tokens(key, logits_b, ecfg.temperature, ecfg.top_p)
+        logp0 = jax.nn.log_softmax(logits_b.astype(jnp.float32), axis=-1)
+        lp = jnp.take_along_axis(logp0, tok[:, None], axis=-1)[:, 0]
+        live = tok != ecfg.eos_token if ecfg.eos_token >= 0 else \
+            jnp.ones_like(tok, bool)
+        return tok, lp, live
+
+    def result(self, slot: int) -> GenerationResult:
+        """Per-slot GenerationResult view over the host-side output lists."""
+        toks = jnp.asarray(self.outputs[slot])[None, :]
+        lps = jnp.asarray(self.logps[slot])[None, :]
+        return GenerationResult(
+            tokens=toks, mean_logprob=jnp.mean(lps, axis=1), logprobs=lps)
+
+
+class ForestServeEngine(_SlotTableEngine):
     """Continuous-batching serve loop over a prefix forest (beyond-paper).
 
     The paper's engine serves ONE shared context per batch; production
@@ -335,19 +464,11 @@ class ForestServeEngine:
 
     def __init__(self, model, cfg: ModelConfig, fcfg: ForestConfig,
                  rules: Optional[MeshRules] = None):
-        self.model = model
-        self.cfg = cfg
+        super().__init__(model, cfg, fcfg, rules)
         self.fcfg = fcfg
-        self.rules = rules
-        self._chunk = jax.jit(
-            self._chunk_body, donate_argnums=(1,), static_argnames=("n_steps",)
-        )
-        self.decode_dispatches = 0
         # host-side slot table mirrors (admission policy only — the decode
         # math depends exclusively on device-side ForestState values)
         self.group_live = [False] * fcfg.n_groups
-        self.outputs = {s: [] for s in range(fcfg.slots)}   # slot -> tokens
-        self.logps = {s: [] for s in range(fcfg.slots)}
         self.slot_group = [-1] * fcfg.slots
 
     # ---- lifecycle ----
@@ -411,12 +532,7 @@ class ForestServeEngine:
         cache = cache.assign_slots(slot_mask, gidx)
 
         key, sub = jax.random.split(state.key)
-        logits_b = jnp.broadcast_to(logits0, (n_samples, logits0.shape[-1]))
-        tok = sample_tokens(sub, logits_b, fcfg.temperature, fcfg.top_p)
-        logp0 = jax.nn.log_softmax(logits_b.astype(jnp.float32), axis=-1)
-        lp = jnp.take_along_axis(logp0, tok[:, None], axis=-1)[:, 0]
-        live = tok != fcfg.eos_token if fcfg.eos_token >= 0 else \
-            jnp.ones_like(tok, bool)
+        tok, lp, live = self._sample_first(sub, logits0, n_samples)
 
         state = ForestState(
             cache=cache,
@@ -431,71 +547,6 @@ class ForestServeEngine:
             self.outputs[s] = [int(tok[i])]
             self.logps[s] = [float(lp[i])]
         return state, slots
-
-    # ---- decode ----
-    def _decode_one(self, params, state: ForestState):
-        """One forest decode step: advance every slot one token, gate the
-        emission + slot-table updates on each slot's live bit."""
-        fcfg = self.fcfg
-        key, sub = jax.random.split(state.key)
-        logits, cache = self.model.decode_step(
-            params, state.cache, state.tokens, self.rules,
-            impl="kernel" if fcfg.use_kernel else "einsum")
-        logits = logits[:, -1]
-        sampled = sample_tokens(sub, logits, fcfg.temperature, fcfg.top_p)
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        tok_logp = jnp.take_along_axis(logp, sampled[:, None], axis=-1)[:, 0]
-        emit = state.active
-        tok = jnp.where(emit, sampled, fcfg.pad_token)
-        active = emit & (sampled != fcfg.eos_token) if fcfg.eos_token >= 0 \
-            else emit
-        new = ForestState(
-            cache=cache,
-            tokens=tok[:, None],
-            active=active,
-            steps=state.steps + emit.astype(jnp.int32),
-            key=key,
-        )
-        return new, (tok, tok_logp, emit)
-
-    def _chunk_body(self, params, state: ForestState, *, n_steps: int):
-        def step(s, _):
-            return self._decode_one(params, s)
-
-        return jax.lax.scan(step, state, None, length=n_steps)
-
-    def step_chunk(self, params, state: ForestState, n_steps: int):
-        """Run ``n_steps`` decode steps for the whole slot table as ONE
-        jitted dispatch (donated carry). Appends each live slot's emitted
-        tokens to the host-side output lists and returns the new state.
-
-        Raises if the chunk would push any LIVE slot past its decode
-        capacity: the per-slot KV write clamps at the last cache slot, so
-        decoding past capacity silently corrupts that slot's decode arm —
-        retire or shorten the chunk instead. (Slots admitted mid-lifetime
-        sit at different depths; the guard tracks the deepest live one.)"""
-        import numpy as np
-
-        active = np.asarray(state.active)
-        if active.any():
-            deepest = int(np.asarray(state.cache.dec_lens)[active].max())
-            cap = state.cache.decode_capacity
-            if deepest + n_steps > cap:
-                raise RuntimeError(
-                    f"chunk of {n_steps} steps would overflow "
-                    f"decode_capacity={cap} (deepest live slot at "
-                    f"{deepest}); retire slots or shorten the chunk")
-        state, (toks, lps, emits) = self._chunk(params, state,
-                                                n_steps=n_steps)
-        self.decode_dispatches += 1
-        toks, lps, emits = (np.asarray(toks), np.asarray(lps),
-                            np.asarray(emits))
-        for t in range(toks.shape[0]):
-            for s in range(toks.shape[1]):
-                if emits[t, s]:
-                    self.outputs[s].append(int(toks[t, s]))
-                    self.logps[s].append(float(lps[t, s]))
-        return state
 
     # ---- retire ----
     def retire_groups(self, state: ForestState):
@@ -516,9 +567,220 @@ class ForestServeEngine:
                 retired.append(g)
         return retired
 
-    def result(self, slot: int) -> GenerationResult:
-        """Per-slot GenerationResult view over the host-side output lists."""
-        toks = jnp.asarray(self.outputs[slot])[None, :]
-        lps = jnp.asarray(self.logps[slot])[None, :]
-        return GenerationResult(
-            tokens=toks, mean_logprob=jnp.mean(lps, axis=1), logprobs=lps)
+
+# ---------------------------------------------------------------------------
+# Hierarchical prefix-trie engine (cascade serving)
+# ---------------------------------------------------------------------------
+
+class TreeServeEngine(_SlotTableEngine):
+    """Continuous-batching serve loop over a hierarchical prefix TRIE.
+
+    The forest engine stores each request's full prefix in its own segment;
+    real traffic shares prefix STRUCTURE — many requests open with the same
+    system prompt, many of those with the same few-shot template. This
+    engine keeps the trie itself: requests arrive as a path of ``segments``
+    (outermost shared level first) and admission matches the LONGEST
+    existing prefix path before allocating anything:
+
+      admit   — walk the host-side trie index level by level; every level
+                that matches a live node (same ancestor path, same tokens)
+                is REUSED — its KV is neither recomputed into the cache nor
+                re-stored. The request's full concatenation is prefilled
+                once (batch=1) for the first-token logits, and only the
+                NEW levels' KV slices are written into free node segments
+                (``write_node``: quantize/transpose once, by value). Free
+                slots are pointed at the path (``assign_paths``). All of
+                this is runtime DATA — no decode recompile, ever.
+      decode  — inherited ``step_chunk``: the whole slot table advances as
+                ONE jitted ``lax.scan`` dispatch; every trie node's K/V
+                streams from HBM once per step no matter how many paths
+                traverse it (the cascade kernel's point). In-carry EOS
+                retirement exactly as in the forest engine.
+      retire  — ``retire_requests`` frees finished requests; node
+                refcounts drop along their paths and a node's segment (and
+                trie-index entry) frees only when NO live request
+                references it — shared ancestors survive their children.
+
+    With every request a single segment (depth-1 paths) this engine serves
+    the exact flat-forest workload, token-identically (tested).
+    """
+
+    def __init__(self, model, cfg: ModelConfig, tcfg: TreeConfig,
+                 rules: Optional[MeshRules] = None):
+        super().__init__(model, cfg, tcfg, rules)
+        self.tcfg = tcfg
+        # host-side trie mirrors (admission policy only — decode math
+        # depends exclusively on device-side state values)
+        self.node_live = [False] * tcfg.n_nodes
+        self.node_refs = [0] * tcfg.n_nodes          # live-request refcount
+        self.node_index = {}    # (parent id, token tuple) -> node id
+        self.node_key = [None] * tcfg.n_nodes        # reverse map
+        self.slot_request = [-1] * tcfg.slots
+        self.requests = []      # admission log: {"path", "slots", "live"}
+
+    # ---- lifecycle ----
+    def init_state(self) -> ForestState:
+        """Device-side state: the same ``ForestState`` carry as the forest
+        engine (tokens / active / steps / key), holding a
+        ``PrefixTreeCache`` (or its int8 twin) instead of a grouped cache."""
+        from repro.core.quantized import tree_cache_family
+
+        cfg, tcfg = self.cfg, self.tcfg
+        fam = tree_cache_family(
+            "int8" if tcfg.cache_dtype == "int8" else "none")
+        cache = fam.init(
+            cfg.n_layers, tcfg.n_nodes, tcfg.depth, tcfg.slots,
+            tcfg.node_capacity, tcfg.decode_capacity,
+            cfg.n_kv_heads_padded, cfg.kq_dim, ctx_layout=cfg.ctx_layout)
+        b = tcfg.slots
+        return ForestState(
+            cache=cache,
+            tokens=jnp.zeros((b, 1), jnp.int32),
+            active=jnp.zeros((b,), bool),
+            steps=jnp.zeros((b,), jnp.int32),
+            key=jax.random.PRNGKey(tcfg.seed),
+        )
+
+    def free_nodes(self):
+        return [i for i, live in enumerate(self.node_live) if not live]
+
+    def free_slots(self, state: ForestState):
+        """Slots safe to (re)assign: never admitted, or belonging to a
+        RETIRED request (same invariant as the forest engine: an EOS'd
+        slot of a still-live request keeps its output readable)."""
+        import numpy as np
+
+        inactive = ~np.asarray(state.active)
+        return [int(s) for s in np.where(inactive)[0]
+                if self.slot_request[s] < 0
+                or not self.requests[self.slot_request[s]]["live"]]
+
+    def match_prefix(self, segments):
+        """Longest-matching prefix path for ``segments`` (list of (1, m)
+        token arrays, outermost level first): returns (node ids of the
+        matched levels, number matched). Node identity is (ancestor node,
+        token content), so a match guarantees identical KV."""
+        import numpy as np
+
+        path, parent = [], -1
+        for seg in segments:
+            key = (parent, tuple(int(t) for t in np.asarray(seg)[0]))
+            nid = self.node_index.get(key)
+            if nid is None or not self.node_live[nid]:
+                break
+            path.append(nid)
+            parent = nid
+        return path, len(path)
+
+    def admit(self, params, state: ForestState, segments,
+              n_samples: int) -> tuple:
+        """Admit one request given as a PATH of ``segments`` — a list of
+        (1, m_i) token arrays, outermost shared level first (e.g. [system
+        prompt, few-shot template, user prompt]); 1 <= len <= ``depth``.
+
+        The longest matching prefix of the path is reused from the trie;
+        the full concatenation is prefilled ONCE (for exact positions /
+        attention history and the first-token logits) and only the new
+        levels' KV slices are written. ``n_samples`` free slots fan out
+        over the path. Returns (state, slot_ids). EOS-at-step-0 retires a
+        slot before it ever enters the decode loop, as in the forest
+        engine."""
+        tcfg = self.tcfg
+        segments = [jnp.asarray(s) for s in segments]
+        if not 1 <= len(segments) <= tcfg.depth:
+            raise ValueError(
+                f"request path of {len(segments)} levels; engine depth "
+                f"is {tcfg.depth}")
+        cap = state.cache.node_capacity
+        for seg in segments:
+            if seg.shape[1] > cap:
+                raise ValueError(
+                    f"segment of {seg.shape[1]} tokens > node capacity {cap}")
+        path, matched = self.match_prefix(segments)
+        new_segs = segments[matched:]
+        free_n = self.free_nodes()
+        free_s = self.free_slots(state)
+        if len(new_segs) > len(free_n):
+            raise RuntimeError(
+                f"need {len(new_segs)} free trie nodes, have {len(free_n)}"
+                " — retire first")
+        if len(free_s) < n_samples:
+            raise RuntimeError(
+                f"need {n_samples} free slots, have {len(free_s)}")
+        slots = free_s[:n_samples]
+
+        # ONE prefill of the full concatenation: reused ancestors are
+        # recomputed (identical values — same tokens, same positions) but
+        # NOT rewritten; each new node gets its token-slice of the result.
+        full = jnp.concatenate(segments, axis=1)
+        logits0, cache1 = self.model.prefill(params, full, self.rules)
+        cache = state.cache
+        offset = sum(int(s.shape[1]) for s in segments[:matched])
+        parent = path[-1] if path else -1
+        for seg in new_segs:
+            nid = free_n.pop(0)
+            m = int(seg.shape[1])
+            cache = cache.write_node(
+                cache1.k[:, 0, offset:offset + m],
+                cache1.v[:, 0, offset:offset + m], nid)
+            key = (parent, tuple(int(t) for t in
+                                 jax.device_get(seg)[0]))
+            self.node_index[key] = nid
+            self.node_key[nid] = key
+            self.node_live[nid] = True
+            path.append(nid)
+            parent = nid
+            offset += m
+        for nid in path:
+            self.node_refs[nid] += 1
+
+        path_col = jnp.asarray(
+            path + [-1] * (tcfg.depth - len(path)), jnp.int32)
+        slot_ids = jnp.asarray(slots, jnp.int32)
+        slot_mask = jnp.zeros((tcfg.slots,), bool).at[slot_ids].set(True)
+        cache = cache.assign_paths(slot_mask, path_col)
+
+        key, sub = jax.random.split(state.key)
+        tok, lp, live = self._sample_first(sub, logits0, n_samples)
+
+        state = ForestState(
+            cache=cache,
+            tokens=state.tokens.at[slot_ids, 0].set(tok),
+            active=state.active.at[slot_ids].set(live),
+            steps=state.steps.at[slot_ids].set(0),
+            key=key,
+        )
+        self.requests.append(
+            {"path": list(path), "slots": list(slots), "live": True})
+        rid = len(self.requests) - 1
+        for i, s in enumerate(slots):
+            self.slot_request[s] = rid
+            self.outputs[s] = [int(tok[i])]
+            self.logps[s] = [float(lp[i])]
+        return state, slots
+
+    # ---- retire ----
+    def retire_requests(self, state: ForestState):
+        """Free every request whose slots have all gone inactive. Node
+        refcounts drop along the retired paths; a node's segment (and its
+        trie-index entry) frees only at refcount zero — an ancestor shared
+        with a still-live request survives. Returns retired request ids;
+        their slots become reusable by the next ``admit``."""
+        import numpy as np
+
+        active = np.asarray(state.active)
+        retired = []
+        for rid, req in enumerate(self.requests):
+            if not req["live"]:
+                continue
+            if not any(active[s] for s in req["slots"]):
+                req["live"] = False
+                retired.append(rid)
+                for nid in req["path"]:
+                    self.node_refs[nid] -= 1
+                for nid in reversed(req["path"]):
+                    if self.node_refs[nid] == 0 and self.node_live[nid]:
+                        self.node_live[nid] = False
+                        self.node_index.pop(self.node_key[nid], None)
+                        self.node_key[nid] = None
+        return retired

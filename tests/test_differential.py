@@ -1,8 +1,8 @@
 """Differential test harness for the bifurcated-decode implementation stack.
 
 ONE parametrized harness runs every implementation — {fused, fused_q8,
-two_pass, einsum, einsum_q8, grouped, grouped_q8} — on IDENTICAL inputs
-(tests/conftest.make_decode_case) and cross-checks:
+two_pass, einsum, einsum_q8, grouped, grouped_q8, tree, tree_q8} — on
+IDENTICAL inputs (tests/conftest.make_decode_case) and cross-checks:
 
   * every implementation against the fp32 monolithic-softmax oracle
     (standard attention over [broadcast K_c ⊕ K_d]) with per-dtype /
@@ -13,7 +13,11 @@ two_pass, einsum, einsum_q8, grouped, grouped_q8} — on IDENTICAL inputs
   * the q8 pair (fused_q8 vs einsum_q8) at fp32 tightness — same
     scale-folded math, different execution order;
   * the grouped (multi-prefix forest) kernel at G == 1 BIT-IDENTICAL to
-    the single-prefix fused kernel — the ISSUE's reduction acceptance.
+    the single-prefix fused kernel — PR 3's reduction acceptance;
+  * the tree (hierarchical cascade) kernel at L=2 (flat forest config)
+    BIT-IDENTICAL to the grouped kernel and at L=1 (single prefix) to the
+    fused kernel — PR 4's reduction acceptance (multi-level trie
+    correctness lives in tests/test_tree.py).
 
 The case list sweeps b x p x n x ragged m_c x partial C_d masks x both ctx
 layouts x {f32, bf16}. When ``hypothesis`` is installed (CI installs it; a
@@ -34,6 +38,8 @@ from repro.kernels.ops import (
     bifurcated_decode_attention_q8,
     grouped_bifurcated_decode_attention,
     grouped_bifurcated_decode_attention_q8,
+    tree_bifurcated_decode_attention,
+    tree_bifurcated_decode_attention_q8,
 )
 
 G, HD = 2, 32
@@ -129,6 +135,26 @@ def impl_grouped_q8(case, ctx_layout, block_m):
         block_m=block_m, interpret=True, ctx_layout=ctx_layout)
 
 
+def impl_tree(case, ctx_layout, block_m):
+    """Single-prefix case lifted to the trie dispatch: one node, depth-1
+    paths — the cascade kernel's L=1 degenerate configuration."""
+    kc, vc = _ctx(case, ctx_layout)
+    gids, clens = _grouped_operands(case, ctx_layout)
+    return tree_bifurcated_decode_attention(
+        case["q"], kc[None], vc[None], gids[None], clens,
+        case["kd"], case["vd"], case["mask"],
+        block_m=block_m, interpret=True, ctx_layout=ctx_layout)
+
+
+def impl_tree_q8(case, ctx_layout, block_m):
+    kq, vq, ks, vs = _q8_operands(case, ctx_layout)
+    gids, clens = _grouped_operands(case, ctx_layout)
+    return tree_bifurcated_decode_attention_q8(
+        case["q"], kq[None], vq[None], ks[None], vs[None], gids[None], clens,
+        case["kd"], case["vd"], case["mask"],
+        block_m=block_m, interpret=True, ctx_layout=ctx_layout)
+
+
 # name -> (fn, is_quantized). Quantized impls carry the int8 rounding error
 # against the fp32 oracle; non-quantized ones only their dtype's.
 IMPLS = {
@@ -139,6 +165,8 @@ IMPLS = {
     "fused_q8": (impl_fused_q8, True),
     "grouped": (impl_grouped, False),
     "grouped_q8": (impl_grouped_q8, True),
+    "tree": (impl_tree, False),
+    "tree_q8": (impl_tree_q8, True),
 }
 
 # per-dtype tolerance for exact (non-quantized) implementations
@@ -221,6 +249,8 @@ def test_differential_all_impls(shape, dtype, ctx_layout):
                                    rtol=1e-5, atol=1e-5)
         np.testing.assert_allclose(outs["grouped_q8"], outs["fused_q8"],
                                    rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(outs["tree_q8"], outs["grouped_q8"],
+                                   rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("shape", CASES[:4])
@@ -238,6 +268,62 @@ def test_grouped_g1_bit_identical_to_fused(shape, ctx_layout):
     out_gq = impl_grouped_q8(case, ctx_layout, block_m)
     out_fq = impl_fused_q8(case, ctx_layout, block_m)
     np.testing.assert_array_equal(np.asarray(out_gq), np.asarray(out_fq))
+
+
+@pytest.mark.parametrize("shape", CASES[:4])
+@pytest.mark.parametrize("ctx_layout", ["mgk", "gmk"])
+def test_tree_l1_bit_identical_to_fused(shape, ctx_layout):
+    """ISSUE acceptance: at L=1 (a single shared prefix — one trie node,
+    depth-1 paths) the cascade kernel reduces EXACTLY — bit-for-bit — to
+    the single-prefix fused kernel, both dtypes."""
+    b, p, n, m_c, c_d, block_m = shape
+    case = make_decode_case(b, p, m_c, c_d, g=G, hd=HD, n=n,
+                            dtype=jnp.bfloat16, seed=sum(shape))
+    out_t = impl_tree(case, ctx_layout, block_m)
+    out_f = impl_fused(case, ctx_layout, block_m)
+    np.testing.assert_array_equal(np.asarray(out_t), np.asarray(out_f))
+    out_tq = impl_tree_q8(case, ctx_layout, block_m)
+    out_fq = impl_fused_q8(case, ctx_layout, block_m)
+    np.testing.assert_array_equal(np.asarray(out_tq), np.asarray(out_fq))
+
+
+def test_tree_l2_bit_identical_to_grouped():
+    """ISSUE acceptance: at L=2 (a flat forest — depth-1 paths over G
+    nodes) the cascade kernel reduces EXACTLY — bit-for-bit, not just
+    within tolerance — to the grouped (forest) kernel on a mixed batch
+    with ragged per-node lengths, both dtypes."""
+    from repro.core.quantized import quantize_ctx as qc
+
+    rng = np.random.RandomState(11)
+    b, p, n, c_d = 6, 2, 1, 8
+    n_groups, cap = 3, 160
+    q = jnp.asarray(rng.randn(b, G, p, n, HD), jnp.bfloat16)
+    kc = jnp.asarray(rng.randn(n_groups, G, cap, HD), jnp.bfloat16)   # gmk
+    vc = jnp.asarray(rng.randn(n_groups, G, cap, HD), jnp.bfloat16)
+    kd = jnp.asarray(rng.randn(b, c_d, G, HD), jnp.bfloat16)
+    vd = jnp.asarray(rng.randn(b, c_d, G, HD), jnp.bfloat16)
+    mask = jnp.arange(c_d)[None, :] < jnp.asarray(
+        rng.randint(1, c_d + 1, size=(b,)))[:, None]
+    gids = jnp.asarray([0, 1, 2, 0, 1, 0], jnp.int32)
+    clens = jnp.asarray([160, 37, 96], jnp.int32)
+
+    out_g = grouped_bifurcated_decode_attention(
+        q, kc, vc, gids, clens, kd, vd, mask,
+        block_m=64, interpret=True, ctx_layout="gmk")
+    out_t = tree_bifurcated_decode_attention(
+        q, kc, vc, gids[None], clens, kd, vd, mask,
+        block_m=64, interpret=True, ctx_layout="gmk")
+    np.testing.assert_array_equal(np.asarray(out_t), np.asarray(out_g))
+
+    kq, ks = qc(kc, fold_scale=HD**-0.5)
+    vq, vs = qc(vc)
+    out_gq = grouped_bifurcated_decode_attention_q8(
+        q, kq, vq, ks, vs, gids, clens, kd, vd, mask,
+        block_m=64, interpret=True, ctx_layout="gmk")
+    out_tq = tree_bifurcated_decode_attention_q8(
+        q, kq, vq, ks, vs, gids[None], clens, kd, vd, mask,
+        block_m=64, interpret=True, ctx_layout="gmk")
+    np.testing.assert_array_equal(np.asarray(out_tq), np.asarray(out_gq))
 
 
 def test_grouped_multi_prefix_vs_per_group_fused():

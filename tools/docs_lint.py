@@ -1,0 +1,127 @@
+"""Docs lint: markdown link check + runnable-quickstart check.
+
+Two passes, both CI-enforced (.github/workflows/ci.yml, "Docs lint"):
+
+  1. LINK CHECK over ``docs/*.md``, ``README.md`` and
+     ``benchmarks/README.md``: every relative markdown link target must
+     exist on disk (anchors are stripped; http(s)/mailto links are not
+     fetched), and every intra-file ``#anchor`` must match a heading of
+     the target file (GitHub slug rules, simplified).
+
+  2. DOCTEST-STYLE RUN of every fenced ```python block in ``docs/*.md``:
+     blocks execute top-to-bottom in one namespace PER FILE (so a page's
+     later snippets may build on earlier ones), with the repo's ``src/``
+     on the path. A block fenced as ```python therefore IS the contract
+     that the quickstart runs; illustrative non-runnable fragments must
+     use ```text / ``` instead. Fails loudly on any exception.
+
+Usage: ``PYTHONPATH=src python tools/docs_lint.py`` from the repo root
+(CI sets JAX_PLATFORMS=cpu; kernels inside doc blocks run in interpret
+mode there, exactly like the test suite).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = sorted((ROOT / "docs").glob("*.md")) + [
+    ROOT / "README.md", ROOT / "benchmarks" / "README.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug (simplified: lowercase, strip punctuation,
+    spaces -> dashes)."""
+    h = heading.strip().lstrip("#").strip().lower()
+    h = re.sub(r"[`*]", "", h)
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _headings(path: pathlib.Path):
+    slugs = set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if FENCE_RE.match(line) or line.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence and line.startswith("#"):
+            slugs.add(_slug(line))
+    return slugs
+
+
+def check_links() -> list:
+    errors = []
+    for md in DOC_FILES:
+        if not md.exists():
+            errors.append(f"{md}: file missing")
+            continue
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            dest = md.parent / target if target else md
+            if not dest.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+                continue
+            if frag and dest.suffix == ".md":
+                if _slug("#" + frag) not in _headings(dest):
+                    errors.append(f"{md.relative_to(ROOT)}: missing anchor "
+                                  f"#{frag} in {target or md.name}")
+    return errors
+
+
+def python_blocks(path: pathlib.Path):
+    """Yield (starting line number, source) for each ```python fence."""
+    lines = path.read_text().splitlines()
+    block, start, lang = None, 0, None
+    for i, line in enumerate(lines, 1):
+        m = FENCE_RE.match(line)
+        if m and block is None:
+            lang, start, block = m.group(1), i, []
+        elif line.startswith("```") and block is not None:
+            if lang == "python":
+                yield start, "\n".join(block)
+            block, lang = None, None
+        elif block is not None:
+            block.append(line)
+
+
+def run_doc_blocks() -> list:
+    errors = []
+    sys.path.insert(0, str(ROOT / "src"))
+    for md in sorted((ROOT / "docs").glob("*.md")):
+        ns = {"__name__": f"docs::{md.name}"}
+        for lineno, src in python_blocks(md):
+            try:
+                exec(compile(src, f"{md.name}:{lineno}", "exec"), ns)
+            except Exception as e:  # noqa: BLE001 — report, keep linting
+                errors.append(
+                    f"{md.relative_to(ROOT)} block at line {lineno}: "
+                    f"{type(e).__name__}: {e}")
+                break   # later blocks in this file may depend on this one
+    return errors
+
+
+def main() -> int:
+    errors = check_links()
+    n_blocks = sum(
+        1 for md in sorted((ROOT / "docs").glob("*.md"))
+        for _ in python_blocks(md))
+    errors += run_doc_blocks()
+    print(f"docs_lint: {len(DOC_FILES)} files link-checked, "
+          f"{n_blocks} python blocks executed, {len(errors)} errors")
+    for e in errors:
+        print(f"  ERROR {e}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
