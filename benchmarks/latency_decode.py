@@ -34,6 +34,7 @@ from repro.core.bifurcated import bifurcated_attention
 from repro.core.io_model import (
     decode_impl_io_bytes,
     forest_decode_io_bytes,
+    paged_decode_io_bytes,
     quantized_ctx_bytes,
     tree_decode_io_bytes,
 )
@@ -43,6 +44,8 @@ from repro.kernels.ops import (
     bifurcated_decode_attention_q8,
     grouped_bifurcated_decode_attention,
     grouped_bifurcated_decode_attention_q8,
+    paged_bifurcated_decode_attention,
+    paged_bifurcated_decode_attention_q8,
     tree_bifurcated_decode_attention,
     tree_bifurcated_decode_attention_q8,
 )
@@ -58,6 +61,22 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused_decod
 BENCH_QUANT_JSON = BENCH_JSON.parent / "BENCH_quant_decode.json"
 BENCH_MULTIPREFIX_JSON = BENCH_JSON.parent / "BENCH_multiprefix.json"
 BENCH_TREE_JSON = BENCH_JSON.parent / "BENCH_tree.json"
+BENCH_PAGED_JSON = BENCH_JSON.parent / "BENCH_paged.json"
+
+
+def _emit(path, rows, *, fast, note, report, tag):
+    """Shared BENCH_*.json emitter (meta envelope identical across grids)."""
+    payload = {
+        "meta": {
+            "device": jax.devices()[0].platform,
+            "kernel_interpret_mode": True,
+            "fast_subset": fast,
+            "note": note,
+        },
+        "grid": rows,
+    }
+    path.write_text(json.dumps(payload, indent=2))
+    report(f"latency_decode/{tag}_bench_json_rows", len(rows))
 
 # fused vs two-pass vs einsum sweep (>= 3x3 as the perf trajectory seed)
 GRID_B = (4, 16, 32)
@@ -203,21 +222,12 @@ def _quant_grid(report):
     # acceptance point: b=16, m_c=4096 — end-to-end per-layer-step >= 1.6x
     accept = [r for r in rows_out if r["b"] == 16 and r["m_c"] == 4096]
     assert accept and accept[0]["q8_io_saving_vs_fused"] >= 1.6, accept
-    payload = {
-        "meta": {
-            "device": jax.devices()[0].platform,
-            "kernel_interpret_mode": True,
-            "fast_subset": fast,
-            "note": "interpret-mode kernel wall-clock is indicative only; "
-                    "*_io_bytes is the modelled per-layer HBM traffic "
-                    "(core.io_model.decode_impl_io_bytes). c_d is the "
-                    "early-decode capacity; the bf16 decode arm's share "
-                    "grows with generated length.",
-        },
-        "grid": rows_out,
-    }
-    BENCH_QUANT_JSON.write_text(json.dumps(payload, indent=2))
-    report("latency_decode/quant_bench_json_rows", len(rows_out))
+    _emit(BENCH_QUANT_JSON, rows_out, fast=fast, report=report, tag="quant",
+          note="interpret-mode kernel wall-clock is indicative only; "
+               "*_io_bytes is the modelled per-layer HBM traffic "
+               "(core.io_model.decode_impl_io_bytes). c_d is the "
+               "early-decode capacity; the bf16 decode arm's share "
+               "grows with generated length.")
     return rows_out
 
 
@@ -288,21 +298,13 @@ def _multiprefix_grid(report):
                     assert bool(jnp.all(grouped() == fused)), \
                         "G=1 grouped kernel must reduce to the fused path"
                 rows_out.append(row)
-    payload = {
-        "meta": {
-            "device": jax.devices()[0].platform,
-            "kernel_interpret_mode": True,
-            "fast_subset": fast,
-            "note": "interpret-mode wall-clock is indicative only; "
-                    "*_io_bytes is the modelled per-layer HBM traffic "
-                    "(core.io_model.forest_decode_io_bytes). m_c is the "
-                    "PER-GROUP prefix length; io_saving is vs the "
-                    "non-bifurcated per-slot replay of the same mix.",
-        },
-        "grid": rows_out,
-    }
-    BENCH_MULTIPREFIX_JSON.write_text(json.dumps(payload, indent=2))
-    report("latency_decode/multiprefix_bench_json_rows", len(rows_out))
+    _emit(BENCH_MULTIPREFIX_JSON, rows_out, fast=fast, report=report,
+          tag="multiprefix",
+          note="interpret-mode wall-clock is indicative only; "
+               "*_io_bytes is the modelled per-layer HBM traffic "
+               "(core.io_model.forest_decode_io_bytes). m_c is the "
+               "PER-GROUP prefix length; io_saving is vs the "
+               "non-bifurcated per-slot replay of the same mix.")
     return rows_out
 
 
@@ -404,24 +406,161 @@ def _tree_grid(report):
     for r in rows_out:
         if r["L"] <= 2:
             assert r["tree_io_bytes"] == r["tree_forest_io_bytes"], r
-    payload = {
-        "meta": {
-            "device": jax.devices()[0].platform,
-            "kernel_interpret_mode": True,
-            "fast_subset": fast,
-            "note": "interpret-mode wall-clock is indicative only; "
-                    "*_io_bytes is the modelled per-layer HBM traffic "
-                    "(core.io_model.tree_decode_io_bytes). m_c is the "
-                    "PER-NODE token count; L=1 is the paper's single "
-                    "shared prefix, L=2 a flat 4-prefix forest, L=3 a "
-                    "shared root + 4 children; *_forest_io_bytes replays "
-                    "the same traffic through flat per-path segments.",
-        },
-        "grid": rows_out,
-    }
-    BENCH_TREE_JSON.write_text(json.dumps(payload, indent=2))
-    report("latency_decode/tree_bench_json_rows", len(rows_out))
+    _emit(BENCH_TREE_JSON, rows_out, fast=fast, report=report, tag="tree",
+          note="interpret-mode wall-clock is indicative only; "
+               "*_io_bytes is the modelled per-layer HBM traffic "
+               "(core.io_model.tree_decode_io_bytes). m_c is the "
+               "PER-NODE token count; L=1 is the paper's single "
+               "shared prefix, L=2 a flat 4-prefix forest, L=3 a "
+               "shared root + 4 children; *_forest_io_bytes replays "
+               "the same traffic through flat per-path segments.")
     return rows_out
+
+
+def _paged_grid(report):
+    """Paged-substrate sweep: a RAGGED, SPARSE L=3 trie (shared root + 4
+    ragged children + FREE nodes) decoded through the dense tree kernel vs
+    the paged page-walk kernel (bf16 + q8), wall-clock (interpret mode,
+    indicative) + the paged IO model -> BENCH_paged.json.
+
+    The acceptance metric: the dense kernels' modelled bytes/step is the
+    PADDED-CAPACITY envelope (every node segment streams its full
+    node_capacity, free or not), while the paged kernel streams only live
+    pages — modelled bytes within 5% of the exact live-length floor on
+    this grid (asserted), a {saving_vs_dense}x cut of the dense envelope.
+    Exactness is the differential harness's job (the paged kernel is
+    bit-identical to the dense tree kernel on the same logical contents).
+
+    ``BENCH_PAGED_FAST=1`` restricts the grid to one cell — the CI
+    artifact subset."""
+    rng = np.random.RandomState(6)
+    g, p, hd = PROXY.n_kv_heads, 1, PROXY.kq_dim
+    c_d = 32
+    page_m = 64
+    node_capacity = 2048
+    n_nodes = 8                    # 5 live (root + 4 children), 3 FREE
+    node_lens = [1152, 512, 384, 260, 640, 0, 0, 0]
+    fast = os.environ.get("BENCH_PAGED_FAST", "") == "1"
+    grid_b = (16,) if fast else (8, 16)
+    rows_out = []
+    for b in grid_b:
+        # trie paths: root (node 0) + child 1..4, slots round-robin
+        slot_paths = [(0, 1 + i % 4) for i in range(b)]
+        table = np.full((2, b), -1, np.int64)
+        for s, pth in enumerate(slot_paths):
+            table[:len(pth), s] = pth
+        paths = jnp.asarray(table, jnp.int32)
+        nlens = jnp.asarray(node_lens, jnp.int32)
+
+        # dense node segments (zero-padded to capacity)
+        kc = np.zeros((n_nodes, g, node_capacity, hd), np.float32)
+        vc = np.zeros_like(kc)
+        for i, m in enumerate(node_lens):
+            kc[i, :, :m] = rng.randn(g, m, hd)
+            vc[i, :, :m] = rng.randn(g, m, hd)
+        kc = jnp.asarray(kc, jnp.bfloat16)
+        vc = jnp.asarray(vc, jnp.bfloat16)
+        kq, ks = quantize_ctx(kc, fold_scale=hd**-0.5)
+        vq, vs = quantize_ctx(vc)
+
+        # page pool holding the SAME logical contents (live pages only)
+        from repro.core.paged import pages_needed
+
+        ppn = pages_needed(node_capacity, page_m)
+        needed = [pages_needed(m, page_m) for m in node_lens]
+        num_pages = sum(needed)
+        tables = np.full((n_nodes, ppn), -1, np.int32)
+        kp = np.zeros((num_pages, g, page_m, hd), np.float32)
+        vp = np.zeros_like(kp)
+        kpq = np.zeros((num_pages, g, page_m, hd), np.int8)
+        vpq = np.zeros_like(kpq)
+        ksp = np.zeros((num_pages, g, page_m), np.float32)
+        vsp = np.zeros_like(ksp)
+        nxt = 0
+        for nid in range(n_nodes):
+            for j in range(needed[nid]):
+                tables[nid, j] = nxt
+                sl = slice(j * page_m, (j + 1) * page_m)
+                kp[nxt] = np.asarray(kc[nid, :, sl], np.float32)
+                vp[nxt] = np.asarray(vc[nid, :, sl], np.float32)
+                kpq[nxt] = np.asarray(kq[nid, :, sl])
+                vpq[nxt] = np.asarray(vq[nid, :, sl])
+                ksp[nxt] = np.asarray(ks[nid, :, sl])
+                vsp[nxt] = np.asarray(vs[nid, :, sl])
+                nxt += 1
+        kp, vp = jnp.asarray(kp, jnp.bfloat16), jnp.asarray(vp, jnp.bfloat16)
+        kpq, vpq = jnp.asarray(kpq), jnp.asarray(vpq)
+        ksp, vsp = jnp.asarray(ksp), jnp.asarray(vsp)
+        tables = jnp.asarray(tables)
+
+        q = jnp.asarray(rng.randn(b, g, p, 1, hd), jnp.bfloat16)
+        kd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+        vd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+        mask = jnp.ones((b, c_d), bool)
+
+        dense = lambda: tree_bifurcated_decode_attention(
+            q, kc, vc, paths, nlens, kd, vd, mask,
+            ctx_layout="gmk", block_m=page_m, interpret=True)
+        dense_q8 = lambda: tree_bifurcated_decode_attention_q8(
+            q, kq, vq, ks, vs, paths, nlens, kd, vd, mask,
+            ctx_layout="gmk", block_m=page_m, interpret=True)
+        paged = lambda: paged_bifurcated_decode_attention(
+            q, kp, vp, tables, nlens, paths, kd, vd, mask, interpret=True)
+        paged_q8 = lambda: paged_bifurcated_decode_attention_q8(
+            q, kpq, vpq, ksp, vsp, tables, nlens, paths, kd, vd, mask,
+            interpret=True)
+
+        row = {"b": b, "c_d": c_d, "g": g, "p": p, "hd": hd,
+               "page_m": page_m, "node_capacity": node_capacity,
+               "n_nodes": n_nodes, "node_lens": node_lens}
+        for name, fn in (("dense_tree", dense), ("dense_tree_q8", dense_q8),
+                         ("paged", paged), ("paged_q8", paged_q8)):
+            row[f"{name}_us"] = _time(fn, iters=3) * 1e6
+            report(f"latency_decode/paged_bs{b}_{name}_us",
+                   row[f"{name}_us"])
+        for impl, dense_impl in (("paged", "tree"), ("paged_q8", "tree_q8")):
+            io = paged_decode_io_bytes(
+                node_lens=node_lens, page_m=page_m, c_d=c_d, g=g, hd=hd,
+                b=b, p=p, n=1, impl=impl, node_capacity=node_capacity,
+                n_nodes=n_nodes)
+            row[f"{impl}_io_bytes"] = io["total"]
+            row[f"{impl}_live_io_bytes"] = io["live_total"]
+            row[f"{impl}_dense_io_bytes"] = io["dense_total"]
+            row[f"{impl}_overhead_vs_live"] = io["paged_overhead_vs_live"]
+            row[f"{impl}_saving_vs_dense"] = io["saving_vs_dense"]
+            report(f"latency_decode/paged_bs{b}_{impl}_saving_vs_dense",
+                   io["saving_vs_dense"])
+            report(f"latency_decode/paged_bs{b}_{impl}_overhead_vs_live",
+                   io["paged_overhead_vs_live"])
+        rows_out.append(row)
+    # acceptance: paged bytes/step within 5% of the exact live-length
+    # floor on this ragged/sparse trie — and strictly below the dense
+    # kernels' padded-capacity envelope.
+    for r in rows_out:
+        for impl in ("paged", "paged_q8"):
+            assert r[f"{impl}_overhead_vs_live"] <= 1.05, r
+            assert r[f"{impl}_io_bytes"] < r[f"{impl}_dense_io_bytes"], r
+    _emit(BENCH_PAGED_JSON, rows_out, fast=fast, report=report, tag="paged",
+          note="interpret-mode wall-clock is indicative only; "
+               "*_io_bytes is the modelled per-layer HBM traffic "
+               "(core.io_model.paged_decode_io_bytes). node_lens is the "
+               "ragged live-length mix (0 = FREE node): the dense tree "
+               "kernel streams n_nodes*node_capacity tokens regardless, "
+               "the paged kernel only the live pages (page_m-rounded).")
+    return rows_out
+
+
+# name -> (grid fn, emitted artifact, CI fast-subset env var). ONE
+# dispatcher for every artifact-emitting sweep: `--grid <name>` on the
+# CLI and `run()` both walk this registry, so a new grid (e.g. paged)
+# slots in as a registry entry instead of another copy-pasted CLI branch.
+GRIDS = {
+    "quant": (_quant_grid, BENCH_QUANT_JSON, "BENCH_QUANT_FAST"),
+    "multiprefix": (_multiprefix_grid, BENCH_MULTIPREFIX_JSON,
+                    "BENCH_MULTIPREFIX_FAST"),
+    "tree": (_tree_grid, BENCH_TREE_JSON, "BENCH_TREE_FAST"),
+    "paged": (_paged_grid, BENCH_PAGED_JSON, "BENCH_PAGED_FAST"),
+}
 
 
 def run(report):
@@ -457,9 +596,8 @@ def run(report):
     assert results[(8192, 32)] >= results[(8192, 4)] * 0.9
 
     _impl_grid(report)
-    _quant_grid(report)
-    _multiprefix_grid(report)
-    _tree_grid(report)
+    for fn, _, _ in GRIDS.values():
+        fn(report)
     return results
 
 
@@ -468,38 +606,32 @@ def main(argv=None):
     SDPA-vs-bifurcated sweep (which `benchmarks.run` owns)."""
     import argparse
 
+    grid_desc = "; ".join(
+        f"'{name}' -> {path.name} (fast subset: {env}=1)"
+        for name, (_, path, env) in GRIDS.items())
     ap = argparse.ArgumentParser(
         prog="latency_decode",
         description=(
             "Bifurcated-decode implementation benchmarks (CPU, Pallas "
             "interpret mode): wall-clock per call plus the modelled "
-            "per-layer HBM bytes/step from core.io_model. Grids: 'quant' "
-            "{fused,fused_q8,two_pass,einsum,einsum_q8} -> "
-            "BENCH_quant_decode.json; 'multiprefix' flat-forest G in "
-            "{1,2,8} -> BENCH_multiprefix.json; 'tree' cascade L in "
-            "{1,2,3} (single prefix / flat forest / shared root + "
-            "children) -> BENCH_tree.json. Wall-clock columns are "
-            "indicative only off-TPU; the *_io_bytes columns are the "
-            "hardware-relevant object (paper Table 1 / Eq. 5-6 analog)."),
+            "per-layer HBM bytes/step from core.io_model. One registry "
+            f"drives every artifact-emitting sweep: {grid_desc}. "
+            "Wall-clock columns are indicative only off-TPU; the "
+            "*_io_bytes columns are the hardware-relevant object (paper "
+            "Table 1 / Eq. 5-6 analog)."),
         epilog=(
-            "Env subsets for CI: BENCH_QUANT_FAST=1, "
-            "BENCH_MULTIPREFIX_FAST=1, BENCH_TREE_FAST=1 restrict each "
-            "grid to its acceptance cells. The full paper-shaped sweep "
-            "(SDPA vs bifurcated + BENCH_fused_decode.json) runs via "
+            "The full paper-shaped sweep (SDPA vs bifurcated + "
+            "BENCH_fused_decode.json) runs via "
             "`python -m benchmarks.run --only latency_decode`."))
     ap.add_argument(
-        "--grid", choices=["quant", "multiprefix", "tree", "all"],
-        default="all",
+        "--grid", choices=[*GRIDS, "all"], default="all",
         help="which sweep(s) to run / which BENCH_*.json to (re)emit")
     args = ap.parse_args(argv)
 
     rep = lambda name, value: print(f"{name},{value}")
-    if args.grid in ("quant", "all"):
-        _quant_grid(rep)
-    if args.grid in ("multiprefix", "all"):
-        _multiprefix_grid(rep)
-    if args.grid in ("tree", "all"):
-        _tree_grid(rep)
+    for name, (fn, _, _) in GRIDS.items():
+        if args.grid in (name, "all"):
+            fn(rep)
 
 
 if __name__ == "__main__":

@@ -217,6 +217,15 @@ class ServeConfig:
     # symmetric scales, core/quantized.py — ~2x context KV traffic/storage
     # reduction; the per-sample decode arm stays bf16 either way)
     cache_dtype: str = "bfloat16"
+    # context storage substrate: "dense" (one fixed slab, the historical
+    # layout) | "paged" (page-pool store, core/paged.py — storage and
+    # decode DMA in ``page_size``-token pages of the LIVE length only).
+    # NOTE: paging rides the BIFURCATED path — when the BifurcationPolicy
+    # falls back to the standard cache (tiny workloads, paper FAQ #4),
+    # ``ctx_store`` is moot like every other context-arm knob
+    # (cache_dtype included).
+    ctx_store: str = "dense"
+    page_size: int = 128         # paged mode: tokens per pool page
     seed: int = 0
 
 
@@ -251,6 +260,15 @@ class TreeConfig:
     # node-segment dtype: "bfloat16" | "int8" (nodes quantize once at
     # admission — write-once read-many, per trie node)
     cache_dtype: str = "bfloat16"
+    # node storage substrate: "dense" (fixed node_capacity slabs) |
+    # "paged" (shared page pool, core/paged.py: nodes occupy only
+    # ceil(len/page_size) pages, freed nodes occupy — and stream — none)
+    ctx_store: str = "dense"
+    page_size: int = 128         # paged mode: tokens per pool page
+    # paged mode: pool size in pages; None = the full table envelope
+    # (n_nodes * ceil(node_capacity / page_size)). Smaller values
+    # oversubscribe capacity — admission then gates on FREE PAGES.
+    num_pages: Optional[int] = None
     seed: int = 0
 
 
@@ -278,4 +296,10 @@ class ForestConfig:
     # context-segment dtype: "bfloat16" | "int8" (segments quantize once at
     # admission — write-once read-many, per prefix group)
     cache_dtype: str = "bfloat16"
+    # segment storage substrate: "dense" (fixed ctx_capacity slabs) |
+    # "paged" (shared page pool, core/paged.py)
+    ctx_store: str = "dense"
+    page_size: int = 128         # paged mode: tokens per pool page
+    # paged mode: pool size in pages; None = the full table envelope
+    num_pages: Optional[int] = None
     seed: int = 0

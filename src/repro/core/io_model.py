@@ -249,6 +249,68 @@ def tree_decode_io_bytes(*, paths, node_lens, c_d, g, hd, p=1, n=1,
     }
 
 
+def paged_decode_io_bytes(*, node_lens, page_m, c_d, g, hd, b, p=1, n=1,
+                          impl="paged", bytes_per_el=2,
+                          node_capacity: Optional[int] = None,
+                          n_nodes: Optional[int] = None) -> dict:
+    """Per-layer HBM bytes of one PAGED decode step (core/paged.py +
+    the paged page-walk kernels) — and the two envelopes it sits between.
+
+    ``node_lens[i]`` is segment/node ``i``'s LIVE token count (0 = a FREE
+    segment). The paged kernel streams exactly the live pages, so its
+    context term is the PAGE-ROUNDED live length
+
+        sum_i ceil(len_i / page_m) * page_m        (0 for free segments)
+
+    — within one page of the algorithmic live-length floor per non-empty
+    segment, and typically within a few percent of it overall. The dense
+    kernels' envelope is ``n_nodes * node_capacity`` tokens regardless of
+    occupancy (pass both to get it; they default to the live set /
+    max(len) so the dense column still prints something sensible).
+
+      paged:    bf16 pool pages (2 bytes/el).
+      paged_q8: int8 pool pages + f32 per-(token, head) scale pages.
+
+    Returns {"per_node": [bytes...], "total", "live_total" (exact
+    live-length context + same dec/q/out — the floor), "dense_total" (the
+    padded-capacity envelope), "paged_overhead_vs_live" (total /
+    live_total, >= 1), "saving_vs_dense" (dense_total / total)}.
+    """
+    if impl not in ("paged", "paged_q8"):
+        raise ValueError(impl)
+    page_m = int(page_m)
+    if n_nodes is None:
+        n_nodes = len(node_lens)
+    if node_capacity is None:
+        node_capacity = max((int(m) for m in node_lens), default=0)
+
+    def ctx_bytes(tokens):
+        if impl == "paged_q8":
+            return quantized_ctx_bytes(m_c=tokens, g=g, hd=hd)
+        return 2 * g * tokens * hd * bytes_per_el
+
+    per_node = []
+    for m_i in node_lens:
+        pages = -(-int(m_i) // page_m)            # ceil; 0 pages when free
+        per_node.append(ctx_bytes(pages * page_m))
+    rows = b * p * n
+    dec = 2 * g * b * c_d * hd * bytes_per_el
+    q_io = rows * g * hd * bytes_per_el
+    out_io = rows * g * hd * bytes_per_el
+    fixed = dec + q_io + out_io
+    total = sum(per_node) + fixed
+    live_total = ctx_bytes(sum(int(m) for m in node_lens)) + fixed
+    dense_total = ctx_bytes(n_nodes * node_capacity) + fixed
+    return {
+        "per_node": per_node,
+        "total": total,
+        "live_total": live_total,
+        "dense_total": dense_total,
+        "paged_overhead_vs_live": total / max(live_total, 1),
+        "saving_vs_dense": dense_total / max(total, 1),
+    }
+
+
 def kv_speedup(*, b, m_c, m_d) -> float:
     """Pure KV-IO speedup bound: b(m_c+m_d) / (m_c + b m_d)."""
     return b * (m_c + m_d) / (m_c + b * m_d)

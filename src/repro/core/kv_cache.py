@@ -19,7 +19,9 @@ model can ``lax.scan`` over layers:
     segments + a static-depth slot -> node path table (cascade decoding);
     the forest cache is its depth == 1 special case.
 
-(int8-context twins of the bifurcated families live in core/quantized.py.)
+(int8-context twins of the bifurcated families live in core/quantized.py;
+PAGED peers of all six — page-pool storage with per-segment block tables
+instead of fixed-capacity dense slabs — live in core/paged.py.)
 All updates are functional (return a new cache).
 """
 from __future__ import annotations

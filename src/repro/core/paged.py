@@ -1,0 +1,710 @@
+"""Paged KV storage substrate: block-table caches over a shared page pool.
+
+The dense cache families (core/kv_cache.py, core/quantized.py) store every
+context segment / trie node as a fixed-capacity slab — short prefixes pay
+padded DMA up to the capacity, and the dense kernels' (g, N, nb) grids
+stream even fully-FREE segments and mask in-register. This module pages
+the context axis instead (vLLM-style block tables, per segment / per trie
+node):
+
+  * ``PagedKVStore`` / ``QuantPagedKVStore`` — the backing store: one
+    head-major page POOL ``(L, P, g, page_m, hd)`` (int8 values + f32
+    scale pages for the quant store) shared by every segment, plus a
+    per-segment page TABLE ``(N, ppn)`` of pool indices (-1 = unallocated)
+    and live lengths ``(N,)``. Capacity is allocated in ``page_m``-token
+    pages, so a segment occupies exactly ``ceil(len / page_m)`` pages no
+    matter its capacity envelope, and the pool may be SMALLER than
+    ``N * ppn`` pages (capacity oversubscription).
+
+  * ``PagedBifurcatedCache`` / ``PagedGroupedBifurcatedCache`` /
+    ``PagedPrefixTreeCache`` — paged peers of the six dense cache
+    families (each class covers its bf16 AND int8 configuration through
+    the store type, selected by ``ctx_quant``). Same admission surface as
+    the dense families (``from_prefill`` / ``write_context`` /
+    ``write_node`` + ``assign_slots`` / ``assign_paths``) with one
+    addition: writes take the page ids to use (host-allocated, see
+    ``PageAllocator``), and ``free_segment`` structurally retires a
+    segment — its pages drop out of the kernels' live-page walk, so a
+    freed segment costs ZERO decode bytes (the dense kernels keep
+    streaming retired capacity and mask it in-register).
+
+All paging state — pool contents, page tables, lengths, paths — is DATA,
+never shape: the decode dispatch compiles once per (pool, table, slots,
+depth) envelope and serves any admit/retire/readmit sequence, exactly like
+the dense slot-table machinery. The decode kernels walk a prefix-counted
+live-page list (kernels/ops.live_page_list) so the io_model's live-length
+byte envelope is the real bytes moved.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantized import quantize_ctx
+
+
+def pages_needed(n_tokens: int, page_m: int) -> int:
+    """ceil(n_tokens / page_m) — pages a segment of ``n_tokens`` occupies."""
+    return -(-int(n_tokens) // int(page_m))
+
+
+def gather_pages(pages: jnp.ndarray, page_tables: jnp.ndarray,
+                 seg_axis: int = 0) -> jnp.ndarray:
+    """Materialize dense per-segment slabs from a page pool (reference /
+    escape-hatch path only — the kernels never do this).
+
+    pages: (..., P, g, pm[, hd]) with the pool axis at ``seg_axis``;
+    page_tables: (N, ppn). Returns (..., N, g, ppn*pm[, hd]) with tokens of
+    unallocated pages zeroed — exactly the dense families' zero-padding, so
+    dense references run unchanged on the gathered view.
+    """
+    n_seg, ppn = page_tables.shape
+    safe = jnp.clip(page_tables, 0).reshape(-1)
+    x = jnp.take(pages, safe, axis=seg_axis)
+    # (..., N*ppn, g, pm[, hd]) -> (..., N, g, ppn*pm[, hd])
+    pre = x.shape[:seg_axis]
+    g, pm = x.shape[seg_axis + 1], x.shape[seg_axis + 2]
+    tail = x.shape[seg_axis + 3:]
+    x = x.reshape(*pre, n_seg, ppn, g, pm, *tail)
+    perm = tuple(range(seg_axis)) + (seg_axis, seg_axis + 2, seg_axis + 1,
+                                     seg_axis + 3) + tuple(
+        seg_axis + 4 + i for i in range(len(tail)))
+    x = x.transpose(*perm).reshape(*pre, n_seg, g, ppn * pm, *tail)
+    tok_valid = jnp.repeat(page_tables >= 0, pm, axis=1)   # (N, ppn*pm)
+    bshape = (1,) * seg_axis + (n_seg, 1, ppn * pm) + (1,) * len(tail)
+    return jnp.where(tok_valid[:, None, :].reshape(bshape), x, 0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PagedKVStore:
+    """bf16 (or any float) paged context store.
+
+    k_pages/v_pages: (L, P, g, page_m, hd) — the head-major page pool,
+    L-stacked over layers like every cache in the repo.
+    page_tables: (N, ppn) i32 — pool page per (segment, page slot); -1 =
+    unallocated. seg_lens: (N,) i32 — live token count per segment.
+    ``page_m`` is a STATIC pytree field (like the dense families'
+    ``ctx_layout``): mismatched page sizes fail loudly at tree-structure
+    comparison instead of silently misreading pages.
+    """
+
+    k_pages: jnp.ndarray
+    v_pages: jnp.ndarray
+    page_tables: jnp.ndarray
+    seg_lens: jnp.ndarray
+    page_m: int = dataclasses.field(default=128, metadata=dict(static=True))
+
+    @property
+    def num_pages(self) -> int:
+        return self.k_pages.shape[1]
+
+    @property
+    def n_segments(self) -> int:
+        return self.page_tables.shape[0]
+
+    @property
+    def pages_per_segment(self) -> int:
+        return self.page_tables.shape[1]
+
+    @property
+    def segment_capacity(self) -> int:
+        return self.pages_per_segment * self.page_m
+
+    @staticmethod
+    def init(n_layers, n_segments, pages_per_segment, num_pages, n_kv,
+             head_dim, page_m=128, dtype=jnp.bfloat16):
+        pool = (n_layers, num_pages, n_kv, page_m, head_dim)
+        return PagedKVStore(
+            k_pages=jnp.zeros(pool, dtype),
+            v_pages=jnp.zeros(pool, dtype),
+            page_tables=jnp.full((n_segments, pages_per_segment), -1,
+                                 jnp.int32),
+            seg_lens=jnp.zeros((n_segments,), jnp.int32),
+            page_m=page_m,
+        )
+
+    @staticmethod
+    def spec(n_layers, n_segments, pages_per_segment, num_pages, n_kv,
+             head_dim, page_m=128, dtype=jnp.bfloat16):
+        pool = jax.ShapeDtypeStruct(
+            (n_layers, num_pages, n_kv, page_m, head_dim), dtype)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        return PagedKVStore(
+            k_pages=pool, v_pages=pool,
+            page_tables=i32(n_segments, pages_per_segment),
+            seg_lens=i32(n_segments), page_m=page_m,
+        )
+
+    # ---- admission ----
+    def _prep(self, k_ctx, n_pg):
+        """Sequence-major (L, m, g, hd) -> head-major (L, g, n_pg*pm, hd)."""
+        m_new = k_ctx.shape[1]
+        k_new = k_ctx.transpose(0, 2, 1, 3)
+        pad = ((0, 0), (0, 0), (0, n_pg * self.page_m - m_new), (0, 0))
+        return jnp.pad(k_new.astype(self.k_pages.dtype), pad)
+
+    def write_segment(self, k_ctx, v_ctx, seg_idx, page_ids: Sequence[int]):
+        """Admit a prefilled (L, m_new, g, hd) sequence-major slice into
+        segment ``seg_idx`` using pool pages ``page_ids`` (host-allocated,
+        one per ``page_m`` tokens). The one-time transpose + page split
+        happen here — the decode hot path never pays them. Purely
+        functional, value-only: no recompile."""
+        L, m_new, g, hd = k_ctx.shape
+        pm = self.page_m
+        n_pg = pages_needed(m_new, pm)
+        if m_new > self.segment_capacity:
+            raise ValueError(
+                f"context of {m_new} tokens > segment capacity "
+                f"{self.segment_capacity} ({self.pages_per_segment} pages "
+                f"of {pm})")
+        if len(page_ids) != n_pg:
+            raise ValueError(
+                f"context of {m_new} tokens needs {n_pg} pages of {pm}, "
+                f"got {len(page_ids)} page ids")
+        k_new = self._prep(k_ctx, n_pg)
+        v_new = self._prep(v_ctx, n_pg)
+        kp, vp = self.k_pages, self.v_pages
+        for j, pid in enumerate(page_ids):
+            ksl = k_new[:, :, j * pm:(j + 1) * pm][:, None]
+            vsl = v_new[:, :, j * pm:(j + 1) * pm][:, None]
+            kp = jax.lax.dynamic_update_slice(kp, ksl, (0, pid, 0, 0, 0))
+            vp = jax.lax.dynamic_update_slice(vp, vsl, (0, pid, 0, 0, 0))
+        row = jnp.full((self.pages_per_segment,), -1, jnp.int32
+                       ).at[:n_pg].set(jnp.asarray(page_ids, jnp.int32))
+        return dataclasses.replace(
+            self, k_pages=kp, v_pages=vp,
+            page_tables=self.page_tables.at[seg_idx].set(row),
+            seg_lens=self.seg_lens.at[seg_idx].set(m_new),
+        )
+
+    def clear_segment(self, seg_idx):
+        """Structurally retire a segment: its table row empties and its
+        length zeroes, so its pages vanish from the kernels' live-page walk
+        (zero decode bytes). Pool contents are left as garbage — return
+        the page ids to a ``PageAllocator`` separately."""
+        return dataclasses.replace(
+            self,
+            page_tables=self.page_tables.at[seg_idx].set(-1),
+            seg_lens=self.seg_lens.at[seg_idx].set(0),
+        )
+
+    # ---- reference materialization (escape hatch / oracles only) ----
+    def dense_ctx(self):
+        """(k, v): (L, N, g, cap, hd) dense slabs — the dense "gmk" layout,
+        for the einsum references and differential oracles."""
+        return (gather_pages(self.k_pages, self.page_tables, seg_axis=1),
+                gather_pages(self.v_pages, self.page_tables, seg_axis=1))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantPagedKVStore:
+    """Int8 paged context store: int8 value pages + f32 per-(token, head)
+    scale pages, quantized ONCE at admission (write-once read-many, like
+    the dense quant families) with the attention logit scale PRE-FOLDED
+    into ``k_scale_pages``."""
+
+    k_pages: jnp.ndarray       # (L, P, g, pm, hd) int8
+    v_pages: jnp.ndarray
+    k_scale_pages: jnp.ndarray  # (L, P, g, pm) f32, logit scale pre-folded
+    v_scale_pages: jnp.ndarray
+    page_tables: jnp.ndarray
+    seg_lens: jnp.ndarray
+    page_m: int = dataclasses.field(default=128, metadata=dict(static=True))
+
+    num_pages = PagedKVStore.num_pages
+    n_segments = PagedKVStore.n_segments
+    pages_per_segment = PagedKVStore.pages_per_segment
+    segment_capacity = PagedKVStore.segment_capacity
+    clear_segment = PagedKVStore.clear_segment
+
+    @staticmethod
+    def init(n_layers, n_segments, pages_per_segment, num_pages, n_kv,
+             head_dim, page_m=128, dtype=jnp.bfloat16):
+        del dtype  # pool is int8 + f32 scales; kept for surface parity
+        pool = (n_layers, num_pages, n_kv, page_m, head_dim)
+        sc = (n_layers, num_pages, n_kv, page_m)
+        return QuantPagedKVStore(
+            k_pages=jnp.zeros(pool, jnp.int8),
+            v_pages=jnp.zeros(pool, jnp.int8),
+            k_scale_pages=jnp.zeros(sc, jnp.float32),
+            v_scale_pages=jnp.zeros(sc, jnp.float32),
+            page_tables=jnp.full((n_segments, pages_per_segment), -1,
+                                 jnp.int32),
+            seg_lens=jnp.zeros((n_segments,), jnp.int32),
+            page_m=page_m,
+        )
+
+    @staticmethod
+    def spec(n_layers, n_segments, pages_per_segment, num_pages, n_kv,
+             head_dim, page_m=128, dtype=jnp.bfloat16):
+        del dtype
+        pool = jax.ShapeDtypeStruct(
+            (n_layers, num_pages, n_kv, page_m, head_dim), jnp.int8)
+        sc = jax.ShapeDtypeStruct(
+            (n_layers, num_pages, n_kv, page_m), jnp.float32)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        return QuantPagedKVStore(
+            k_pages=pool, v_pages=pool, k_scale_pages=sc, v_scale_pages=sc,
+            page_tables=i32(n_segments, pages_per_segment),
+            seg_lens=i32(n_segments), page_m=page_m,
+        )
+
+    def write_segment(self, k_ctx, v_ctx, seg_idx, page_ids: Sequence[int]):
+        """Admit + quantize (L, m_new, g, hd) into segment ``seg_idx``:
+        quantize the live tokens exactly as the dense quant families (logit
+        scale folded into k scales, page-pad positions at zero scale — they
+        are masked by ``seg_lens`` in kernel and reference alike)."""
+        L, m_new, g, hd = k_ctx.shape
+        pm = self.page_m
+        n_pg = pages_needed(m_new, pm)
+        if m_new > self.segment_capacity:
+            raise ValueError(
+                f"context of {m_new} tokens > segment capacity "
+                f"{self.segment_capacity} ({self.pages_per_segment} pages "
+                f"of {pm})")
+        if len(page_ids) != n_pg:
+            raise ValueError(
+                f"context of {m_new} tokens needs {n_pg} pages of {pm}, "
+                f"got {len(page_ids)} page ids")
+        k_new = k_ctx.transpose(0, 2, 1, 3)   # (L, g, m_new, hd)
+        v_new = v_ctx.transpose(0, 2, 1, 3)
+        kq, ks = quantize_ctx(k_new, fold_scale=hd**-0.5)
+        vq, vs = quantize_ctx(v_new)
+        vpad = ((0, 0), (0, 0), (0, n_pg * pm - m_new), (0, 0))
+        spad = ((0, 0), (0, 0), (0, n_pg * pm - m_new))
+        kq, vq = jnp.pad(kq, vpad), jnp.pad(vq, vpad)
+        ks, vs = jnp.pad(ks, spad), jnp.pad(vs, spad)
+        kp, vp = self.k_pages, self.v_pages
+        ksp, vsp = self.k_scale_pages, self.v_scale_pages
+        for j, pid in enumerate(page_ids):
+            sl = slice(j * pm, (j + 1) * pm)
+            kp = jax.lax.dynamic_update_slice(
+                kp, kq[:, :, sl][:, None], (0, pid, 0, 0, 0))
+            vp = jax.lax.dynamic_update_slice(
+                vp, vq[:, :, sl][:, None], (0, pid, 0, 0, 0))
+            ksp = jax.lax.dynamic_update_slice(
+                ksp, ks[:, :, sl][:, None], (0, pid, 0, 0))
+            vsp = jax.lax.dynamic_update_slice(
+                vsp, vs[:, :, sl][:, None], (0, pid, 0, 0))
+        row = jnp.full((self.pages_per_segment,), -1, jnp.int32
+                       ).at[:n_pg].set(jnp.asarray(page_ids, jnp.int32))
+        return dataclasses.replace(
+            self, k_pages=kp, v_pages=vp,
+            k_scale_pages=ksp, v_scale_pages=vsp,
+            page_tables=self.page_tables.at[seg_idx].set(row),
+            seg_lens=self.seg_lens.at[seg_idx].set(m_new),
+        )
+
+    def dense_ctx(self):
+        """(kq, vq, ks, vs): dense int8 slabs (L, N, g, cap, hd) + scale
+        slabs (L, N, g, cap) for the dense q8 references."""
+        return (gather_pages(self.k_pages, self.page_tables, seg_axis=1),
+                gather_pages(self.v_pages, self.page_tables, seg_axis=1),
+                gather_pages(self.k_scale_pages, self.page_tables,
+                             seg_axis=1),
+                gather_pages(self.v_scale_pages, self.page_tables,
+                             seg_axis=1))
+
+
+def paged_store_family(ctx_quant: str = "none"):
+    """Map a context-quantization mode to its paged store class (the paged
+    analogue of ``ctx_cache_family``)."""
+    if ctx_quant == "int8":
+        return QuantPagedKVStore
+    if ctx_quant == "none":
+        return PagedKVStore
+    raise ValueError(f"unknown ctx_quant mode: {ctx_quant!r}")
+
+
+class PageAllocator:
+    """Host-side free-list page allocator (admission policy state, like the
+    engines' slot/group mirrors — the device never sees it). FIFO reuse, so
+    long-running serve loops naturally permute the pool; refcounts support
+    shared pages (trie ancestors hold their pages once per node, the node
+    refcount guards the node — ``share``/``release`` cover future
+    block-level sharing)."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages))
+        self._refs = [0] * num_pages
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: need {n} pages, have "
+                f"{len(self._free)} free of {self.num_pages}")
+        ids = self._free[:n]
+        del self._free[:n]
+        for i in ids:
+            self._refs[i] = 1
+        return ids
+
+    def share(self, ids: Sequence[int]):
+        for i in ids:
+            self._refs[i] += 1
+
+    def release(self, ids: Sequence[int]):
+        """Drop one reference per page; pages return to the free list at
+        refcount zero. Returns the pages actually freed."""
+        freed = []
+        for i in ids:
+            self._refs[i] -= 1
+            if self._refs[i] == 0:
+                self._free.append(i)
+                freed.append(i)
+        return freed
+
+
+# ---------------------------------------------------------------------------
+# Paged cache families (peers of the six dense families; the store type —
+# selected by ctx_quant — carries the bf16 / int8 distinction)
+# ---------------------------------------------------------------------------
+
+def _wipe_slots(cache, slot_mask):
+    wipe = slot_mask[None, :, None, None, None]
+    return (jnp.where(wipe, 0, cache.k_dec), jnp.where(wipe, 0, cache.v_dec))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PagedPrefixTreeCache:
+    """Paged peer of ``PrefixTreeCache`` / ``QuantPrefixTreeCache``: N trie
+    nodes backed by the shared page pool, static-depth slot -> node paths.
+    Node capacity is a TABLE envelope, not storage — a node occupies only
+    ``ceil(len / page_m)`` pool pages, freed nodes occupy none, and the
+    decode kernels stream exactly the live pages."""
+
+    store: object               # PagedKVStore | QuantPagedKVStore
+    paths: jnp.ndarray          # (depth, b) i32, -1 = level unused
+    k_dec: jnp.ndarray          # (L, b, C_d, g, hd)
+    v_dec: jnp.ndarray
+    dec_lens: jnp.ndarray       # (b,) i32
+
+    @property
+    def n_nodes(self) -> int:
+        return self.store.n_segments
+
+    @property
+    def depth(self) -> int:
+        return self.paths.shape[0]
+
+    @property
+    def node_capacity(self) -> int:
+        return self.store.segment_capacity
+
+    @property
+    def node_lens(self) -> jnp.ndarray:
+        return self.store.seg_lens
+
+    @property
+    def page_m(self) -> int:
+        return self.store.page_m
+
+    @property
+    def n_slots(self) -> int:
+        return self.k_dec.shape[1]
+
+    @property
+    def decode_capacity(self) -> int:
+        return self.k_dec.shape[2]
+
+    @staticmethod
+    def _store_geometry(n_nodes, m_c, page_m, num_pages):
+        ppn = pages_needed(m_c, page_m)
+        return ppn, (num_pages if num_pages is not None else n_nodes * ppn)
+
+    @staticmethod
+    def init(n_layers, n_nodes, depth, slots, m_c, dec_capacity, n_kv,
+             head_dim, dtype=jnp.bfloat16, page_m=128,
+             num_pages: Optional[int] = None, ctx_quant: str = "none"):
+        """Same parameter surface as ``PrefixTreeCache.init`` plus the
+        paging knobs: ``page_m`` (page size, tokens), ``num_pages`` (pool
+        size; default = the full ``n_nodes * ceil(m_c/page_m)`` envelope —
+        pass less to oversubscribe capacity)."""
+        ppn, num_pages = PagedPrefixTreeCache._store_geometry(
+            n_nodes, m_c, page_m, num_pages)
+        store = paged_store_family(ctx_quant).init(
+            n_layers, n_nodes, ppn, num_pages, n_kv, head_dim,
+            page_m=page_m, dtype=dtype)
+        dec = (n_layers, slots, dec_capacity, n_kv, head_dim)
+        return PagedPrefixTreeCache(
+            store=store,
+            paths=jnp.full((depth, slots), -1, jnp.int32),
+            k_dec=jnp.zeros(dec, dtype),
+            v_dec=jnp.zeros(dec, dtype),
+            dec_lens=jnp.zeros((slots,), jnp.int32),
+        )
+
+    @staticmethod
+    def spec(n_layers, n_nodes, depth, slots, m_c, dec_capacity, n_kv,
+             head_dim, dtype=jnp.bfloat16, page_m=128,
+             num_pages: Optional[int] = None, ctx_quant: str = "none"):
+        """Abstract (ShapeDtypeStruct) twin of ``init``."""
+        ppn, num_pages = PagedPrefixTreeCache._store_geometry(
+            n_nodes, m_c, page_m, num_pages)
+        store = paged_store_family(ctx_quant).spec(
+            n_layers, n_nodes, ppn, num_pages, n_kv, head_dim,
+            page_m=page_m, dtype=dtype)
+        dec = jax.ShapeDtypeStruct(
+            (n_layers, slots, dec_capacity, n_kv, head_dim), dtype)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        return PagedPrefixTreeCache(
+            store=store, paths=i32(depth, slots), k_dec=dec, v_dec=dec,
+            dec_lens=i32(slots),
+        )
+
+    def write_node(self, k_ctx, v_ctx, node_idx, page_ids: Sequence[int]):
+        """``PrefixTreeCache.write_node`` with explicit pool pages: the
+        (L, m_new, g, hd) slice (computed WITH its ancestors in context)
+        lands on ``page_ids``."""
+        return dataclasses.replace(
+            self, store=self.store.write_segment(
+                k_ctx, v_ctx, node_idx, page_ids))
+
+    def free_node(self, node_idx):
+        """Structurally retire a node: its pages leave the live-page walk
+        (zero decode bytes — return them to the allocator separately)."""
+        return dataclasses.replace(
+            self, store=self.store.clear_segment(node_idx))
+
+    def assign_paths(self, slot_mask, path_column):
+        """Same slot-table update as ``PrefixTreeCache.assign_paths``."""
+        k_dec, v_dec = _wipe_slots(self, slot_mask)
+        return dataclasses.replace(
+            self,
+            paths=jnp.where(slot_mask[None, :], path_column[:, None],
+                            self.paths),
+            dec_lens=jnp.where(slot_mask, 0, self.dec_lens),
+            k_dec=k_dec, v_dec=v_dec,
+        )
+
+    # ---- decode-step adapter surface (shared by all paged families) ----
+    def slot_paths(self) -> jnp.ndarray:
+        return self.paths
+
+    def slot_dec_lens(self) -> jnp.ndarray:
+        return self.dec_lens
+
+    def slot_context_lens(self):
+        """(b,) i32 — total live context per slot (path node lengths
+        summed; -1 levels contribute zero)."""
+        safe = jnp.clip(self.paths, 0, self.n_nodes - 1)
+        per_level = jnp.where(self.paths >= 0,
+                              jnp.take(self.store.seg_lens, safe), 0)
+        return jnp.sum(per_level, axis=0).astype(jnp.int32)
+
+    def advance_decode(self, k_dec, v_dec, n: int):
+        return dataclasses.replace(
+            self, k_dec=k_dec, v_dec=v_dec, dec_lens=self.dec_lens + n)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PagedGroupedBifurcatedCache:
+    """Paged peer of ``GroupedBifurcatedCache`` / its quant twin: G flat
+    prefix segments backed by the page pool, a (b,) -> group slot table.
+    Exactly the depth-1 special case of ``PagedPrefixTreeCache`` — kept as
+    its own class so the forest engine's dispatch and bookkeeping mirror
+    the dense family one-for-one."""
+
+    store: object               # PagedKVStore | QuantPagedKVStore
+    group_ids: jnp.ndarray      # (b,) i32
+    k_dec: jnp.ndarray
+    v_dec: jnp.ndarray
+    dec_lens: jnp.ndarray
+
+    @property
+    def n_groups(self) -> int:
+        return self.store.n_segments
+
+    @property
+    def context_capacity(self) -> int:
+        return self.store.segment_capacity
+
+    @property
+    def ctx_lens(self) -> jnp.ndarray:
+        return self.store.seg_lens
+
+    @property
+    def page_m(self) -> int:
+        return self.store.page_m
+
+    @property
+    def n_slots(self) -> int:
+        return self.k_dec.shape[1]
+
+    @property
+    def decode_capacity(self) -> int:
+        return self.k_dec.shape[2]
+
+    @staticmethod
+    def init(n_layers, n_groups, slots, m_c, dec_capacity, n_kv, head_dim,
+             dtype=jnp.bfloat16, page_m=128,
+             num_pages: Optional[int] = None, ctx_quant: str = "none"):
+        """Same parameter surface as ``GroupedBifurcatedCache.init`` plus
+        the paging knobs (see ``PagedPrefixTreeCache.init``)."""
+        ppn, num_pages = PagedPrefixTreeCache._store_geometry(
+            n_groups, m_c, page_m, num_pages)
+        store = paged_store_family(ctx_quant).init(
+            n_layers, n_groups, ppn, num_pages, n_kv, head_dim,
+            page_m=page_m, dtype=dtype)
+        dec = (n_layers, slots, dec_capacity, n_kv, head_dim)
+        return PagedGroupedBifurcatedCache(
+            store=store,
+            group_ids=jnp.zeros((slots,), jnp.int32),
+            k_dec=jnp.zeros(dec, dtype),
+            v_dec=jnp.zeros(dec, dtype),
+            dec_lens=jnp.zeros((slots,), jnp.int32),
+        )
+
+    @staticmethod
+    def spec(n_layers, n_groups, slots, m_c, dec_capacity, n_kv, head_dim,
+             dtype=jnp.bfloat16, page_m=128,
+             num_pages: Optional[int] = None, ctx_quant: str = "none"):
+        ppn, num_pages = PagedPrefixTreeCache._store_geometry(
+            n_groups, m_c, page_m, num_pages)
+        store = paged_store_family(ctx_quant).spec(
+            n_layers, n_groups, ppn, num_pages, n_kv, head_dim,
+            page_m=page_m, dtype=dtype)
+        dec = jax.ShapeDtypeStruct(
+            (n_layers, slots, dec_capacity, n_kv, head_dim), dtype)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        return PagedGroupedBifurcatedCache(
+            store=store, group_ids=i32(slots), k_dec=dec, v_dec=dec,
+            dec_lens=i32(slots),
+        )
+
+    def write_context(self, k_ctx, v_ctx, group_idx,
+                      page_ids: Sequence[int]):
+        """``GroupedBifurcatedCache.write_context`` with explicit pool
+        pages."""
+        return dataclasses.replace(
+            self, store=self.store.write_segment(
+                k_ctx, v_ctx, group_idx, page_ids))
+
+    def free_group(self, group_idx):
+        return dataclasses.replace(
+            self, store=self.store.clear_segment(group_idx))
+
+    def assign_slots(self, slot_mask, group_idx):
+        """Same slot-table update as ``GroupedBifurcatedCache
+        .assign_slots``."""
+        k_dec, v_dec = _wipe_slots(self, slot_mask)
+        return dataclasses.replace(
+            self,
+            group_ids=jnp.where(slot_mask, group_idx, self.group_ids),
+            dec_lens=jnp.where(slot_mask, 0, self.dec_lens),
+            k_dec=k_dec, v_dec=v_dec,
+        )
+
+    # ---- decode-step adapter surface ----
+    def slot_paths(self) -> jnp.ndarray:
+        return self.group_ids.astype(jnp.int32)[None, :]   # depth == 1
+
+    def slot_dec_lens(self) -> jnp.ndarray:
+        return self.dec_lens
+
+    def slot_context_lens(self):
+        return jnp.take(self.store.seg_lens, self.group_ids).astype(
+            jnp.int32)
+
+    def advance_decode(self, k_dec, v_dec, n: int):
+        return dataclasses.replace(
+            self, k_dec=k_dec, v_dec=v_dec, dec_lens=self.dec_lens + n)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PagedBifurcatedCache:
+    """Paged peer of ``BifurcatedCache`` / ``QuantBifurcatedCache``: ONE
+    shared context (a single-segment store, pages allocated sequentially at
+    prefill) + the per-sample decode arm. The single-prefix engine's
+    drop-in paged mode: page-granular storage and the live-page decode walk
+    with the paper's original workload."""
+
+    store: object               # PagedKVStore | QuantPagedKVStore
+    k_dec: jnp.ndarray          # (L, b, C_d, g, hd)
+    v_dec: jnp.ndarray
+    dec_length: jnp.ndarray     # scalar i32
+
+    @property
+    def context_len(self) -> jnp.ndarray:
+        """LIVE context length — runtime data under paging (the dense
+        family's static shape becomes a value here)."""
+        return self.store.seg_lens[0]
+
+    @property
+    def page_m(self) -> int:
+        return self.store.page_m
+
+    @property
+    def decode_capacity(self) -> int:
+        return self.k_dec.shape[2]
+
+    @staticmethod
+    def from_prefill(k_ctx, v_ctx, batch, dec_capacity, dtype=jnp.bfloat16,
+                     page_m=128, ctx_quant: str = "none"):
+        """Build from a single-context prefill result (L, m_c, g, hd) —
+        the same surface as the dense families' ``from_prefill`` plus the
+        page size. The pool is sized to exactly ``ceil(m_c / page_m)``
+        pages (ids 0..n-1): single-context serving has no oversubscription
+        to manage, the win is the page-granular decode walk + storage."""
+        n_layers, m_c, n_groups, head_dim = k_ctx.shape
+        n_pg = pages_needed(m_c, page_m)
+        store = paged_store_family(ctx_quant).init(
+            n_layers, 1, n_pg, n_pg, n_groups, head_dim,
+            page_m=page_m, dtype=dtype)
+        store = store.write_segment(k_ctx, v_ctx, 0, list(range(n_pg)))
+        dec = (n_layers, batch, dec_capacity, n_groups, head_dim)
+        return PagedBifurcatedCache(
+            store=store,
+            k_dec=jnp.zeros(dec, dtype),
+            v_dec=jnp.zeros(dec, dtype),
+            dec_length=jnp.zeros((), jnp.int32),
+        )
+
+    @staticmethod
+    def spec(n_layers, batch, m_c, dec_capacity, n_groups, head_dim,
+             dtype=jnp.bfloat16, page_m=128, ctx_quant: str = "none"):
+        """Abstract twin of ``from_prefill``'s result — same parameter
+        surface as ``BifurcatedCache.spec`` plus the paging knobs."""
+        n_pg = pages_needed(m_c, page_m)
+        store = paged_store_family(ctx_quant).spec(
+            n_layers, 1, n_pg, n_pg, n_groups, head_dim,
+            page_m=page_m, dtype=dtype)
+        dec = jax.ShapeDtypeStruct(
+            (n_layers, batch, dec_capacity, n_groups, head_dim), dtype)
+        return PagedBifurcatedCache(
+            store=store, k_dec=dec, v_dec=dec,
+            dec_length=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+
+    # ---- decode-step adapter surface ----
+    def slot_paths(self) -> jnp.ndarray:
+        b = self.k_dec.shape[1]
+        return jnp.zeros((1, b), jnp.int32)     # every slot on segment 0
+
+    def slot_dec_lens(self) -> jnp.ndarray:
+        b = self.k_dec.shape[1]
+        return jnp.broadcast_to(self.dec_length, (b,))
+
+    def slot_context_lens(self):
+        b = self.k_dec.shape[1]
+        return jnp.broadcast_to(self.store.seg_lens[0], (b,))
+
+    def advance_decode(self, k_dec, v_dec, n: int):
+        return dataclasses.replace(
+            self, k_dec=k_dec, v_dec=v_dec, dec_length=self.dec_length + n)
+
+
+PAGED_CACHE_FAMILIES = (PagedBifurcatedCache, PagedGroupedBifurcatedCache,
+                        PagedPrefixTreeCache)

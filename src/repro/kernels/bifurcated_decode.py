@@ -2,7 +2,7 @@
 
 The paper's context GEMM (⟨q, K_c⟩, Eq. 3) is the memory-IO hot spot of
 shared-prefix batch decoding: K_c is the one tensor whose HBM traffic the
-technique eliminates b-fold. Seven kernels live here:
+technique eliminates b-fold. Nine kernels live here:
 
 ``fused_bifurcated_decode`` — the deployable single-pass path. One
   ``pallas_call`` over grid ``(g, nb_ctx + 1)``: for each kv group the
@@ -42,6 +42,17 @@ technique eliminates b-fold. Seven kernels live here:
   DMA'd from HBM once per kv head per step no matter how many paths
   traverse it — the flat forest kernels above are the depth == 1 special
   case and the reduction is bit-identical.
+
+``paged_fused_bifurcated_decode`` / ``..._q8`` — the PAGED substrate's
+  general form (core/paged.py): context KV lives in a head-major page pool
+  addressed through per-segment block tables, and the dense kernels'
+  (segment, block) grid axes collapse into one page-walk axis driven by a
+  scalar-prefetched LIVE-page list — fully-FREE segments and pages past
+  each segment's live length are never DMA'd (structural early exit, not
+  in-register masking). Single-prefix decoding is one segment with
+  all-zero paths, the forest is depth == 1, the trie the full path table;
+  on the same logical contents the output is bit-identical to the dense
+  kernels at ``page_m == block_m``.
 
 ``context_flash_partials`` — the historical two-pass building block (context
   arm only, spills unnormalized partials to HBM for a host-side merge with
@@ -1010,6 +1021,368 @@ def tree_fused_bifurcated_decode_q8(
         interpret=interpret,
     )(q, k_ctx_q, v_ctx_q, k_scale, v_scale, path_rows, ctx_bias,
       k_dec, v_dec, dec_bias)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Paged fused kernels: page-pool storage, DMA-eliding page-walk grid
+# ---------------------------------------------------------------------------
+
+def _paged_fused_kernel(
+    # scalar-prefetch refs (SMEM, available to the index maps too):
+    pid_ref,    # (max_pages,) i32 — page-pool index of list position i;
+                #   entries past n_live REPEAT the last live page so the
+                #   revisiting rule elides their DMA entirely
+    pseg_ref,   # (max_pages,) i32 — segment id owning the page at pos i
+    nlive_ref,  # (1,) i32 — number of live pages (page-walk early exit)
+    # tensor operands:
+    q_ref,      # (1, rows, hd)
+    k_ref,      # (1, 1, pm, hd) — ONE page of the pool (block (page, gk))
+    v_ref,      # (1, 1, pm, hd)
+    path_ref,   # (depth, rows, 128) i32 — lane-replicated row -> segment id
+                #   per trie level (-1 = level unused by that row)
+    cb_ref,     # (1, pm) f32 — per-list-position ragged-tail bias
+    kd_ref,     # (1, ld, hd)      — ALL slots' decode keys, group-major
+    vd_ref,     # (1, ld, hd)
+    bias_ref,   # (1, ld) f32      — decode-slot mask bias (0 / NEG_INF)
+    out_ref,    # out: (1, rows, hd) — normalized attention output
+    acc_scr,    # scratch (rows, hd) f32
+    m_scr,      # scratch (rows, 128) f32
+    l_scr,      # scratch (rows, 128) f32
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    depth: int,
+):
+    """Paged generalization of ``_tree_fused_kernel``: the segment×block
+    grid collapses into ONE page-walk axis driven by a scalar-prefetched
+    live-page list. Grid step i loads pool page ``pid_ref[i]`` — the index
+    map reads the prefetched list, so which HBM bytes move is runtime DATA
+    — and the per-block op sequence (scale, ragged-tail bias, path-
+    membership mask, online update) is IDENTICAL to the dense tree kernel,
+    which is what makes fully-populated pages bit-exact against it.
+
+    DMA elision is structural, not masked: list entries past ``n_live``
+    repeat the last live page (same block index ⇒ the revisiting rule skips
+    the copy) and compute is gated on ``i < n_live`` — fully-FREE segments
+    and pages past each segment's live length simply never appear in the
+    list. Exactness of skipping them is the same argument as the tree
+    kernel's node skipping: a skipped block would have contributed
+    exp(NEG_INF − m) == 0 columns (or pre-first-column garbage wiped by the
+    ``corr == 0`` rescale), so the running (max, sumexp, acc) state is
+    bit-identical with or without it."""
+    i = pl.program_id(1)
+    n_ctx = pl.num_programs(1) - 1   # page-walk steps; last = decode arm
+
+    @pl.when(i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0]                      # (rows, hd)
+
+    @pl.when((i < n_ctx) & (i < nlive_ref[0]))
+    def _context_page():
+        k = k_ref[0, 0]               # (pm, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                      # (rows, pm)
+        # ragged per-segment tail (0 / NEG_INF, covers page-pad positions)
+        s = s + cb_ref[...]
+        # path membership against the segment OWNING this page (unrolled
+        # over the static depth; -1 never matches) — same mask op sequence
+        # as the dense tree kernel.
+        seg = pseg_ref[i]
+        assigned = path_ref[0][:, :1] == seg   # (rows, 1)
+        for lvl in range(1, depth):
+            assigned |= path_ref[lvl][:, :1] == seg
+        s = jnp.where(assigned, s, NEG_INF)
+        _online_update(s, v, acc_scr, m_scr, l_scr)
+
+    @pl.when(i == n_ctx)
+    def _decode_arm_and_flush():
+        kd = kd_ref[0]                # (ld, hd)
+        vd = vd_ref[0]
+        sd = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                      # (rows, ld)
+        sd = sd + bias_ref[...]        # slot validity + ld padding
+        row_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 0) // pn
+        col_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 1) // c_d
+        sd = jnp.where(row_s == col_s, sd, NEG_INF)
+
+        acc, l_new = _online_update(sd, vd, acc_scr, m_scr, l_scr)
+        out_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(out_ref.dtype)
+
+
+def paged_fused_bifurcated_decode(
+    q: jnp.ndarray,          # (g, rows, hd)  rows = b * p * n
+    k_pages: jnp.ndarray,    # (P, g, pm, hd) — head-major page pool
+    v_pages: jnp.ndarray,    # (P, g, pm, hd)
+    page_ids: jnp.ndarray,   # (max_pages,) i32 — live pages first, tail
+                             #   repeating the last live page
+    page_segs: jnp.ndarray,  # (max_pages,) i32 — owning segment per entry
+    n_live: jnp.ndarray,     # (1,) i32 — live page count
+    path_rows: jnp.ndarray,  # (depth, rows, 128) i32 lane-replicated
+                             #   row -> segment id per level (-1 = unused)
+    page_bias: jnp.ndarray,  # (max_pages, pm) f32 — per-entry ragged bias
+    k_dec: jnp.ndarray,      # (g, b * c_d, hd) — group-major flattened
+    v_dec: jnp.ndarray,      # (g, b * c_d, hd)
+    dec_bias: jnp.ndarray,   # (1, b * c_d) f32
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-pallas_call PAGED bifurcated decode: returns the normalized
+    (g, rows, hd) attention output.
+
+    HBM traffic per layer-step: the ``n_live`` live pool pages once per kv
+    head (pm tokens each — page-rounded LIVE length, not padded capacity),
+    the b*c_d decode slots, q, the page list/bias, and the output. The
+    page walk is driven by scalar-prefetched runtime data, so which pages
+    stream changes per step with ZERO recompiles; grid length is the
+    static page-table envelope (free steps revisit the last live page —
+    no DMA — and skip compute). Same no-spill structure as the dense
+    kernels; bit-identical to ``tree_fused_bifurcated_decode`` on the same
+    logical contents when ``pm`` equals its ``block_m``.
+    """
+    depth = path_rows.shape[0]
+    g, rows, hd = q.shape
+    pm = k_pages.shape[2]
+    max_pages = page_ids.shape[0]
+
+    ld = k_dec.shape[1]
+    ld_pad = (-ld) % 128   # lane-align the decode tile
+    if ld_pad:
+        k_dec = jnp.pad(k_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        v_dec = jnp.pad(v_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        dec_bias = jnp.pad(dec_bias, ((0, 0), (0, ld_pad)),
+                           constant_values=NEG_INF)
+    ld_full = ld + ld_pad
+
+    kernel = functools.partial(
+        _paged_fused_kernel, scale=scale, c_d=c_d, pn=pn, depth=depth
+    )
+    last = max_pages - 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(g, max_pages + 1),
+        in_specs=[
+            pl.BlockSpec((1, rows, hd),
+                         lambda gk, i, pid, seg, nl: (gk, 0, 0)),
+            # the page walk: block index = prefetched pool id. During the
+            # decode step (and past n_live) the index pins to the previous
+            # entry, so the revisiting rule skips the DMA.
+            pl.BlockSpec((1, 1, pm, hd),
+                         lambda gk, i, pid, seg, nl:
+                         (pid[jnp.minimum(i, last)], gk, 0, 0)),
+            pl.BlockSpec((1, 1, pm, hd),
+                         lambda gk, i, pid, seg, nl:
+                         (pid[jnp.minimum(i, last)], gk, 0, 0)),
+            pl.BlockSpec((depth, rows, 128),
+                         lambda gk, i, pid, seg, nl: (0, 0, 0)),
+            pl.BlockSpec((1, pm),
+                         lambda gk, i, pid, seg, nl:
+                         (jnp.minimum(i, last), 0)),
+            pl.BlockSpec((1, ld_full, hd),
+                         lambda gk, i, pid, seg, nl: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full, hd),
+                         lambda gk, i, pid, seg, nl: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full),
+                         lambda gk, i, pid, seg, nl: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, hd),
+                               lambda gk, i, pid, seg, nl: (gk, 0, 0)),
+        scratch_shapes=[
+            # fp32 VMEM accumulators — never spilled to HBM; the page walk
+            # adds grid steps, not VMEM residency (working set = one page
+            # of K/V + the usual q/decode/stat tiles).
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, rows, hd), q.dtype),
+        interpret=interpret,
+    )(page_ids, page_segs, n_live,
+      q, k_pages, v_pages, path_rows, page_bias, k_dec, v_dec, dec_bias)
+    return out
+
+
+def _paged_fused_q8_kernel(
+    pid_ref,    # (max_pages,) i32 — scalar-prefetched page list
+    pseg_ref,   # (max_pages,) i32
+    nlive_ref,  # (1,) i32
+    q_ref,      # (1, rows, hd)
+    k_ref,      # (1, 1, pm, hd) int8 — quantized pool page
+    v_ref,      # (1, 1, pm, hd) int8
+    ks_ref,     # (1, 1, pm) f32 — per-(token, head) K scales, logit scale
+                #   PRE-FOLDED at quantize time
+    vs_ref,     # (1, 1, pm) f32
+    path_ref,   # (depth, rows, 128) i32
+    cb_ref,     # (1, pm) f32
+    kd_ref,     # (1, ld, hd) bf16
+    vd_ref,     # (1, ld, hd)
+    bias_ref,   # (1, ld) f32
+    out_ref,    # out: (1, rows, hd)
+    acc_scr,    # scratch (rows, hd) f32
+    m_scr,      # scratch (rows, 128) f32
+    l_scr,      # scratch (rows, 128) f32
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    depth: int,
+):
+    """Quantized twin of ``_paged_fused_kernel``: int8 pool pages + f32
+    scale pages walked by the same prefetched list, dequantized in-register
+    — identical running fp32 VMEM state and in-kernel decode-arm merge,
+    bit-identical per-page op sequence to ``_tree_fused_q8_kernel``."""
+    i = pl.program_id(1)
+    n_ctx = pl.num_programs(1) - 1
+
+    @pl.when(i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0]                      # (rows, hd)
+
+    @pl.when((i < n_ctx) & (i < nlive_ref[0]))
+    def _context_page():
+        k = k_ref[0, 0].astype(jnp.float32)   # int8 -> f32, in-register
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                              # (rows, pm) — raw q·K_q
+        s = s * ks_ref[0]              # fold s_k (logit scale pre-folded)
+        s = s + cb_ref[...]            # ragged per-segment tail
+        seg = pseg_ref[i]
+        assigned = path_ref[0][:, :1] == seg   # (rows, 1)
+        for lvl in range(1, depth):
+            assigned |= path_ref[lvl][:, :1] == seg
+        s = jnp.where(assigned, s, NEG_INF)
+        _online_update(s, v, acc_scr, m_scr, l_scr, p_scale=vs_ref[0])
+
+    @pl.when(i == n_ctx)
+    def _decode_arm_and_flush():
+        kd = kd_ref[0]                # (ld, hd) bf16
+        vd = vd_ref[0]
+        sd = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                      # (rows, ld)
+        sd = sd + bias_ref[...]
+        row_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 0) // pn
+        col_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 1) // c_d
+        sd = jnp.where(row_s == col_s, sd, NEG_INF)
+
+        acc, l_new = _online_update(sd, vd, acc_scr, m_scr, l_scr)
+        out_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(out_ref.dtype)
+
+
+def paged_fused_bifurcated_decode_q8(
+    q: jnp.ndarray,          # (g, rows, hd)  rows = b * p * n
+    k_pages_q: jnp.ndarray,  # (P, g, pm, hd) int8 — quantized page pool
+    v_pages_q: jnp.ndarray,  # (P, g, pm, hd) int8
+    k_scale_pages: jnp.ndarray,  # (P, g, pm) f32 — logit scale pre-folded
+    v_scale_pages: jnp.ndarray,  # (P, g, pm) f32
+    page_ids: jnp.ndarray,   # (max_pages,) i32
+    page_segs: jnp.ndarray,  # (max_pages,) i32
+    n_live: jnp.ndarray,     # (1,) i32
+    path_rows: jnp.ndarray,  # (depth, rows, 128) i32
+    page_bias: jnp.ndarray,  # (max_pages, pm) f32
+    k_dec: jnp.ndarray,      # (g, b * c_d, hd) bf16
+    v_dec: jnp.ndarray,      # (g, b * c_d, hd)
+    dec_bias: jnp.ndarray,   # (1, b * c_d) f32
+    *,
+    scale: float,
+    c_d: int,
+    pn: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-pallas_call quantized PAGED decode: the live pool pages
+    stream as int8 + f32 scale pages (half the dominant HBM term) walked
+    by the same prefetched page list, no dequantized KV tensor or fp32
+    partial ever in HBM. Bit-identical to
+    ``tree_fused_bifurcated_decode_q8`` on the same logical contents when
+    ``pm`` equals its ``block_m``."""
+    depth = path_rows.shape[0]
+    g, rows, hd = q.shape
+    pm = k_pages_q.shape[2]
+    max_pages = page_ids.shape[0]
+
+    ld = k_dec.shape[1]
+    ld_pad = (-ld) % 128   # lane-align the decode tile
+    if ld_pad:
+        k_dec = jnp.pad(k_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        v_dec = jnp.pad(v_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        dec_bias = jnp.pad(dec_bias, ((0, 0), (0, ld_pad)),
+                           constant_values=NEG_INF)
+    ld_full = ld + ld_pad
+
+    kernel = functools.partial(
+        _paged_fused_q8_kernel, scale=scale, c_d=c_d, pn=pn, depth=depth
+    )
+    last = max_pages - 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(g, max_pages + 1),
+        in_specs=[
+            pl.BlockSpec((1, rows, hd),
+                         lambda gk, i, pid, seg, nl: (gk, 0, 0)),
+            pl.BlockSpec((1, 1, pm, hd),
+                         lambda gk, i, pid, seg, nl:
+                         (pid[jnp.minimum(i, last)], gk, 0, 0)),
+            pl.BlockSpec((1, 1, pm, hd),
+                         lambda gk, i, pid, seg, nl:
+                         (pid[jnp.minimum(i, last)], gk, 0, 0)),
+            pl.BlockSpec((1, 1, pm),
+                         lambda gk, i, pid, seg, nl:
+                         (pid[jnp.minimum(i, last)], gk, 0)),
+            pl.BlockSpec((1, 1, pm),
+                         lambda gk, i, pid, seg, nl:
+                         (pid[jnp.minimum(i, last)], gk, 0)),
+            pl.BlockSpec((depth, rows, 128),
+                         lambda gk, i, pid, seg, nl: (0, 0, 0)),
+            pl.BlockSpec((1, pm),
+                         lambda gk, i, pid, seg, nl:
+                         (jnp.minimum(i, last), 0)),
+            pl.BlockSpec((1, ld_full, hd),
+                         lambda gk, i, pid, seg, nl: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full, hd),
+                         lambda gk, i, pid, seg, nl: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full),
+                         lambda gk, i, pid, seg, nl: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, hd),
+                               lambda gk, i, pid, seg, nl: (gk, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, rows, hd), q.dtype),
+        interpret=interpret,
+    )(page_ids, page_segs, n_live,
+      q, k_pages_q, v_pages_q, k_scale_pages, v_scale_pages,
+      path_rows, page_bias, k_dec, v_dec, dec_bias)
     return out
 
 

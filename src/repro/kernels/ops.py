@@ -46,6 +46,13 @@ concatenation of every node on its path. The path table, node lengths and
 node contents are all runtime data; ``depth`` is the only new static —
 one compile per trie depth. At depth == 1 they are token-identical to the
 grouped dispatchers (and hence, with one node, to the single-prefix ones).
+
+``paged_bifurcated_decode_attention`` / ``..._q8`` are the PAGED-substrate
+dispatchers (core/paged.py): context KV in a head-major page pool +
+per-segment block tables, the kernel walking a prefix-counted live-page
+list (``live_page_list``) so free segments and dead capacity are never
+DMA'd. The dense dispatchers above remain the escape hatch and the
+differential oracles for them.
 """
 from __future__ import annotations
 
@@ -61,6 +68,8 @@ from repro.kernels.bifurcated_decode import (
     fused_bifurcated_decode_q8,
     grouped_fused_bifurcated_decode,
     grouped_fused_bifurcated_decode_q8,
+    paged_fused_bifurcated_decode,
+    paged_fused_bifurcated_decode_q8,
     tree_fused_bifurcated_decode,
     tree_fused_bifurcated_decode_q8,
 )
@@ -461,6 +470,166 @@ def tree_bifurcated_decode_attention_q8(
         qk, kc, vc, ks, vs, path_rows, ctx_bias, kd, vd, bias,
         scale=scale, c_d=c_d, pn=p * n,
         block_m=block_m, interpret=interpret,
+    )  # (g, b*p*n, hd), normalized
+    out = out.reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged dispatchers: page-pool caches, DMA-eliding live-page walk
+# ---------------------------------------------------------------------------
+
+def live_page_list(page_tables, seg_lens, page_m: int):
+    """Prefix-counted LIVE page list for the paged kernels — pure data.
+
+    page_tables: (N, ppn) i32 pool indices per segment (-1 = unallocated);
+    seg_lens: (N,) i32 live token count per segment. A table entry is LIVE
+    iff its segment needs it (slot j < ceil(seg_len / page_m)) and it is
+    allocated. Returns
+
+      page_ids  (N*ppn,) i32 — live pool pages first, in (segment, page)
+                order — the dense kernels' (node, block) stream order,
+                which is what makes the paged walk bit-comparable — with
+                the tail REPEATING the last live page (revisit ⇒ no DMA);
+      page_segs (N*ppn,) i32 — owning segment per entry (same padding);
+      n_live    (1,) i32     — live page count (kernel early-exit bound);
+      page_bias (N*ppn, page_m) f32 — 0 within the owning segment's live
+                length, NEG_INF past it (the ragged-tail mask, per entry).
+
+    Everything is traced jnp — which pages stream is runtime DATA, so the
+    decode dispatch never recompiles across admit/retire/readmit.
+    """
+    n_seg, ppn = page_tables.shape
+    page_m = int(page_m)
+    needed = -(-seg_lens // page_m)                        # (N,) ceil
+    j = jnp.arange(ppn, dtype=jnp.int32)
+    live = (j[None, :] < needed[:, None]) & (page_tables >= 0)
+    flat_live = live.reshape(-1)
+    # stable compaction: live entries first, (segment, page) order kept
+    order = jnp.argsort(~flat_live, stable=True)
+    ids = jnp.clip(page_tables, 0).reshape(-1)[order]
+    segs = jnp.repeat(jnp.arange(n_seg, dtype=jnp.int32), ppn)[order]
+    offs = jnp.tile(j * page_m, n_seg)[order]              # token offset
+    n_live = jnp.sum(flat_live).astype(jnp.int32)
+    last = jnp.maximum(n_live - 1, 0)
+    pos = jnp.arange(n_seg * ppn)
+    ids = jnp.where(pos < n_live, ids, jnp.take(ids, last)).astype(jnp.int32)
+    segs = jnp.where(pos < n_live, segs, jnp.take(segs, last)).astype(jnp.int32)
+    offs = jnp.where(pos < n_live, offs, jnp.take(offs, last))
+    valid_to = jnp.take(seg_lens, jnp.clip(segs, 0, n_seg - 1))
+    cols = offs[:, None] + jnp.arange(page_m)[None, :]
+    page_bias = jnp.where(cols < valid_to[:, None], 0.0, NEG_INF
+                          ).astype(jnp.float32)
+    return ids, segs, n_live[None], page_bias
+
+
+def _paged_operands(q, paths, k_dec, v_dec, dec_mask):
+    """Shared paged-dispatch plumbing: kernel-major q rows, lane-replicated
+    per-level row -> segment assignment, group-major flattened decode arm
+    + slot-validity bias (the page list itself comes from
+    ``live_page_list``)."""
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    depth = paths.shape[0]
+    qk = q.transpose(1, 0, 2, 3, 4).reshape(g, b * p * n, hd)
+    pr = jnp.repeat(paths.astype(jnp.int32), p * n, axis=1)  # (depth, rows)
+    path_rows = jnp.broadcast_to(pr[:, :, None], (depth, b * p * n, 128))
+    kd = k_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+    vd = v_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+    bias = jnp.where(dec_mask.reshape(1, b * c_d), 0.0, NEG_INF
+                     ).astype(jnp.float32)
+    return qk, path_rows, kd, vd, bias
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "interpret"),
+)
+def paged_bifurcated_decode_attention(
+    q: jnp.ndarray,           # (b, g, p, n, hd) — framework decode layout
+    k_pages: jnp.ndarray,     # (P, g, pm, hd) — head-major page pool
+    v_pages: jnp.ndarray,
+    page_tables: jnp.ndarray, # (N, ppn) i32 — pool pages per segment (-1 free)
+    seg_lens: jnp.ndarray,    # (N,) i32 — live (ragged) segment lengths
+    paths: jnp.ndarray,       # (depth, b) i32 — slot -> segment id per trie
+                              #   level, -1 = level unused by that slot
+    k_dec: jnp.ndarray,       # (b, c_d, g, hd)
+    v_dec: jnp.ndarray,
+    dec_mask: jnp.ndarray,    # (b, c_d) bool
+    *,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """PAGED fused decode dispatcher — the general form of the whole
+    family: single-prefix decoding is one segment with all-zero paths,
+    the forest is depth == 1, the trie is the full (depth, b) path table.
+    Context KV lives in a shared head-major page pool addressed through
+    per-segment page tables; the kernel grid walks a prefix-counted LIVE
+    page list (scalar-prefetched), so fully-FREE segments and pages past
+    each segment's live length are never DMA'd — the io_model's
+    live-length byte envelope becomes the real bytes moved. All paging
+    state (pool contents, tables, lengths, paths) is runtime data: one
+    compile per (pool, table, slots, depth) shape envelope. The page size
+    ``pm`` is the pool's third axis; on fully-populated pages the result
+    is bit-identical to the dense kernels at ``block_m == pm``."""
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    pm = k_pages.shape[2]
+    scale = hd**-0.5 if scale is None else scale
+    if interpret is None:  # static arg: resolved once at trace time
+        interpret = jax.default_backend() != "tpu"
+
+    ids, segs, n_live, page_bias = live_page_list(page_tables, seg_lens, pm)
+    qk, path_rows, kd, vd, bias = _paged_operands(
+        q, paths, k_dec, v_dec, dec_mask)
+    out = paged_fused_bifurcated_decode(
+        qk, k_pages, v_pages, ids, segs, n_live, path_rows, page_bias,
+        kd, vd, bias,
+        scale=scale, c_d=c_d, pn=p * n, interpret=interpret,
+    )  # (g, b*p*n, hd), normalized
+    out = out.reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
+    return out.astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "interpret"),
+)
+def paged_bifurcated_decode_attention_q8(
+    q: jnp.ndarray,           # (b, g, p, n, hd) — framework decode layout
+    k_pages_q: jnp.ndarray,   # (P, g, pm, hd) int8 — quantized page pool
+    v_pages_q: jnp.ndarray,
+    k_scale_pages: jnp.ndarray,  # (P, g, pm) f32 — logit scale PRE-FOLDED
+    v_scale_pages: jnp.ndarray,  # (P, g, pm) f32
+    page_tables: jnp.ndarray, # (N, ppn) i32
+    seg_lens: jnp.ndarray,    # (N,) i32
+    paths: jnp.ndarray,       # (depth, b) i32 — -1 = level unused
+    k_dec: jnp.ndarray,       # (b, c_d, g, hd) bf16
+    v_dec: jnp.ndarray,
+    dec_mask: jnp.ndarray,    # (b, c_d) bool
+    *,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Quantized-context twin of ``paged_bifurcated_decode_attention``:
+    int8 pool pages + per-(token, head) f32 scale pages (k pre-folded with
+    the logit scale) walked by the same live-page list, dequantized
+    in-register. The same CONTRACT as the dense q8 dispatchers applies
+    (``scale`` touches the decode arm only)."""
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    pm = k_pages_q.shape[2]
+    scale = hd**-0.5 if scale is None else scale
+    if interpret is None:  # static arg: resolved once at trace time
+        interpret = jax.default_backend() != "tpu"
+
+    ids, segs, n_live, page_bias = live_page_list(page_tables, seg_lens, pm)
+    qk, path_rows, kd, vd, bias = _paged_operands(
+        q, paths, k_dec, v_dec, dec_mask)
+    out = paged_fused_bifurcated_decode_q8(
+        qk, k_pages_q, v_pages_q, k_scale_pages, v_scale_pages,
+        ids, segs, n_live, path_rows, page_bias, kd, vd, bias,
+        scale=scale, c_d=c_d, pn=p * n, interpret=interpret,
     )  # (g, b*p*n, hd), normalized
     out = out.reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
     return out.astype(q.dtype)

@@ -152,6 +152,27 @@ def tree_decode_cache_specs(cfg: ModelConfig, model, *, slots: int,
     return {"cache": cache, "tokens": _i32((slots, 1))}
 
 
+def paged_decode_cache_specs(cfg: ModelConfig, model, *, slots: int,
+                             n_segments: int, depth: int,
+                             node_capacity: int, page_m: int = 128,
+                             num_pages: Optional[int] = None,
+                             dec_capacity: Optional[int] = None,
+                             ctx_quant: str = "none") -> dict:
+    """Paged serve_step inputs: page-pool cache (the general paged trie
+    family — single-prefix is one segment, the forest depth == 1) + one
+    new token per slot. Attention-bearing families only, like the
+    forest/tree specs. ``num_pages`` sizes the pool (None = the full
+    ``n_segments * ceil(node_capacity/page_m)`` table envelope; smaller
+    values oversubscribe capacity)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"paged decoding targets dense/moe/vlm families, got {cfg.family}")
+    cache = model.make_paged_cache_spec(
+        slots, n_segments, depth, node_capacity, page_m=page_m,
+        num_pages=num_pages, dec_capacity=dec_capacity, ctx_quant=ctx_quant)
+    return {"cache": cache, "tokens": _i32((slots, 1))}
+
+
 def param_specs(model) -> dict:
     """Abstract params via eval_shape: zero allocation."""
     return jax.eval_shape(model.init, jax.random.PRNGKey(0))

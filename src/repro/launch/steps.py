@@ -133,13 +133,48 @@ def cache_pspec_tree(mesh, cache) -> object:
             ctx_layout=c.ctx_layout,
         )
 
+    def spec_paged(node):
+        # paged families: the page POOL shards its HEAD axis over "model"
+        # (dim 2 of (L, P, g, pm, hd) — the sequence axis is page-chunked,
+        # so heads are the contiguous shardable dim; flash-decoding's
+        # sequence split happens per page via the page walk instead), with
+        # the f32 scale pages following identically in the quant store.
+        # Page tables / lengths / paths are tiny replicated bookkeeping —
+        # the live-page walk needs them whole on every shard.
+        import dataclasses as _dc
+
+        from repro.core.paged import QuantPagedKVStore
+
+        store = node.store
+        pool = spec_for_leaf(mesh, store.k_pages.shape,
+                             [None, None, "model", None, None])
+        if isinstance(store, QuantPagedKVStore):
+            sc = spec_for_leaf(mesh, store.k_scale_pages.shape,
+                               [None, None, "model", None])
+            store_spec = QuantPagedKVStore(
+                k_pages=pool, v_pages=pool,
+                k_scale_pages=sc, v_scale_pages=sc,
+                page_tables=P(), seg_lens=P(), page_m=store.page_m)
+        else:
+            store_spec = type(store)(
+                k_pages=pool, v_pages=pool,
+                page_tables=P(), seg_lens=P(), page_m=store.page_m)
+        dec = spec_for_leaf(mesh, node.k_dec.shape,
+                            [None, ba, "model", None, None])
+        fields = {f.name: P() for f in _dc.fields(node)
+                  if f.name not in ("store", "k_dec", "v_dec")}
+        return type(node)(store=store_spec, k_dec=dec, v_dec=dec, **fields)
+
     def walk(node):
+        from repro.core.paged import PAGED_CACHE_FAMILIES
         from repro.core.quantized import (
             GroupedQuantBifurcatedCache,
             QuantBifurcatedCache,
             QuantPrefixTreeCache,
         )
 
+        if isinstance(node, PAGED_CACHE_FAMILIES):
+            return spec_paged(node)
         if isinstance(node, QuantPrefixTreeCache):
             # int8 node values + f32 scale leaves shard the context
             # sequence dim IDENTICALLY (mismatched value/scale shards

@@ -543,6 +543,113 @@ def attention_decode_forest(
     return o @ params["wo"].astype(x.dtype), new_cache
 
 
+def attention_decode_paged(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,
+    layer_cache: dict,
+    *,
+    page_tables: jnp.ndarray,  # (N, ppn) i32 — pool pages per segment
+    seg_lens: jnp.ndarray,     # (N,) i32 — live (ragged) segment lengths
+    paths: jnp.ndarray,        # (depth, b) i32 — slot -> segment per level
+    ctx_lens_b: jnp.ndarray,   # (b,) i32 — per-slot TOTAL path context len
+    dec_lens: jnp.ndarray,     # (b,) i32 — per-slot decode depth
+    rules: Optional[MeshRules],
+    impl: str = "kernel",      # kernel (paged page-walk) | einsum (dense
+                               #   materialization -> cascade reference)
+) -> Tuple[jnp.ndarray, dict]:
+    """One incremental-decoding step for one layer over a PAGED context
+    store — the general form serving single-prefix (one segment, zero
+    paths), forest (depth-1 paths) and trie workloads alike.
+
+    ``layer_cache``: {"k_pages": (P, g, pm, hd), "v_pages": ...,
+    "k_dec": (b, C_d, g, hd), "v_dec": ...} — plus {"k_scale_pages",
+    "v_scale_pages"} ((P, g, pm) f32) when the pool is int8-quantized.
+    The page tables / lengths / paths have no layer axis and ride the
+    layer scan by closure, like the dense trees' bookkeeping.
+
+    ``impl="kernel"`` (the default — paging exists for the kernel) walks
+    the live-page list inside the paged Pallas kernel: only live pages are
+    DMA'd. ``impl="einsum"`` is the escape hatch + differential oracle: it
+    GATHERS the pool into dense per-segment slabs (materializing the
+    padded envelope — reference-only cost) and runs the dense cascade
+    einsum reference on them. Sliding-window configs are not wired (the
+    paged path targets full-attention serving, like forest/tree).
+    """
+    if cfg.sliding_window is not None:
+        raise NotImplementedError(
+            "paged decoding does not support sliding-window configs")
+    b, n = x.shape[:2]
+    g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
+    p = cfg.n_heads_padded // g
+    q, k_new, v_new = _project_qkv(cfg, params, x)
+    pos_b = ctx_lens_b + dec_lens                           # (b,)
+    if cfg.rope_theta > 0:
+        pos = pos_b[:, None] + jnp.arange(n)[None, :]       # (b, n)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    q = q.reshape(b, n, g, p, hd).transpose(0, 2, 3, 1, 4)  # (b,g,p,n,hd)
+
+    quant = "k_scale_pages" in layer_cache
+    k_dec = _scatter_decode_slots(layer_cache["k_dec"], k_new, dec_lens)
+    v_dec = _scatter_decode_slots(layer_cache["v_dec"], v_new, dec_lens)
+    cap = k_dec.shape[1]
+    slot = jnp.arange(cap)[None, :]
+    dec_valid = slot <= dec_lens[:, None] + n - 1           # (b, C_d)
+
+    # page pool: shard the HEAD axis over "model" (the sequence axis is
+    # page-chunked — heads are the contiguous shardable dim of the pool)
+    k_pages = constrain(layer_cache["k_pages"], rules,
+                        None, "tensor", None, None)
+    v_pages = constrain(layer_cache["v_pages"], rules,
+                        None, "tensor", None, None)
+    if quant:
+        k_sp = constrain(layer_cache["k_scale_pages"], rules,
+                         None, "tensor", None)
+        v_sp = constrain(layer_cache["v_scale_pages"], rules,
+                         None, "tensor", None)
+        if impl == "kernel":
+            from repro.kernels.ops import paged_bifurcated_decode_attention_q8
+
+            o = paged_bifurcated_decode_attention_q8(
+                q, k_pages, v_pages, k_sp, v_sp, page_tables, seg_lens,
+                paths, k_dec, v_dec, dec_valid,
+            )
+        else:
+            from repro.core.paged import gather_pages
+            from repro.core.quantized import tree_bifurcated_attention_q8
+
+            o = tree_bifurcated_attention_q8(
+                q, gather_pages(k_pages, page_tables),
+                gather_pages(v_pages, page_tables),
+                gather_pages(k_sp, page_tables),
+                gather_pages(v_sp, page_tables),
+                paths, seg_lens, k_dec, v_dec,
+                decode_mask=dec_valid, ctx_layout="gmk",
+            )
+    elif impl == "kernel":
+        from repro.kernels.ops import paged_bifurcated_decode_attention
+
+        o = paged_bifurcated_decode_attention(
+            q, k_pages, v_pages, page_tables, seg_lens, paths,
+            k_dec, v_dec, dec_valid,
+        )
+    else:
+        from repro.core.bifurcated import tree_bifurcated_attention
+        from repro.core.paged import gather_pages
+
+        o = tree_bifurcated_attention(
+            q, gather_pages(k_pages, page_tables),
+            gather_pages(v_pages, page_tables),
+            paths, seg_lens, k_dec, v_dec,
+            decode_mask=dec_valid, ctx_layout="gmk",
+        )
+    new_cache = {**layer_cache, "k_dec": k_dec, "v_dec": v_dec}
+
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, n, cfg.n_heads_padded * hd)
+    return o @ params["wo"].astype(x.dtype), new_cache
+
+
 def attention_decode_tree(
     cfg: ModelConfig,
     params,

@@ -169,12 +169,16 @@ class TransformerLM:
         """tokens: (b, n) new token ids. Returns (logits (b, n, V), cache')."""
         cfg = self.cfg
         from repro.core.kv_cache import GroupedBifurcatedCache, PrefixTreeCache
+        from repro.core.paged import PAGED_CACHE_FAMILIES
         from repro.core.quantized import (
             GroupedQuantBifurcatedCache,
             QuantBifurcatedCache,
             QuantPrefixTreeCache,
         )
 
+        if isinstance(cache, PAGED_CACHE_FAMILIES):
+            return self._decode_step_paged(params, cache, tokens, rules,
+                                           impl=impl)
         if isinstance(cache, (PrefixTreeCache, QuantPrefixTreeCache)):
             return self._decode_step_tree(params, cache, tokens, rules,
                                           impl=impl)
@@ -328,7 +332,77 @@ class TransformerLM:
         )
         return logits, new_cache
 
+    def _decode_step_paged(self, params, cache, tokens,
+                           rules: Optional[MeshRules], *, impl: str):
+        """Paged-store decode: b slots over a shared page POOL addressed
+        through per-segment page tables — one step function for all three
+        paged families (single / forest / trie), which differ only in the
+        adapter views ``slot_paths`` / ``slot_dec_lens`` /
+        ``slot_context_lens``. The tables / lengths / paths have no layer
+        axis and ride the layer scan by closure; ``impl="kernel"`` lowers
+        every layer-step to the paged page-walk Pallas kernel (only LIVE
+        pages are DMA'd), ``impl="einsum"`` materializes dense slabs and
+        runs the cascade einsum reference (escape hatch + oracle)."""
+        cfg = self.cfg
+        from repro.models.blocks import attention_decode_paged
+
+        x = self._embed(params, tokens)
+        x = constrain(x, rules, "batch", None, None)
+        store = cache.store
+        layer_caches = {
+            "k_pages": store.k_pages, "v_pages": store.v_pages,
+            "k_dec": cache.k_dec, "v_dec": cache.v_dec,
+        }
+        if hasattr(store, "k_scale_pages"):
+            layer_caches["k_scale_pages"] = store.k_scale_pages
+            layer_caches["v_scale_pages"] = store.v_scale_pages
+        paths = cache.slot_paths()               # (depth, b)
+        dec_lens = cache.slot_dec_lens()         # (b,)
+        ctx_lens_b = cache.slot_context_lens()   # (b,) — once per step
+
+        def body(x, inp):
+            layer, lcache = inp
+            h = apply_norm(cfg, layer["ln1"], x)
+            a, new_lcache = attention_decode_paged(
+                cfg, layer["attn"], h, lcache,
+                page_tables=store.page_tables, seg_lens=store.seg_lens,
+                paths=paths, ctx_lens_b=ctx_lens_b, dec_lens=dec_lens,
+                rules=rules, impl=impl,
+            )
+            x = x + a
+            h2 = apply_norm(cfg, layer["ln2"], x)
+            if cfg.moe is not None:
+                m = moe_decode(cfg, layer["moe"], h2, rules)
+            else:
+                m = apply_mlp(cfg, layer["mlp"], h2, rules)
+            x = x + m
+            return x, new_lcache
+
+        x, new_caches = lax.scan(body, x, (params["layers"], layer_caches))
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x, rules)
+        n = tokens.shape[1]
+        new_cache = cache.advance_decode(
+            new_caches["k_dec"], new_caches["v_dec"], n)
+        return logits, new_cache
+
     # ---- cache constructors (dry-run + serving) ----
+    def make_paged_cache_spec(self, slots, n_segments, depth, node_capacity,
+                              page_m=128, num_pages=None, dec_capacity=None,
+                              ctx_quant: str = "none"):
+        """Abstract paged trie cache (the general paged family) for the
+        dry-run CLIs and sharding-spec builders. ``node_capacity`` is the
+        per-segment TABLE envelope (tokens); storage is ``num_pages`` pool
+        pages of ``page_m`` tokens (default: the full envelope)."""
+        cfg = self.cfg
+        from repro.core.paged import PagedPrefixTreeCache
+
+        dec_capacity = dec_capacity or cfg.decode_capacity
+        return PagedPrefixTreeCache.spec(
+            cfg.n_layers, n_segments, depth, slots, node_capacity,
+            dec_capacity, cfg.n_kv_heads_padded, cfg.kq_dim,
+            page_m=page_m, num_pages=num_pages, ctx_quant=ctx_quant)
+
     def make_tree_cache_spec(self, slots, n_nodes, depth, node_capacity,
                              dec_capacity=None, ctx_quant: str = "none"):
         """Abstract PrefixTreeCache / QuantPrefixTreeCache for the dry-run

@@ -112,7 +112,20 @@ class ServeEngine:
         bifurcated = self.should_bifurcate(batch, m_c)
         if cfg.family in ("dense", "moe", "vlm"):
             logits, cache1 = model.prefill(params, context_tokens, self.rules, **kwargs)
-            if bifurcated:
+            if bifurcated and self.scfg.ctx_store == "paged":
+                # paged substrate (core/paged.py): the context lands in a
+                # page pool sized to exactly ceil(m_c / page_size) pages;
+                # decode walks the live-page list (page-granular DMA). The
+                # quant store carries the int8 + scale pages.
+                from repro.core.paged import PagedBifurcatedCache
+
+                cache = PagedBifurcatedCache.from_prefill(
+                    cache1.k[:, 0], cache1.v[:, 0], batch,
+                    self.scfg.decode_capacity, dtype=cache1.k.dtype,
+                    page_m=self.scfg.page_size,
+                    ctx_quant="int8" if self.scfg.cache_dtype == "int8"
+                    else "none")
+            elif bifurcated:
                 # cache_dtype="int8" selects the quantized family: the int8
                 # context arm is quantized ONCE at cache build (write-once
                 # read-many), the decode arm stays bf16, and the jitted scan
@@ -240,6 +253,14 @@ class ServeEngine:
         """
         scfg = self.scfg
         batch = batch or scfg.batch
+        if n_steps - 1 > scfg.decode_capacity:
+            # the per-step KV write clamps at the last decode slot, so
+            # generating past capacity would silently corrupt the decode
+            # arm — reject loudly instead (same guard as step_chunk's).
+            raise ValueError(
+                f"n_steps={n_steps} needs {n_steps - 1} decode-cache slots "
+                f"> decode_capacity={scfg.decode_capacity}; raise "
+                f"ServeConfig.decode_capacity or generate fewer tokens")
         key = key if key is not None else jax.random.PRNGKey(scfg.seed)
         logits0, cache = self.prefill_shared(
             params, context_tokens, batch, **prefill_kwargs)
@@ -470,18 +491,36 @@ class ForestServeEngine(_SlotTableEngine):
         # math depends exclusively on device-side ForestState values)
         self.group_live = [False] * fcfg.n_groups
         self.slot_group = [-1] * fcfg.slots
+        self.paged = fcfg.ctx_store == "paged"
+        if self.paged:
+            from repro.core.paged import PageAllocator, pages_needed
+
+            self.pages_per_seg = pages_needed(fcfg.ctx_capacity,
+                                              fcfg.page_size)
+            self.num_pages = (fcfg.num_pages if fcfg.num_pages is not None
+                              else fcfg.n_groups * self.pages_per_seg)
+            self.page_alloc = PageAllocator(self.num_pages)
+            self.group_pages = {}        # group id -> pool page ids
 
     # ---- lifecycle ----
     def init_state(self) -> ForestState:
-        from repro.core.quantized import forest_cache_family
-
         cfg, fcfg = self.cfg, self.fcfg
-        fam = forest_cache_family(
-            "int8" if fcfg.cache_dtype == "int8" else "none")
-        cache = fam.init(
-            cfg.n_layers, fcfg.n_groups, fcfg.slots, fcfg.ctx_capacity,
-            fcfg.decode_capacity, cfg.n_kv_heads_padded, cfg.kq_dim,
-            ctx_layout=cfg.ctx_layout)
+        quant = "int8" if fcfg.cache_dtype == "int8" else "none"
+        if self.paged:
+            from repro.core.paged import PagedGroupedBifurcatedCache
+
+            cache = PagedGroupedBifurcatedCache.init(
+                cfg.n_layers, fcfg.n_groups, fcfg.slots, fcfg.ctx_capacity,
+                fcfg.decode_capacity, cfg.n_kv_heads_padded, cfg.kq_dim,
+                page_m=fcfg.page_size, num_pages=self.num_pages,
+                ctx_quant=quant)
+        else:
+            from repro.core.quantized import forest_cache_family
+
+            cache = forest_cache_family(quant).init(
+                cfg.n_layers, fcfg.n_groups, fcfg.slots, fcfg.ctx_capacity,
+                fcfg.decode_capacity, cfg.n_kv_heads_padded, cfg.kq_dim,
+                ctx_layout=cfg.ctx_layout)
         b = fcfg.slots
         return ForestState(
             cache=cache,
@@ -515,6 +554,24 @@ class ForestServeEngine(_SlotTableEngine):
         token equal to ``eos_token`` retires the slot before it ever enters
         the decode loop (its emitted sequence is just the EOS)."""
         fcfg = self.fcfg
+        m_new = int(context_tokens.shape[1])
+        # admission REJECTION (never truncate / overflow silently): the
+        # segment envelope bounds any context; paged mode additionally
+        # gates on actually-allocatable pool pages.
+        if m_new > fcfg.ctx_capacity:
+            raise ValueError(
+                f"context of {m_new} tokens exceeds the segment capacity "
+                f"{fcfg.ctx_capacity}; rejected (raise "
+                f"ForestConfig.ctx_capacity or split the request)")
+        if self.paged:
+            from repro.core.paged import pages_needed
+
+            n_pg = pages_needed(m_new, fcfg.page_size)
+            if n_pg > self.page_alloc.free_count():
+                raise RuntimeError(
+                    f"context of {m_new} tokens needs {n_pg} pool pages, "
+                    f"only {self.page_alloc.free_count()} of "
+                    f"{self.num_pages} free — retire first")
         free_g = self.free_groups()
         free_s = self.free_slots(state)
         if not free_g:
@@ -524,9 +581,25 @@ class ForestServeEngine(_SlotTableEngine):
                 f"need {n_samples} free slots, have {len(free_s)}")
         gidx, slots = free_g[0], free_s[:n_samples]
 
+        if self.paged:
+            # close the page-aliasing window BEFORE allocating: pages
+            # released at retire may be handed to this admission, so every
+            # retired group's stale table row is cleared first — no pool
+            # page is ever referenced by two segments, and the kernel
+            # never streams a page twice. (Runs after the rejection
+            # checks: a rejected admit mutates nothing.)
+            state = self.release_retired(state)
+
         logits0, cache1 = self.model.prefill(
             params, context_tokens, self.rules)
-        cache = state.cache.write_context(cache1.k[:, 0], cache1.v[:, 0], gidx)
+        if self.paged:
+            page_ids = self.page_alloc.alloc(n_pg)
+            self.group_pages[gidx] = page_ids
+            cache = state.cache.write_context(
+                cache1.k[:, 0], cache1.v[:, 0], gidx, page_ids)
+        else:
+            cache = state.cache.write_context(
+                cache1.k[:, 0], cache1.v[:, 0], gidx)
         slot_ids = jnp.asarray(slots, jnp.int32)
         slot_mask = jnp.zeros((fcfg.slots,), bool).at[slot_ids].set(True)
         cache = cache.assign_slots(slot_mask, gidx)
@@ -552,7 +625,14 @@ class ForestServeEngine(_SlotTableEngine):
     def retire_groups(self, state: ForestState):
         """Free every segment whose slots have all gone inactive. Returns
         the list of retired group ids; their slots become reusable by the
-        next ``admit`` (which wipes the stale decode arms)."""
+        next ``admit`` (which wipes the stale decode arms). In paged mode
+        the retired groups' pool pages return to the allocator immediately
+        and their stale page-table rows are cleared by the next ``admit``
+        (before it allocates — no page is ever referenced by two
+        segments); call ``release_retired`` to clear them right away and
+        stop streaming the freed pages without waiting for an admission
+        (a dense cache keeps streaming retired capacity — that envelope
+        is exactly what paging removes)."""
         import numpy as np
 
         active = np.asarray(state.active)
@@ -565,7 +645,23 @@ class ForestServeEngine(_SlotTableEngine):
             if not any(active[s] for s in slots):
                 self.group_live[g] = False
                 retired.append(g)
+                if self.paged:
+                    self.page_alloc.release(self.group_pages.pop(g, []))
         return retired
+
+    def release_retired(self, state: ForestState) -> ForestState:
+        """Paged mode: clear the page-table rows of every non-live group,
+        structurally removing their pages from the decode kernels'
+        live-page walk (ZERO bytes for freed segments — the paged
+        counterpart of the dense kernels' masked-but-streamed capacity).
+        Value-only update: no recompile. Dense mode: identity."""
+        if not self.paged:
+            return state
+        cache = state.cache
+        for g in range(self.fcfg.n_groups):
+            if not self.group_live[g]:
+                cache = cache.free_group(g)
+        return dataclasses.replace(state, cache=cache)
 
 
 # ---------------------------------------------------------------------------
@@ -617,21 +713,47 @@ class TreeServeEngine(_SlotTableEngine):
         self.node_key = [None] * tcfg.n_nodes        # reverse map
         self.slot_request = [-1] * tcfg.slots
         self.requests = []      # admission log: {"path", "slots", "live"}
+        self.paged = tcfg.ctx_store == "paged"
+        if self.paged:
+            from repro.core.paged import PageAllocator, pages_needed
+
+            self.pages_per_node = pages_needed(tcfg.node_capacity,
+                                               tcfg.page_size)
+            self.num_pages = (tcfg.num_pages if tcfg.num_pages is not None
+                              else tcfg.n_nodes * self.pages_per_node)
+            self.page_alloc = PageAllocator(self.num_pages)
+            self.node_pages = {}         # node id -> pool page ids
+            # page sharing for trie ancestors is REFCOUNTED through the
+            # node refcounts: a reused ancestor's pages are allocated once
+            # at its first admission and freed only when the node's own
+            # refcount hits zero (retire_requests).
 
     # ---- lifecycle ----
     def init_state(self) -> ForestState:
         """Device-side state: the same ``ForestState`` carry as the forest
         engine (tokens / active / steps / key), holding a
-        ``PrefixTreeCache`` (or its int8 twin) instead of a grouped cache."""
-        from repro.core.quantized import tree_cache_family
-
+        ``PrefixTreeCache`` / its int8 twin — or, under
+        ``ctx_store="paged"``, a ``PagedPrefixTreeCache`` over the shared
+        page pool."""
         cfg, tcfg = self.cfg, self.tcfg
-        fam = tree_cache_family(
-            "int8" if tcfg.cache_dtype == "int8" else "none")
-        cache = fam.init(
-            cfg.n_layers, tcfg.n_nodes, tcfg.depth, tcfg.slots,
-            tcfg.node_capacity, tcfg.decode_capacity,
-            cfg.n_kv_heads_padded, cfg.kq_dim, ctx_layout=cfg.ctx_layout)
+        quant = "int8" if tcfg.cache_dtype == "int8" else "none"
+        if self.paged:
+            from repro.core.paged import PagedPrefixTreeCache
+
+            cache = PagedPrefixTreeCache.init(
+                cfg.n_layers, tcfg.n_nodes, tcfg.depth, tcfg.slots,
+                tcfg.node_capacity, tcfg.decode_capacity,
+                cfg.n_kv_heads_padded, cfg.kq_dim,
+                page_m=tcfg.page_size, num_pages=self.num_pages,
+                ctx_quant=quant)
+        else:
+            from repro.core.quantized import tree_cache_family
+
+            cache = tree_cache_family(quant).init(
+                cfg.n_layers, tcfg.n_nodes, tcfg.depth, tcfg.slots,
+                tcfg.node_capacity, tcfg.decode_capacity,
+                cfg.n_kv_heads_padded, cfg.kq_dim,
+                ctx_layout=cfg.ctx_layout)
         b = tcfg.slots
         return ForestState(
             cache=cache,
@@ -694,6 +816,8 @@ class TreeServeEngine(_SlotTableEngine):
         cap = state.cache.node_capacity
         for seg in segments:
             if seg.shape[1] > cap:
+                # admission REJECTION (never truncate): the node envelope
+                # bounds any segment, dense or paged.
                 raise ValueError(
                     f"segment of {seg.shape[1]} tokens > node capacity {cap}")
         path, matched = self.match_prefix(segments)
@@ -707,6 +831,25 @@ class TreeServeEngine(_SlotTableEngine):
         if len(free_s) < n_samples:
             raise RuntimeError(
                 f"need {n_samples} free slots, have {len(free_s)}")
+        if self.paged:
+            # paged admission gates on allocatable POOL PAGES, before any
+            # prefill work: reused ancestors cost zero new pages.
+            from repro.core.paged import pages_needed
+
+            n_pg = sum(pages_needed(int(s.shape[1]), self.tcfg.page_size)
+                       for s in new_segs)
+            if n_pg > self.page_alloc.free_count():
+                raise RuntimeError(
+                    f"request needs {n_pg} pool pages for "
+                    f"{len(new_segs)} new node(s), only "
+                    f"{self.page_alloc.free_count()} of {self.num_pages} "
+                    f"free — retire first")
+            # close the page-aliasing window BEFORE allocating: freed
+            # nodes' pages may be handed to this admission, so their stale
+            # table rows are cleared first — no pool page is ever
+            # referenced by two nodes. (After the rejection checks: a
+            # rejected admit mutates nothing.)
+            state = self.release_retired(state)
         slots = free_s[:n_samples]
 
         # ONE prefill of the full concatenation: reused ancestors are
@@ -720,9 +863,19 @@ class TreeServeEngine(_SlotTableEngine):
         for seg in new_segs:
             nid = free_n.pop(0)
             m = int(seg.shape[1])
-            cache = cache.write_node(
-                cache1.k[:, 0, offset:offset + m],
-                cache1.v[:, 0, offset:offset + m], nid)
+            if self.paged:
+                from repro.core.paged import pages_needed
+
+                ids = self.page_alloc.alloc(
+                    pages_needed(m, self.tcfg.page_size))
+                self.node_pages[nid] = ids
+                cache = cache.write_node(
+                    cache1.k[:, 0, offset:offset + m],
+                    cache1.v[:, 0, offset:offset + m], nid, ids)
+            else:
+                cache = cache.write_node(
+                    cache1.k[:, 0, offset:offset + m],
+                    cache1.v[:, 0, offset:offset + m], nid)
             key = (parent, tuple(int(t) for t in
                                  jax.device_get(seg)[0]))
             self.node_index[key] = nid
@@ -783,4 +936,24 @@ class TreeServeEngine(_SlotTableEngine):
                         self.node_live[nid] = False
                         self.node_index.pop(self.node_key[nid], None)
                         self.node_key[nid] = None
+                        if self.paged:
+                            # refcounted page sharing: an ancestor's pages
+                            # free only with the node itself (last
+                            # referencing request gone)
+                            self.page_alloc.release(
+                                self.node_pages.pop(nid, []))
         return retired
+
+    def release_retired(self, state: ForestState) -> ForestState:
+        """Paged mode: clear the page-table rows of every freed trie node,
+        structurally removing their pages from the decode kernels'
+        live-page walk (ZERO bytes for freed nodes). Live ancestors shared
+        with surviving requests are untouched. Value-only update: no
+        recompile. Dense mode: identity."""
+        if not self.paged:
+            return state
+        cache = state.cache
+        for nid in range(self.tcfg.n_nodes):
+            if not self.node_live[nid]:
+                cache = cache.free_node(nid)
+        return dataclasses.replace(state, cache=cache)

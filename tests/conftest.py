@@ -59,6 +59,45 @@ def make_decode_case(b, p, m_c, c_d, *, g=2, hd=32, n=1, dtype=jnp.float32,
 
 
 # ---------------------------------------------------------------------------
+# Shared page-pool builder (paged-kernel tests + differential harness)
+# ---------------------------------------------------------------------------
+
+def build_page_pool(arrays, node_lens, page_m, *, perm_seed=0,
+                    extra_pages=0):
+    """Split dense head-major per-segment slabs into a SHUFFLED page pool.
+
+    ``arrays``: sequence of (N, g, cap[, hd]) slabs sharing the token axis
+    at dim 2 (values, and for q8 the matching scale slabs); ``node_lens``:
+    live token count per segment. Returns ``([pools], tables)`` — each
+    pool is (P, g, page_m[, hd]) holding exactly the live pages
+    (ceil(len/page_m) per segment) scattered onto a deterministically
+    permuted pool, and ``tables`` is the (N, ppn) i32 page table (-1 =
+    unallocated). One definition shared by tests/test_paged.py and
+    tests/test_differential.py so the "page the dense contents" plumbing
+    can't diverge between the structural tests and the harness.
+    """
+    arrays = [np.asarray(a) for a in arrays]
+    n_nodes, cap = arrays[0].shape[0], arrays[0].shape[2]
+    ppn = cap // page_m
+    needed = [-(-int(m) // page_m) for m in node_lens]
+    num_pages = max(sum(needed), 1) + extra_pages
+    perm = np.random.RandomState(perm_seed).permutation(num_pages)
+    tables = np.full((n_nodes, ppn), -1, np.int32)
+    pools = [np.zeros((num_pages,) + a.shape[1:2] + (page_m,) + a.shape[3:],
+                      a.dtype) for a in arrays]
+    nxt = 0
+    for nid in range(n_nodes):
+        for j in range(needed[nid]):
+            pid = int(perm[nxt])
+            nxt += 1
+            tables[nid, j] = pid
+            sl = slice(j * page_m, (j + 1) * page_m)
+            for pool, a in zip(pools, arrays):
+                pool[pid] = a[nid, :, sl]
+    return [jnp.asarray(p) for p in pools], jnp.asarray(tables)
+
+
+# ---------------------------------------------------------------------------
 # Structural no-HBM-spill assertions (shared by all fused-kernel tests)
 # ---------------------------------------------------------------------------
 

@@ -1,8 +1,9 @@
 """Differential test harness for the bifurcated-decode implementation stack.
 
 ONE parametrized harness runs every implementation — {fused, fused_q8,
-two_pass, einsum, einsum_q8, grouped, grouped_q8, tree, tree_q8} — on
-IDENTICAL inputs (tests/conftest.make_decode_case) and cross-checks:
+two_pass, einsum, einsum_q8, grouped, grouped_q8, tree, tree_q8, paged,
+paged_q8} — on IDENTICAL inputs (tests/conftest.make_decode_case) and
+cross-checks:
 
   * every implementation against the fp32 monolithic-softmax oracle
     (standard attention over [broadcast K_c ⊕ K_d]) with per-dtype /
@@ -17,7 +18,12 @@ IDENTICAL inputs (tests/conftest.make_decode_case) and cross-checks:
   * the tree (hierarchical cascade) kernel at L=2 (flat forest config)
     BIT-IDENTICAL to the grouped kernel and at L=1 (single prefix) to the
     fused kernel — PR 4's reduction acceptance (multi-level trie
-    correctness lives in tests/test_tree.py).
+    correctness lives in tests/test_tree.py);
+  * the paged page-walk kernel (page-pool storage, SHUFFLED pool pages)
+    BIT-IDENTICAL to the dense tree kernel at page_m == block_m — PR 5's
+    reduction acceptance (paged structure/engines live in
+    tests/test_paged.py) — plus a hypothesis fuzz over page-table
+    permutations and ragged node lengths.
 
 The case list sweeps b x p x n x ragged m_c x partial C_d masks x both ctx
 layouts x {f32, bf16}. When ``hypothesis`` is installed (CI installs it; a
@@ -38,6 +44,8 @@ from repro.kernels.ops import (
     bifurcated_decode_attention_q8,
     grouped_bifurcated_decode_attention,
     grouped_bifurcated_decode_attention_q8,
+    paged_bifurcated_decode_attention,
+    paged_bifurcated_decode_attention_q8,
     tree_bifurcated_decode_attention,
     tree_bifurcated_decode_attention_q8,
 )
@@ -155,6 +163,51 @@ def impl_tree_q8(case, ctx_layout, block_m):
         block_m=block_m, interpret=True, ctx_layout=ctx_layout)
 
 
+def _paged_case(case, ctx_layout, block_m, q8=False):
+    """Single-prefix case lifted to the PAGED dispatch: one segment whose
+    pages land on a deterministically SHUFFLED pool
+    (conftest.build_page_pool; page_m == block_m, so agreement with the
+    dense kernels is bit-exact on full pages); paged storage is head-major
+    only, so both ctx_layout parametrizations feed the same pool."""
+    from conftest import build_page_pool
+    from repro.core.paged import pages_needed
+
+    del ctx_layout
+    b = case["q"].shape[0]
+    m_c = case["kc"].shape[0]
+    cap = pages_needed(m_c, block_m) * block_m
+    pad = lambda x: jnp.pad(                    # (g, m_c, ...) -> (1, g, cap, ...)
+        x, ((0, 0), (0, cap - m_c)) + ((0, 0),) * (x.ndim - 2))[None]
+    if q8:
+        kq, ks = quantize_ctx(case["kc"].transpose(1, 0, 2),
+                              fold_scale=HD**-0.5)      # (g, m_c, hd)
+        vq, vs = quantize_ctx(case["vc"].transpose(1, 0, 2))
+        arrays = [pad(kq), pad(vq), pad(ks), pad(vs)]
+    else:
+        arrays = [pad(case["kc"].transpose(1, 0, 2)),
+                  pad(case["vc"].transpose(1, 0, 2))]
+    pool, table = build_page_pool(arrays, [m_c], block_m,
+                                  perm_seed=m_c + block_m)
+    seg_lens = jnp.asarray([m_c], jnp.int32)
+    paths = jnp.zeros((1, b), jnp.int32)
+    return pool, table, seg_lens, paths
+
+
+def impl_paged(case, ctx_layout, block_m):
+    (kp, vp), table, seg_lens, paths = _paged_case(case, ctx_layout, block_m)
+    return paged_bifurcated_decode_attention(
+        case["q"], kp, vp, table, seg_lens, paths,
+        case["kd"], case["vd"], case["mask"], interpret=True)
+
+
+def impl_paged_q8(case, ctx_layout, block_m):
+    (kp, vp, ksp, vsp), table, seg_lens, paths = _paged_case(
+        case, ctx_layout, block_m, q8=True)
+    return paged_bifurcated_decode_attention_q8(
+        case["q"], kp, vp, ksp, vsp, table, seg_lens, paths,
+        case["kd"], case["vd"], case["mask"], interpret=True)
+
+
 # name -> (fn, is_quantized). Quantized impls carry the int8 rounding error
 # against the fp32 oracle; non-quantized ones only their dtype's.
 IMPLS = {
@@ -167,6 +220,8 @@ IMPLS = {
     "grouped_q8": (impl_grouped_q8, True),
     "tree": (impl_tree, False),
     "tree_q8": (impl_tree_q8, True),
+    "paged": (impl_paged, False),
+    "paged_q8": (impl_paged_q8, True),
 }
 
 # per-dtype tolerance for exact (non-quantized) implementations
@@ -251,6 +306,8 @@ def test_differential_all_impls(shape, dtype, ctx_layout):
                                    rtol=1e-5, atol=1e-5)
         np.testing.assert_allclose(outs["tree_q8"], outs["grouped_q8"],
                                    rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(outs["paged_q8"], outs["tree_q8"],
+                                   rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("shape", CASES[:4])
@@ -326,6 +383,24 @@ def test_tree_l2_bit_identical_to_grouped():
     np.testing.assert_array_equal(np.asarray(out_tq), np.asarray(out_gq))
 
 
+@pytest.mark.parametrize("shape", CASES[:4])
+def test_paged_bit_identical_to_tree(shape):
+    """ISSUE acceptance: on fully-populated pages (page_m == the dense
+    kernels' block_m, same logical contents, SHUFFLED pool pages) the
+    paged page-walk kernel reduces EXACTLY — bit-for-bit — to the dense
+    tree kernel, and hence (single segment, depth 1) to the fused kernel,
+    both dtypes."""
+    b, p, n, m_c, c_d, block_m = shape
+    case = make_decode_case(b, p, m_c, c_d, g=G, hd=HD, n=n,
+                            dtype=jnp.bfloat16, seed=sum(shape))
+    out_p = impl_paged(case, "gmk", block_m)
+    out_t = impl_tree(case, "gmk", block_m)
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_t))
+    out_pq = impl_paged_q8(case, "gmk", block_m)
+    out_tq = impl_tree_q8(case, "gmk", block_m)
+    np.testing.assert_array_equal(np.asarray(out_pq), np.asarray(out_tq))
+
+
 def test_grouped_multi_prefix_vs_per_group_fused():
     """G > 1: the forest kernel on a mixed batch must agree with running
     the single-prefix fused kernel once per group on that group's rows."""
@@ -383,3 +458,57 @@ if HAS_HYPOTHESIS:
                                 full_mask=full_mask)
         run_differential(case, dtype=jnp.float32,
                          ctx_layout="gmk" if gmk else "mgk", block_m=128)
+
+    @given(
+        b=st.integers(1, 6),
+        n_nodes=st.integers(1, 4),
+        depth=st.integers(1, 3),
+        page_m=st.sampled_from([16, 32, 64]),
+        lens_seed=st.integers(0, 10_000),
+        perm_seed=st.integers(0, 10_000),
+    )
+    def test_paged_fuzz_page_permutations_and_ragged_lens(
+            b, n_nodes, depth, page_m, lens_seed, perm_seed):
+        """Hypothesis fuzz for the PAGED path: random ragged node lengths
+        (including FREE nodes), random slot paths, and a random PERMUTED
+        page-pool assignment must stay bit-identical to the dense tree
+        kernel on the same logical contents (f32, page_m == block_m)."""
+        rng = np.random.RandomState(lens_seed)
+        cap_pages = 3
+        cap = cap_pages * page_m
+        node_lens = rng.randint(0, cap + 1, size=(n_nodes,))
+        if node_lens.max() == 0:
+            node_lens[0] = 1                   # at least one live token
+        kc = np.zeros((n_nodes, G, cap, HD), np.float32)
+        vc = np.zeros_like(kc)
+        for i, m in enumerate(node_lens):
+            kc[i, :, :m] = rng.randn(G, m, HD)
+            vc[i, :, :m] = rng.randn(G, m, HD)
+        kc, vc = jnp.asarray(kc), jnp.asarray(vc)
+        live = [i for i in range(n_nodes) if node_lens[i] > 0]
+        paths = np.full((depth, b), -1, np.int64)
+        for s in range(b):
+            for lvl in range(rng.randint(1, depth + 1)):
+                paths[lvl, s] = live[rng.randint(len(live))]
+        paths = jnp.asarray(paths, jnp.int32)
+        nlens = jnp.asarray(node_lens, jnp.int32)
+        c_d = 4
+        q = jnp.asarray(rng.randn(b, G, 1, 1, HD), jnp.float32)
+        kd = jnp.asarray(rng.randn(b, c_d, G, HD), jnp.float32)
+        vd = jnp.asarray(rng.randn(b, c_d, G, HD), jnp.float32)
+        mask = jnp.arange(c_d)[None, :] < jnp.asarray(
+            rng.randint(1, c_d + 1, size=(b,)))[:, None]
+
+        # page the dense segments onto a permuted pool
+        from conftest import build_page_pool
+
+        (kp, vp), tables = build_page_pool(
+            [kc, vc], node_lens, page_m, perm_seed=perm_seed,
+            extra_pages=1)
+
+        out_d = tree_bifurcated_decode_attention(
+            q, kc, vc, paths, nlens, kd, vd, mask,
+            block_m=page_m, interpret=True, ctx_layout="gmk")
+        out_p = paged_bifurcated_decode_attention(
+            q, kp, vp, tables, nlens, paths, kd, vd, mask, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_d))
