@@ -12,6 +12,7 @@
 | kernel_io       | Appendix H (kernel comparison), Pallas vs einsums     |
 | tensor_parallel | Table 8 (bifurcation under TP, 8-device compiles)     |
 | pass_at_k       | Figure 8 / §5.4 (pass@n, pass@top3 via mean logprob)  |
+| serve_soak      | robustness soak (frontend + faults, oversubscribed)   |
 | roofline_table  | deliverable (g): dry-run roofline aggregation         |
 
 Prints ``name,us_per_call,derived`` CSV rows via report().
@@ -31,6 +32,7 @@ MODULES = [
     "kernel_io",
     "tensor_parallel",
     "pass_at_k",
+    "serve_soak",
     "scaling_laws",
     "roofline_table",
 ]

@@ -1,0 +1,206 @@
+"""Serving soak harness: bursty replay against the fault-tolerant frontend.
+
+The paper's serving story (massively parallel decoding over shared
+prefixes) is exercised here as a WORKLOAD, not a kernel: a seeded replay
+of Poisson + bursty arrivals, Zipf-popular shared prefixes, and
+multi-sample pass@k requests drives ``runtime/frontend.ServeFrontend``
+over a paged ``TreeServeEngine`` whose page pool is deliberately
+OVERSUBSCRIBED (the pool cannot hold every node at once), with a seeded
+``runtime/faults.FaultPlan`` firing pool exhaustion, mid-decode cancels,
+delayed retirement and double-release attempts along the way.
+
+What must hold (the robustness acceptance bar, asserted here):
+  * zero unhandled exceptions over the whole soak;
+  * every request ends ``completed``, ``rejected`` with a typed reason,
+    or preempted-then-``completed``;
+  * ``PageAllocator.audit()`` passes at every scheduler round.
+
+Emits ``BENCH_serve_soak.json``: p50/p99 per-token latency, completed
+tokens/sec throughput, rejection/preemption counts by reason, and pool
+occupancy over the run — for the faulty soak and a fault-free control of
+the same workload. ``BENCH_SOAK_FAST=1`` selects the CI subset. Run
+standalone via ``PYTHONPATH=src python -m benchmarks.serve_soak``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TreeConfig, get_config, reduced_config
+from repro.models import get_model
+from repro.runtime.faults import FaultPlan
+from repro.runtime.frontend import COMPLETED, REJECTED, ServeFrontend
+from repro.runtime.serve import TreeServeEngine
+
+BENCH_JSON = (pathlib.Path(__file__).resolve().parent.parent
+              / "BENCH_serve_soak.json")
+
+# Engine envelope: small enough to pump quickly on CPU, oversubscribed
+# enough that bursts MUST queue/preempt. Worst-case paged demand is
+# n_nodes * pages_needed(node_capacity + decode_capacity) = 6 * 3 pages;
+# the pool holds 11 (~60%).
+TCFG = dict(n_nodes=6, depth=2, slots=8, node_capacity=24,
+            decode_capacity=12, temperature=0.0, ctx_store="paged",
+            page_size=16, num_pages=11)
+N_PREFIXES = 4          # distinct shared system prompts (Zipf-ranked)
+PREFIX_LEN = 18
+SUFFIX_LEN = 6
+
+
+def _workload(seed: int, rounds: int, rate: float, burst_every: int,
+              burst_size: int, zipf_a: float = 1.4):
+    """Seeded arrival schedule: per round, Poisson(rate) arrivals plus a
+    periodic burst; each request picks a shared prefix Zipf-by-rank, a
+    pass@k sample count in {1, 2, 4}, a priority in {0, 1, 2}, and (for a
+    quarter of them) a deadline."""
+    rng = np.random.RandomState(seed)
+    sched = []
+    for r in range(rounds):
+        n = int(rng.poisson(rate))
+        if burst_every and r % burst_every == burst_every - 1:
+            n += burst_size
+        evs = []
+        for _ in range(n):
+            evs.append(dict(
+                prefix=min(int(rng.zipf(zipf_a)) - 1, N_PREFIXES - 1),
+                n_samples=int(rng.choice([1, 2, 4], p=[0.5, 0.3, 0.2])),
+                priority=int(rng.randint(0, 3)),
+                deadline=(int(rng.randint(20, 40))
+                          if rng.rand() < 0.25 else None),
+            ))
+        sched.append(evs)
+    return sched
+
+
+def _soak(model, cfg, params, sched, *, seed: int, fault_plan,
+          max_new_tokens: int = 6):
+    """Replay one arrival schedule through a fresh engine + frontend.
+    Returns (frontend, wall_seconds). Raises on any invariant violation —
+    the soak's job is to prove there are none."""
+    engine = TreeServeEngine(model, cfg, TreeConfig(**TCFG))
+    fe = ServeFrontend(engine, queue_depth=32, stall_rounds=6,
+                       fault_plan=fault_plan)
+    state = fe.init_state()
+    rng = np.random.RandomState(seed + 101)
+    prefixes = [jnp.asarray(rng.randint(0, cfg.vocab_size, (1, PREFIX_LEN)))
+                for _ in range(N_PREFIXES)]
+    t0 = time.perf_counter()
+    for evs in sched:
+        for ev in evs:
+            suffix = jnp.asarray(
+                rng.randint(0, cfg.vocab_size, (1, SUFFIX_LEN)))
+            fe.submit([prefixes[ev["prefix"]], suffix],
+                      n_samples=ev["n_samples"],
+                      max_new_tokens=max_new_tokens,
+                      priority=ev["priority"],
+                      deadline_rounds=ev["deadline"])
+        state = fe.pump(params, state)
+    fe.drain(params, state, max_rounds=len(sched) + 400)
+    wall = time.perf_counter() - t0
+
+    # the acceptance bar: every ticket terminal, in an allowed end state
+    for t in fe.tickets:
+        assert t.status in (COMPLETED, REJECTED), (t.tid, t.status)
+        if t.status == REJECTED:
+            assert t.reason, t.tid
+        else:
+            assert t.tokens is not None and all(
+                len(tok) == max_new_tokens for tok in t.tokens), t.tid
+    return fe, wall
+
+
+def _summarize(fe: ServeFrontend, wall: float) -> dict:
+    m = fe.metrics()
+    done = [t for t in fe.tickets if t.status == COMPLETED]
+    tokens = sum(sum(len(tok) for tok in t.tokens) for t in done)
+    occ = [(o["pages_total"] - o["pages_free"]) / o["pages_total"]
+           for o in fe.occupancy_log]
+    m.update(
+        wall_s=round(wall, 3),
+        completed_tokens=tokens,
+        tokens_per_s=round(tokens / wall, 2) if wall else None,
+        preempted_then_completed=sum(
+            1 for t in done if t.preemptions > 0),
+        pool_occupancy=dict(mean=round(float(np.mean(occ)), 4),
+                            max=round(float(np.max(occ)), 4)),
+    )
+    return m
+
+
+def run(report) -> dict:
+    fast = os.environ.get("BENCH_SOAK_FAST", "") == "1"
+    rounds = 12 if fast else 40
+    seed = 0
+    sched = _workload(seed, rounds, rate=0.6 if fast else 0.9,
+                      burst_every=5, burst_size=3 if fast else 5)
+    n_requests = sum(len(e) for e in sched)
+    plan = FaultPlan.random(seed + 7, rounds, rate=0.25, max_arg=4,
+                            max_hold=3)
+
+    cfg = reduced_config(get_config("internlm2-1.8b"))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    fe_fault, wall_fault = _soak(model, cfg, params, sched, seed=seed,
+                                 fault_plan=plan)
+    fe_clean, wall_clean = _soak(model, cfg, params, sched, seed=seed,
+                                 fault_plan=None)
+
+    payload = {
+        "meta": {
+            "device": jax.devices()[0].platform,
+            "fast_subset": fast,
+            "seed": seed,
+            "engine": dict(TCFG),
+            "workload": dict(rounds=rounds, requests=n_requests,
+                             prefixes=N_PREFIXES),
+            "fault_plan": dict(seed=plan.seed, events=len(plan),
+                               kinds=plan.counts()),
+            "note": ("Poisson+burst arrivals, Zipf shared prefixes, "
+                     "pass@k sampling over an oversubscribed paged "
+                     "trie; faulty soak vs fault-free control of the "
+                     "same schedule."),
+        },
+        "faulty": _summarize(fe_fault, wall_fault),
+        "fault_free": _summarize(fe_clean, wall_clean),
+    }
+    BENCH_JSON.write_text(json.dumps(payload, indent=2))
+
+    report("serve_soak/requests", n_requests)
+    report("serve_soak/faulty_completed",
+           payload["faulty"]["by_status"].get(COMPLETED, 0))
+    report("serve_soak/faulty_rejected",
+           payload["faulty"]["by_status"].get(REJECTED, 0))
+    report("serve_soak/faulty_preemptions", payload["faulty"]["preemptions"])
+    report("serve_soak/faulty_audits",
+           payload["faulty"]["counters"].get("audits_passed", 0))
+    report("serve_soak/faulty_tokens_per_s",
+           payload["faulty"]["tokens_per_s"])
+    p99 = payload["faulty"]["per_token_latency_s"]["p99"]
+    report("serve_soak/faulty_p99_token_latency_ms",
+           round(p99 * 1e3, 2) if p99 is not None else None)
+    report("serve_soak/pool_occupancy_max",
+           payload["faulty"]["pool_occupancy"]["max"])
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI subset (same as BENCH_SOAK_FAST=1)")
+    args = ap.parse_args()
+    if args.fast:
+        os.environ["BENCH_SOAK_FAST"] = "1"
+    run(lambda k, v: print(f"{k},{v}"))
+    print(f"wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Typed capacity/robustness error taxonomy for the serving stack.
+
+The serve engines historically raised bare ``RuntimeError`` / ``ValueError``
+on capacity failures, which made it impossible for a frontend to react
+selectively — a transient "pool is full right now" (queue and retry) looks
+exactly like a permanent "this request can never fit" (reject). This module
+gives every failure a type and a machine-readable ``reason``:
+
+  * every class keeps its historical base (``RuntimeError`` and/or
+    ``ValueError``) so existing ``except``/``pytest.raises`` sites stay
+    green — the taxonomy is strictly additive;
+  * ``CapacityError.retryable`` tells a caller whether waiting can help:
+    pool/segment/slot exhaustion clears when live requests retire
+    (retryable), an envelope overflow never does (not retryable);
+  * ``AllocatorCorruption`` is different in kind: it signals an internal
+    accounting invariant violation (double release, unknown page, refcount
+    drift) found by ``PageAllocator``'s hardened bookkeeping or its
+    ``audit()`` checker — never retry, always a bug.
+
+``runtime/frontend.py`` is the primary consumer: its admission ladder
+(admit -> queue -> preempt -> reject) branches on ``retryable`` and
+surfaces ``reason`` as the typed rejection cause.
+"""
+from __future__ import annotations
+
+
+class CapacityError(Exception):
+    """Base for all capacity-shaped serving failures.
+
+    ``reason`` is a short machine-readable slug (stable API: frontends and
+    benchmark reports key on it); ``retryable`` says whether the condition
+    can clear without changing the request (resources freed by retirement)
+    or is permanent for this request/engine envelope.
+    """
+
+    reason: str = "capacity"
+    retryable: bool = False
+
+
+class PoolExhausted(CapacityError, RuntimeError):
+    """Transient: the page pool (or another exhaustible resource pool) has
+    too few free units right now; retirement frees them. Historically a
+    bare ``RuntimeError``."""
+
+    reason = "pool_exhausted"
+    retryable = True
+
+
+class SegmentsExhausted(PoolExhausted):
+    """Transient: no free context segment / trie node to admit into (the
+    segment table itself is the exhausted pool). Historically a bare
+    ``RuntimeError``."""
+
+    reason = "segments_exhausted"
+
+
+class SlotsExhausted(CapacityError, RuntimeError):
+    """Transient: fewer free decode slots than the request's ``n_samples``.
+    Historically a bare ``RuntimeError``."""
+
+    reason = "slots_exhausted"
+    retryable = True
+
+
+class SegmentCapacityExceeded(CapacityError, ValueError):
+    """Permanent: a context/segment is longer than the engine's segment or
+    node capacity envelope — no amount of retirement makes it fit.
+    Historically a bare ``ValueError``."""
+
+    reason = "segment_capacity_exceeded"
+    retryable = False
+
+
+class DecodeCapacityExceeded(CapacityError, ValueError, RuntimeError):
+    """Permanent: a generation would overrun the per-slot decode-arm
+    capacity (the KV write would clamp and corrupt the arm). Subclasses
+    BOTH historical bases: ``ServeEngine.generate`` raised ``ValueError``,
+    ``_SlotTableEngine.step_chunk`` raised ``RuntimeError``."""
+
+    reason = "decode_capacity_exceeded"
+    retryable = False
+
+
+class AllocatorCorruption(RuntimeError):
+    """An allocator/bookkeeping INVARIANT was violated: double release,
+    release/share of an unknown or free page, refcount drift, aliased page
+    tables, free-list damage. Raised by ``PageAllocator``'s hardened
+    mutators (which reject the operation atomically, before any state
+    change) and by ``PageAllocator.audit()``. Never retryable — it means a
+    bug, and the blast-radius contract is void until the pool is rebuilt."""
+
+    reason = "allocator_corruption"
+
+
+__all__ = [
+    "CapacityError",
+    "PoolExhausted",
+    "SegmentsExhausted",
+    "SlotsExhausted",
+    "SegmentCapacityExceeded",
+    "DecodeCapacityExceeded",
+    "AllocatorCorruption",
+]

@@ -43,6 +43,11 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.errors import (
+    AllocatorCorruption,
+    PoolExhausted,
+    SegmentCapacityExceeded,
+)
 from repro.core.quantized import quantize_ctx
 
 
@@ -157,7 +162,7 @@ class PagedKVStore:
         pm = self.page_m
         n_pg = pages_needed(m_new, pm)
         if m_new > self.segment_capacity:
-            raise ValueError(
+            raise SegmentCapacityExceeded(
                 f"context of {m_new} tokens > segment capacity "
                 f"{self.segment_capacity} ({self.pages_per_segment} pages "
                 f"of {pm})")
@@ -263,7 +268,7 @@ class QuantPagedKVStore:
         pm = self.page_m
         n_pg = pages_needed(m_new, pm)
         if m_new > self.segment_capacity:
-            raise ValueError(
+            raise SegmentCapacityExceeded(
                 f"context of {m_new} tokens > segment capacity "
                 f"{self.segment_capacity} ({self.pages_per_segment} pages "
                 f"of {pm})")
@@ -327,7 +332,15 @@ class PageAllocator:
     long-running serve loops naturally permute the pool; refcounts support
     shared pages (trie ancestors hold their pages once per node, the node
     refcount guards the node — ``share``/``release`` cover future
-    block-level sharing)."""
+    block-level sharing).
+
+    Every mutator is ATOMIC: arguments are fully validated before any state
+    changes, so a rejected call (``PoolExhausted``, ``AllocatorCorruption``)
+    leaves the free list and refcounts exactly as they were — a failed
+    admission or a buggy double-release can never partially corrupt the
+    pool. ``audit()`` re-derives the invariants from scratch (see below)
+    and is cheap enough to run at every quiescent point of a serve loop.
+    """
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
@@ -337,9 +350,24 @@ class PageAllocator:
     def free_count(self) -> int:
         return len(self._free)
 
+    def free_pages(self) -> List[int]:
+        """Snapshot of the free list (copy — mutating it cannot corrupt
+        the allocator)."""
+        return list(self._free)
+
+    def _check_known(self, i, op: str):
+        if not isinstance(i, (int,)) or not 0 <= i < self.num_pages:
+            raise AllocatorCorruption(
+                f"{op} of unknown page id {i!r} (pool has pages "
+                f"0..{self.num_pages - 1})")
+
     def alloc(self, n: int) -> List[int]:
+        """Take ``n`` pages off the free list (refcount 1 each). ATOMIC:
+        on exhaustion nothing is grabbed — the free list is untouched."""
+        if n < 0:
+            raise ValueError(f"alloc of {n} pages")
         if n > len(self._free):
-            raise RuntimeError(
+            raise PoolExhausted(
                 f"page pool exhausted: need {n} pages, have "
                 f"{len(self._free)} free of {self.num_pages}")
         ids = self._free[:n]
@@ -349,12 +377,42 @@ class PageAllocator:
         return ids
 
     def share(self, ids: Sequence[int]):
+        """Add one reference per page. Raises ``AllocatorCorruption`` on an
+        unknown or FREE page (sharing a page nobody holds would resurrect
+        it outside the free list); validates everything before mutating."""
+        ids = [int(i) if isinstance(i, (int,)) or hasattr(i, "__index__")
+               else i for i in ids]
+        for i in ids:
+            self._check_known(i, "share")
+            if self._refs[i] == 0:
+                raise AllocatorCorruption(
+                    f"share of free page {i} (refcount 0 — it is on the "
+                    f"free list, not held by any segment)")
         for i in ids:
             self._refs[i] += 1
 
     def release(self, ids: Sequence[int]):
         """Drop one reference per page; pages return to the free list at
-        refcount zero. Returns the pages actually freed."""
+        refcount zero. Returns the pages actually freed.
+
+        Raises ``AllocatorCorruption`` — BEFORE mutating anything — on an
+        unknown page id or a release that would drop any page's refcount
+        below zero (double release / releasing a free page), counting
+        duplicates within this call. The historical behavior silently
+        pushed the page onto the free list again, so one buggy caller
+        could hand the same HBM page to two segments."""
+        ids = [int(i) if isinstance(i, (int,)) or hasattr(i, "__index__")
+               else i for i in ids]
+        pending = {}
+        for i in ids:
+            self._check_known(i, "release")
+            pending[i] = pending.get(i, 0) + 1
+            if pending[i] > self._refs[i]:
+                raise AllocatorCorruption(
+                    f"double release of page {i} (refcount {self._refs[i]}, "
+                    f"released {pending[i]} times in this call"
+                    + (" — page is already free" if self._refs[i] == 0
+                       else "") + ")")
         freed = []
         for i in ids:
             self._refs[i] -= 1
@@ -362,6 +420,81 @@ class PageAllocator:
                 self._free.append(i)
                 freed.append(i)
         return freed
+
+    # ---- invariant auditing ----
+    def audit(self, rows=None, tracked: Optional[Sequence[int]] = None):
+        """Re-derive the allocator invariants from scratch; raise
+        ``AllocatorCorruption`` on the first violation, return ``True``
+        when everything holds. Intended to run at every QUIESCENT point of
+        a serve loop (after retire/release, before the next admission).
+
+        Always checked:
+          * free-list ids are in range and DISJOINT (no duplicates);
+          * refcounts are never negative;
+          * a page is on the free list IFF its refcount is zero (no leaked
+            pages, no resurrected ones).
+
+        With ``rows`` (an iterable of live segments' page-table rows, e.g.
+        ``np.asarray(store.page_tables)[live]``; ``-1`` entries ignored):
+          * every referenced page id is in range (table rows ⊆ pool);
+          * every referenced page is ALLOCATED (refcount > 0);
+          * no page is referenced by two live segments (row disjointness —
+            trie sharing is per-node, so live rows never overlap).
+
+        With ``tracked`` (the flat multiset of page ids the host-side
+        owner mirrors hold, e.g. every engine ``group_pages``/
+        ``node_pages`` value concatenated): each page's refcount must
+        equal its multiplicity in ``tracked`` — host mirrors and allocator
+        agree exactly on who holds what.
+        """
+        seen = set()
+        for i in self._free:
+            self._check_known(i, "audit: free-list entry")
+            if i in seen:
+                raise AllocatorCorruption(
+                    f"audit: page {i} appears twice on the free list")
+            seen.add(i)
+        for i, r in enumerate(self._refs):
+            if r < 0:
+                raise AllocatorCorruption(
+                    f"audit: page {i} has negative refcount {r}")
+            if (r == 0) != (i in seen):
+                raise AllocatorCorruption(
+                    f"audit: page {i} refcount {r} but "
+                    + ("on" if i in seen else "NOT on") + " the free list")
+        if rows is not None:
+            owner = {}
+            for s, row in enumerate(rows):
+                for pid in row:
+                    pid = int(pid)
+                    if pid < 0:
+                        continue
+                    if pid >= self.num_pages:
+                        raise AllocatorCorruption(
+                            f"audit: live table row {s} references page "
+                            f"{pid} outside the pool (size "
+                            f"{self.num_pages})")
+                    if self._refs[pid] == 0:
+                        raise AllocatorCorruption(
+                            f"audit: live table row {s} references FREE "
+                            f"page {pid}")
+                    if pid in owner and owner[pid] != s:
+                        raise AllocatorCorruption(
+                            f"audit: page {pid} referenced by two live "
+                            f"segments ({owner[pid]} and {s})")
+                    owner[pid] = s
+        if tracked is not None:
+            counts = {}
+            for pid in tracked:
+                pid = int(pid)
+                self._check_known(pid, "audit: tracked page")
+                counts[pid] = counts.get(pid, 0) + 1
+            for i, r in enumerate(self._refs):
+                if r != counts.get(i, 0):
+                    raise AllocatorCorruption(
+                        f"audit: page {i} refcount {r} but host mirrors "
+                        f"hold it {counts.get(i, 0)} time(s)")
+        return True
 
 
 # ---------------------------------------------------------------------------

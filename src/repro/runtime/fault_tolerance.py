@@ -1,7 +1,13 @@
 """Fault-tolerance & straggler-mitigation policy (cluster contract).
 
 Single-controller JAX gives us a simple, strong FT model; this module
-documents and implements the host-side pieces the train loop plugs into.
+documents and implements the host-side pieces that BOTH long-running
+loops plug into: the train loop (checkpoint/restart, per-step deadlines)
+and the serving frontend (``runtime/frontend.ServeFrontend`` beats the
+same ``Heartbeat`` once per scheduler round, so one ``supervise`` wrapper
+covers whole-process hangs for either workload; serving-internal
+robustness — admission queueing, preemption, fault injection, allocator
+audits — lives in ``runtime/frontend.py`` / ``runtime/faults.py``).
 
 1. Checkpoint/restart (implemented: checkpoint/, train_loop.run_training)
    - async atomic checkpoints every N steps; restore-on-start; data position
@@ -10,10 +16,12 @@ documents and implements the host-side pieces the train loop plugs into.
      current mesh, so the job can come back on 448 of 512 chips (drop a
      failed pod slice) by rebuilding the mesh and re-lowering.
 
-2. Node-failure detection (implemented: Heartbeat below)
-   - every step the loop touches a heartbeat file; an external supervisor
-     (launch/train.py --supervise) restarts the process when the heartbeat
-     goes stale — covering hangs, NCCL/ICI deadlock equivalents, OOM kills.
+2. Node-failure detection (implemented: Heartbeat below; SHARED surface)
+   - every train step — and every ServeFrontend scheduler round, via its
+     ``heartbeat_path=`` knob — touches a heartbeat file; an external
+     supervisor (launch/train.py --supervise, or ``supervise`` wrapping a
+     serve loop) restarts the process when the heartbeat goes stale —
+     covering hangs, NCCL/ICI deadlock equivalents, OOM kills.
 
 3. Straggler mitigation
    - per-step deadline (train_loop step_timeout_s) turns a slow step into a

@@ -1,0 +1,129 @@
+"""Deterministic fault injection for the serving stack.
+
+Robustness claims are only as good as the faults they were tested under,
+and "the pool happened to fill up during one flaky CI run" is not a test.
+This module makes faults FIRST-CLASS, SEEDED INPUTS: a ``FaultPlan`` is a
+reproducible schedule of fault events (derived from one integer seed, or
+written out explicitly) that ``runtime/frontend.ServeFrontend`` consults at
+every scheduler round. The same seed always produces the same faults at
+the same rounds against the same workload — so a failure found by the soak
+harness (benchmarks/serve_soak.py) or the hypothesis fuzz
+(tests/test_differential.py) replays exactly.
+
+Fault kinds (``FaultKind``):
+
+  * ``POOL_EXHAUST`` — steal ``arg`` pages from the engine's
+    ``PageAllocator`` for ``hold`` rounds. Admissions meanwhile hit the
+    real ``PoolExhausted`` path and must queue/backoff/preempt; the pages
+    return through the ordinary ``release`` path afterwards.
+  * ``CANCEL_MID_DECODE`` — force-preempt one live request (chosen
+    deterministically via the plan's RNG): its slots deactivate
+    mid-decode, its resources free through normal retirement, and it
+    re-queues for re-admission — modelling a client disconnect or an
+    operator kill that must not disturb its neighbours.
+  * ``DELAYED_RETIREMENT`` — suppress the frontend's retirement pass for
+    ``hold`` rounds: finished requests pin their pages/slots, pressure
+    builds, and the stuck-decode watchdog must eventually force progress.
+  * ``DOUBLE_RELEASE`` — attempt to release an already-free pool page.
+    The hardened ``PageAllocator.release`` must refuse atomically
+    (``AllocatorCorruption``); the frontend records the catch. If the
+    allocator ever ACCEPTS the double release, the injection raises —
+    that is a real accounting hole, not a tolerable fault.
+
+The blast-radius contract (tested in tests/test_frontend.py): requests
+untouched by any fault produce bit-identical greedy tokens to a fault-free
+run of the same workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+
+class FaultKind:
+    """Fault-kind slugs (plain strings so plans serialize trivially)."""
+
+    POOL_EXHAUST = "pool_exhaust"
+    CANCEL_MID_DECODE = "cancel_mid_decode"
+    DELAYED_RETIREMENT = "delayed_retirement"
+    DOUBLE_RELEASE = "double_release"
+
+    ALL = (POOL_EXHAUST, CANCEL_MID_DECODE, DELAYED_RETIREMENT,
+           DOUBLE_RELEASE)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: fires at scheduler ``round`` (1-based, the
+    frontend's pump counter). ``arg`` scales the fault (pages to steal);
+    ``hold`` is its duration in rounds (page theft, retirement delay)."""
+
+    round: int
+    kind: str
+    arg: int = 1
+    hold: int = 2
+
+
+class FaultPlan:
+    """A deterministic, replayable schedule of ``FaultEvent``s.
+
+    Construct explicitly (``FaultPlan([FaultEvent(3, FaultKind...)])``) for
+    targeted tests, or via ``FaultPlan.random(seed, rounds)`` for soak
+    coverage. Victim selection inside the frontend goes through
+    ``choose`` so the whole faulty trajectory is a pure function of
+    (workload, plan seed)."""
+
+    def __init__(self, events: Sequence[FaultEvent] = (), seed: int = 0):
+        self.events: List[FaultEvent] = sorted(events, key=lambda e: e.round)
+        self.seed = seed
+        self._rng = np.random.RandomState(seed + 0x5EED)
+
+    def at(self, round_: int) -> List[FaultEvent]:
+        """Events scheduled for this round."""
+        return [e for e in self.events if e.round == round_]
+
+    def choose(self, seq):
+        """Deterministic victim choice (consumes the plan's RNG stream in
+        injection order)."""
+        if not seq:
+            return None
+        return seq[int(self._rng.randint(len(seq)))]
+
+    @classmethod
+    def random(cls, seed: int, rounds: int,
+               kinds: Sequence[str] = FaultKind.ALL,
+               rate: float = 0.2, max_arg: int = 4,
+               max_hold: int = 3) -> "FaultPlan":
+        """Seeded random plan: each round fires a fault with probability
+        ``rate``, kind uniform over ``kinds``, ``arg``/``hold`` uniform in
+        [1, max_*]. Same seed -> same plan, always."""
+        rng = np.random.RandomState(seed)
+        events = []
+        for r in range(1, rounds + 1):
+            if rng.rand() < rate:
+                events.append(FaultEvent(
+                    round=r,
+                    kind=kinds[int(rng.randint(len(kinds)))],
+                    arg=int(rng.randint(1, max_arg + 1)),
+                    hold=int(rng.randint(1, max_hold + 1)),
+                ))
+        return cls(events, seed=seed)
+
+    def counts(self) -> dict:
+        """Events per kind (reporting)."""
+        out: dict = {}
+        for e in self.events:
+            out[e.kind] = out.get(e.kind, 0) + 1
+        return out
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __repr__(self) -> str:
+        return (f"FaultPlan(seed={self.seed}, events={len(self.events)}, "
+                f"kinds={self.counts()})")
+
+
+__all__ = ["FaultKind", "FaultEvent", "FaultPlan"]

@@ -1,0 +1,647 @@
+"""Fault-tolerant serving frontend: admission queue, backoff, preemption.
+
+The slot-table engines (``runtime/serve.py``) are deliberately strict:
+``admit`` RAISES a typed ``CapacityError`` (core/errors.py) the moment a
+request doesn't fit, and nothing retries, queues, or degrades. That is the
+right contract for an engine — and the wrong one for a serving process,
+where one burst of arrivals must not kill the caller while healthy
+in-flight requests decode on. ``ServeFrontend`` wraps a
+``ForestServeEngine`` or ``TreeServeEngine`` with the missing robustness
+ladder:
+
+    admit  ->  queue (capped exponential backoff)  ->  preempt  ->  reject
+
+  * **Admission queue** — ``submit`` never raises on capacity: a request
+    either starts RUNNING, waits QUEUED (bounded queue; overflow is a
+    typed ``queue_full`` rejection), or is REJECTED with a
+    machine-readable reason. Transient failures (``retryable`` capacity
+    errors: pool pages, segments/nodes, slots) back off exponentially,
+    capped; permanent ones (request can never fit the engine envelope)
+    reject immediately.
+  * **Preemption under pool pressure** — when a queued request has
+    starved past ``preempt_after`` attempts, the frontend retires the
+    lowest-priority, least-shared live request (the victim whose trie
+    nodes the fewest other requests hold — freeing it returns the most
+    pages, and on the trie its surviving shared prefix makes the eventual
+    re-prefill cheap) and RE-QUEUES it: the victim ends
+    preempted-then-completed, never silently lost. Under greedy decoding
+    its re-run tokens are identical, so preemption is invisible in the
+    output — only in the latency.
+  * **Deadlines & watchdog** — per-request deadlines (in scheduler
+    rounds) reject overdue work with reason ``deadline_exceeded``; a
+    stuck-decode watchdog (no token progress for ``stall_rounds``) forces
+    the retirement path and preempts wedged requests, and every pump
+    beats a ``runtime/fault_tolerance.Heartbeat`` so an external
+    supervisor can catch whole-process hangs exactly as the train loop
+    does.
+  * **Fault injection & auditing** — a ``runtime/faults.FaultPlan``
+    injects deterministic faults at pump boundaries, and every pump ends
+    with ``engine.audit_state`` (``PageAllocator.audit``): refcount
+    consistency, free-list disjointness, no page referenced by two live
+    segments, table rows ⊆ pool. The blast-radius contract — requests
+    untouched by a fault produce bit-identical greedy tokens to a
+    fault-free run — is a tested invariant (tests/test_frontend.py).
+
+Scheduling time is VIRTUAL (one ``pump`` = one round): backoff, deadlines
+and the watchdog are deterministic functions of the workload + fault-plan
+seeds, which is what makes the soak harness (benchmarks/serve_soak.py)
+and the differential fault tests replayable. Wall-clock is recorded per
+ticket purely for latency reporting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.errors import AllocatorCorruption, CapacityError
+from repro.runtime.fault_tolerance import Heartbeat
+from repro.runtime.faults import FaultKind, FaultPlan
+
+
+# Ticket lifecycle states. PREEMPTED is a TRANSITION, not a state: a
+# preempted ticket goes back to QUEUED (preemptions += 1) and must end
+# COMPLETED or REJECTED like everyone else.
+QUEUED = "queued"
+RUNNING = "running"
+COMPLETED = "completed"
+REJECTED = "rejected"
+TERMINAL = (COMPLETED, REJECTED)
+
+# Frontend-level rejection reasons (engine-level ones come from
+# CapacityError.reason).
+REASON_QUEUE_FULL = "queue_full"
+REASON_INFEASIBLE = "request_infeasible"
+REASON_DEADLINE = "deadline_exceeded"
+REASON_MAX_ATTEMPTS = "max_attempts_exhausted"
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One submitted request and everything observed about it."""
+
+    tid: int
+    segments: List            # list of (1, m) token arrays (trie path order)
+    n_samples: int
+    max_new_tokens: int
+    priority: int = 0                     # higher = more important
+    deadline_round: Optional[int] = None  # absolute round; None = no deadline
+    status: str = QUEUED
+    reason: Optional[str] = None          # set when REJECTED
+    attempts: int = 0                     # failed admission tries
+    next_try: int = 0                     # earliest round to retry admission
+    preemptions: int = 0
+    handle: int = -1                      # engine request id / group id
+    slots: List[int] = dataclasses.field(default_factory=list)
+    submitted_round: int = 0
+    admitted_round: Optional[int] = None
+    finished_round: Optional[int] = None
+    submit_wall: float = 0.0
+    finish_wall: Optional[float] = None
+    tokens: Optional[List[np.ndarray]] = None    # per-sample, on completion
+    logprobs: Optional[List[np.ndarray]] = None
+    tokens_emitted: int = 0
+    last_progress_round: int = 0
+    fault_touched: bool = False           # a fault targeted THIS ticket
+    _preempting: bool = False             # requeue (not complete) at retire
+    _deadline_hit: bool = False           # reject (not complete) at retire
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in TERMINAL
+
+    def per_token_latency(self) -> Optional[float]:
+        """Wall seconds per emitted token, submit -> finish (reporting
+        only — scheduling never reads wall time)."""
+        if self.finish_wall is None or not self.tokens:
+            return None
+        n = sum(len(t) for t in self.tokens)
+        if n == 0:
+            return None
+        return (self.finish_wall - self.submit_wall) / n
+
+
+class ServeFrontend:
+    """Robust admission frontend over a slot-table serve engine
+    (``ForestServeEngine`` or ``TreeServeEngine``, dense or paged).
+
+    Typical loop::
+
+        fe = ServeFrontend(engine)
+        state = fe.init_state()
+        tid = fe.submit(segments, n_samples=2, max_new_tokens=8)
+        state = fe.drain(params, state)          # pump until quiescent
+        fe.ticket(tid).status                    # 'completed' / 'rejected'
+    """
+
+    def __init__(self, engine, *,
+                 queue_depth: int = 64,
+                 max_attempts: int = 8,
+                 backoff_base: int = 1,
+                 backoff_cap: int = 8,
+                 preempt: bool = True,
+                 preempt_after: int = 2,
+                 stall_rounds: int = 8,
+                 default_max_new_tokens: int = 8,
+                 decode_steps: int = 4,
+                 fault_plan: Optional[FaultPlan] = None,
+                 heartbeat_path: Optional[str] = None,
+                 audit_every_round: bool = True):
+        self.engine = engine
+        self.queue_depth = queue_depth
+        self.max_attempts = max_attempts
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.preempt = preempt
+        self.preempt_after = preempt_after
+        self.stall_rounds = stall_rounds
+        self.default_max_new_tokens = default_max_new_tokens
+        self.decode_steps = decode_steps
+        self.fault_plan = fault_plan
+        self.audit_every_round = audit_every_round
+        self.heartbeat = Heartbeat(heartbeat_path) if heartbeat_path else None
+
+        self._is_tree = hasattr(engine, "retire_requests")
+        self.round = 0
+        self.tickets: List[Ticket] = []
+        self.counters: Dict[str, int] = {}
+        self.occupancy_log: List[dict] = []
+        self._retire_suppressed_until = -1
+        self._stolen: List = []   # (return_round, page_ids) under fault
+
+    # ------------------------------------------------------------------
+    # public surface
+    # ------------------------------------------------------------------
+    def init_state(self):
+        return self.engine.init_state()
+
+    def submit(self, segments, n_samples: int = 1, *,
+               max_new_tokens: Optional[int] = None, priority: int = 0,
+               deadline_rounds: Optional[int] = None) -> int:
+        """Submit a request; NEVER raises on capacity. Returns a ticket id
+        whose status is QUEUED, or already REJECTED with a typed reason
+        (``queue_full`` for a saturated admission queue,
+        ``request_infeasible`` for a request no amount of retirement can
+        ever fit). ``segments`` is a (1, m) token array or a list of them
+        (trie path, outermost shared level first); ``deadline_rounds`` is
+        relative to now, in scheduler rounds."""
+        if not isinstance(segments, (list, tuple)):
+            segments = [segments]
+        segments = [jnp.asarray(s) for s in segments]
+        t = Ticket(
+            tid=len(self.tickets), segments=segments, n_samples=n_samples,
+            max_new_tokens=(max_new_tokens if max_new_tokens is not None
+                            else self.default_max_new_tokens),
+            priority=priority,
+            deadline_round=(self.round + deadline_rounds
+                            if deadline_rounds is not None else None),
+            submitted_round=self.round, next_try=self.round,
+            submit_wall=time.perf_counter(),
+        )
+        self.tickets.append(t)
+        self._count("submitted")
+        why = self._infeasible_reason(t)
+        if why is not None:
+            self._reject(t, why)
+        elif len(self._queued()) > self.queue_depth:
+            self._reject(t, REASON_QUEUE_FULL)
+        return t.tid
+
+    def pump(self, params, state, decode_steps: Optional[int] = None):
+        """One scheduler round: inject faults, collect retirements, enforce
+        deadlines, run the admission ladder, decode one chunk, expire
+        finished generations, run the watchdog, audit. Returns the new
+        device state. Never raises on capacity — only on genuine
+        invariant violations (``AllocatorCorruption``)."""
+        self.round += 1
+        if self.heartbeat is not None:
+            self.heartbeat.beat(self.round)
+        state = self._inject_faults(state)
+        state = self._return_stolen_pages(state)
+        state = self._collect(state)
+        state = self._check_deadlines(state)
+        state = self._admit_pass(params, state)
+        state = self._expire_finished(state)
+        state = self._decode(params, state,
+                             decode_steps or self.decode_steps)
+        state = self._expire_finished(state)
+        state = self._collect(state)
+        state = self._watchdog(params, state)
+        self.occupancy_log.append(
+            dict(self.engine.occupancy(state), round=self.round))
+        if self.audit_every_round:
+            # stolen (fault-held) pages are allocated but live outside the
+            # engine mirrors — declare them so reconciliation stays exact
+            stolen = [i for _, ids in self._stolen for i in ids]
+            self.engine.audit_state(state, extra_tracked=stolen)
+            self._count("audits_passed")
+        return state
+
+    def drain(self, params, state, *, max_rounds: int = 1000,
+              decode_steps: Optional[int] = None):
+        """Pump until every ticket is terminal (or ``max_rounds``, which
+        raises — a liveness failure, not a capacity condition)."""
+        while any(not t.terminal for t in self.tickets):
+            if self.round >= max_rounds:
+                stuck = [t.tid for t in self.tickets if not t.terminal]
+                raise RuntimeError(
+                    f"drain: tickets {stuck} not terminal after "
+                    f"{max_rounds} rounds (liveness bug or starved "
+                    f"workload)")
+            state = self.pump(params, state, decode_steps)
+        return state
+
+    def ticket(self, tid: int) -> Ticket:
+        return self.tickets[tid]
+
+    def metrics(self) -> dict:
+        """Counters + terminal-state summary for reporting."""
+        by_status: Dict[str, int] = {}
+        by_reason: Dict[str, int] = {}
+        for t in self.tickets:
+            by_status[t.status] = by_status.get(t.status, 0) + 1
+            if t.reason:
+                by_reason[t.reason] = by_reason.get(t.reason, 0) + 1
+        lat = [t.per_token_latency() for t in self.tickets]
+        lat = sorted(x for x in lat if x is not None)
+        return {
+            "rounds": self.round,
+            "by_status": by_status,
+            "rejections_by_reason": by_reason,
+            "preemptions": sum(t.preemptions for t in self.tickets),
+            "counters": dict(self.counters),
+            "per_token_latency_s": {
+                "p50": _pct(lat, 50), "p99": _pct(lat, 99),
+            },
+        }
+
+    # ------------------------------------------------------------------
+    # scheduling passes
+    # ------------------------------------------------------------------
+    def _count(self, key: str, n: int = 1):
+        self.counters[key] = self.counters.get(key, 0) + n
+
+    def _queued(self) -> List[Ticket]:
+        return [t for t in self.tickets if t.status == QUEUED]
+
+    def _running(self) -> List[Ticket]:
+        return [t for t in self.tickets if t.status == RUNNING]
+
+    def _infeasible_reason(self, t: Ticket) -> Optional[str]:
+        """A request that can NEVER fit this engine's envelope (no amount
+        of retirement helps) — reject at submit, before it wastes queue
+        slots and retries."""
+        eng, ecfg = self.engine, self.engine.ecfg
+        if t.n_samples > ecfg.slots:
+            return REASON_INFEASIBLE
+        if t.max_new_tokens - 1 > ecfg.decode_capacity:
+            return REASON_INFEASIBLE
+        if self._is_tree:
+            if len(t.segments) > ecfg.depth:
+                return REASON_INFEASIBLE
+            if any(int(s.shape[1]) > ecfg.node_capacity
+                   for s in t.segments):
+                return REASON_INFEASIBLE
+            if len(t.segments) > ecfg.n_nodes:
+                return REASON_INFEASIBLE
+        else:
+            total = sum(int(s.shape[1]) for s in t.segments)
+            if total > ecfg.ctx_capacity:
+                return REASON_INFEASIBLE
+        if getattr(eng, "paged", False):
+            from repro.core.paged import pages_needed
+
+            need = sum(pages_needed(int(s.shape[1]), ecfg.page_size)
+                       for s in t.segments)
+            if need > eng.num_pages:
+                return REASON_INFEASIBLE
+        return None
+
+    def _reject(self, t: Ticket, reason: str):
+        t.status, t.reason = REJECTED, reason
+        t.finished_round = self.round
+        t.finish_wall = time.perf_counter()
+        self._count(f"rejected_{reason}")
+
+    def _engine_admit(self, params, state, t: Ticket):
+        if self._is_tree:
+            state, slots = self.engine.admit(params, state, t.segments,
+                                             t.n_samples)
+            t.handle = len(self.engine.requests) - 1
+        else:
+            ctx = (t.segments[0] if len(t.segments) == 1
+                   else jnp.concatenate(t.segments, axis=1))
+            state, slots = self.engine.admit(params, state, ctx, t.n_samples)
+            t.handle = self.engine.slot_group[slots[0]]
+        t.slots = list(slots)
+        t.status = RUNNING
+        t.admitted_round = self.round
+        t.tokens_emitted = t.n_samples       # first token sampled at admit
+        t.last_progress_round = self.round
+        return state
+
+    def _admit_pass(self, params, state):
+        """The admission ladder. Eligible queued tickets (backoff expired)
+        try to admit in (priority desc, submission order); transient
+        failures back off exponentially (capped), starved tickets trigger
+        preemption, permanent failures and exhausted retry budgets become
+        typed rejections."""
+        eligible = sorted(
+            (t for t in self._queued() if t.next_try <= self.round),
+            key=lambda t: (-t.priority, t.tid))
+        for t in eligible:
+            state = self._try_admit_one(params, state, t)
+        return state
+
+    def _try_admit_one(self, params, state, t: Ticket):
+        try:
+            state = self._engine_admit(params, state, t)
+            self._count("admitted")
+            return state
+        except CapacityError as e:
+            if not e.retryable:
+                self._reject(t, e.reason)
+                return state
+            t.attempts += 1
+            last_reason = e.reason
+        # starved past the preemption threshold: evict the lowest-priority,
+        # least-shared live request and retry once, immediately.
+        if self.preempt and t.attempts >= self.preempt_after:
+            victim = self._pick_victim(t)
+            if victim is not None:
+                state = self._preempt(state, victim)
+                # resources free at RETIREMENT, not at cancel: run the
+                # collection pass now (requeues the victim, releases its
+                # pages) so the immediate retry sees the freed capacity.
+                # Under a DELAYED_RETIREMENT fault this no-ops and the
+                # retry fails back into backoff — faithful to the fault.
+                state = self._collect(state)
+                try:
+                    state = self._engine_admit(params, state, t)
+                    self._count("admitted_after_preempt")
+                    return state
+                except CapacityError as e:
+                    if not e.retryable:
+                        self._reject(t, e.reason)
+                        return state
+                    t.attempts += 1
+                    last_reason = e.reason
+        if t.attempts > self.max_attempts:
+            self._reject(t, last_reason or REASON_MAX_ATTEMPTS)
+            return state
+        backoff = min(self.backoff_cap,
+                      self.backoff_base * (2 ** (t.attempts - 1)))
+        t.next_try = self.round + backoff
+        self._count("backoffs")
+        return state
+
+    def _pick_victim(self, requester: Ticket) -> Optional[Ticket]:
+        """Preemption policy: among live requests STRICTLY below the
+        requester's effective priority (base priority + preemptions
+        already suffered — aging, so repeatedly-evicted work climbs out
+        of victimhood and preemption cycles terminate), pick the LOWEST
+        effective priority first, then the LEAST-SHARED (fewest trie
+        nodes held by any other live request — evicting it frees the
+        most pages and its re-prefill re-matches the surviving shared
+        prefix), then the youngest (least sunk decode work)."""
+        def eff(t: Ticket) -> int:
+            return t.priority + t.preemptions
+
+        cands = [t for t in self._running() if eff(t) < eff(requester)]
+        if not cands:
+            return None
+
+        def key(t: Ticket):
+            sharing = (self.engine.request_sharing(t.handle)
+                       if self._is_tree else 0)
+            return (eff(t), sharing, -t.submitted_round)
+
+        return min(cands, key=key)
+
+    def _preempt(self, state, victim: Ticket, *, fault: bool = False):
+        """Cancel a running ticket's slots and mark it for REQUEUE at the
+        retirement pass (status flows RUNNING -> [retire] -> QUEUED).
+        Resources free through the engines' ordinary refcounted
+        retirement — shared trie ancestors survive."""
+        if self._is_tree:
+            state = self.engine.cancel_request(state, victim.handle)
+        else:
+            state = self.engine.cancel_group(state, victim.handle)
+        victim._preempting = True
+        victim.fault_touched = victim.fault_touched or fault
+        self._count("preemptions_fault" if fault else "preemptions_pressure")
+        return state
+
+    def _collect(self, state):
+        """Retirement + ticket finalization. A RUNNING ticket whose engine
+        request/group has retired becomes COMPLETED (results gathered
+        from the host-side output lists), re-QUEUED (preemption), or
+        REJECTED (deadline). Suppressed entirely while a
+        DELAYED_RETIREMENT fault holds — the watchdog breaks the hold."""
+        if self.round <= self._retire_suppressed_until:
+            self._count("retirement_suppressed")
+            return state
+        if self._is_tree:
+            self.engine.retire_requests(state)
+        else:
+            self.engine.retire_groups(state)
+        if getattr(self.engine, "paged", False):
+            state = self.engine.release_retired(state)
+        for t in self._running():
+            live = (self.engine.requests[t.handle]["live"] if self._is_tree
+                    else self.engine.group_live[t.handle])
+            if live:
+                continue
+            if t._preempting:
+                t._preempting = False
+                t.status = QUEUED
+                t.preemptions += 1
+                t.attempts = 0
+                t.next_try = self.round + 1
+                t.handle, t.slots = -1, []
+                t.tokens_emitted = 0
+                self._count("requeued_after_preempt")
+            elif t._deadline_hit:
+                self._reject(t, REASON_DEADLINE)
+            else:
+                t.tokens = [np.asarray(self.engine.outputs[s])
+                            for s in t.slots]
+                t.logprobs = [np.asarray(self.engine.logps[s])
+                              for s in t.slots]
+                t.status = COMPLETED
+                t.finished_round = self.round
+                t.finish_wall = time.perf_counter()
+                self._count("completed")
+        return state
+
+    def _check_deadlines(self, state):
+        for t in self.tickets:
+            if t.deadline_round is None or self.round <= t.deadline_round:
+                continue
+            if t.status == QUEUED:
+                self._reject(t, REASON_DEADLINE)
+            elif t.status == RUNNING and not t._deadline_hit:
+                t._deadline_hit = True
+                if self._is_tree:
+                    state = self.engine.cancel_request(state, t.handle)
+                else:
+                    state = self.engine.cancel_group(state, t.handle)
+                self._count("deadline_cancels")
+        return state
+
+    def _expire_finished(self, state):
+        """Deactivate slots that have emitted their ticket's
+        ``max_new_tokens`` (the continuous-batching analogue of
+        ``n_steps``): their lanes park masked until the whole request
+        retires."""
+        steps = np.asarray(state.steps)
+        active = np.asarray(state.active)
+        done = []
+        for t in self._running():
+            done.extend(s for s in t.slots
+                        if active[s] and steps[s] >= t.max_new_tokens - 1)
+        return self.engine.deactivate_slots(state, done)
+
+    def _decode(self, params, state, n_steps: int):
+        """One decode chunk for the whole slot table, shortened so no live
+        slot can overrun its decode arm (``DecodeCapacityExceeded`` is a
+        caller bug, not a runtime event, so the frontend never trips it).
+        The chunk length is the engine scan's STATIC length, so each
+        distinct value compiles once — bounded by ``decode_steps``
+        distinct lengths over the frontend's lifetime."""
+        active = np.asarray(state.active)
+        if not active.any() or n_steps <= 0:
+            return state
+        deepest = int(np.asarray(state.cache.dec_lens)[active].max())
+        chunk = min(n_steps, state.cache.decode_capacity - deepest)
+        # also stop at the tightest live token budget, so every ticket
+        # emits EXACTLY max_new_tokens (the expiry pass then parks its
+        # slots) — budgets stay exact regardless of chunk boundaries,
+        # which is what makes fault-free and faulty runs comparable
+        # token-for-token.
+        steps = np.asarray(state.steps)
+        for t in self._running():
+            for s in t.slots:
+                if active[s]:
+                    chunk = min(chunk,
+                                t.max_new_tokens - 1 - int(steps[s]))
+        if chunk <= 0:
+            return state
+        state = self.engine.step_chunk(params, state, chunk)
+        # progress accounting for the watchdog
+        for t in self._running():
+            emitted = sum(len(self.engine.outputs[s]) for s in t.slots)
+            if emitted > t.tokens_emitted:
+                t.tokens_emitted = emitted
+                t.last_progress_round = self.round
+        return state
+
+    def _watchdog(self, params, state):
+        """Stuck-decode watchdog: a RUNNING ticket with no token progress
+        for ``stall_rounds`` rounds means the pipeline is wedged — most
+        commonly retirement is being held (fault, bug) while its slots
+        are already inactive. The watchdog force-lifts any retirement
+        hold and re-runs collection; a ticket that is STILL wedged with
+        active slots gets preempted back to the queue."""
+        del params
+        stalled = [t for t in self._running()
+                   if self.round - t.last_progress_round > self.stall_rounds]
+        if not stalled:
+            return state
+        self._count("watchdog_fires")
+        if self._retire_suppressed_until >= self.round:
+            self._retire_suppressed_until = -1   # break the hold
+        state = self._collect(state)
+        active = np.asarray(state.active)
+        for t in stalled:
+            if t.status == RUNNING and any(active[s] for s in t.slots):
+                state = self._preempt(state, t)
+        return self._collect(state)
+
+    # ------------------------------------------------------------------
+    # fault injection (runtime/faults.py)
+    # ------------------------------------------------------------------
+    def _inject_faults(self, state):
+        if self.fault_plan is None:
+            return state
+        for ev in self.fault_plan.at(self.round):
+            self._count(f"fault_{ev.kind}")
+            if ev.kind == FaultKind.POOL_EXHAUST:
+                state = self._fault_pool_exhaust(state, ev)
+            elif ev.kind == FaultKind.CANCEL_MID_DECODE:
+                state = self._fault_cancel(state, ev)
+            elif ev.kind == FaultKind.DELAYED_RETIREMENT:
+                self._retire_suppressed_until = max(
+                    self._retire_suppressed_until, self.round + ev.hold)
+            elif ev.kind == FaultKind.DOUBLE_RELEASE:
+                self._fault_double_release()
+            else:
+                raise ValueError(f"unknown fault kind: {ev.kind!r}")
+        return state
+
+    def _fault_pool_exhaust(self, state, ev):
+        if not getattr(self.engine, "paged", False):
+            return state
+        n = min(ev.arg, self.engine.page_alloc.free_count())
+        if n > 0:
+            ids = self.engine.page_alloc.alloc(n)
+            self._stolen.append((self.round + ev.hold, ids))
+            self._count("pages_stolen", n)
+        return state
+
+    def _return_stolen_pages(self, state):
+        keep = []
+        for due, ids in self._stolen:
+            if due <= self.round:
+                self.engine.page_alloc.release(ids)
+                self._count("pages_returned", len(ids))
+            else:
+                keep.append((due, ids))
+        self._stolen = keep
+        return state
+
+    def _fault_cancel(self, state, ev):
+        victim = self.fault_plan.choose(self._running())
+        if victim is not None:
+            state = self._preempt(state, victim, fault=True)
+        return state
+
+    def _fault_double_release(self):
+        """Attempt a double release against the hardened allocator; the
+        allocator MUST refuse atomically. An accepted double release is a
+        real accounting hole — surface it as AllocatorCorruption."""
+        if not getattr(self.engine, "paged", False):
+            return
+        free = self.engine.page_alloc.free_pages()
+        if not free:
+            return
+        before = self.engine.page_alloc.free_count()
+        caught = False
+        try:
+            self.engine.page_alloc.release([free[0]])
+        except AllocatorCorruption:
+            caught = True
+        if not caught or self.engine.page_alloc.free_count() != before:
+            raise AllocatorCorruption(
+                f"double release of page {free[0]} was ACCEPTED — "
+                f"allocator accounting hole")
+        self._count("double_release_refused")
+
+
+def _pct(sorted_vals: List[float], p: float) -> Optional[float]:
+    if not sorted_vals:
+        return None
+    idx = min(len(sorted_vals) - 1,
+              max(0, int(round(p / 100.0 * (len(sorted_vals) - 1)))))
+    return sorted_vals[idx]
+
+
+__all__ = [
+    "ServeFrontend", "Ticket",
+    "QUEUED", "RUNNING", "COMPLETED", "REJECTED", "TERMINAL",
+    "REASON_QUEUE_FULL", "REASON_INFEASIBLE", "REASON_DEADLINE",
+    "REASON_MAX_ATTEMPTS",
+]

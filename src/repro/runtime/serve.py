@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +45,13 @@ from repro.configs.base import (
     ModelConfig,
     ServeConfig,
     TreeConfig,
+)
+from repro.core.errors import (
+    DecodeCapacityExceeded,
+    PoolExhausted,
+    SegmentCapacityExceeded,
+    SegmentsExhausted,
+    SlotsExhausted,
 )
 from repro.core.kv_cache import BifurcatedCache, DecodeCache
 from repro.core.policy import BifurcationPolicy
@@ -257,7 +264,7 @@ class ServeEngine:
             # the per-step KV write clamps at the last decode slot, so
             # generating past capacity would silently corrupt the decode
             # arm — reject loudly instead (same guard as step_chunk's).
-            raise ValueError(
+            raise DecodeCapacityExceeded(
                 f"n_steps={n_steps} needs {n_steps - 1} decode-cache slots "
                 f"> decode_capacity={scfg.decode_capacity}; raise "
                 f"ServeConfig.decode_capacity or generate fewer tokens")
@@ -420,7 +427,7 @@ class _SlotTableEngine:
             deepest = int(np.asarray(state.cache.dec_lens)[active].max())
             cap = state.cache.decode_capacity
             if deepest + n_steps > cap:
-                raise RuntimeError(
+                raise DecodeCapacityExceeded(
                     f"chunk of {n_steps} steps would overflow "
                     f"decode_capacity={cap} (deepest live slot at "
                     f"{deepest}); retire slots or shorten the chunk")
@@ -455,6 +462,37 @@ class _SlotTableEngine:
         lps = jnp.asarray(self.logps[slot])[None, :]
         return GenerationResult(
             tokens=toks, mean_logprob=jnp.mean(lps, axis=1), logprobs=lps)
+
+    # ---- cancellation / observability (robustness surface) ----
+    def deactivate_slots(self, state: ForestState,
+                         slots) -> ForestState:
+        """Flip the given slots' live bits off — the in-state equivalent
+        of those slots sampling EOS. A value-only update (no recompile):
+        the slots' lanes keep stepping masked, their outputs stay
+        readable, and the normal retirement pass frees their group /
+        request / pages once every sibling slot is inactive. This is the
+        primitive behind preemption, per-request deadlines, and
+        mid-decode cancellation in ``runtime/frontend.py``."""
+        slots = list(slots)
+        if not slots:
+            return state
+        ids = jnp.asarray(slots, jnp.int32)
+        return dataclasses.replace(
+            state, active=state.active.at[ids].set(False))
+
+    def occupancy(self, state: ForestState) -> dict:
+        """Host-side utilization snapshot (serve-loop observability): live
+        slot count and — in paged mode — pool page occupancy."""
+        import numpy as np
+
+        occ = {
+            "live_slots": int(np.asarray(state.active).sum()),
+            "slots": int(self.ecfg.slots),
+        }
+        if getattr(self, "paged", False):
+            occ["pages_free"] = int(self.page_alloc.free_count())
+            occ["pages_total"] = int(self.num_pages)
+        return occ
 
 
 class ForestServeEngine(_SlotTableEngine):
@@ -559,7 +597,7 @@ class ForestServeEngine(_SlotTableEngine):
         # segment envelope bounds any context; paged mode additionally
         # gates on actually-allocatable pool pages.
         if m_new > fcfg.ctx_capacity:
-            raise ValueError(
+            raise SegmentCapacityExceeded(
                 f"context of {m_new} tokens exceeds the segment capacity "
                 f"{fcfg.ctx_capacity}; rejected (raise "
                 f"ForestConfig.ctx_capacity or split the request)")
@@ -568,16 +606,17 @@ class ForestServeEngine(_SlotTableEngine):
 
             n_pg = pages_needed(m_new, fcfg.page_size)
             if n_pg > self.page_alloc.free_count():
-                raise RuntimeError(
+                raise PoolExhausted(
                     f"context of {m_new} tokens needs {n_pg} pool pages, "
                     f"only {self.page_alloc.free_count()} of "
                     f"{self.num_pages} free — retire first")
         free_g = self.free_groups()
         free_s = self.free_slots(state)
         if not free_g:
-            raise RuntimeError("no free context segment — retire first")
+            raise SegmentsExhausted(
+                "no free context segment — retire first")
         if len(free_s) < n_samples:
-            raise RuntimeError(
+            raise SlotsExhausted(
                 f"need {n_samples} free slots, have {len(free_s)}")
         gidx, slots = free_g[0], free_s[:n_samples]
 
@@ -662,6 +701,35 @@ class ForestServeEngine(_SlotTableEngine):
             if not self.group_live[g]:
                 cache = cache.free_group(g)
         return dataclasses.replace(state, cache=cache)
+
+    # ---- robustness surface ----
+    def cancel_group(self, state: ForestState, group: int) -> ForestState:
+        """Deactivate every slot of a LIVE group (preemption / deadline /
+        client cancellation). The group's resources free through the
+        normal ``retire_groups`` path — call it next; until then the
+        slots' partial outputs stay readable via ``result``."""
+        slots = [s for s in range(self.fcfg.slots)
+                 if self.slot_group[s] == group]
+        return self.deactivate_slots(state, slots)
+
+    def audit_state(self, state: ForestState,
+                    extra_tracked: Sequence[int] = ()) -> bool:
+        """Run ``PageAllocator.audit`` against the engine's device-side
+        page tables (live groups' rows) and host-side page mirrors.
+        ``extra_tracked`` lists pages a caller holds OUTSIDE the engine
+        mirrors (e.g. the frontend's fault-stolen pages) so the refcount
+        <-> holder reconciliation stays exact. Dense mode has no
+        allocator: trivially True."""
+        if not self.paged:
+            return True
+        import numpy as np
+
+        tables = np.asarray(state.cache.store.page_tables)
+        rows = [tables[g] for g in range(self.fcfg.n_groups)
+                if self.group_live[g]]
+        tracked = [pid for ids in self.group_pages.values() for pid in ids]
+        tracked.extend(int(i) for i in extra_tracked)
+        return self.page_alloc.audit(rows=rows, tracked=tracked)
 
 
 # ---------------------------------------------------------------------------
@@ -818,18 +886,18 @@ class TreeServeEngine(_SlotTableEngine):
             if seg.shape[1] > cap:
                 # admission REJECTION (never truncate): the node envelope
                 # bounds any segment, dense or paged.
-                raise ValueError(
+                raise SegmentCapacityExceeded(
                     f"segment of {seg.shape[1]} tokens > node capacity {cap}")
         path, matched = self.match_prefix(segments)
         new_segs = segments[matched:]
         free_n = self.free_nodes()
         free_s = self.free_slots(state)
         if len(new_segs) > len(free_n):
-            raise RuntimeError(
+            raise SegmentsExhausted(
                 f"need {len(new_segs)} free trie nodes, have {len(free_n)}"
                 " — retire first")
         if len(free_s) < n_samples:
-            raise RuntimeError(
+            raise SlotsExhausted(
                 f"need {n_samples} free slots, have {len(free_s)}")
         if self.paged:
             # paged admission gates on allocatable POOL PAGES, before any
@@ -839,7 +907,7 @@ class TreeServeEngine(_SlotTableEngine):
             n_pg = sum(pages_needed(int(s.shape[1]), self.tcfg.page_size)
                        for s in new_segs)
             if n_pg > self.page_alloc.free_count():
-                raise RuntimeError(
+                raise PoolExhausted(
                     f"request needs {n_pg} pool pages for "
                     f"{len(new_segs)} new node(s), only "
                     f"{self.page_alloc.free_count()} of {self.num_pages} "
@@ -957,3 +1025,43 @@ class TreeServeEngine(_SlotTableEngine):
             if not self.node_live[nid]:
                 cache = cache.free_node(nid)
         return dataclasses.replace(state, cache=cache)
+
+    # ---- robustness surface ----
+    def cancel_request(self, state: ForestState, rid: int) -> ForestState:
+        """Deactivate every slot of a LIVE request (preemption / deadline /
+        client cancellation). Refcounted resource release happens through
+        the normal ``retire_requests`` path — shared ancestors survive; a
+        preempted request re-admitted later re-matches whatever prefix is
+        still resident, so re-prefill costs only the evicted suffix."""
+        req = self.requests[rid]
+        if not req["live"]:
+            return state
+        return self.deactivate_slots(state, req["slots"])
+
+    def request_sharing(self, rid: int) -> int:
+        """How many of this request's trie nodes are SHARED with another
+        live request (refcount > 1). The preemption policy evicts the
+        LEAST shared victim first: its nodes free the most pages (nothing
+        else holds them) and its re-admission re-prefills the most cheaply
+        relative to what anyone else loses."""
+        req = self.requests[rid]
+        return sum(1 for nid in req["path"] if self.node_refs[nid] > 1)
+
+    def audit_state(self, state: ForestState,
+                    extra_tracked: Sequence[int] = ()) -> bool:
+        """Run ``PageAllocator.audit`` against the engine's device-side
+        page tables (live nodes' rows) and host-side page mirrors.
+        ``extra_tracked`` lists pages a caller holds OUTSIDE the engine
+        mirrors (e.g. the frontend's fault-stolen pages) so the refcount
+        <-> holder reconciliation stays exact. Dense mode has no
+        allocator: trivially True."""
+        if not self.paged:
+            return True
+        import numpy as np
+
+        tables = np.asarray(state.cache.store.page_tables)
+        rows = [tables[n] for n in range(self.tcfg.n_nodes)
+                if self.node_live[n]]
+        tracked = [pid for ids in self.node_pages.values() for pid in ids]
+        tracked.extend(int(i) for i in extra_tracked)
+        return self.page_alloc.audit(rows=rows, tracked=tracked)

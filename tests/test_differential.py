@@ -512,3 +512,80 @@ if HAS_HYPOTHESIS:
         out_p = paged_bifurcated_decode_attention(
             q, kp, vp, tables, nlens, paths, kd, vd, mask, interpret=True)
         np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_d))
+
+
+if HAS_HYPOTHESIS:
+    from hypothesis import settings as _hyp_fuzz_settings
+
+    _FUZZ_MODEL = {}
+
+    def _fuzz_model():
+        """Tiny real model, built once per process (hypothesis examples
+        share it; each example gets a FRESH engine + allocator)."""
+        if not _FUZZ_MODEL:
+            from repro.configs.base import ModelConfig
+            from repro.models import get_model
+
+            cfg = ModelConfig(name="frontend-fuzz", family="dense",
+                              n_layers=2, d_model=32, n_heads=2,
+                              n_kv_heads=1, head_dim=16, d_ff=64,
+                              vocab_size=64, vocab_pad_multiple=16,
+                              decode_capacity=8)
+            model = get_model(cfg)
+            _FUZZ_MODEL.update(cfg=cfg, model=model,
+                               params=model.init(jax.random.PRNGKey(0)))
+        return _FUZZ_MODEL
+
+    # engine jit-compiles per example — cap examples below the profile
+    @_hyp_fuzz_settings(max_examples=8, deadline=None)
+    @given(
+        workload_seed=st.integers(0, 10_000),
+        plan_seed=st.integers(0, 10_000),
+        num_pages=st.integers(4, 7),
+    )
+    def test_frontend_fault_plan_fuzz(workload_seed, plan_seed, num_pages):
+        """Hypothesis-driven robustness fuzz: a seeded random workload +
+        a seeded random FaultPlan (all four kinds) against an
+        OVERSUBSCRIBED paged trie frontend. Whatever the draw: no
+        unhandled exception, every ticket ends completed (exact token
+        budget) or rejected-with-reason, and the allocator audit passes
+        at EVERY round."""
+        from repro.configs.base import TreeConfig
+        from repro.runtime.faults import FaultPlan
+        from repro.runtime.frontend import (
+            COMPLETED, REJECTED, ServeFrontend)
+        from repro.runtime.serve import TreeServeEngine
+
+        mp = _fuzz_model()
+        cfg, model, params = mp["cfg"], mp["model"], mp["params"]
+        engine = TreeServeEngine(model, cfg, TreeConfig(
+            n_nodes=3, depth=2, slots=3, node_capacity=16,
+            decode_capacity=8, temperature=0.0, ctx_store="paged",
+            page_size=8, num_pages=num_pages))
+        plan = FaultPlan.random(plan_seed, rounds=10, rate=0.35)
+        fe = ServeFrontend(engine, fault_plan=plan, stall_rounds=4,
+                           max_attempts=6)
+        state = fe.init_state()
+        rng = np.random.RandomState(workload_seed)
+        prefixes = [jnp.asarray(rng.randint(0, cfg.vocab_size, (1, 10)))
+                    for _ in range(2)]
+        budgets = {}
+        for i in range(4):
+            sfx = jnp.asarray(rng.randint(0, cfg.vocab_size,
+                                          (1, int(rng.randint(2, 8)))))
+            mnt = int(rng.randint(3, 6))
+            tid = fe.submit([prefixes[int(rng.randint(2))], sfx],
+                            n_samples=int(rng.randint(1, 3)),
+                            max_new_tokens=mnt,
+                            priority=int(rng.randint(0, 2)))
+            budgets[tid] = mnt
+            if i % 2:
+                state = fe.pump(params, state)
+        fe.drain(params, state, max_rounds=120)
+        for t in fe.tickets:
+            assert t.status in (COMPLETED, REJECTED), (t.tid, t.status)
+            if t.status == COMPLETED:
+                assert all(len(tok) == budgets[t.tid] for tok in t.tokens)
+            else:
+                assert t.reason
+        assert fe.counters["audits_passed"] == fe.metrics()["rounds"]

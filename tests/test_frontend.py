@@ -1,0 +1,267 @@
+"""Fault-tolerant serving frontend (runtime/frontend.py) + fault injection
+(runtime/faults.py).
+
+Fast (host-only) tier: FaultPlan determinism/serialization surface.
+
+Slow tier (real model + engines, CPU):
+  * the admission ladder end-to-end: admit -> queue/backoff -> preempt ->
+    typed reject, with every ticket terminal in an allowed end state;
+  * preemption policy: lowest effective priority evicted first, victim
+    re-queued and finished (preempted-then-completed), priority aging
+    terminates preemption cycles;
+  * deadlines (queued AND running) reject with ``deadline_exceeded``;
+  * the stuck-decode watchdog breaking a DELAYED_RETIREMENT hold;
+  * the BLAST-RADIUS differential contract (the acceptance bar): replay
+    the same workload with and without a FaultPlan — requests untouched
+    by any fault must produce bit-identical greedy tokens, on the trie
+    AND the flat forest, and ``PageAllocator.audit`` passes at every
+    round of both runs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ForestConfig, TreeConfig, get_config, reduced_config
+from repro.models import get_model
+from repro.runtime.faults import FaultEvent, FaultKind, FaultPlan
+from repro.runtime.frontend import (
+    COMPLETED,
+    QUEUED,
+    REASON_DEADLINE,
+    REASON_INFEASIBLE,
+    REASON_QUEUE_FULL,
+    REJECTED,
+    RUNNING,
+    ServeFrontend,
+)
+from repro.runtime.serve import ForestServeEngine, TreeServeEngine
+
+
+# ---------------------------------------------------------------------------
+# Fast: fault plans are pure functions of their seed
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic_and_sorted():
+    a = FaultPlan.random(seed=3, rounds=50, rate=0.5)
+    b = FaultPlan.random(seed=3, rounds=50, rate=0.5)
+    assert a.events == b.events and len(a) > 0
+    assert all(e.kind in FaultKind.ALL for e in a.events)
+    assert [e.round for e in a.events] == sorted(e.round for e in a.events)
+    assert FaultPlan.random(seed=4, rounds=50, rate=0.5).events != a.events
+    # victim choice consumes a seeded stream: same plan -> same choices
+    picks = [FaultPlan(seed=9).choose(list(range(10))) for _ in range(5)]
+    assert picks == [FaultPlan(seed=9).choose(list(range(10)))
+                     for _ in range(5)]
+    assert FaultPlan(seed=9).choose([]) is None
+    assert sum(FaultPlan.random(0, 40, rate=1.0).counts().values()) == 40
+
+
+def test_fault_plan_at_and_explicit_events():
+    ev = [FaultEvent(5, FaultKind.POOL_EXHAUST, arg=3, hold=2),
+          FaultEvent(2, FaultKind.DOUBLE_RELEASE)]
+    plan = FaultPlan(ev, seed=0)
+    assert [e.round for e in plan.events] == [2, 5]
+    assert plan.at(5) == [ev[0]] and plan.at(3) == []
+    assert "pool_exhaust" in repr(plan)
+
+
+# ---------------------------------------------------------------------------
+# Slow: real engines
+# ---------------------------------------------------------------------------
+
+CFG = reduced_config(get_config("internlm2-1.8b"))
+RNG = np.random.RandomState(0)
+SYS = jnp.asarray(RNG.randint(0, CFG.vocab_size, (1, 12)))
+REQS = [jnp.asarray(RNG.randint(0, CFG.vocab_size, (1, 7)))
+        for _ in range(6)]
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = get_model(CFG)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _tree_engine(model, **kw):
+    tcfg = TreeConfig(**{**dict(n_nodes=4, depth=2, slots=4,
+                                node_capacity=16, decode_capacity=8,
+                                temperature=0.0, ctx_store="paged",
+                                page_size=8, num_pages=5), **kw})
+    return TreeServeEngine(model, CFG, tcfg)
+
+
+def _forest_engine(model, **kw):
+    fcfg = ForestConfig(**{**dict(n_groups=3, slots=4, ctx_capacity=24,
+                                  decode_capacity=8, temperature=0.0,
+                                  ctx_store="paged", page_size=8,
+                                  num_pages=5), **kw})
+    return ForestServeEngine(model, CFG, fcfg)
+
+
+@pytest.mark.slow
+def test_submit_never_raises_typed_rejections(model_params):
+    """Infeasible requests and queue overflow reject at submit with a
+    typed reason — no exception ever reaches the caller."""
+    model, params = model_params
+    fe = ServeFrontend(_tree_engine(model), queue_depth=2)
+    # n_samples > slots: permanently infeasible
+    t0 = fe.ticket(fe.submit([SYS], n_samples=9))
+    assert (t0.status, t0.reason) == (REJECTED, REASON_INFEASIBLE)
+    # decode budget > decode capacity
+    t1 = fe.ticket(fe.submit([SYS], max_new_tokens=64))
+    assert (t1.status, t1.reason) == (REJECTED, REASON_INFEASIBLE)
+    # node longer than node_capacity
+    long = jnp.zeros((1, 17), jnp.int32)
+    t2 = fe.ticket(fe.submit([long]))
+    assert (t2.status, t2.reason) == (REJECTED, REASON_INFEASIBLE)
+    # queue overflow past queue_depth (nothing pumped yet, so every
+    # accepted submit sits QUEUED)
+    tids = [fe.submit([SYS, REQS[i % len(REQS)]]) for i in range(4)]
+    statuses = [fe.ticket(t).status for t in tids]
+    assert statuses == [QUEUED, QUEUED, REJECTED, REJECTED]
+    assert fe.ticket(tids[-1]).reason == REASON_QUEUE_FULL
+    del params   # submit-side ladder only — nothing ever decodes
+
+
+@pytest.mark.slow
+def test_drain_oversubscribed_all_complete_exact_budgets(model_params):
+    """More work than the engine can hold at once: the queue absorbs it,
+    everything completes, every completion has EXACTLY max_new_tokens
+    greedy tokens, audits pass every round."""
+    model, params = model_params
+    fe = ServeFrontend(_tree_engine(model))
+    state = fe.init_state()
+    for i in range(6):
+        fe.submit([SYS, REQS[i]], n_samples=1 + (i % 2), max_new_tokens=5)
+    fe.drain(params, state, max_rounds=80)
+    m = fe.metrics()
+    assert m["by_status"] == {COMPLETED: 6}
+    for t in fe.tickets:
+        assert all(len(tok) == 5 for tok in t.tokens)
+        assert all(len(lp) == 5 for lp in t.logprobs)
+    assert m["counters"]["audits_passed"] == m["rounds"]
+    assert m["counters"].get("backoffs", 0) > 0   # pressure was real
+
+
+@pytest.mark.slow
+def test_preemption_priority_and_requeue(model_params):
+    """Under pool pressure a high-priority arrival evicts the lowest
+    effective priority victim; the victim re-queues and ends
+    preempted-then-completed with the same greedy tokens."""
+    model, params = model_params
+    # pool sized so two 2-node requests cannot coexist
+    fe = ServeFrontend(_tree_engine(model, num_pages=4),
+                       preempt_after=1, backoff_base=1)
+    state = fe.init_state()
+    lo = fe.submit([SYS, REQS[0]], priority=0, max_new_tokens=6)
+    state = fe.pump(params, state)
+    assert fe.ticket(lo).status == RUNNING
+    hi = fe.submit([jnp.asarray(RNG.randint(0, CFG.vocab_size, (1, 12))),
+                    REQS[1]], priority=2, max_new_tokens=6)
+    state = fe.drain(params, state, max_rounds=60)
+    tlo, thi = fe.ticket(lo), fe.ticket(hi)
+    assert thi.status == COMPLETED and thi.preemptions == 0
+    assert tlo.status == COMPLETED and tlo.preemptions >= 1
+    assert fe.counters.get("preemptions_pressure", 0) >= 1
+    assert all(len(tok) == 6 for tok in tlo.tokens)
+    # baseline: same request alone, no pressure -> identical greedy tokens
+    fe2 = ServeFrontend(_tree_engine(model, num_pages=4))
+    s2 = fe2.init_state()
+    ref = fe2.submit([SYS, REQS[0]], max_new_tokens=6)
+    fe2.drain(params, s2, max_rounds=30)
+    for a, b in zip(tlo.tokens, fe2.ticket(ref).tokens):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_deadlines_reject_queued_and_running(model_params):
+    model, params = model_params
+    fe = ServeFrontend(_tree_engine(model, num_pages=3))
+    state = fe.init_state()
+    # hog the pool so the second request starves in the queue — it must
+    # NOT share the hog's prefix, or the trie would admit it for free
+    hog = fe.submit([SYS], n_samples=1, max_new_tokens=8)
+    starved = fe.submit([REQS[4], REQS[0]], deadline_rounds=2,
+                        max_new_tokens=8)
+    running = fe.submit([SYS], n_samples=1, deadline_rounds=1,
+                        max_new_tokens=8)
+    fe.drain(params, state, max_rounds=60)
+    assert fe.ticket(hog).status == COMPLETED
+    t = fe.ticket(starved)
+    assert (t.status, t.reason) == (REJECTED, REASON_DEADLINE)
+    t = fe.ticket(running)   # admitted round 1, deadline hits mid-decode
+    assert (t.status, t.reason) == (REJECTED, REASON_DEADLINE)
+    assert fe.counters.get("deadline_cancels", 0) >= 1
+
+
+@pytest.mark.slow
+def test_watchdog_breaks_delayed_retirement_hold(model_params):
+    """A DELAYED_RETIREMENT fault pins finished requests; the watchdog
+    must break the hold and let the pipeline drain."""
+    model, params = model_params
+    # fire at round 1 so the hold lands before the (fast) requests retire
+    plan = FaultPlan([FaultEvent(1, FaultKind.DELAYED_RETIREMENT,
+                                 hold=50)])
+    fe = ServeFrontend(_tree_engine(model), fault_plan=plan,
+                       stall_rounds=3)
+    state = fe.init_state()
+    for i in range(3):
+        fe.submit([SYS, REQS[i]], max_new_tokens=4)
+    fe.drain(params, state, max_rounds=60)
+    assert all(t.status == COMPLETED for t in fe.tickets)
+    assert fe.counters.get("retirement_suppressed", 0) > 0
+    assert fe.counters.get("watchdog_fires", 0) >= 1
+
+
+def _replay(model, params, make_engine, reqs, plan, max_new_tokens=5):
+    fe = ServeFrontend(make_engine(model), fault_plan=plan,
+                       stall_rounds=4)
+    state = fe.init_state()
+    for segs, k, pr in reqs:
+        fe.submit(segs, n_samples=k, priority=pr,
+                  max_new_tokens=max_new_tokens)
+    fe.drain(params, state, max_rounds=120)
+    return fe
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("which", ["tree", "forest"])
+def test_blast_radius_tokens_bit_identical_under_faults(model_params,
+                                                        which):
+    """THE acceptance contract: the same workload replayed with a fault
+    plan covering all four kinds — requests a fault never touched return
+    bit-identical greedy tokens to the fault-free run; fault-touched
+    requests still END WELL (preempted-then-completed, identical tokens
+    too, since greedy re-runs are deterministic)."""
+    model, params = model_params
+    make = _tree_engine if which == "tree" else _forest_engine
+    if which == "tree":
+        reqs = [([SYS, REQS[i]], 1 + (i % 2), i % 2) for i in range(4)]
+    else:
+        reqs = [([jnp.concatenate([SYS, REQS[i]], axis=1)],
+                 1 + (i % 2), i % 2) for i in range(4)]
+    plan = FaultPlan([
+        FaultEvent(2, FaultKind.POOL_EXHAUST, arg=2, hold=2),
+        FaultEvent(3, FaultKind.DOUBLE_RELEASE),
+        FaultEvent(4, FaultKind.DELAYED_RETIREMENT, hold=2),
+        FaultEvent(5, FaultKind.CANCEL_MID_DECODE),
+    ], seed=1)
+    base = _replay(model, params, make, reqs, None)
+    faulty = _replay(model, params, make, reqs, plan)
+
+    assert all(t.status == COMPLETED for t in base.tickets)
+    assert all(t.status == COMPLETED for t in faulty.tickets)
+    assert faulty.counters.get("fault_cancel_mid_decode", 0) == 1
+    assert faulty.counters.get("double_release_refused", 0) == 1
+    touched = [t for t in faulty.tickets if t.fault_touched]
+    assert len(touched) == 1 and touched[0].preemptions >= 1
+    # audits passed at EVERY round of both runs
+    for fe in (base, faulty):
+        assert fe.counters["audits_passed"] == fe.metrics()["rounds"]
+    # bit-identity — for untouched requests by contract, and (greedy)
+    # for the preempted one too
+    for b, f in zip(base.tickets, faulty.tickets):
+        assert len(b.tokens) == len(f.tokens)
+        for x, y in zip(b.tokens, f.tokens):
+            np.testing.assert_array_equal(x, y)

@@ -719,3 +719,144 @@ def test_admission_rejection_capacity_and_pool(small_model, req_tokens):
     # rejection happened BEFORE any state mutation: a fitting request lands
     ts, _ = teng.admit(params, ts, [req_tokens["b"]], 1)
     assert teng.node_live[0]
+
+
+# ---------------------------------------------------------------------------
+# Hardened allocator: atomic mutators + invariant auditing (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_allocator_typed_errors_are_backward_compatible():
+    """The new taxonomy subclasses the historical bare types, so existing
+    ``except RuntimeError`` / ``except ValueError`` sites keep working."""
+    from repro.core.errors import (
+        AllocatorCorruption,
+        CapacityError,
+        PoolExhausted,
+        SegmentCapacityExceeded,
+    )
+
+    assert issubclass(PoolExhausted, RuntimeError)
+    assert issubclass(PoolExhausted, CapacityError)
+    assert PoolExhausted.retryable
+    assert issubclass(SegmentCapacityExceeded, ValueError)
+    assert not SegmentCapacityExceeded.retryable
+    assert issubclass(AllocatorCorruption, RuntimeError)
+
+    al = PageAllocator(2)
+    al.alloc(2)
+    with pytest.raises(PoolExhausted):
+        al.alloc(1)
+    st = PagedKVStore.init(1, 2, 2, 8, G, HD, page_m=8)
+    k = jnp.ones((1, 17, G, HD), jnp.bfloat16)
+    with pytest.raises(SegmentCapacityExceeded):
+        st.write_segment(k, k, 0, [0, 1, 2])
+
+
+def test_allocator_alloc_atomic_on_exhaustion():
+    """A rejected alloc grabs NOTHING: free list and refcounts untouched."""
+    from repro.core.errors import PoolExhausted
+
+    al = PageAllocator(4)
+    al.alloc(3)
+    before = al.free_pages()
+    with pytest.raises(PoolExhausted):
+        al.alloc(2)
+    assert al.free_pages() == before
+    assert al.alloc(1) == before                 # the survivor still works
+    with pytest.raises(ValueError):
+        al.alloc(-1)
+
+
+def test_allocator_double_release_refused_atomically():
+    """Double release (across calls AND duplicated within one call) raises
+    AllocatorCorruption BEFORE mutating — the historical bug silently
+    pushed the page onto the free list twice, aliasing HBM."""
+    from repro.core.errors import AllocatorCorruption
+
+    al = PageAllocator(4)
+    a = al.alloc(2)
+    assert al.release([a[0]]) == [a[0]]
+    before = (al.free_pages(), al.free_count())
+    with pytest.raises(AllocatorCorruption, match="double release"):
+        al.release([a[0]])                       # already free
+    with pytest.raises(AllocatorCorruption, match="double release"):
+        al.release([a[1], a[1]])                 # dup within one call
+    assert (al.free_pages(), al.free_count()) == before
+    al.audit()                                   # invariants intact
+
+
+def test_allocator_release_and_share_validate_ids():
+    """Unknown page ids and shares of free pages are refused atomically."""
+    from repro.core.errors import AllocatorCorruption
+
+    al = PageAllocator(4)
+    a = al.alloc(2)
+    for bad in (99, -1, "x"):
+        with pytest.raises(AllocatorCorruption, match="unknown page"):
+            al.release([bad])
+        with pytest.raises(AllocatorCorruption, match="unknown page"):
+            al.share([bad])
+    free = al.free_pages()[0]
+    with pytest.raises(AllocatorCorruption, match="share of free page"):
+        al.share([free])
+    # a failed share mid-list increments NOTHING
+    with pytest.raises(AllocatorCorruption):
+        al.share([a[0], free])
+    assert al.release(a) == a                    # refcounts were untouched
+    al.audit()
+
+
+def test_allocator_accepts_numpy_page_ids():
+    """Engine mirrors hand back np.int32/int64 ids — the allocator must
+    treat them as the same page, not 'unknown'."""
+    al = PageAllocator(4)
+    a = al.alloc(2)
+    al.share(np.asarray(a, np.int32))
+    al.release(np.asarray(a, np.int64))
+    assert al.release(list(np.asarray(a, np.int32))) == a
+    assert al.free_count() == 4
+    al.audit()
+
+
+def test_allocator_audit_catches_planted_corruption():
+    """audit() re-derives every invariant from scratch: free-list damage,
+    refcount drift, aliased live rows, out-of-pool rows, and host-mirror
+    multiset mismatches each raise AllocatorCorruption."""
+    from repro.core.errors import AllocatorCorruption
+
+    def fresh():
+        al = PageAllocator(4)
+        ids = al.alloc(2)
+        return al, ids
+
+    al, ids = fresh()
+    assert al.audit(rows=[np.asarray([ids[0], -1]),
+                          np.asarray([ids[1]])],
+                    tracked=ids) is True
+
+    al, ids = fresh()
+    al._free.append(ids[0])                      # resurrect a held page
+    with pytest.raises(AllocatorCorruption, match="free list"):
+        al.audit()
+
+    al, ids = fresh()
+    al._refs[ids[0]] = -1                        # refcount drift
+    with pytest.raises(AllocatorCorruption, match="negative refcount"):
+        al.audit()
+
+    al, ids = fresh()                            # two live rows, one page
+    with pytest.raises(AllocatorCorruption, match="two live segments"):
+        al.audit(rows=[np.asarray([ids[0]]), np.asarray([ids[0]])])
+
+    al, ids = fresh()                            # row points outside pool
+    with pytest.raises(AllocatorCorruption, match="outside the pool"):
+        al.audit(rows=[np.asarray([7])])
+
+    al, ids = fresh()                            # row references free page
+    free = al.free_pages()[0]
+    with pytest.raises(AllocatorCorruption, match="FREE"):
+        al.audit(rows=[np.asarray([free])])
+
+    al, ids = fresh()                            # mirror lost a page
+    with pytest.raises(AllocatorCorruption, match="host mirrors"):
+        al.audit(tracked=[ids[0]])
