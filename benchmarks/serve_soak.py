@@ -1,25 +1,36 @@
-"""Serving soak harness: bursty replay against the fault-tolerant frontend.
+"""Serving soak harness: bursty replay against the CRASH-CONSISTENT frontend.
 
 The paper's serving story (massively parallel decoding over shared
 prefixes) is exercised here as a WORKLOAD, not a kernel: a seeded replay
-of Poisson + bursty arrivals, Zipf-popular shared prefixes, and
-multi-sample pass@k requests drives ``runtime/frontend.ServeFrontend``
-over a paged ``TreeServeEngine`` whose page pool is deliberately
-OVERSUBSCRIBED (the pool cannot hold every node at once), with a seeded
-``runtime/faults.FaultPlan`` firing pool exhaustion, mid-decode cancels,
-delayed retirement and double-release attempts along the way.
+of Poisson + bursty arrivals, Zipf-popular shared prefixes with MIXED
+context-length distributions (short/medium/long prefixes, per-request
+suffix lengths), and multi-sample pass@k requests drives
+``runtime/recovery.DurableFrontend`` over a paged ``TreeServeEngine``
+whose page pool is deliberately OVERSUBSCRIBED, with a seeded
+``runtime/faults.FaultPlan`` drawing from the FULL registered fault set —
+pool exhaustion, mid-decode cancels, delayed retirement, double-release
+attempts, AND the durability faults: ``kill_process`` (the frontend dies
+mid-workload and is resurrected from snapshot + journal replay),
+``snapshot_corrupt`` (recovery must detect the bit-flip and fall back),
+``journal_truncate`` (replay stops at the last complete record).
 
 What must hold (the robustness acceptance bar, asserted here):
-  * zero unhandled exceptions over the whole soak;
-  * every request ends ``completed``, ``rejected`` with a typed reason,
-    or preempted-then-``completed``;
-  * ``PageAllocator.audit()`` passes at every scheduler round.
+  * zero unhandled exceptions over the whole soak — kills are CAUGHT,
+    recovered from, and the workload resumes across the crash boundary;
+  * every surviving request ends ``completed`` with its EXACT token
+    budget, ``rejected`` with a typed reason, or preempted-then-
+    ``completed``;
+  * ``PageAllocator.audit()`` passes at every scheduler round on BOTH
+    sides of every crash (including replayed rounds).
 
 Emits ``BENCH_serve_soak.json``: p50/p99 per-token latency, completed
-tokens/sec throughput, rejection/preemption counts by reason, and pool
-occupancy over the run — for the faulty soak and a fault-free control of
-the same workload. ``BENCH_SOAK_FAST=1`` selects the CI subset. Run
-standalone via ``PYTHONPATH=src python -m benchmarks.serve_soak``.
+tokens/sec, rejection/preemption counts, pool occupancy, durability
+stats (kills survived, recoveries, replayed rounds, snapshot fallbacks)
+and the PREFIX-CACHE economics — trie hit rate and shared-ancestor KV
+bytes saved vs cold prefill — for the faulty soak and a fault-free
+control of the same workload. ``BENCH_SOAK_FAST=1`` selects the CI
+subset. Run standalone via ``PYTHONPATH=src python -m
+benchmarks.serve_soak``.
 """
 from __future__ import annotations
 
@@ -27,6 +38,7 @@ import argparse
 import json
 import os
 import pathlib
+import tempfile
 import time
 
 import jax
@@ -35,8 +47,10 @@ import numpy as np
 
 from repro.configs import TreeConfig, get_config, reduced_config
 from repro.models import get_model
-from repro.runtime.faults import FaultPlan
+from repro.runtime.faults import (FaultEvent, FaultKind, FaultPlan,
+                                  ProcessKilled)
 from repro.runtime.frontend import COMPLETED, REJECTED, ServeFrontend
+from repro.runtime.recovery import DurableFrontend
 from repro.runtime.serve import TreeServeEngine
 
 BENCH_JSON = (pathlib.Path(__file__).resolve().parent.parent
@@ -50,14 +64,20 @@ TCFG = dict(n_nodes=6, depth=2, slots=8, node_capacity=24,
             decode_capacity=12, temperature=0.0, ctx_store="paged",
             page_size=16, num_pages=11)
 N_PREFIXES = 4          # distinct shared system prompts (Zipf-ranked)
-PREFIX_LEN = 18
-SUFFIX_LEN = 6
+# mixed context-length distributions (satellite of the durability PR):
+# prefixes come in short/medium/long flavours, suffix length is drawn
+# per request — so page counts per node vary and the allocator sees a
+# realistic mix instead of one uniform shape.
+PREFIX_LENS = [8, 14, 20, 24]      # per Zipf rank (all <= node_capacity)
+SUFFIX_LENS = [3, 6, 10]
+SUFFIX_P = [0.4, 0.4, 0.2]
 
 
 def _workload(seed: int, rounds: int, rate: float, burst_every: int,
               burst_size: int, zipf_a: float = 1.4):
     """Seeded arrival schedule: per round, Poisson(rate) arrivals plus a
-    periodic burst; each request picks a shared prefix Zipf-by-rank, a
+    periodic burst; each request picks a shared prefix Zipf-by-rank (each
+    rank has its own length), a suffix length from ``SUFFIX_LENS``, a
     pass@k sample count in {1, 2, 4}, a priority in {0, 1, 2}, and (for a
     quarter of them) a deadline."""
     rng = np.random.RandomState(seed)
@@ -70,6 +90,7 @@ def _workload(seed: int, rounds: int, rate: float, burst_every: int,
         for _ in range(n):
             evs.append(dict(
                 prefix=min(int(rng.zipf(zipf_a)) - 1, N_PREFIXES - 1),
+                suffix_len=int(rng.choice(SUFFIX_LENS, p=SUFFIX_P)),
                 n_samples=int(rng.choice([1, 2, 4], p=[0.5, 0.3, 0.2])),
                 priority=int(rng.randint(0, 3)),
                 deadline=(int(rng.randint(20, 40))
@@ -79,44 +100,126 @@ def _workload(seed: int, rounds: int, rate: float, burst_every: int,
     return sched
 
 
-def _soak(model, cfg, params, sched, *, seed: int, fault_plan,
-          max_new_tokens: int = 6):
-    """Replay one arrival schedule through a fresh engine + frontend.
-    Returns (frontend, wall_seconds). Raises on any invariant violation —
-    the soak's job is to prove there are none."""
-    engine = TreeServeEngine(model, cfg, TreeConfig(**TCFG))
-    fe = ServeFrontend(engine, queue_depth=32, stall_rounds=6,
-                       fault_plan=fault_plan)
-    state = fe.init_state()
+def _prefixes(cfg, seed: int):
     rng = np.random.RandomState(seed + 101)
-    prefixes = [jnp.asarray(rng.randint(0, cfg.vocab_size, (1, PREFIX_LEN)))
-                for _ in range(N_PREFIXES)]
-    t0 = time.perf_counter()
-    for evs in sched:
-        for ev in evs:
-            suffix = jnp.asarray(
-                rng.randint(0, cfg.vocab_size, (1, SUFFIX_LEN)))
-            fe.submit([prefixes[ev["prefix"]], suffix],
-                      n_samples=ev["n_samples"],
-                      max_new_tokens=max_new_tokens,
-                      priority=ev["priority"],
-                      deadline_rounds=ev["deadline"])
-        state = fe.pump(params, state)
-    fe.drain(params, state, max_rounds=len(sched) + 400)
-    wall = time.perf_counter() - t0
+    return rng, [jnp.asarray(rng.randint(0, cfg.vocab_size, (1, n)))
+                 for n in PREFIX_LENS[:N_PREFIXES]]
 
-    # the acceptance bar: every ticket terminal, in an allowed end state
-    for t in fe.tickets:
+
+def _check_terminal(tickets, max_new_tokens: int):
+    """The acceptance bar: every surviving ticket terminal, in an allowed
+    end state, with its EXACT completion budget."""
+    for t in tickets:
         assert t.status in (COMPLETED, REJECTED), (t.tid, t.status)
         if t.status == REJECTED:
             assert t.reason, t.tid
         else:
             assert t.tokens is not None and all(
                 len(tok) == max_new_tokens for tok in t.tokens), t.tid
-    return fe, wall
 
 
-def _summarize(fe: ServeFrontend, wall: float) -> dict:
+def _prefix_economics(engine, state) -> dict:
+    """Trie hit rate + shared-ancestor KV bytes saved vs cold prefill."""
+    ps = dict(engine.prefix_stats)
+    store = state.cache.store
+    # per-token KV bytes: k + v (+ int8 scales when present), all layers
+    bpt = 0
+    for name in ("k_pages", "v_pages", "k_scale_pages", "v_scale_pages"):
+        pool = getattr(store, name, None)
+        if pool is None:
+            continue
+        per_tok = pool.dtype.itemsize
+        for ax, dim in enumerate(pool.shape):
+            if ax not in (1, 3):     # page axis, token-within-page axis
+                per_tok *= dim
+        bpt += per_tok
+    total = ps["reused_tokens"] + ps["new_tokens"]
+    ps.update(
+        hit_rate=round(ps["hits"] / ps["admits"], 4) if ps["admits"] else None,
+        token_reuse_rate=(round(ps["reused_tokens"] / total, 4)
+                          if total else None),
+        kv_bytes_per_token=bpt,
+        prefill_bytes_saved=ps["reused_tokens"] * bpt,
+        cold_prefill_bytes=total * bpt,
+    )
+    return ps
+
+
+def _soak_durable(model, cfg, params, sched, *, seed: int, fault_plan,
+                  workdir: str, max_new_tokens: int = 6):
+    """Replay one arrival schedule through a DurableFrontend, surviving
+    every ``kill_process`` by recovering from snapshot + journal and
+    resuming mid-workload. Returns (dfe, prefix_econ, wall_seconds).
+    Raises on any invariant violation — the soak's job is to prove there
+    are none."""
+    dfe = DurableFrontend(
+        lambda: TreeServeEngine(model, cfg, TreeConfig(**TCFG)),
+        workdir, fault_plan=fault_plan, snapshot_every=6,
+        frontend_kwargs=dict(queue_depth=32, stall_rounds=6))
+    dfe.init_state()
+    rng, prefixes = _prefixes(cfg, seed)
+    t0 = time.perf_counter()
+    total_rounds = len(sched)
+    submitted_upto = 0   # schedule rounds whose arrivals are journaled
+    pumps = 0
+    while dfe.fe.round < total_rounds or dfe.pending():
+        pumps += 1
+        assert pumps <= total_rounds + 400, "soak liveness failure"
+        target = dfe.fe.round + 1
+        if target <= total_rounds and target > submitted_upto:
+            # arrivals are submitted EXACTLY once: after a crash the
+            # journal replay restores every submit it recorded, and
+            # submits lost to journal_truncate vanish by design — the
+            # suffix RNG stream is never re-consumed, so surviving
+            # requests keep their original content.
+            for ev in sched[target - 1]:
+                suffix = jnp.asarray(
+                    rng.randint(0, cfg.vocab_size, (1, ev["suffix_len"])))
+                dfe.submit([prefixes[ev["prefix"]], suffix],
+                           n_samples=ev["n_samples"],
+                           max_new_tokens=max_new_tokens,
+                           priority=ev["priority"],
+                           deadline_rounds=ev["deadline"])
+            submitted_upto = target
+        try:
+            dfe.pump(params)
+        except ProcessKilled:
+            # the frontend just "died" between rounds: resurrect it from
+            # disk and resume — the loop re-pumps from the recovered round
+            dfe.recover(params)
+    wall = time.perf_counter() - t0
+    _check_terminal(dfe.fe.tickets, max_new_tokens)
+    econ = _prefix_economics(dfe.fe.engine, dfe.state)
+    return dfe, econ, wall
+
+
+def _soak_plain(model, cfg, params, sched, *, seed: int,
+                max_new_tokens: int = 6):
+    """Fault-free control: same schedule, same pump cadence, plain
+    ServeFrontend (no durability layer in the measured path)."""
+    engine = TreeServeEngine(model, cfg, TreeConfig(**TCFG))
+    fe = ServeFrontend(engine, queue_depth=32, stall_rounds=6)
+    state = fe.init_state()
+    rng, prefixes = _prefixes(cfg, seed)
+    t0 = time.perf_counter()
+    for evs in sched:
+        for ev in evs:
+            suffix = jnp.asarray(
+                rng.randint(0, cfg.vocab_size, (1, ev["suffix_len"])))
+            fe.submit([prefixes[ev["prefix"]], suffix],
+                      n_samples=ev["n_samples"],
+                      max_new_tokens=max_new_tokens,
+                      priority=ev["priority"],
+                      deadline_rounds=ev["deadline"])
+        state = fe.pump(params, state)
+    state = fe.drain(params, state, max_rounds=len(sched) + 400)
+    wall = time.perf_counter() - t0
+    _check_terminal(fe.tickets, max_new_tokens)
+    econ = _prefix_economics(engine, state)
+    return fe, econ, wall
+
+
+def _summarize(fe: ServeFrontend, econ: dict, wall: float) -> dict:
     m = fe.metrics()
     done = [t for t in fe.tickets if t.status == COMPLETED]
     tokens = sum(sum(len(tok) for tok in t.tokens) for t in done)
@@ -130,6 +233,7 @@ def _summarize(fe: ServeFrontend, wall: float) -> dict:
             1 for t in done if t.preemptions > 0),
         pool_occupancy=dict(mean=round(float(np.mean(occ)), 4),
                             max=round(float(np.max(occ)), 4)),
+        prefix_cache=econ,
     )
     return m
 
@@ -141,17 +245,30 @@ def run(report) -> dict:
     sched = _workload(seed, rounds, rate=0.6 if fast else 0.9,
                       burst_every=5, burst_size=3 if fast else 5)
     n_requests = sum(len(e) for e in sched)
+    # full registered fault-kind set — including kill_process /
+    # snapshot_corrupt / journal_truncate (FaultPlan.random draws from
+    # FaultKind.registered() at call time)
     plan = FaultPlan.random(seed + 7, rounds, rate=0.25, max_arg=4,
                             max_hold=3)
+    if not any(e.kind == FaultKind.KILL_PROCESS for e in plan.events):
+        # the crash boundary is the whole point of the durable soak:
+        # guarantee at least one mid-workload kill even when the random
+        # draw produced none (small fast-subset plans)
+        plan.events = sorted(
+            plan.events + [FaultEvent(max(2, rounds // 2),
+                                      FaultKind.KILL_PROCESS)],
+            key=lambda e: e.round)
 
     cfg = reduced_config(get_config("internlm2-1.8b"))
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    fe_fault, wall_fault = _soak(model, cfg, params, sched, seed=seed,
-                                 fault_plan=plan)
-    fe_clean, wall_clean = _soak(model, cfg, params, sched, seed=seed,
-                                 fault_plan=None)
+    with tempfile.TemporaryDirectory(prefix="serve_soak_") as workdir:
+        dfe, econ_f, wall_fault = _soak_durable(
+            model, cfg, params, sched, seed=seed, fault_plan=plan,
+            workdir=workdir)
+    fe_clean, econ_c, wall_clean = _soak_plain(model, cfg, params, sched,
+                                               seed=seed)
 
     payload = {
         "meta": {
@@ -160,17 +277,22 @@ def run(report) -> dict:
             "seed": seed,
             "engine": dict(TCFG),
             "workload": dict(rounds=rounds, requests=n_requests,
-                             prefixes=N_PREFIXES),
+                             prefixes=N_PREFIXES,
+                             prefix_lens=PREFIX_LENS[:N_PREFIXES],
+                             suffix_lens=SUFFIX_LENS, suffix_p=SUFFIX_P),
             "fault_plan": dict(seed=plan.seed, events=len(plan),
                                kinds=plan.counts()),
-            "note": ("Poisson+burst arrivals, Zipf shared prefixes, "
-                     "pass@k sampling over an oversubscribed paged "
-                     "trie; faulty soak vs fault-free control of the "
-                     "same schedule."),
+            "note": ("Poisson+burst arrivals, Zipf shared prefixes with "
+                     "mixed context lengths, pass@k sampling over an "
+                     "oversubscribed paged trie; faulty soak (incl. "
+                     "process kills survived via snapshot+journal "
+                     "recovery) vs fault-free control of the same "
+                     "schedule."),
         },
-        "faulty": _summarize(fe_fault, wall_fault),
-        "fault_free": _summarize(fe_clean, wall_clean),
+        "faulty": _summarize(dfe.fe, econ_f, wall_fault),
+        "fault_free": _summarize(fe_clean, econ_c, wall_clean),
     }
+    payload["faulty"]["durability"] = dict(dfe.stats)
     BENCH_JSON.write_text(json.dumps(payload, indent=2))
 
     report("serve_soak/requests", n_requests)
@@ -188,6 +310,13 @@ def run(report) -> dict:
            round(p99 * 1e3, 2) if p99 is not None else None)
     report("serve_soak/pool_occupancy_max",
            payload["faulty"]["pool_occupancy"]["max"])
+    # every recovery in the soak loop is a survived kill_process (the
+    # in-frontend fault counter dies with the killed process, faithfully)
+    report("serve_soak/kills_survived", dfe.stats["recoveries"])
+    report("serve_soak/replayed_rounds", dfe.stats["replayed_rounds"])
+    report("serve_soak/snapshot_fallbacks", dfe.stats["snapshot_fallbacks"])
+    report("serve_soak/prefix_hit_rate", econ_f["hit_rate"])
+    report("serve_soak/prefill_bytes_saved", econ_f["prefill_bytes_saved"])
     return payload
 
 

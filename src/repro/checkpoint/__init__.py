@@ -1,3 +1,3 @@
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import Checkpointer, ServeCheckpointer
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "ServeCheckpointer"]

@@ -24,10 +24,13 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Optional
+import zlib
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.core.errors import KVCorruption
 
 
 def _flatten_with_paths(tree):
@@ -127,3 +130,185 @@ class Checkpointer:
             out.append(jax.device_put(arr, shard) if shard is not None
                        else jax.numpy.asarray(arr))
         return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype by saved name, including the ml_dtypes extension
+    types (bfloat16 & friends) that plain ``np.dtype`` may not know."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+class ServeCheckpointer:
+    """Crash-safe snapshots of a LIVE serving engine (device + host state).
+
+    Differs from the train ``Checkpointer`` in three load-bearing ways:
+
+      * **Raw bytes + explicit per-leaf CRC32 manifest**, not npz: every
+        device leaf is stored as its little-endian bytes at a recorded
+        offset of ``arrays.bin``, with shape/dtype/CRC in ``meta.json``.
+        A bit-flip anywhere in a leaf is detected BY US at load time
+        (``KVCorruption``) so recovery can quarantine the snapshot and
+        fall back — rather than surfacing as an opaque zipfile error or,
+        worse, decoding garbage KV. This also round-trips bf16/int8
+        bit-exactly, which the bit-identical-replay contract requires.
+      * **Host state rides along**: the engines' host mirrors (trie
+        index, refcounts, allocator free list, ticket table, fault-RNG
+        stream) are a JSON blob in the same ``meta.json``, covered by its
+        own CRC — device pool and host bookkeeping are snapshotted at the
+        same instant or not at all.
+      * **Blocking save**: a serve snapshot is a consistency point for
+        the journal (records before it are discarded, records after it
+        replay on top of it), so the snapshot must be durable before the
+        next journal epoch opens. fsync on ``arrays.bin``, ``meta.json``
+        AND the directory, then atomic rename.
+
+    Snapshots live at ``<dir>/serve_<round:09d>/``; a snapshot that fails
+    validation is renamed to ``serve_<round>.corrupt`` (quarantined, not
+    served, kept for forensics).
+    """
+
+    def __init__(self, directory: str, keep_last_k: int = 3):
+        self.directory = directory
+        self.keep_last_k = keep_last_k
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- save ----
+    def save(self, round_: int, device_state: Any, host_state: dict) -> str:
+        leaves, _ = _flatten_with_paths(device_state)
+        tmp = os.path.join(self.directory, f"tmp.{round_}")
+        final = os.path.join(self.directory, f"serve_{round_:09d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = []
+        offset = 0
+        with open(os.path.join(tmp, "arrays.bin"), "wb") as f:
+            for key, leaf in leaves:
+                arr = np.ascontiguousarray(np.asarray(jax.device_get(leaf)))
+                buf = arr.tobytes()
+                manifest.append({
+                    "key": key, "shape": list(arr.shape),
+                    "dtype": arr.dtype.name, "offset": offset,
+                    "nbytes": len(buf), "crc32": zlib.crc32(buf),
+                })
+                f.write(buf)
+                offset += len(buf)
+            f.flush()
+            os.fsync(f.fileno())
+        host_payload = json.dumps(host_state, separators=(",", ":"))
+        meta = {
+            "round": round_,
+            "manifest": manifest,
+            "host": host_payload,
+            "host_crc32": zlib.crc32(host_payload.encode()),
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):  # idempotent re-save of a round
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+        dirfd = os.open(self.directory, os.O_RDONLY)
+        try:
+            os.fsync(dirfd)
+        finally:
+            os.close(dirfd)
+        self._gc()
+        return final
+
+    def _gc(self):
+        for r in self.all_rounds()[: -self.keep_last_k]:
+            shutil.rmtree(os.path.join(self.directory, f"serve_{r:09d}"),
+                          ignore_errors=True)
+
+    # ---- load ----
+    def all_rounds(self) -> List[int]:
+        rounds = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"serve_(\d+)", name)
+            if m and os.path.exists(
+                    os.path.join(self.directory, name, "meta.json")):
+                rounds.append(int(m.group(1)))
+        return sorted(rounds)
+
+    def path_for(self, round_: int) -> str:
+        return os.path.join(self.directory, f"serve_{round_:09d}")
+
+    def load(self, round_: int, template: Any) -> Tuple[Any, dict]:
+        """Load one snapshot, verifying every leaf's CRC and the host
+        blob's CRC. Raises ``KVCorruption`` on any mismatch, shape/key
+        drift, or short file — the caller decides whether to fall back."""
+        path = self.path_for(round_)
+        try:
+            with open(os.path.join(path, "meta.json")) as f:
+                meta = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise KVCorruption(f"snapshot {path}: unreadable meta ({e})")
+        if zlib.crc32(meta["host"].encode()) != meta["host_crc32"]:
+            raise KVCorruption(f"snapshot {path}: host-state CRC mismatch")
+        host_state = json.loads(meta["host"])
+        with open(os.path.join(path, "arrays.bin"), "rb") as f:
+            blob = f.read()
+        leaves, treedef = _flatten_with_paths(template)
+        by_key = {ent["key"]: ent for ent in meta["manifest"]}
+        if [e["key"] for e in meta["manifest"]] != [k for k, _ in leaves]:
+            raise KVCorruption(
+                f"snapshot {path}: leaf keys do not match template "
+                f"(snapshot from an incompatible engine config?)")
+        out = []
+        for key, tmpl in leaves:
+            ent = by_key[key]
+            buf = blob[ent["offset"]: ent["offset"] + ent["nbytes"]]
+            if len(buf) != ent["nbytes"]:
+                raise KVCorruption(
+                    f"snapshot {path}: leaf {key} truncated "
+                    f"({len(buf)}/{ent['nbytes']} bytes)")
+            if zlib.crc32(buf) != ent["crc32"]:
+                raise KVCorruption(
+                    f"snapshot {path}: leaf {key} CRC mismatch — "
+                    f"bytes on disk changed after save")
+            arr = np.frombuffer(buf, dtype=_np_dtype(ent["dtype"]))
+            arr = arr.reshape(ent["shape"])
+            if tuple(arr.shape) != tuple(tmpl.shape):
+                raise KVCorruption(
+                    f"snapshot {path}: leaf {key} shape {arr.shape} vs "
+                    f"template {tuple(tmpl.shape)}")
+            out.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), host_state
+
+    def quarantine(self, round_: int):
+        """Rename a failed snapshot out of the ``serve_*`` namespace so it
+        is never considered again (kept on disk for forensics)."""
+        path = self.path_for(round_)
+        try:
+            os.replace(path, path + ".corrupt")
+        except OSError:
+            shutil.rmtree(path, ignore_errors=True)
+
+    def load_latest(
+        self, template: Any,
+        validate: Optional[Callable[[int, Any, dict], None]] = None,
+    ) -> Tuple[int, Any, dict]:
+        """Newest-first load with fall-back: snapshots failing CRC checks
+        or the caller's ``validate`` hook (e.g. engine segment-checksum
+        verification) are quarantined and the next-older one is tried.
+        Returns ``(round, device_state, host_state)``; raises
+        ``FileNotFoundError`` when no valid snapshot remains."""
+        errors = []
+        for r in reversed(self.all_rounds()):
+            try:
+                device_state, host_state = self.load(r, template)
+                if validate is not None:
+                    validate(r, device_state, host_state)
+                return r, device_state, host_state
+            except KVCorruption as e:
+                errors.append(str(e))
+                self.quarantine(r)
+        raise FileNotFoundError(
+            f"no valid serve snapshot in {self.directory}"
+            + (f" (rejected: {errors})" if errors else ""))

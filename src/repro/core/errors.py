@@ -81,6 +81,22 @@ class DecodeCapacityExceeded(CapacityError, ValueError, RuntimeError):
     retryable = False
 
 
+class KVCorruption(RuntimeError):
+    """KV-cache INTEGRITY was violated: a live segment's bytes no longer
+    match the checksum recorded when they were written (bit-flipped
+    snapshot, bad DMA, host bug), or decode produced non-finite
+    logits/logprobs from a slot (poisoned pool reads). Raised by
+    ``core/integrity`` verification (snapshot load, on-demand
+    ``audit_state(verify_checksums=True)``) and by the serve step's
+    NaN/Inf sentinel. Never retryable for the affected segment: the only
+    safe response is to quarantine the owning request through the normal
+    cancel/retire path and free the poisoned pages — retrying would serve
+    garbage tokens from the same corrupt bytes."""
+
+    reason = "kv_corruption"
+    retryable = False
+
+
 class AllocatorCorruption(RuntimeError):
     """An allocator/bookkeeping INVARIANT was violated: double release,
     release/share of an unknown or free page, refcount drift, aliased page
@@ -99,5 +115,6 @@ __all__ = [
     "SlotsExhausted",
     "SegmentCapacityExceeded",
     "DecodeCapacityExceeded",
+    "KVCorruption",
     "AllocatorCorruption",
 ]

@@ -1,0 +1,121 @@
+"""KV-cache integrity checksums (write-time fingerprints, load-time audit).
+
+A paged pool that survives process death (checkpoint/ServeCheckpointer)
+is only trustworthy if corruption — a bit-flipped snapshot file, a bad
+DMA, a host-side bookkeeping bug writing into the wrong page — is
+DETECTED rather than silently decoded into garbage tokens. This module
+computes a CRC32 fingerprint over exactly the LIVE bytes of one cache
+segment (a forest group's context or a trie node), in a layout- and
+family-agnostic way:
+
+  * paged stores (``PagedKVStore`` / ``QuantPagedKVStore``): walk the
+    segment's page-table row in order, take the live tokens of each page
+    from k/v pools (and the int8 scale pools when present);
+  * dense caches (grouped / tree, bf16 / int8): slice the live token
+    prefix of ``k_ctx``/``v_ctx`` (+ ``k_scale``/``v_scale``) along the
+    layout's token axis.
+
+The serve engines record ``segment_checksum`` at admission (right after
+``write_context``/``write_node``) and re-verify on demand
+(``audit_state(verify_checksums=True)``) and at snapshot load
+(``runtime/recovery``). A mismatch raises ``core.errors.KVCorruption``.
+
+Only CONTEXT bytes are fingerprinted: the decode arms (``k_dec``/
+``v_dec``) mutate every step by design, so their checksum would never be
+stable — corruption there is caught instead by the decode-output
+NaN/Inf sentinel in ``runtime/serve``.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+from repro.core.errors import KVCorruption
+
+
+def array_crc(*arrays) -> int:
+    """CRC32 over the raw little-endian bytes of ``arrays``, in order.
+
+    Arrays are pulled to host (``np.asarray``) and made contiguous; the
+    checksum therefore commutes with device placement and snapshot
+    round-trips (which store the same raw bytes)."""
+    crc = 0
+    for a in arrays:
+        crc = zlib.crc32(np.ascontiguousarray(np.asarray(a)).tobytes(), crc)
+    return crc
+
+
+def _paged_segment_arrays(store, idx: int):
+    """Live-token slices of every pool tensor for segment ``idx``."""
+    tables = np.asarray(store.page_tables)
+    m = int(np.asarray(store.seg_lens)[idx])
+    arrs = []
+    got = 0
+    for pid in tables[idx]:
+        pid = int(pid)
+        if pid < 0 or got >= m:
+            break
+        take = min(store.page_m, m - got)
+        for name in ("k_pages", "v_pages", "k_scale_pages", "v_scale_pages"):
+            pool = getattr(store, name, None)
+            if pool is None:
+                continue
+            # (L, P, g, pm[, hd]) -> per-page (L, g, pm[, hd]); token axis 2.
+            arrs.append(np.asarray(pool[:, pid])[:, :, :take])
+        got += take
+    return arrs
+
+
+def _dense_segment_arrays(cache, idx: int):
+    """Live-token slices of the dense context tensors for segment ``idx``."""
+    lens = getattr(cache, "node_lens", None)
+    if lens is None:
+        lens = cache.ctx_lens
+    m = int(np.asarray(lens)[idx])
+    layout = getattr(cache, "ctx_layout", "gmk")
+    arrs = []
+    for name in ("k_ctx", "v_ctx", "k_scale", "v_scale"):
+        arr = getattr(cache, name, None)
+        if arr is None:
+            continue
+        # per-seg: gmk (L, g, m_c[, hd]) token axis 2; mgk (L, m_c, ...) axis 1.
+        a = np.asarray(arr[:, idx])
+        tok_axis = 2 if layout == "gmk" else 1
+        arrs.append(a[(slice(None),) * tok_axis + (slice(0, m),)])
+    return arrs
+
+
+def segment_checksum(cache, idx: int) -> int:
+    """CRC32 fingerprint of segment ``idx``'s live context bytes.
+
+    ``cache`` is any serve-facing cache family: paged families expose a
+    ``.store`` (pool + page tables), dense families expose ``k_ctx`` etc.
+    Deterministic for fixed bytes; changes for any single-bit flip inside
+    the live region; insensitive to dead capacity and free pages (those
+    are not part of the segment's identity)."""
+    store = getattr(cache, "store", None)
+    if store is None and hasattr(cache, "page_tables"):
+        store = cache  # a bare PagedKVStore/QuantPagedKVStore
+    if store is not None:
+        arrs = _paged_segment_arrays(store, idx)
+    else:
+        arrs = _dense_segment_arrays(cache, idx)
+    return array_crc(*arrs)
+
+
+def verify_segment(cache, idx: int, expected: int, *, what: str = "segment"):
+    """Recompute and compare one segment's checksum.
+
+    Raises ``KVCorruption`` (non-retryable) on mismatch; returns the
+    recomputed checksum on success."""
+    got = segment_checksum(cache, idx)
+    if got != expected:
+        raise KVCorruption(
+            f"{what} {idx} checksum mismatch: "
+            f"expected {expected:#010x}, got {got:#010x} — "
+            f"live KV bytes changed since write")
+    return got
+
+
+__all__ = ["array_crc", "segment_checksum", "verify_segment"]

@@ -421,6 +421,30 @@ class PageAllocator:
                 freed.append(i)
         return freed
 
+    # ---- durable-state serialization (checkpoint/ServeCheckpointer) ----
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot of the full allocator state (free
+        list ORDER matters: FIFO reuse makes allocation order part of the
+        deterministic-replay contract)."""
+        return {
+            "num_pages": self.num_pages,
+            "free": list(self._free),
+            "refs": list(self._refs),
+        }
+
+    def load_state_dict(self, state: dict):
+        """Restore from ``state_dict()`` output, then re-audit the basic
+        invariants so a corrupt snapshot cannot smuggle in an inconsistent
+        free list."""
+        if int(state["num_pages"]) != self.num_pages:
+            raise AllocatorCorruption(
+                f"allocator snapshot is for a {state['num_pages']}-page "
+                f"pool, this pool has {self.num_pages}")
+        self._free = [int(i) for i in state["free"]]
+        self._refs = [int(r) for r in state["refs"]]
+        self.audit()
+        return self
+
     # ---- invariant auditing ----
     def audit(self, rows=None, tracked: Optional[Sequence[int]] = None):
         """Re-derive the allocator invariants from scratch; raise

@@ -38,6 +38,13 @@ import time
 from typing import Optional
 
 
+class StaleHeartbeat(RuntimeError):
+    """The supervised process's heartbeat went stale (hang / wedge /
+    silent death). Raised by watchers that poll ``Heartbeat.stale`` —
+    e.g. ``runtime/recovery.DurableFrontend`` — so ``supervise`` treats
+    a hang exactly like a crash: restart from the latest checkpoint."""
+
+
 class Heartbeat:
     """File-mtime heartbeat; supervisor checks staleness."""
 
@@ -58,6 +65,11 @@ class Heartbeat:
             return None
 
     def stale(self, timeout_s: float) -> bool:
+        """True when the last beat is older than ``timeout_s``. A missing
+        or malformed file is NOT stale (the process may simply not have
+        started beating yet); a beat whose timestamp lies in the FUTURE
+        (clock skew, clock step) is also not stale — staleness only
+        triggers on genuinely old beats, never on skew artifacts."""
         last = self.last()
         if last is None:
             return False
@@ -65,9 +77,29 @@ class Heartbeat:
 
 
 def supervise(run_once, *, max_restarts: int = 3, heartbeat: Heartbeat = None,
-              stale_after_s: float = 600.0):
-    """Restart-on-failure wrapper: run_once() is re-invoked after any
-    exception (it resumes from the latest checkpoint)."""
+              stale_after_s: float = 600.0, backoff_s: float = 0.0,
+              backoff_cap_s: float = 30.0, sleep=time.sleep,
+              on_failure=None):
+    """Restart-on-failure wrapper: ``run_once()`` is re-invoked after any
+    exception (it is expected to resume from the latest checkpoint).
+
+      * ``max_restarts`` caps consecutive failures; past the cap the last
+        exception propagates (escalation — the caller decides whether to
+        cold-start or page a human).
+      * ``backoff_s`` > 0 sleeps ``backoff_s * 2**(attempt-1)`` (capped at
+        ``backoff_cap_s``) before each retry, so a crash-looping process
+        doesn't thrash the checkpoint store. ``sleep`` is injectable for
+        tests.
+      * ``on_failure(attempt, exc)`` runs before each retry — the hook
+        where ``DurableFrontend`` performs recovery (load snapshot,
+        replay journal) so the NEXT ``run_once`` resumes warm. An
+        exception from the hook counts as the restart failing and
+        propagates immediately.
+      * ``heartbeat``/``stale_after_s`` document the staleness contract;
+        the POLLING lives with the caller (e.g. ``DurableFrontend.pump``
+        raises ``StaleHeartbeat``), which then lands here like any other
+        failure.
+    """
     attempts = 0
     while True:
         try:
@@ -77,3 +109,7 @@ def supervise(run_once, *, max_restarts: int = 3, heartbeat: Heartbeat = None,
             if attempts > max_restarts:
                 raise
             print(f"[supervise] attempt {attempts} failed: {e!r}; restarting")
+            if on_failure is not None:
+                on_failure(attempts, e)
+            if backoff_s > 0:
+                sleep(min(backoff_cap_s, backoff_s * (2 ** (attempts - 1))))

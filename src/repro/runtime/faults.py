@@ -29,6 +29,24 @@ Fault kinds (``FaultKind``):
     (``AllocatorCorruption``); the frontend records the catch. If the
     allocator ever ACCEPTS the double release, the injection raises —
     that is a real accounting hole, not a tolerable fault.
+  * ``KILL_PROCESS`` — simulated whole-process death between pump rounds:
+    the frontend raises ``ProcessKilled`` before doing any work for the
+    round, modelling an OOM kill / preempted VM. Everything in memory is
+    gone; only what ``runtime/recovery.DurableFrontend`` put on disk
+    (snapshots + journal) survives, and recovery must resume bit-identically.
+  * ``SNAPSHOT_CORRUPT`` — flip a bit inside the LATEST saved snapshot's
+    array bytes on disk. The next recovery must detect the damage via the
+    per-leaf checksums, quarantine that snapshot, and fall back to the
+    previous valid one (replaying a longer journal tail).
+  * ``JOURNAL_TRUNCATE`` — chop the tail off the current journal file,
+    modelling a partial write at crash time. Replay must stop cleanly at
+    the last complete record; requests whose journal records were lost
+    are no longer "surviving" and simply vanish from the recovered state.
+
+The last three are DURABILITY faults: a plain ``ServeFrontend`` has no
+disk state, so it re-raises ``KILL_PROCESS`` (the process really is
+presumed dead) and counts-and-ignores the other two unless a
+``durability_hook`` (installed by ``DurableFrontend``) claims them.
 
 The blast-radius contract (tested in tests/test_frontend.py): requests
 untouched by any fault produce bit-identical greedy tokens to a fault-free
@@ -37,21 +55,42 @@ run of the same workload.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 
+class ProcessKilled(RuntimeError):
+    """Simulated whole-process death (``FaultKind.KILL_PROCESS``): the
+    in-memory engine/frontend state is gone the instant this propagates;
+    only durable snapshots + journal survive. Raised from inside
+    ``ServeFrontend.pump`` so it unwinds through the driver exactly like
+    a real SIGKILL would end the pump loop."""
+
+
 class FaultKind:
-    """Fault-kind slugs (plain strings so plans serialize trivially)."""
+    """Fault-kind slugs (plain strings so plans serialize trivially).
+
+    ``ALL`` is DERIVED from the registered slugs (every uppercase class
+    attribute), so adding a kind automatically enters soak/fuzz coverage
+    — a hand-maintained tuple silently went stale once already."""
 
     POOL_EXHAUST = "pool_exhaust"
     CANCEL_MID_DECODE = "cancel_mid_decode"
     DELAYED_RETIREMENT = "delayed_retirement"
     DOUBLE_RELEASE = "double_release"
+    KILL_PROCESS = "kill_process"
+    SNAPSHOT_CORRUPT = "snapshot_corrupt"
+    JOURNAL_TRUNCATE = "journal_truncate"
 
-    ALL = (POOL_EXHAUST, CANCEL_MID_DECODE, DELAYED_RETIREMENT,
-           DOUBLE_RELEASE)
+    @classmethod
+    def registered(cls) -> tuple:
+        """Every registered fault-kind slug, in definition order."""
+        return tuple(v for k, v in vars(cls).items()
+                     if k.isupper() and isinstance(v, str))
+
+
+FaultKind.ALL = FaultKind.registered()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,14 +130,47 @@ class FaultPlan:
             return None
         return seq[int(self._rng.randint(len(seq)))]
 
+    # ---- durable-state serialization (checkpoint/recovery) ----
+    def rng_state(self) -> list:
+        """JSON-serializable snapshot of the victim-choice RNG stream.
+        Snapshotting this alongside the engine state is what makes a
+        recovered replay consume the SAME random victims as the original
+        timeline (``choose`` is a pure function of this state)."""
+        name, key, pos, has_gauss, cached = self._rng.get_state()
+        return [name, [int(x) for x in key], int(pos),
+                int(has_gauss), float(cached)]
+
+    def set_rng_state(self, state) -> "FaultPlan":
+        """Restore the stream saved by ``rng_state()``."""
+        name, key, pos, has_gauss, cached = state
+        self._rng.set_state((name, np.asarray(key, dtype=np.uint32),
+                             int(pos), int(has_gauss), float(cached)))
+        return self
+
+    def disable(self, kind: str, upto_round: int) -> int:
+        """Remove events of ``kind`` scheduled at rounds <= ``upto_round``
+        (returns how many were dropped). A recovery manager calls this for
+        SURVIVED ``kill_process`` events before replay — re-firing a kill
+        the process already died from once would crash-loop forever."""
+        before = len(self.events)
+        self.events = [e for e in self.events
+                       if not (e.kind == kind and e.round <= upto_round)]
+        return before - len(self.events)
+
     @classmethod
     def random(cls, seed: int, rounds: int,
-               kinds: Sequence[str] = FaultKind.ALL,
+               kinds: Optional[Sequence[str]] = None,
                rate: float = 0.2, max_arg: int = 4,
                max_hold: int = 3) -> "FaultPlan":
         """Seeded random plan: each round fires a fault with probability
         ``rate``, kind uniform over ``kinds``, ``arg``/``hold`` uniform in
-        [1, max_*]. Same seed -> same plan, always."""
+        [1, max_*]. Same seed -> same plan, always.
+
+        ``kinds`` defaults to the FULL registered set at CALL time
+        (``FaultKind.registered()``) — new fault kinds automatically enter
+        soak/fuzz coverage the moment they are defined."""
+        if kinds is None:
+            kinds = FaultKind.registered()
         rng = np.random.RandomState(seed)
         events = []
         for r in range(1, rounds + 1):
@@ -126,4 +198,4 @@ class FaultPlan:
                 f"kinds={self.counts()})")
 
 
-__all__ = ["FaultKind", "FaultEvent", "FaultPlan"]
+__all__ = ["FaultKind", "FaultEvent", "FaultPlan", "ProcessKilled"]

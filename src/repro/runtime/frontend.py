@@ -59,7 +59,7 @@ import numpy as np
 
 from repro.core.errors import AllocatorCorruption, CapacityError
 from repro.runtime.fault_tolerance import Heartbeat
-from repro.runtime.faults import FaultKind, FaultPlan
+from repro.runtime.faults import FaultKind, FaultPlan, ProcessKilled
 
 
 # Ticket lifecycle states. PREEMPTED is a TRANSITION, not a state: a
@@ -77,6 +77,7 @@ REASON_QUEUE_FULL = "queue_full"
 REASON_INFEASIBLE = "request_infeasible"
 REASON_DEADLINE = "deadline_exceeded"
 REASON_MAX_ATTEMPTS = "max_attempts_exhausted"
+REASON_KV_CORRUPTION = "kv_corruption"
 
 
 @dataclasses.dataclass
@@ -108,6 +109,7 @@ class Ticket:
     fault_touched: bool = False           # a fault targeted THIS ticket
     _preempting: bool = False             # requeue (not complete) at retire
     _deadline_hit: bool = False           # reject (not complete) at retire
+    _corrupt: bool = False                # reject kv_corruption at retire
 
     @property
     def terminal(self) -> bool:
@@ -171,6 +173,14 @@ class ServeFrontend:
         self.occupancy_log: List[dict] = []
         self._retire_suppressed_until = -1
         self._stolen: List = []   # (return_round, page_ids) under fault
+        # durability hooks (installed by runtime/recovery.DurableFrontend):
+        # ``observer`` receives every state-mutating event as a dict (the
+        # write-ahead journal records them; replay re-verifies them);
+        # ``durability_hook`` claims the disk-level fault injections
+        # (snapshot_corrupt / journal_truncate) that a memory-only
+        # frontend has no substrate for.
+        self.observer = None
+        self.durability_hook = None
 
     # ------------------------------------------------------------------
     # public surface
@@ -227,6 +237,7 @@ class ServeFrontend:
         state = self._expire_finished(state)
         state = self._decode(params, state,
                              decode_steps or self.decode_steps)
+        state = self._quarantine_corrupt(state)
         state = self._expire_finished(state)
         state = self._collect(state)
         state = self._watchdog(params, state)
@@ -279,10 +290,47 @@ class ServeFrontend:
         }
 
     # ------------------------------------------------------------------
+    # durable host state (checkpoint/ServeCheckpointer snapshots)
+    # ------------------------------------------------------------------
+    def host_state(self) -> dict:
+        """Everything host-side a recovered frontend needs to resume
+        scheduling bit-identically: the full ticket table (including
+        queued backoff clocks and in-flight flags), the round counter,
+        fault bookkeeping, and the counters. JSON-able; device state is
+        snapshotted separately by ``ServeCheckpointer``. Wall-clock
+        fields round-trip as-is — they are reporting-only and never read
+        by scheduling."""
+        return {
+            "round": self.round,
+            "tickets": [_ticket_to_dict(t) for t in self.tickets],
+            "counters": dict(self.counters),
+            "occupancy_log": list(self.occupancy_log),
+            "retire_suppressed_until": self._retire_suppressed_until,
+            "stolen": [[due, [int(i) for i in ids]]
+                       for due, ids in self._stolen],
+        }
+
+    def load_host_state(self, d: dict):
+        self.round = int(d["round"])
+        self.tickets = [_ticket_from_dict(x) for x in d["tickets"]]
+        self.counters = dict(d["counters"])
+        self.occupancy_log = list(d["occupancy_log"])
+        self._retire_suppressed_until = int(d["retire_suppressed_until"])
+        self._stolen = [(int(due), list(ids)) for due, ids in d["stolen"]]
+
+    # ------------------------------------------------------------------
     # scheduling passes
     # ------------------------------------------------------------------
     def _count(self, key: str, n: int = 1):
         self.counters[key] = self.counters.get(key, 0) + n
+
+    def _emit(self, **ev):
+        """Report one state-mutating event to the observer (the recovery
+        manager's write-ahead journal). Events are plain JSON-able dicts;
+        they double as the replay cross-check — a recovered frontend
+        re-pumping a journaled round must emit the same events."""
+        if self.observer is not None:
+            self.observer(ev)
 
     def _queued(self) -> List[Ticket]:
         return [t for t in self.tickets if t.status == QUEUED]
@@ -325,6 +373,7 @@ class ServeFrontend:
         t.finished_round = self.round
         t.finish_wall = time.perf_counter()
         self._count(f"rejected_{reason}")
+        self._emit(ev="reject", tid=t.tid, round=self.round, reason=reason)
 
     def _engine_admit(self, params, state, t: Ticket):
         if self._is_tree:
@@ -341,6 +390,13 @@ class ServeFrontend:
         t.admitted_round = self.round
         t.tokens_emitted = t.n_samples       # first token sampled at admit
         t.last_progress_round = self.round
+        # journal the engine-side outcome (which nodes/group the request
+        # landed on, which slots fanned out) — the write_node/assign_paths
+        # audit trail replay verifies against
+        self._emit(ev="admit", tid=t.tid, round=self.round,
+                   handle=int(t.handle), slots=[int(s) for s in t.slots],
+                   path=(list(self.engine.requests[t.handle]["path"])
+                         if self._is_tree else [int(t.handle)]))
         return state
 
     def _admit_pass(self, params, state):
@@ -433,6 +489,8 @@ class ServeFrontend:
         victim._preempting = True
         victim.fault_touched = victim.fault_touched or fault
         self._count("preemptions_fault" if fault else "preemptions_pressure")
+        self._emit(ev="preempt", tid=victim.tid, round=self.round,
+                   fault=bool(fault))
         return state
 
     def _collect(self, state):
@@ -455,7 +513,11 @@ class ServeFrontend:
                     else self.engine.group_live[t.handle])
             if live:
                 continue
-            if t._preempting:
+            if t._corrupt:
+                # quarantined: its collected output is untrustworthy from
+                # the first non-finite step — never surface it
+                self._reject(t, REASON_KV_CORRUPTION)
+            elif t._preempting:
                 t._preempting = False
                 t.status = QUEUED
                 t.preemptions += 1
@@ -464,6 +526,7 @@ class ServeFrontend:
                 t.handle, t.slots = -1, []
                 t.tokens_emitted = 0
                 self._count("requeued_after_preempt")
+                self._emit(ev="requeue", tid=t.tid, round=self.round)
             elif t._deadline_hit:
                 self._reject(t, REASON_DEADLINE)
             else:
@@ -475,6 +538,8 @@ class ServeFrontend:
                 t.finished_round = self.round
                 t.finish_wall = time.perf_counter()
                 self._count("completed")
+                self._emit(ev="complete", tid=t.tid, round=self.round,
+                           n_tokens=sum(len(x) for x in t.tokens))
         return state
 
     def _check_deadlines(self, state):
@@ -537,6 +602,38 @@ class ServeFrontend:
             if emitted > t.tokens_emitted:
                 t.tokens_emitted = emitted
                 t.last_progress_round = self.round
+        # decode-chunk boundary record: per-slot emitted token counts —
+        # the journal's progress ledger, re-verified on replay
+        self._emit(ev="decode", round=self.round, chunk=int(chunk),
+                   lens=[len(self.engine.outputs[s])
+                         for s in range(self.engine.ecfg.slots)])
+        return state
+
+    def _quarantine_corrupt(self, state):
+        """KV-corruption quarantine: the engine's NaN/Inf sentinel flags
+        slots whose decode output went non-finite (poisoned pool bytes).
+        The owning tickets are cancelled through the ordinary retirement
+        path and rejected with the typed, non-retryable
+        ``kv_corruption`` reason — their (garbage) output is never
+        surfaced, their pages free normally, and their healthy
+        neighbours are untouched (blast-radius contract)."""
+        bad = set(self.engine.corrupt_slots)
+        if not bad:
+            return state
+        for t in self._running():
+            if not bad.intersection(t.slots):
+                continue
+            t._corrupt = True
+            t.fault_touched = True
+            if self._is_tree:
+                state = self.engine.cancel_request(state, t.handle)
+            else:
+                state = self.engine.cancel_group(state, t.handle)
+            self._count("kv_quarantines")
+            self._emit(ev="kv_quarantine", tid=t.tid, round=self.round,
+                       slots=sorted(int(s) for s in
+                                    bad.intersection(t.slots)))
+        self.engine.corrupt_slots.clear()
         return state
 
     def _watchdog(self, params, state):
@@ -578,6 +675,22 @@ class ServeFrontend:
                     self._retire_suppressed_until, self.round + ev.hold)
             elif ev.kind == FaultKind.DOUBLE_RELEASE:
                 self._fault_double_release()
+            elif ev.kind == FaultKind.KILL_PROCESS:
+                # simulated process death BETWEEN rounds: everything in
+                # memory is gone. A DurableFrontend driver catches this,
+                # recovers from snapshot+journal, and resumes; a plain
+                # frontend driver dies with it — as a real process would.
+                raise ProcessKilled(
+                    f"kill_process fault at round {self.round}")
+            elif ev.kind in (FaultKind.SNAPSHOT_CORRUPT,
+                             FaultKind.JOURNAL_TRUNCATE):
+                # disk-level faults: only meaningful when a durability
+                # layer (runtime/recovery) owns snapshots/journals; a
+                # memory-only frontend has nothing to corrupt.
+                if self.durability_hook is not None:
+                    self.durability_hook(ev)
+                else:
+                    self._count("durability_fault_ignored")
             else:
                 raise ValueError(f"unknown fault kind: {ev.kind!r}")
         return state
@@ -631,6 +744,32 @@ class ServeFrontend:
         self._count("double_release_refused")
 
 
+def _ticket_to_dict(t: Ticket) -> dict:
+    """JSON-able snapshot of one ticket. Token arrays flatten to nested
+    int/float lists; segments keep their trie-path nesting."""
+    d = dataclasses.asdict(t)
+    d["segments"] = [[int(x) for x in np.asarray(s)[0]]
+                     for s in t.segments]
+    d["tokens"] = (None if t.tokens is None
+                   else [[int(x) for x in arr] for arr in t.tokens])
+    d["logprobs"] = (None if t.logprobs is None
+                     else [[float(x) for x in arr] for arr in t.logprobs])
+    d["slots"] = [int(s) for s in t.slots]
+    return d
+
+
+def _ticket_from_dict(d: dict) -> Ticket:
+    d = dict(d)
+    d["segments"] = [jnp.asarray([seg], jnp.int32)
+                     for seg in d["segments"]]
+    if d["tokens"] is not None:
+        d["tokens"] = [np.asarray(arr, np.int32) for arr in d["tokens"]]
+    if d["logprobs"] is not None:
+        d["logprobs"] = [np.asarray(arr, np.float32)
+                         for arr in d["logprobs"]]
+    return Ticket(**d)
+
+
 def _pct(sorted_vals: List[float], p: float) -> Optional[float]:
     if not sorted_vals:
         return None
@@ -643,5 +782,5 @@ __all__ = [
     "ServeFrontend", "Ticket",
     "QUEUED", "RUNNING", "COMPLETED", "REJECTED", "TERMINAL",
     "REASON_QUEUE_FULL", "REASON_INFEASIBLE", "REASON_DEADLINE",
-    "REASON_MAX_ATTEMPTS",
+    "REASON_MAX_ATTEMPTS", "REASON_KV_CORRUPTION",
 ]

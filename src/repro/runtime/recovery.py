@@ -1,0 +1,420 @@
+"""Crash-consistent serving: snapshot + journal + deterministic replay.
+
+``ServeFrontend`` (runtime/frontend.py) is robust WITHIN a process —
+admission queueing, preemption, fault quarantine — but everything it
+knows lives in memory: an OOM kill, a preempted VM, or a wedged pump
+loop loses every in-flight request. ``DurableFrontend`` closes that gap
+with the classic database recipe, adapted to a serve loop whose
+scheduling time is VIRTUAL (one pump = one round) and therefore
+perfectly deterministic:
+
+  * **Snapshots** (``checkpoint.ServeCheckpointer``) — every
+    ``snapshot_every`` rounds, the full device state (paged pool
+    tensors, page tables, seg_lens, decode arms) plus the host blob
+    (ticket table, engine mirrors — trie index, refcounts, allocator
+    free-list IN ORDER, per-segment checksums — and the fault plan's RNG
+    stream) is written atomically with per-leaf CRCs.
+  * **Write-ahead journal** (``runtime.journal.Journal``) — between
+    snapshots, every ``submit`` and every completed ``pump`` round (with
+    its observed events: admissions + trie paths, preemptions,
+    completions, decode-chunk token counts) is appended and fsync'd.
+    One journal epoch file per snapshot.
+  * **Recovery** — load the newest snapshot whose CRCs *and* KV segment
+    checksums verify (quarantining corrupt ones and falling back, which
+    chains journal epochs back together), then REPLAY the journal tail:
+    re-submit journaled submits, re-pump journaled rounds. Determinism
+    makes replay reconstruction, not approximation — the journaled
+    per-round observations are re-verified event-for-event
+    (``ReplayDivergence`` on any mismatch), and a recovered engine
+    produces bit-identical greedy tokens to an uninterrupted run.
+  * **Supervision** (``runtime.fault_tolerance``) — ``run_supervised``
+    wraps the caller's pump loop in ``supervise``: crashes and stale
+    heartbeats (``StaleHeartbeat``) trigger recover-and-resume, a capped
+    restart budget, and past the cap an escalation to ``cold_start``.
+
+Durability faults from ``runtime/faults.py`` land here through the
+frontend's ``durability_hook``: ``snapshot_corrupt`` bit-flips the
+newest snapshot's array bytes on disk (recovery must detect and fall
+back), ``journal_truncate`` chops the live journal's tail (replay must
+stop at the last complete record). ``kill_process`` is not hooked — it
+unwinds as ``ProcessKilled`` through the driver, who calls ``recover``;
+the survived kill is then ``FaultPlan.disable``\\ d so replay does not
+crash-loop on it.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.checkpoint import ServeCheckpointer
+from repro.runtime.fault_tolerance import StaleHeartbeat, supervise
+from repro.runtime.faults import FaultEvent, FaultKind, FaultPlan
+from repro.runtime.frontend import ServeFrontend
+from repro.runtime.journal import Journal
+
+
+class ReplayDivergence(RuntimeError):
+    """Journal replay produced different events than the original
+    timeline recorded. Either determinism broke (a scheduling decision
+    read un-snapshotted state) or the snapshot/journal pair is
+    inconsistent — both are bugs, never tolerable drift."""
+
+
+class DurableFrontend:
+    """A ``ServeFrontend`` whose state survives process death.
+
+    ``engine_factory`` rebuilds a FRESH engine (a dead process's engine
+    object is gone; recovery must reconstruct it from disk alone) —
+    typically ``lambda: TreeServeEngine(model, cfg, tcfg)``.
+
+    Typical crash-tolerant loop::
+
+        dfe = DurableFrontend(factory, "/var/serve", fault_plan=plan)
+        dfe.init_state()
+        dfe.submit([sys, req], n_samples=2, max_new_tokens=8)
+        while dfe.pending():
+            try:
+                dfe.pump(params)
+            except ProcessKilled:
+                dfe.recover(params)     # resume bit-identically
+    """
+
+    def __init__(self, engine_factory, directory: str, *,
+                 frontend_kwargs: Optional[dict] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 snapshot_every: int = 8, keep_last_k: int = 3,
+                 heartbeat_path: Optional[str] = None,
+                 stale_after_s: Optional[float] = None,
+                 verify_replay: bool = True):
+        self.engine_factory = engine_factory
+        self.directory = directory
+        self.frontend_kwargs = dict(frontend_kwargs or {})
+        self.fault_plan = fault_plan
+        self.snapshot_every = snapshot_every
+        self.keep_last_k = keep_last_k
+        self.heartbeat_path = heartbeat_path
+        self.stale_after_s = stale_after_s
+        self.verify_replay = verify_replay
+        self.journal_dir = os.path.join(directory, "journal")
+        os.makedirs(self.journal_dir, exist_ok=True)
+        self.ckpt = ServeCheckpointer(os.path.join(directory, "snapshots"),
+                                      keep_last_k=keep_last_k)
+        self.stats = {"recoveries": 0, "snapshot_fallbacks": 0,
+                      "replayed_rounds": 0, "replayed_submits": 0,
+                      "snapshots": 0, "cold_starts": 0}
+        self.journal: Optional[Journal] = None
+        self.state = None
+        self._replaying = False
+        self._obs_buf: list = []
+        self._build_frontend()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def _build_frontend(self):
+        """Fresh engine + frontend with our durability hooks installed —
+        used at construction AND at the top of every recovery (the dead
+        process's objects are unrecoverable by definition)."""
+        engine = self.engine_factory()
+        fe = ServeFrontend(engine, fault_plan=self.fault_plan,
+                           heartbeat_path=self.heartbeat_path,
+                           **self.frontend_kwargs)
+        fe.observer = self._observe
+        fe.durability_hook = self._durability_fault
+        self.fe = fe
+
+    def init_state(self):
+        """Create the device state and lay down the round-0 base snapshot
+        (recovery always has somewhere to land, even before the first
+        periodic snapshot)."""
+        self.state = self.fe.init_state()
+        self._snapshot()
+        return self.state
+
+    def submit(self, segments, n_samples: int = 1, *,
+               max_new_tokens: Optional[int] = None, priority: int = 0,
+               deadline_rounds: Optional[int] = None) -> int:
+        """Write-ahead submit: the request is journaled BEFORE the ticket
+        table sees it, so a crash in between re-creates it on replay
+        (at-least-once on the durable side, exactly-once after replay's
+        tid cross-check)."""
+        if not isinstance(segments, (list, tuple)):
+            segments = [segments]
+        segments = [jnp.asarray(s) for s in segments]
+        self.journal.append({
+            "ev": "submit",
+            "tid": len(self.fe.tickets),
+            "segments": [[int(x) for x in s[0]] for s in segments],
+            "n_samples": int(n_samples),
+            "max_new_tokens": max_new_tokens,
+            "priority": int(priority),
+            "deadline_rounds": deadline_rounds,
+        })
+        return self.fe.submit(segments, n_samples=n_samples,
+                              max_new_tokens=max_new_tokens,
+                              priority=priority,
+                              deadline_rounds=deadline_rounds)
+
+    def pump(self, params, decode_steps: Optional[int] = None):
+        """One scheduler round, made durable: pump the frontend, then
+        journal the round with every event it emitted, then snapshot on
+        cadence. ``ProcessKilled`` (and anything else) unwinds BEFORE the
+        round is journaled — a crashed round leaves no record, and
+        recovery re-executes it from scratch, which determinism makes
+        indistinguishable from it never having started."""
+        if (self.stale_after_s is not None and self.fe.heartbeat is not None
+                and self.fe.heartbeat.stale(self.stale_after_s)):
+            raise StaleHeartbeat(
+                f"no heartbeat for > {self.stale_after_s}s "
+                f"(last: {self.fe.heartbeat.last()!r})")
+        self._obs_buf = []
+        self.state = self.fe.pump(params, self.state, decode_steps)
+        self.journal.append({"ev": "round", "round": self.fe.round,
+                             "decode_steps": decode_steps,
+                             "obs": self._obs_buf})
+        if self.snapshot_every and self.fe.round % self.snapshot_every == 0:
+            self._snapshot()
+        return self.state
+
+    def pending(self) -> bool:
+        return any(not t.terminal for t in self.fe.tickets)
+
+    def ticket(self, tid: int):
+        return self.fe.ticket(tid)
+
+    def metrics(self) -> dict:
+        m = self.fe.metrics()
+        m["durability"] = dict(self.stats)
+        return m
+
+    # ------------------------------------------------------------------
+    # snapshots + journal epochs
+    # ------------------------------------------------------------------
+    def _host_blob(self) -> dict:
+        return {
+            "frontend": self.fe.host_state(),
+            "engine": self.fe.engine.host_state(),
+            "plan": (None if self.fault_plan is None else {
+                "events": [[e.round, e.kind, e.arg, e.hold]
+                           for e in self.fault_plan.events],
+                "rng": self.fault_plan.rng_state(),
+            }),
+        }
+
+    def _snapshot(self):
+        """Atomic snapshot at the current round, then roll the journal to
+        a new epoch file and GC epochs older than the oldest snapshot
+        still on disk (they can never be replayed again)."""
+        r = self.fe.round
+        self.ckpt.save(r, self.state, self._host_blob())
+        self.stats["snapshots"] += 1
+        if self.journal is not None:
+            self.journal.close()
+        ep = self._epoch_path(r)
+        if os.path.exists(ep):
+            # re-snapshot at a round that already had an epoch (recovery
+            # with an empty replay tail): every record in the old file is
+            # baked into the snapshot we just wrote — replaying it again
+            # would double-apply, so the epoch starts over empty.
+            os.remove(ep)
+        self.journal = Journal(ep)
+        keep_from = min(self.ckpt.all_rounds(), default=0)
+        for name in os.listdir(self.journal_dir):
+            m = re.fullmatch(r"journal_(\d+)\.log", name)
+            if m and int(m.group(1)) < keep_from:
+                os.remove(os.path.join(self.journal_dir, name))
+
+    def _epoch_path(self, round_: int) -> str:
+        return os.path.join(self.journal_dir, f"journal_{round_:09d}.log")
+
+    def _epoch_rounds(self):
+        out = []
+        for name in os.listdir(self.journal_dir):
+            m = re.fullmatch(r"journal_(\d+)\.log", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _journal_tail(self, from_round: int):
+        """Chain journal epochs >= ``from_round`` back together, stopping
+        the chain at the first UNCLEAN epoch (a torn tail means every
+        later epoch, if any, describes state we can no longer reach)."""
+        records = []
+        for er in self._epoch_rounds():
+            if er < from_round:
+                continue
+            recs, clean = Journal.read(self._epoch_path(er))
+            records.extend(recs)
+            if not clean:
+                break
+        return records
+
+    # ------------------------------------------------------------------
+    # recovery
+    # ------------------------------------------------------------------
+    def recover(self, params):
+        """Reconstruct the pre-crash frontend from disk alone:
+
+        1. fresh engine + frontend (``engine_factory``);
+        2. newest snapshot whose per-leaf CRCs AND KV segment checksums
+           verify — corrupt ones are quarantined and the next-older one
+           is tried (``snapshot_fallbacks`` counts them);
+        3. restore device state, host mirrors, and the fault plan's RNG
+           stream; disable the ``kill_process`` event we just died from
+           (re-firing it on replay would crash-loop);
+        4. replay the journal tail — re-submit journaled submits,
+           re-pump journaled rounds — cross-checking every replayed
+           event against the journaled observations;
+        5. snapshot immediately (the recovered state becomes the new
+           base, so a crash *during* a long replay never compounds).
+        """
+        self.stats["recoveries"] += 1
+        # warm recovery (same process caught ProcessKilled): the dying
+        # frontend's round pins the true crash round even when a
+        # journal_truncate ate the records that would prove it.
+        observed_crash = self.fe.round + 1 if self.fe is not None else 0
+        if self.journal is not None:
+            self.journal.close()
+            self.journal = None
+        self._build_frontend()
+        template = self.fe.init_state()
+
+        def validate(round_, device_state, host):
+            probe = self.engine_factory()
+            probe.load_host_state(host["engine"])
+            probe.verify_checksums(device_state)
+
+        before = self.ckpt.all_rounds()
+        r, self.state, host = self.ckpt.load_latest(template,
+                                                    validate=validate)
+        self.stats["snapshot_fallbacks"] += len([x for x in before if x > r])
+        self.fe.load_host_state(host["frontend"])
+        self.fe.engine.load_host_state(host["engine"])
+        if self.fault_plan is not None and host.get("plan"):
+            self.fault_plan.events = sorted(
+                (FaultEvent(*e) for e in host["plan"]["events"]),
+                key=lambda e: e.round)
+            self.fault_plan.set_rng_state(host["plan"]["rng"])
+
+        records = self._journal_tail(r)
+        crash_round = max((rec["round"] for rec in records
+                           if rec["ev"] == "round"), default=r) + 1
+        crash_round = max(crash_round, observed_crash)
+        if self.fault_plan is not None:
+            self.fault_plan.disable(FaultKind.KILL_PROCESS, crash_round)
+
+        self._replaying = True
+        try:
+            for rec in records:
+                if rec["ev"] == "submit":
+                    segs = [jnp.asarray([s], jnp.int32)
+                            for s in rec["segments"]]
+                    tid = self.fe.submit(
+                        segs, n_samples=rec["n_samples"],
+                        max_new_tokens=rec["max_new_tokens"],
+                        priority=rec["priority"],
+                        deadline_rounds=rec["deadline_rounds"])
+                    if tid != rec["tid"]:
+                        raise ReplayDivergence(
+                            f"replayed submit got tid {tid}, journal "
+                            f"recorded {rec['tid']}")
+                    self.stats["replayed_submits"] += 1
+                elif rec["ev"] == "round":
+                    self._obs_buf = []
+                    self.state = self.fe.pump(params, self.state,
+                                              rec["decode_steps"])
+                    if self.verify_replay and self._obs_buf != rec["obs"]:
+                        raise ReplayDivergence(
+                            f"round {rec['round']}: replay emitted "
+                            f"{self._obs_buf!r} but journal recorded "
+                            f"{rec['obs']!r}")
+                    self.stats["replayed_rounds"] += 1
+        finally:
+            self._replaying = False
+        self._snapshot()
+        return self.state
+
+    def cold_start(self):
+        """Last-resort escalation: discard ALL durable state and begin
+        from nothing. Every in-flight request is lost — which is why
+        ``run_supervised`` only lands here after the restart budget is
+        exhausted."""
+        self.stats["cold_starts"] += 1
+        if self.journal is not None:
+            self.journal.close()
+            self.journal = None
+        shutil.rmtree(os.path.join(self.directory, "snapshots"),
+                      ignore_errors=True)
+        shutil.rmtree(self.journal_dir, ignore_errors=True)
+        os.makedirs(self.journal_dir, exist_ok=True)
+        self.ckpt = ServeCheckpointer(os.path.join(self.directory,
+                                                   "snapshots"),
+                                      keep_last_k=self.keep_last_k)
+        self._build_frontend()
+        return self.init_state()
+
+    def run_supervised(self, params, work_fn, *, max_restarts: int = 3,
+                       backoff_s: float = 0.0, sleep=time.sleep):
+        """Run ``work_fn(self, params)`` under ``supervise``: any failure
+        (``ProcessKilled``, ``StaleHeartbeat``, crash) triggers
+        ``recover`` and a re-invocation of ``work_fn`` against the
+        restored state; past ``max_restarts`` consecutive failures the
+        frontend escalates to ``cold_start`` and runs the workload once
+        from scratch."""
+        try:
+            return supervise(
+                lambda: work_fn(self, params),
+                max_restarts=max_restarts, backoff_s=backoff_s, sleep=sleep,
+                on_failure=lambda attempt, exc: self.recover(params))
+        except Exception:  # noqa: BLE001 — budget exhausted: escalate
+            self.cold_start()
+            return work_fn(self, params)
+
+    # ------------------------------------------------------------------
+    # hooks (installed on the wrapped frontend)
+    # ------------------------------------------------------------------
+    def _observe(self, ev: dict):
+        self._obs_buf.append(ev)
+
+    def _durability_fault(self, ev):
+        """Disk-level fault injections delegated by the frontend. During
+        replay these are suppressed: the damage already happened on the
+        original timeline, and re-damaging the very files we are
+        recovering from would turn one injected fault into an
+        unrecoverable cascade."""
+        if self._replaying:
+            self.fe._count("replay_durability_suppressed")
+            return
+        if ev.kind == FaultKind.SNAPSHOT_CORRUPT:
+            rounds = self.ckpt.all_rounds()
+            if not rounds:
+                self.fe._count("snapshot_corrupt_noop")
+                return
+            path = os.path.join(self.ckpt.path_for(max(rounds)),
+                                "arrays.bin")
+            size = os.path.getsize(path)
+            if size == 0:
+                self.fe._count("snapshot_corrupt_noop")
+                return
+            with open(path, "r+b") as f:
+                pos = (ev.arg * 7919) % size
+                f.seek(pos)
+                b = f.read(1)
+                f.seek(pos)
+                f.write(bytes([b[0] ^ 0x40]))
+            self.fe._count("snapshots_corrupted")
+        elif ev.kind == FaultKind.JOURNAL_TRUNCATE:
+            size = os.path.getsize(self.journal.path)
+            if size == 0:
+                self.fe._count("journal_truncate_noop")
+                return
+            os.truncate(self.journal.path, max(0, size - max(1, ev.arg)))
+            self.fe._count("journals_truncated")
+
+
+__all__ = ["DurableFrontend", "ReplayDivergence"]

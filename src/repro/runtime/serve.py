@@ -377,6 +377,12 @@ class _SlotTableEngine:
         # math depends exclusively on device-side state values)
         self.outputs = {s: [] for s in range(ecfg.slots)}   # slot -> tokens
         self.logps = {s: [] for s in range(ecfg.slots)}
+        # integrity surface: per-segment CRCs recorded at write time
+        # (admission) and slots whose decode output went non-finite —
+        # the NaN/Inf sentinel in step_chunk feeds this, the frontend
+        # quarantines the owning request through the cancel path.
+        self.seg_checksums = {}     # segment/node id -> crc32 at write
+        self.corrupt_slots = set()  # slots that emitted non-finite output
 
     # ---- decode ----
     def _decode_one(self, params, state: ForestState):
@@ -438,9 +444,19 @@ class _SlotTableEngine:
                             np.asarray(emits))
         for t in range(toks.shape[0]):
             for s in range(toks.shape[1]):
-                if emits[t, s]:
-                    self.outputs[s].append(int(toks[t, s]))
-                    self.logps[s].append(float(lps[t, s]))
+                if not emits[t, s] or s in self.corrupt_slots:
+                    continue
+                if not np.isfinite(lps[t, s]):
+                    # NaN/Inf sentinel: a non-finite logprob can only come
+                    # from non-finite logits — i.e. the slot decoded from
+                    # poisoned KV bytes. Stop collecting its (garbage)
+                    # output from this step on and flag it; the frontend
+                    # quarantines the owning request through the normal
+                    # cancel/retire path (typed KVCorruption).
+                    self.corrupt_slots.add(s)
+                    continue
+                self.outputs[s].append(int(toks[t, s]))
+                self.logps[s].append(float(lps[t, s]))
         return state
 
     def _sample_first(self, key, logits0, n_samples):
@@ -493,6 +509,54 @@ class _SlotTableEngine:
             occ["pages_free"] = int(self.page_alloc.free_count())
             occ["pages_total"] = int(self.num_pages)
         return occ
+
+    # ---- integrity (KV checksums) ----
+    def _live_segments(self):
+        """Segment/node ids currently holding live context (subclass)."""
+        raise NotImplementedError
+
+    def verify_checksums(self, state: ForestState) -> bool:
+        """Recompute every LIVE segment's context checksum and compare to
+        the CRC recorded at write time. Raises ``KVCorruption`` on the
+        first mismatch (bit-flipped snapshot, bad restore, host bug
+        writing into the wrong page) — run on snapshot load and on demand
+        via ``audit_state(verify_checksums=True)``."""
+        from repro.core.integrity import verify_segment
+
+        for idx in self._live_segments():
+            expected = self.seg_checksums.get(idx)
+            if expected is None:
+                continue  # segment written before checksumming existed
+            verify_segment(state.cache, idx, expected,
+                           what=type(self).__name__ + " segment")
+        return True
+
+    # ---- durable-state serialization (checkpoint/recovery) ----
+    def host_state(self) -> dict:
+        """JSON-serializable snapshot of the host-side mirrors shared by
+        every slot-table engine; subclasses extend with their own
+        bookkeeping. Together with the device ``ForestState`` this is the
+        engine's COMPLETE state: restoring both onto a fresh engine must
+        continue bit-identically (tested)."""
+        return {
+            "decode_dispatches": int(self.decode_dispatches),
+            "outputs": [list(self.outputs[s])
+                        for s in range(self.ecfg.slots)],
+            "logps": [list(self.logps[s]) for s in range(self.ecfg.slots)],
+            "seg_checksums": [[int(k), int(v)]
+                              for k, v in self.seg_checksums.items()],
+            "corrupt_slots": sorted(int(s) for s in self.corrupt_slots),
+        }
+
+    def load_host_state(self, d: dict):
+        self.decode_dispatches = int(d["decode_dispatches"])
+        self.outputs = {s: [int(t) for t in toks]
+                        for s, toks in enumerate(d["outputs"])}
+        self.logps = {s: [float(x) for x in lps]
+                      for s, lps in enumerate(d["logps"])}
+        self.seg_checksums = {int(k): int(v) for k, v in d["seg_checksums"]}
+        self.corrupt_slots = set(int(s) for s in d["corrupt_slots"])
+        return self
 
 
 class ForestServeEngine(_SlotTableEngine):
@@ -654,10 +718,15 @@ class ForestServeEngine(_SlotTableEngine):
             key=key,
         )
         self.group_live[gidx] = True
+        # write-time integrity fingerprint over the segment's live ctx
+        # bytes (re-verified at snapshot load / audit_state on demand)
+        from repro.core.integrity import segment_checksum
+        self.seg_checksums[gidx] = segment_checksum(cache, gidx)
         for i, s in enumerate(slots):
             self.slot_group[s] = gidx
             self.outputs[s] = [int(tok[i])]
             self.logps[s] = [float(lp[i])]
+            self.corrupt_slots.discard(s)  # fresh request, fresh verdict
         return state, slots
 
     # ---- retire ----
@@ -684,6 +753,7 @@ class ForestServeEngine(_SlotTableEngine):
             if not any(active[s] for s in slots):
                 self.group_live[g] = False
                 retired.append(g)
+                self.seg_checksums.pop(g, None)
                 if self.paged:
                     self.page_alloc.release(self.group_pages.pop(g, []))
         return retired
@@ -712,14 +782,23 @@ class ForestServeEngine(_SlotTableEngine):
                  if self.slot_group[s] == group]
         return self.deactivate_slots(state, slots)
 
+    def _live_segments(self):
+        return [g for g in range(self.fcfg.n_groups) if self.group_live[g]]
+
     def audit_state(self, state: ForestState,
-                    extra_tracked: Sequence[int] = ()) -> bool:
+                    extra_tracked: Sequence[int] = (),
+                    verify_checksums: bool = False) -> bool:
         """Run ``PageAllocator.audit`` against the engine's device-side
         page tables (live groups' rows) and host-side page mirrors.
         ``extra_tracked`` lists pages a caller holds OUTSIDE the engine
         mirrors (e.g. the frontend's fault-stolen pages) so the refcount
         <-> holder reconciliation stays exact. Dense mode has no
-        allocator: trivially True."""
+        allocator: allocator checks are trivially True.
+        ``verify_checksums=True`` additionally re-fingerprints every live
+        segment's KV bytes against its write-time CRC (device round-trip
+        per segment — on-demand, not every round)."""
+        if verify_checksums:
+            self.verify_checksums(state)
         if not self.paged:
             return True
         import numpy as np
@@ -730,6 +809,29 @@ class ForestServeEngine(_SlotTableEngine):
         tracked = [pid for ids in self.group_pages.values() for pid in ids]
         tracked.extend(int(i) for i in extra_tracked)
         return self.page_alloc.audit(rows=rows, tracked=tracked)
+
+    # ---- durable-state serialization (checkpoint/recovery) ----
+    def host_state(self) -> dict:
+        d = super().host_state()
+        d.update({
+            "group_live": [bool(x) for x in self.group_live],
+            "slot_group": [int(x) for x in self.slot_group],
+        })
+        if self.paged:
+            d["group_pages"] = [[int(g), [int(p) for p in ids]]
+                                for g, ids in self.group_pages.items()]
+            d["allocator"] = self.page_alloc.state_dict()
+        return d
+
+    def load_host_state(self, d: dict):
+        super().load_host_state(d)
+        self.group_live = [bool(x) for x in d["group_live"]]
+        self.slot_group = [int(x) for x in d["slot_group"]]
+        if self.paged:
+            self.group_pages = {int(g): [int(p) for p in ids]
+                                for g, ids in d["group_pages"]}
+            self.page_alloc.load_state_dict(d["allocator"])
+        return self
 
 
 # ---------------------------------------------------------------------------
@@ -781,6 +883,12 @@ class TreeServeEngine(_SlotTableEngine):
         self.node_key = [None] * tcfg.n_nodes        # reverse map
         self.slot_request = [-1] * tcfg.slots
         self.requests = []      # admission log: {"path", "slots", "live"}
+        # prefix-cache accounting: every admission records how many of
+        # its path tokens were REUSED from resident trie nodes (their KV
+        # neither re-stored nor re-streamed at write) vs written fresh —
+        # the soak harness turns this into hit-rate / bytes-saved.
+        self.prefix_stats = {"admits": 0, "hits": 0,
+                             "reused_tokens": 0, "new_tokens": 0}
         self.paged = tcfg.ctx_store == "paged"
         if self.paged:
             from repro.core.paged import PageAllocator, pages_needed
@@ -927,6 +1035,10 @@ class TreeServeEngine(_SlotTableEngine):
         logits0, cache1 = self.model.prefill(params, full, self.rules)
         cache = state.cache
         offset = sum(int(s.shape[1]) for s in segments[:matched])
+        self.prefix_stats["admits"] += 1
+        self.prefix_stats["hits"] += 1 if matched else 0
+        self.prefix_stats["reused_tokens"] += offset
+        self.prefix_stats["new_tokens"] += int(full.shape[1]) - offset
         parent = path[-1] if path else -1
         for seg in new_segs:
             nid = free_n.pop(0)
@@ -949,6 +1061,10 @@ class TreeServeEngine(_SlotTableEngine):
             self.node_index[key] = nid
             self.node_key[nid] = key
             self.node_live[nid] = True
+            # write-time integrity fingerprint (re-verified at snapshot
+            # load / audit_state on demand)
+            from repro.core.integrity import segment_checksum
+            self.seg_checksums[nid] = segment_checksum(cache, nid)
             path.append(nid)
             parent = nid
             offset += m
@@ -978,6 +1094,7 @@ class TreeServeEngine(_SlotTableEngine):
             self.slot_request[s] = rid
             self.outputs[s] = [int(tok[i])]
             self.logps[s] = [float(lp[i])]
+            self.corrupt_slots.discard(s)  # fresh request, fresh verdict
         return state, slots
 
     # ---- retire ----
@@ -1004,6 +1121,7 @@ class TreeServeEngine(_SlotTableEngine):
                         self.node_live[nid] = False
                         self.node_index.pop(self.node_key[nid], None)
                         self.node_key[nid] = None
+                        self.seg_checksums.pop(nid, None)
                         if self.paged:
                             # refcounted page sharing: an ancestor's pages
                             # free only with the node itself (last
@@ -1047,14 +1165,23 @@ class TreeServeEngine(_SlotTableEngine):
         req = self.requests[rid]
         return sum(1 for nid in req["path"] if self.node_refs[nid] > 1)
 
+    def _live_segments(self):
+        return [n for n in range(self.tcfg.n_nodes) if self.node_live[n]]
+
     def audit_state(self, state: ForestState,
-                    extra_tracked: Sequence[int] = ()) -> bool:
+                    extra_tracked: Sequence[int] = (),
+                    verify_checksums: bool = False) -> bool:
         """Run ``PageAllocator.audit`` against the engine's device-side
         page tables (live nodes' rows) and host-side page mirrors.
         ``extra_tracked`` lists pages a caller holds OUTSIDE the engine
         mirrors (e.g. the frontend's fault-stolen pages) so the refcount
         <-> holder reconciliation stays exact. Dense mode has no
-        allocator: trivially True."""
+        allocator: allocator checks are trivially True.
+        ``verify_checksums=True`` additionally re-fingerprints every live
+        node's KV bytes against its write-time CRC (device round-trip per
+        node — on-demand, not every round)."""
+        if verify_checksums:
+            self.verify_checksums(state)
         if not self.paged:
             return True
         import numpy as np
@@ -1065,3 +1192,51 @@ class TreeServeEngine(_SlotTableEngine):
         tracked = [pid for ids in self.node_pages.values() for pid in ids]
         tracked.extend(int(i) for i in extra_tracked)
         return self.page_alloc.audit(rows=rows, tracked=tracked)
+
+    # ---- durable-state serialization (checkpoint/recovery) ----
+    def host_state(self) -> dict:
+        d = super().host_state()
+        d.update({
+            "node_live": [bool(x) for x in self.node_live],
+            "node_refs": [int(x) for x in self.node_refs],
+            # (parent, token tuple) keys flattened for JSON; node_key is
+            # the exact inverse and is rebuilt on load
+            "node_index": [[int(parent), [int(t) for t in toks], int(nid)]
+                           for (parent, toks), nid
+                           in self.node_index.items()],
+            "slot_request": [int(x) for x in self.slot_request],
+            "requests": [{"path": [int(n) for n in r["path"]],
+                          "slots": [int(s) for s in r["slots"]],
+                          "live": bool(r["live"])}
+                         for r in self.requests],
+            "prefix_stats": {k: int(v)
+                             for k, v in self.prefix_stats.items()},
+        })
+        if self.paged:
+            d["node_pages"] = [[int(n), [int(p) for p in ids]]
+                               for n, ids in self.node_pages.items()]
+            d["allocator"] = self.page_alloc.state_dict()
+        return d
+
+    def load_host_state(self, d: dict):
+        super().load_host_state(d)
+        self.node_live = [bool(x) for x in d["node_live"]]
+        self.node_refs = [int(x) for x in d["node_refs"]]
+        self.node_index = {}
+        self.node_key = [None] * self.tcfg.n_nodes
+        for parent, toks, nid in d["node_index"]:
+            key = (int(parent), tuple(int(t) for t in toks))
+            self.node_index[key] = int(nid)
+            self.node_key[int(nid)] = key
+        self.slot_request = [int(x) for x in d["slot_request"]]
+        self.requests = [{"path": [int(n) for n in r["path"]],
+                          "slots": [int(s) for s in r["slots"]],
+                          "live": bool(r["live"])}
+                         for r in d["requests"]]
+        self.prefix_stats = {k: int(v)
+                             for k, v in d["prefix_stats"].items()}
+        if self.paged:
+            self.node_pages = {int(n): [int(p) for p in ids]
+                               for n, ids in d["node_pages"]}
+            self.page_alloc.load_state_dict(d["allocator"])
+        return self

@@ -545,47 +545,127 @@ if HAS_HYPOTHESIS:
     )
     def test_frontend_fault_plan_fuzz(workload_seed, plan_seed, num_pages):
         """Hypothesis-driven robustness fuzz: a seeded random workload +
-        a seeded random FaultPlan (all four kinds) against an
-        OVERSUBSCRIBED paged trie frontend. Whatever the draw: no
-        unhandled exception, every ticket ends completed (exact token
-        budget) or rejected-with-reason, and the allocator audit passes
-        at EVERY round."""
+        a seeded random FaultPlan drawing from the FULL registered kind
+        set — including ``kill_process`` (survived via DurableFrontend
+        snapshot+journal recovery), ``snapshot_corrupt`` and
+        ``journal_truncate`` — against an OVERSUBSCRIBED paged trie.
+        Whatever the draw: no unhandled exception, every surviving
+        ticket ends completed (EXACT token budget) or rejected-with-
+        reason, the allocator audit passes at every round (original AND
+        replayed), and every completed request's greedy tokens are
+        BIT-IDENTICAL to its unkilled control (same plan minus the
+        durability kinds, plain frontend). Requests are matched to the
+        control BY CONTENT: journal truncation may legitimately lose
+        tail submits, which shifts ticket ids."""
+        import tempfile
+
         from repro.configs.base import TreeConfig
-        from repro.runtime.faults import FaultPlan
+        from repro.runtime.faults import (
+            FaultKind, FaultPlan, ProcessKilled)
         from repro.runtime.frontend import (
             COMPLETED, REJECTED, ServeFrontend)
+        from repro.runtime.recovery import DurableFrontend
         from repro.runtime.serve import TreeServeEngine
 
         mp = _fuzz_model()
         cfg, model, params = mp["cfg"], mp["model"], mp["params"]
-        engine = TreeServeEngine(model, cfg, TreeConfig(
-            n_nodes=3, depth=2, slots=3, node_capacity=16,
-            decode_capacity=8, temperature=0.0, ctx_store="paged",
-            page_size=8, num_pages=num_pages))
-        plan = FaultPlan.random(plan_seed, rounds=10, rate=0.35)
-        fe = ServeFrontend(engine, fault_plan=plan, stall_rounds=4,
-                           max_attempts=6)
-        state = fe.init_state()
-        rng = np.random.RandomState(workload_seed)
-        prefixes = [jnp.asarray(rng.randint(0, cfg.vocab_size, (1, 10)))
-                    for _ in range(2)]
-        budgets = {}
-        for i in range(4):
-            sfx = jnp.asarray(rng.randint(0, cfg.vocab_size,
-                                          (1, int(rng.randint(2, 8)))))
-            mnt = int(rng.randint(3, 6))
-            tid = fe.submit([prefixes[int(rng.randint(2))], sfx],
-                            n_samples=int(rng.randint(1, 3)),
-                            max_new_tokens=mnt,
-                            priority=int(rng.randint(0, 2)))
-            budgets[tid] = mnt
-            if i % 2:
-                state = fe.pump(params, state)
-        fe.drain(params, state, max_rounds=120)
-        for t in fe.tickets:
-            assert t.status in (COMPLETED, REJECTED), (t.tid, t.status)
+
+        def factory():
+            return TreeServeEngine(model, cfg, TreeConfig(
+                n_nodes=3, depth=2, slots=3, node_capacity=16,
+                decode_capacity=8, temperature=0.0, ctx_store="paged",
+                page_size=8, num_pages=num_pages))
+
+        def workload(submit, pump):
+            """Same seeded submit/pump schedule for both runs. Returns
+            content-key -> budget (content determines greedy tokens, so
+            it is the run-independent join key)."""
+            rng = np.random.RandomState(workload_seed)
+            prefixes = [rng.randint(0, cfg.vocab_size, (1, 10))
+                        for _ in range(2)]
+            budgets = {}
+            for i in range(4):
+                pfx = prefixes[int(rng.randint(2))]
+                sfx = rng.randint(0, cfg.vocab_size,
+                                  (1, int(rng.randint(2, 8))))
+                mnt = int(rng.randint(3, 6))
+                submit([jnp.asarray(pfx), jnp.asarray(sfx)],
+                       n_samples=int(rng.randint(1, 3)),
+                       max_new_tokens=mnt,
+                       priority=int(rng.randint(0, 2)))
+                key = (tuple(pfx[0].tolist()), tuple(sfx[0].tolist()))
+                budgets[key] = mnt
+                if i % 2:
+                    pump()
+            return budgets
+
+        def content_key(t):
+            return tuple(tuple(int(x) for x in np.asarray(s)[0])
+                         for s in t.segments)
+
+        durability = (FaultKind.KILL_PROCESS, FaultKind.SNAPSHOT_CORRUPT,
+                      FaultKind.JOURNAL_TRUNCATE)
+        plan_full = FaultPlan.random(plan_seed, rounds=10, rate=0.35)
+        plan_ctrl = FaultPlan(
+            [e for e in plan_full.events if e.kind not in durability],
+            seed=plan_seed)
+
+        # --- unkilled control: plain frontend, durability kinds stripped
+        fe_c = ServeFrontend(factory(), fault_plan=plan_ctrl,
+                             stall_rounds=4, max_attempts=6)
+        state_c = fe_c.init_state()
+        holder = {"s": state_c}
+
+        def pump_c():
+            holder["s"] = fe_c.pump(params, holder["s"])
+
+        workload(fe_c.submit, pump_c)
+        fe_c.drain(params, holder["s"], max_rounds=120)
+        ctrl = {}
+        for t in fe_c.tickets:
             if t.status == COMPLETED:
-                assert all(len(tok) == budgets[t.tid] for tok in t.tokens)
-            else:
-                assert t.reason
-        assert fe.counters["audits_passed"] == fe.metrics()["rounds"]
+                ctrl[content_key(t)] = [
+                    [int(x) for x in tok] for tok in t.tokens]
+
+        # --- faulty run: DurableFrontend, full plan, kills survived
+        with tempfile.TemporaryDirectory(prefix="fuzz_recov_") as d:
+            dfe = DurableFrontend(
+                factory, d, fault_plan=plan_full, snapshot_every=3,
+                frontend_kwargs=dict(stall_rounds=4, max_attempts=6))
+            dfe.init_state()
+
+            def pump_once():
+                """Advance exactly ONE net round, recovering through any
+                kill — keeps the durable run's submit/round cadence
+                aligned with the control's."""
+                target = dfe.fe.round + 1
+                guard = 0
+                while dfe.fe.round < target:
+                    guard += 1
+                    assert guard < 50, "kill recovery did not converge"
+                    try:
+                        dfe.pump(params)
+                    except ProcessKilled:
+                        dfe.recover(params)
+
+            budgets = workload(dfe.submit, pump_once)
+            pumps = 0
+            while dfe.pending():
+                pumps += 1
+                assert pumps < 120, "fuzz drain liveness failure"
+                pump_once()
+
+            for t in dfe.fe.tickets:
+                assert t.status in (COMPLETED, REJECTED), (t.tid, t.status)
+                key = content_key(t)
+                if t.status == COMPLETED:
+                    assert all(len(tok) == budgets[key] for tok in t.tokens)
+                    if key in ctrl:
+                        got = [[int(x) for x in tok] for tok in t.tokens]
+                        assert got == ctrl[key], (
+                            "greedy tokens diverged from unkilled control")
+                else:
+                    assert t.reason
+            # every pump (original and replayed) ended with a green audit
+            assert (dfe.fe.counters["audits_passed"]
+                    >= dfe.fe.metrics()["rounds"])

@@ -1,0 +1,189 @@
+"""Heartbeat + supervise (runtime/fault_tolerance.py) — host-only, fast.
+
+The serving durability layer (runtime/recovery.py) leans on both: every
+pump beats the heartbeat, ``DurableFrontend.pump`` raises
+``StaleHeartbeat`` when the beat goes stale, and ``run_supervised`` uses
+``supervise`` for the capped-restart / backoff / escalation ladder. This
+file pins their exact semantics, including the awkward corners: missing
+and malformed heartbeat files, clock skew (a FUTURE timestamp must not
+read as stale), the restart cap, exponential backoff with an injected
+sleep, and the on_failure recovery hook ordering.
+"""
+import os
+import time
+
+import pytest
+
+from repro.runtime.fault_tolerance import (
+    Heartbeat,
+    StaleHeartbeat,
+    supervise,
+)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_beat_then_last(tmp_path):
+    hb = Heartbeat(str(tmp_path / "hb"))
+    assert hb.last() is None
+    hb.beat(7)
+    step, ts = hb.last()
+    assert step == 7
+    assert abs(ts - time.time()) < 5.0
+    hb.beat(8)
+    assert hb.last()[0] == 8          # overwrites, never appends
+
+
+def test_heartbeat_missing_file_is_not_stale(tmp_path):
+    hb = Heartbeat(str(tmp_path / "never_written"))
+    # a process that has not started beating yet is NOT stale — staleness
+    # must only ever trigger on genuinely old beats
+    assert hb.last() is None
+    assert not hb.stale(0.0)
+
+
+def test_heartbeat_malformed_file_is_not_stale(tmp_path):
+    p = tmp_path / "hb"
+    p.write_text("garbage not a beat")
+    hb = Heartbeat(str(p))
+    assert hb.last() is None
+    assert not hb.stale(0.0)
+
+
+def test_heartbeat_staleness_threshold(tmp_path):
+    p = tmp_path / "hb"
+    hb = Heartbeat(str(p))
+    # hand-write an old beat: 100s in the past
+    p.write_text(f"3 {time.time() - 100.0}\n")
+    assert hb.stale(50.0)
+    assert not hb.stale(1000.0)
+
+
+def test_heartbeat_clock_skew_future_beat_not_stale(tmp_path):
+    p = tmp_path / "hb"
+    hb = Heartbeat(str(p))
+    # clock skew / clock step: the recorded beat is in the FUTURE.
+    # (now - ts) is negative, which must never exceed a positive timeout.
+    p.write_text(f"3 {time.time() + 3600.0}\n")
+    assert not hb.stale(0.5)
+
+
+def test_heartbeat_creates_parent_dir(tmp_path):
+    hb = Heartbeat(str(tmp_path / "deep" / "nested" / "hb"))
+    hb.beat(1)
+    assert os.path.exists(hb.path)
+
+
+def test_stale_heartbeat_is_an_exception():
+    assert issubclass(StaleHeartbeat, RuntimeError)
+
+
+# ---------------------------------------------------------------------------
+# supervise
+# ---------------------------------------------------------------------------
+
+def test_supervise_returns_on_success():
+    assert supervise(lambda: 42) == 42
+
+
+def test_supervise_restart_cap():
+    calls = []
+
+    def boom():
+        calls.append(1)
+        raise RuntimeError("always fails")
+
+    with pytest.raises(RuntimeError, match="always fails"):
+        supervise(boom, max_restarts=3)
+    # initial attempt + 3 restarts, then the cap propagates the error
+    assert len(calls) == 4
+
+
+def test_supervise_recovers_after_transient_failures():
+    state = {"n": 0}
+
+    def flaky():
+        state["n"] += 1
+        if state["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert supervise(flaky, max_restarts=3) == "ok"
+    assert state["n"] == 3
+
+
+def test_supervise_backoff_exponential_and_capped():
+    sleeps = []
+    state = {"n": 0}
+
+    def flaky():
+        state["n"] += 1
+        if state["n"] <= 5:
+            raise RuntimeError("x")
+        return "done"
+
+    out = supervise(flaky, max_restarts=10, backoff_s=1.0,
+                    backoff_cap_s=4.0, sleep=sleeps.append)
+    assert out == "done"
+    # 1, 2, 4, then capped at 4
+    assert sleeps == [1.0, 2.0, 4.0, 4.0, 4.0]
+
+
+def test_supervise_no_backoff_by_default():
+    sleeps = []
+    state = {"n": 0}
+
+    def flaky():
+        state["n"] += 1
+        if state["n"] < 2:
+            raise RuntimeError("x")
+        return "ok"
+
+    supervise(flaky, sleep=sleeps.append)
+    assert sleeps == []
+
+
+def test_supervise_on_failure_hook_runs_before_each_retry():
+    order = []
+    state = {"n": 0}
+
+    def flaky():
+        order.append(f"run{state['n']}")
+        state["n"] += 1
+        if state["n"] < 3:
+            raise RuntimeError("x")
+        return "ok"
+
+    def on_failure(attempt, exc):
+        assert isinstance(exc, RuntimeError)
+        order.append(f"recover{attempt}")
+
+    assert supervise(flaky, max_restarts=5, on_failure=on_failure) == "ok"
+    assert order == ["run0", "recover1", "run1", "recover2", "run2"]
+
+
+def test_supervise_on_failure_exception_propagates():
+    def boom():
+        raise RuntimeError("work failed")
+
+    def bad_recover(attempt, exc):
+        raise ValueError("recovery itself failed")
+
+    # a failing recovery hook must escalate immediately, not be retried
+    with pytest.raises(ValueError, match="recovery itself failed"):
+        supervise(boom, max_restarts=5, on_failure=bad_recover)
+
+
+def test_supervise_past_cap_does_not_call_hook():
+    hook_calls = []
+
+    def boom():
+        raise RuntimeError("x")
+
+    with pytest.raises(RuntimeError):
+        supervise(boom, max_restarts=2,
+                  on_failure=lambda a, e: hook_calls.append(a))
+    # the hook prepares a RETRY; past the cap there is no retry to prepare
+    assert hook_calls == [1, 2]

@@ -1,0 +1,512 @@
+"""Crash-consistent serving: journal, snapshots, replay recovery, KV guards.
+
+Fast (host-only) tier:
+  * ``runtime/journal.Journal`` — durable append, seq+CRC guarding, torn
+    tail / corrupt line / seq-break detection, missing-file semantics;
+  * ``checkpoint.ServeCheckpointer`` — atomic snapshots with BIT-EXACT
+    round-trips for bf16/int8 leaves, per-leaf CRC verification, host
+    blob CRC, quarantine-and-fall-back in ``load_latest``, template
+    compatibility rejection;
+  * ``runtime/faults.FaultPlan`` — rng_state round-trip, ``disable``,
+    registry-derived ``FaultKind.ALL``.
+
+Slow tier (real tiny model + engines, CPU) — the PR acceptance bar:
+  * KILL-AND-RESTORE BIT-IDENTITY: a DurableFrontend killed mid-workload
+    (twice) and recovered from snapshot + journal replay completes every
+    request with greedy tokens bit-identical to an uninterrupted control
+    — across forest/tree x dense/paged x bf16/int8;
+  * snapshot corruption detected by checksums, quarantined, recovery
+    falls back to the previous valid snapshot;
+  * journal truncation: replay stops at the last complete record and the
+    run still converges deterministically;
+  * the NaN/Inf decode sentinel quarantines ONLY the poisoned request
+    (typed ``kv_corruption`` rejection) while neighbours complete;
+  * ``audit_state(verify_checksums=True)`` raises ``KVCorruption`` on a
+    flipped live KV byte;
+  * a stale heartbeat surfaces as ``StaleHeartbeat`` and the supervised
+    loop restarts from checkpoint and finishes the workload.
+"""
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ServeCheckpointer
+from repro.core.errors import KVCorruption
+from repro.runtime.faults import FaultEvent, FaultKind, FaultPlan
+from repro.runtime.journal import Journal
+
+
+# ---------------------------------------------------------------------------
+# Fast: journal
+# ---------------------------------------------------------------------------
+
+def test_journal_append_read_roundtrip(tmp_path):
+    p = str(tmp_path / "j.log")
+    j = Journal(p)
+    recs = [{"ev": "submit", "tid": 0}, {"ev": "round", "round": 1,
+                                         "obs": [{"ev": "admit"}]}]
+    for r in recs:
+        j.append(r)
+    j.close()
+    got, clean = Journal.read(p)
+    assert clean and got == recs
+
+
+def test_journal_missing_file_reads_clean(tmp_path):
+    got, clean = Journal.read(str(tmp_path / "nope.log"))
+    assert got == [] and clean
+
+
+def test_journal_torn_tail_detected(tmp_path):
+    p = str(tmp_path / "j.log")
+    j = Journal(p)
+    for i in range(3):
+        j.append({"i": i})
+    j.close()
+    # chop mid-record: the tail line loses its newline and part of itself
+    os.truncate(p, os.path.getsize(p) - 5)
+    got, clean = Journal.read(p)
+    assert not clean
+    assert got == [{"i": 0}, {"i": 1}]   # records before the tear trusted
+
+
+def test_journal_crc_guards_each_line(tmp_path):
+    p = str(tmp_path / "j.log")
+    j = Journal(p)
+    j.append({"i": 0})
+    j.append({"i": 1})
+    j.close()
+    raw = open(p, "rb").read().splitlines(keepends=True)
+    # flip a payload byte inside the SECOND record, keep its length
+    line = bytearray(raw[1])
+    line[-3] ^= 0x01
+    open(p, "wb").write(raw[0] + bytes(line))
+    got, clean = Journal.read(p)
+    assert not clean and got == [{"i": 0}]
+
+
+def test_journal_seq_break_detected(tmp_path):
+    p = str(tmp_path / "j.log")
+    j = Journal(p)
+    j.append({"i": 0})
+    j.close()
+    # append a record with a WRONG seq (2, not 1) but a valid CRC
+    import zlib
+    payload = json.dumps({"i": "rogue"}, separators=(",", ":"))
+    with open(p, "a") as f:
+        f.write(f"2 {zlib.crc32(payload.encode()):08x} {payload}\n")
+    got, clean = Journal.read(p)
+    assert not clean and got == [{"i": 0}]
+
+
+def test_journal_reopen_continues_seq(tmp_path):
+    p = str(tmp_path / "j.log")
+    j = Journal(p)
+    j.append({"i": 0})
+    j.close()
+    j2 = Journal(p)
+    assert j2.seq == 1
+    j2.append({"i": 1})
+    j2.close()
+    got, clean = Journal.read(p)
+    assert clean and got == [{"i": 0}, {"i": 1}]
+
+
+# ---------------------------------------------------------------------------
+# Fast: ServeCheckpointer
+# ---------------------------------------------------------------------------
+
+def _device_state():
+    import ml_dtypes
+    rng = np.random.RandomState(0)
+    return {
+        "pool": jnp.asarray(rng.randn(2, 4, 8).astype(ml_dtypes.bfloat16)),
+        "scales": jnp.asarray(rng.randint(-127, 127, (2, 4), dtype=np.int8)),
+        "lens": jnp.asarray(rng.randint(0, 9, (4,), dtype=np.int32)),
+    }
+
+
+def _like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def test_serve_ckpt_bit_exact_roundtrip(tmp_path):
+    ck = ServeCheckpointer(str(tmp_path))
+    dev = _device_state()
+    host = {"round": 5, "tickets": [1, 2, 3]}
+    ck.save(5, dev, host)
+    r, dev2, host2 = ck.load_latest(_like(dev))
+    assert r == 5 and host2 == host
+    for k in dev:
+        a, b = np.asarray(dev[k]), np.asarray(dev2[k])
+        assert a.dtype == b.dtype
+        assert a.tobytes() == b.tobytes()      # BIT exact, incl. bf16/int8
+
+
+def test_serve_ckpt_detects_bit_flip_and_falls_back(tmp_path):
+    ck = ServeCheckpointer(str(tmp_path))
+    dev = _device_state()
+    ck.save(2, dev, {"round": 2})
+    ck.save(4, dev, {"round": 4})
+    # flip one byte inside the NEWEST snapshot's array bytes
+    path = os.path.join(ck.path_for(4), "arrays.bin")
+    with open(path, "r+b") as f:
+        f.seek(3)
+        b = f.read(1)
+        f.seek(3)
+        f.write(bytes([b[0] ^ 0x10]))
+    with pytest.raises(KVCorruption):
+        ck.load(4, _like(dev))
+    r, dev2, host2 = ck.load_latest(_like(dev))
+    assert r == 2 and host2 == {"round": 2}     # fell back
+    # the bad snapshot is quarantined out of the namespace, kept on disk
+    assert ck.all_rounds() == [2]
+    assert os.path.exists(ck.path_for(4) + ".corrupt")
+
+
+def test_serve_ckpt_no_valid_snapshot_raises(tmp_path):
+    ck = ServeCheckpointer(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ck.load_latest({"x": jnp.zeros(2)})
+
+
+def test_serve_ckpt_host_blob_crc(tmp_path):
+    ck = ServeCheckpointer(str(tmp_path))
+    dev = _device_state()
+    ck.save(1, dev, {"secret": "payload"})
+    meta_path = os.path.join(ck.path_for(1), "meta.json")
+    meta = json.loads(open(meta_path).read())
+    meta["host"] = meta["host"].replace("payload", "tampered")
+    open(meta_path, "w").write(json.dumps(meta))
+    with pytest.raises(KVCorruption):
+        ck.load(1, _like(dev))
+
+
+def test_serve_ckpt_rejects_incompatible_template(tmp_path):
+    ck = ServeCheckpointer(str(tmp_path))
+    dev = _device_state()
+    ck.save(1, dev, {})
+    bad = dict(_like(dev))
+    bad["extra"] = jnp.zeros(3)
+    with pytest.raises(KVCorruption, match="incompatible"):
+        ck.load(1, bad)
+
+
+def test_serve_ckpt_validate_hook_triggers_fallback(tmp_path):
+    ck = ServeCheckpointer(str(tmp_path))
+    dev = _device_state()
+    ck.save(2, dev, {"round": 2})
+    ck.save(4, dev, {"round": 4})
+
+    def validate(round_, device_state, host):
+        if round_ == 4:
+            raise KVCorruption("engine-level verification failed")
+
+    r, _, _ = ck.load_latest(_like(dev), validate=validate)
+    assert r == 2
+    assert os.path.exists(ck.path_for(4) + ".corrupt")
+
+
+def test_serve_ckpt_gc_keeps_last_k(tmp_path):
+    ck = ServeCheckpointer(str(tmp_path), keep_last_k=2)
+    dev = _device_state()
+    for r in (1, 2, 3, 4):
+        ck.save(r, dev, {})
+    assert ck.all_rounds() == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# Fast: FaultPlan durability surface
+# ---------------------------------------------------------------------------
+
+def test_fault_kind_registry_includes_durability_kinds():
+    for k in ("kill_process", "snapshot_corrupt", "journal_truncate"):
+        assert k in FaultKind.ALL
+    assert FaultKind.ALL == FaultKind.registered()
+
+
+def test_fault_plan_random_draws_all_registered_kinds():
+    plan = FaultPlan.random(3, rounds=4000, rate=1.0)
+    assert set(plan.counts()) == set(FaultKind.registered())
+
+
+def test_fault_plan_rng_state_roundtrip():
+    a, b = FaultPlan(seed=5), FaultPlan(seed=5)
+    seq = list(range(20))
+    [a.choose(seq) for _ in range(3)]
+    b.set_rng_state(a.rng_state())
+    assert [a.choose(seq) for _ in range(10)] == \
+           [b.choose(seq) for _ in range(10)]
+
+
+def test_fault_plan_rng_state_json_roundtrip():
+    a = FaultPlan(seed=9)
+    a.choose(list(range(10)))
+    state = json.loads(json.dumps(a.rng_state()))
+    b = FaultPlan(seed=0).set_rng_state(state)
+    assert a.choose(list(range(10))) == b.choose(list(range(10)))
+
+
+def test_fault_plan_disable():
+    plan = FaultPlan([FaultEvent(2, FaultKind.KILL_PROCESS),
+                      FaultEvent(5, FaultKind.KILL_PROCESS),
+                      FaultEvent(5, FaultKind.POOL_EXHAUST)])
+    assert plan.disable(FaultKind.KILL_PROCESS, upto_round=4) == 1
+    assert [(e.round, e.kind) for e in plan.events] == [
+        (5, FaultKind.KILL_PROCESS), (5, FaultKind.POOL_EXHAUST)]
+
+
+# ---------------------------------------------------------------------------
+# Slow: engines — kill-and-restore bit-identity, guards, supervision
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.configs.base import ModelConfig
+    from repro.models import get_model
+
+    cfg = ModelConfig(name="recovery-test", family="dense",
+                      n_layers=2, d_model=32, n_heads=2,
+                      n_kv_heads=1, head_dim=16, d_ff=64,
+                      vocab_size=64, vocab_pad_multiple=16,
+                      decode_capacity=8)
+    model = get_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+RNG = np.random.RandomState(0)
+SYS_TOKS = RNG.randint(0, 64, (1, 12))
+REQ_TOKS = [RNG.randint(0, 64, (1, 7)) for _ in range(4)]
+
+
+def _factory(cfg, model, kind: str, store: str, dtype: str):
+    from repro.configs.base import ForestConfig, TreeConfig
+    from repro.runtime.serve import ForestServeEngine, TreeServeEngine
+
+    if kind == "tree":
+        def make():
+            return TreeServeEngine(model, cfg, TreeConfig(
+                n_nodes=6, depth=2, slots=4, node_capacity=16,
+                decode_capacity=8, temperature=0.0, cache_dtype=dtype,
+                ctx_store=store, page_size=8, num_pages=8))
+    else:
+        def make():
+            return ForestServeEngine(model, cfg, ForestConfig(
+                n_groups=3, slots=4, ctx_capacity=24, decode_capacity=8,
+                temperature=0.0, cache_dtype=dtype, ctx_store=store,
+                page_size=8, num_pages=10))
+    return make
+
+
+def _submit_all(fe_like):
+    sys_ = jnp.asarray(SYS_TOKS)
+    for r in REQ_TOKS:
+        fe_like.submit([sys_, jnp.asarray(r)], n_samples=1,
+                       max_new_tokens=5)
+
+
+def _results(tickets):
+    return ({t.tid: [list(map(int, x)) for x in (t.tokens or [])]
+             for t in tickets},
+            {t.tid: t.status for t in tickets})
+
+
+def _control(factory, params):
+    from repro.runtime.frontend import ServeFrontend
+
+    fe = ServeFrontend(factory(), queue_depth=32, decode_steps=1)
+    st = fe.init_state()
+    _submit_all(fe)
+    fe.drain(params, st)
+    return _results(fe.tickets)
+
+
+def _durable_run(factory, params, plan, tmpdir, snapshot_every=2):
+    from repro.runtime.faults import ProcessKilled
+    from repro.runtime.recovery import DurableFrontend
+
+    dfe = DurableFrontend(factory, tmpdir, fault_plan=plan,
+                          snapshot_every=snapshot_every,
+                          frontend_kwargs=dict(queue_depth=32,
+                                               decode_steps=1))
+    dfe.init_state()
+    _submit_all(dfe)
+    pumps = 0
+    while dfe.pending():
+        pumps += 1
+        assert pumps < 200, "recovery liveness failure"
+        try:
+            dfe.pump(params)
+        except ProcessKilled:
+            dfe.recover(params)
+    return dfe
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["tree", "forest"])
+@pytest.mark.parametrize("store", ["paged", "dense"])
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_kill_and_restore_bit_identical(tiny_model, tmp_path, kind, store,
+                                        dtype):
+    """THE acceptance test: kill the engine mid-workload (twice), recover
+    from snapshot + journal replay, and finish — every request completes
+    with greedy tokens BIT-IDENTICAL to an uninterrupted control, across
+    engine family x storage substrate x cache dtype."""
+    cfg, model, params = tiny_model
+    factory = _factory(cfg, model, kind, store, dtype)
+    ctrl_tokens, ctrl_status = _control(factory, params)
+    plan = FaultPlan([FaultEvent(2, FaultKind.KILL_PROCESS),
+                      FaultEvent(4, FaultKind.KILL_PROCESS)])
+    dfe = _durable_run(factory, params, plan, str(tmp_path))
+    got_tokens, got_status = _results(dfe.fe.tickets)
+    assert dfe.stats["recoveries"] == 2
+    assert got_status == ctrl_status
+    assert got_tokens == ctrl_tokens
+    # audits stayed green on every round of both timelines
+    assert dfe.fe.counters["audits_passed"] > 0
+
+
+@pytest.mark.slow
+def test_snapshot_corruption_falls_back_to_previous(tiny_model, tmp_path):
+    """A bit-flipped snapshot must be DETECTED (per-leaf CRC), quarantined,
+    and recovery lands on the previous valid snapshot — still finishing
+    bit-identically (the journal tail is just longer)."""
+    cfg, model, params = tiny_model
+    factory = _factory(cfg, model, "tree", "paged", "bfloat16")
+    ctrl_tokens, ctrl_status = _control(factory, params)
+    plan = FaultPlan([FaultEvent(3, FaultKind.SNAPSHOT_CORRUPT, arg=3),
+                      FaultEvent(4, FaultKind.KILL_PROCESS)])
+    dfe = _durable_run(factory, params, plan, str(tmp_path))
+    assert dfe.stats["recoveries"] == 1
+    assert dfe.stats["snapshot_fallbacks"] >= 1
+    assert any(n.endswith(".corrupt")
+               for n in os.listdir(dfe.ckpt.directory))
+    got_tokens, got_status = _results(dfe.fe.tickets)
+    assert got_status == ctrl_status and got_tokens == ctrl_tokens
+
+
+@pytest.mark.slow
+def test_journal_truncation_replay_stops_cleanly(tiny_model, tmp_path):
+    """Chopping the live journal's tail loses records but NOT consistency:
+    replay stops at the last complete record and the resumed run still
+    completes every surviving request bit-identically."""
+    cfg, model, params = tiny_model
+    factory = _factory(cfg, model, "tree", "paged", "bfloat16")
+    ctrl_tokens, ctrl_status = _control(factory, params)
+    plan = FaultPlan([FaultEvent(3, FaultKind.JOURNAL_TRUNCATE, arg=40),
+                      FaultEvent(4, FaultKind.KILL_PROCESS)])
+    dfe = _durable_run(factory, params, plan, str(tmp_path),
+                       snapshot_every=8)
+    assert dfe.stats["recoveries"] == 1
+    got_tokens, got_status = _results(dfe.fe.tickets)
+    # this workload's submits all land in the round-0 epoch before the
+    # truncation point, so every request survives here
+    assert got_status == ctrl_status and got_tokens == ctrl_tokens
+
+
+@pytest.mark.slow
+def test_nan_sentinel_quarantines_only_poisoned_request(tiny_model):
+    """Poison ONE request's private trie node with NaNs: its decode
+    output goes non-finite, the sentinel flags the slot, the frontend
+    cancels it through the ordinary retirement path and rejects it with
+    the typed ``kv_corruption`` reason — its neighbour, sharing the
+    prefix node, completes untouched."""
+    from repro.runtime.frontend import (
+        COMPLETED, REASON_KV_CORRUPTION, REJECTED, ServeFrontend)
+
+    cfg, model, params = tiny_model
+    factory = _factory(cfg, model, "tree", "dense", "bfloat16")
+    fe = ServeFrontend(factory(), queue_depth=32, decode_steps=1)
+    state = fe.init_state()
+    sys_ = jnp.asarray(SYS_TOKS)
+    ta = fe.submit([sys_, jnp.asarray(REQ_TOKS[0])], max_new_tokens=5)
+    tb = fe.submit([sys_, jnp.asarray(REQ_TOKS[1])], max_new_tokens=5)
+    state = fe.pump(params, state)
+    assert fe.ticket(ta).status == "running"
+    # the victim's PRIVATE suffix node (refcount 1; the shared root
+    # stays healthy so the blast radius must stay at one request)
+    nid = fe.engine.requests[fe.ticket(ta).handle]["path"][-1]
+    cache = state.cache
+    state = dataclasses.replace(
+        state, cache=dataclasses.replace(
+            cache, k_ctx=cache.k_ctx.at[:, nid].set(jnp.nan)))
+    state = fe.drain(params, state)
+    a, b = fe.ticket(ta), fe.ticket(tb)
+    assert (a.status, a.reason) == (REJECTED, REASON_KV_CORRUPTION)
+    assert b.status == COMPLETED
+    assert len(b.tokens[0]) == 5
+    assert fe.counters.get("kv_quarantines") == 1
+
+
+@pytest.mark.slow
+def test_audit_verify_checksums_catches_kv_flip(tiny_model):
+    """``audit_state(verify_checksums=True)`` recomputes every live
+    segment's fingerprint: a single flipped byte in live context raises
+    ``KVCorruption``; pristine state passes."""
+    from repro.runtime.frontend import ServeFrontend
+
+    cfg, model, params = tiny_model
+    factory = _factory(cfg, model, "tree", "dense", "bfloat16")
+    fe = ServeFrontend(factory(), decode_steps=1)
+    state = fe.init_state()
+    fe.submit([jnp.asarray(SYS_TOKS), jnp.asarray(REQ_TOKS[0])],
+              max_new_tokens=5)
+    state = fe.pump(params, state)
+    fe.engine.audit_state(state, verify_checksums=True)   # pristine: ok
+    nid = fe.engine.requests[0]["path"][0]
+    bad = dataclasses.replace(
+        state, cache=dataclasses.replace(
+            state.cache,
+            k_ctx=state.cache.k_ctx.at[0, nid, 0, 0].set(1e9)))
+    with pytest.raises(KVCorruption, match="checksum"):
+        fe.engine.audit_state(bad, verify_checksums=True)
+
+
+@pytest.mark.slow
+def test_stale_heartbeat_triggers_supervised_restart(tiny_model, tmp_path):
+    """A wedged pump loop (simulated by hand-aging the heartbeat file)
+    must surface as ``StaleHeartbeat``; ``run_supervised`` recovers from
+    the latest snapshot and the workload still finishes with exact
+    budgets."""
+    from repro.runtime.fault_tolerance import StaleHeartbeat
+    from repro.runtime.frontend import COMPLETED
+    from repro.runtime.recovery import DurableFrontend
+
+    cfg, model, params = tiny_model
+    factory = _factory(cfg, model, "tree", "paged", "bfloat16")
+    hb_path = str(tmp_path / "hb")
+    dfe = DurableFrontend(factory, str(tmp_path / "state"),
+                          snapshot_every=2, heartbeat_path=hb_path,
+                          stale_after_s=60.0,
+                          frontend_kwargs=dict(decode_steps=1))
+    dfe.init_state()
+    _submit_all(dfe)
+    wedged = {"armed": True}
+
+    def work(d, p):
+        pumps = 0
+        while d.pending():
+            pumps += 1
+            assert pumps < 200
+            if wedged["armed"] and d.fe.round == 3:
+                # simulate a hang: the beat on disk is suddenly ancient
+                wedged["armed"] = False
+                open(hb_path, "w").write(f"3 {time.time() - 3600}\n")
+            d.pump(p)
+        return d
+
+    with pytest.raises(StaleHeartbeat):
+        # un-supervised, the stale beat is fatal …
+        work(dfe, params)
+    # … supervised, it recovers from checkpoint and finishes
+    dfe.run_supervised(params, work, max_restarts=3)
+    for t in dfe.fe.tickets:
+        assert t.status == COMPLETED
+        assert all(len(tok) == 5 for tok in t.tokens)
+    assert dfe.stats["recoveries"] >= 1
