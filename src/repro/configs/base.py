@@ -269,6 +269,16 @@ class TreeConfig:
     # (n_nodes * ceil(node_capacity / page_size)). Smaller values
     # oversubscribe capacity — admission then gates on FREE PAGES.
     num_pages: Optional[int] = None
+    # cross-request prefix cache: keep refcount-zero trie nodes RESIDENT
+    # (pages held, trie-index entry kept) so a later request with the
+    # same prefix revives them at zero prefill / zero new pages; evict
+    # lazily (LRU, smallest-subtree tie-break) only under node/page
+    # pressure. Off = today's evict-eagerly behavior, exactly.
+    prefix_cache: bool = False
+    # suffix-only prefill: on a prefix hit, feed the matched ancestors'
+    # cached KV as the context arm of the bifurcated prefill so admission
+    # computes only the NEW levels' tokens (O(new) instead of O(path)).
+    suffix_prefill: bool = False
     seed: int = 0
 
 

@@ -316,6 +316,38 @@ def kv_speedup(*, b, m_c, m_d) -> float:
     return b * (m_c + m_d) / (m_c + b * m_d)
 
 
+def suffix_prefill_saving(*, m_anc, m_new, g, hd, n_layers,
+                          bytes_per_el=2) -> dict:
+    """KV-write I/O model of SUFFIX-ONLY prefill against a full re-prefill.
+
+    A full prefill recomputes and rewrites KV for all ``m_anc + m_new``
+    tokens; suffix prefill reads the cached ancestors' KV (the context
+    arm, once per layer) and writes only the ``m_new`` new tokens' KV.
+    The dominant saved cost is the ancestor FLOPs/write traffic —
+    modelled here as the ancestor KV bytes that are no longer produced:
+
+      full_bytes    = 2 * L * g * hd * (m_anc + m_new) * bytes_per_el
+      suffix_bytes  = 2 * L * g * hd * m_new * bytes_per_el
+      saved_bytes   = full_bytes - suffix_bytes   (= the ancestor share)
+
+    Token counts double as the prefill-compute proxy: saved_tokens is
+    exactly what the serve engine's ``prefix_stats['reused_tokens']``
+    accumulates, so bench reports can convert token reuse to bytes with
+    one call."""
+    if min(m_anc, m_new) < 0:
+        raise ValueError(f"negative token counts ({m_anc=}, {m_new=})")
+    per_tok = 2 * n_layers * g * hd * bytes_per_el
+    full_bytes = per_tok * (m_anc + m_new)
+    suffix_bytes = per_tok * m_new
+    return {
+        "full_bytes": full_bytes,
+        "suffix_bytes": suffix_bytes,
+        "saved_bytes": full_bytes - suffix_bytes,
+        "saved_tokens": m_anc,
+        "saving_ratio": full_bytes / max(suffix_bytes, 1),
+    }
+
+
 def modelled_step_latency_ms(cfg, *, b, m_c, m_d, bifurcated,
                              weight_bw, attn_bw, bytes_per_el=2) -> float:
     """Two-bandwidth latency model: weights stream at ``weight_bw`` (GEMM

@@ -355,6 +355,27 @@ class PageAllocator:
         the allocator)."""
         return list(self._free)
 
+    def plan_eviction(self, need: int, candidates):
+        """Eviction planning for a lazily-evicting cache over this pool:
+        given ``candidates`` — (segment id, pages it would free) pairs in
+        the caller's eviction-preference order (e.g. LRU) — return the
+        SHORTEST prefix whose release, on top of the current free list,
+        satisfies ``need`` allocatable pages. Returns ``[]`` when the
+        free list alone suffices, ``None`` when even evicting every
+        candidate cannot (the caller's typed capacity error should fire
+        instead of a futile purge). Pure planning: nothing is mutated —
+        the caller evicts through its own ``release`` path."""
+        if need < 0:
+            raise ValueError(f"plan_eviction of {need} pages")
+        have = len(self._free)
+        plan = []
+        for seg, n_pages in candidates:
+            if have >= need:
+                break
+            plan.append(seg)
+            have += int(n_pages)
+        return plan if have >= need else None
+
     def _check_known(self, i, op: str):
         if not isinstance(i, (int,)) or not 0 <= i < self.num_pages:
             raise AllocatorCorruption(

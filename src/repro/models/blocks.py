@@ -140,6 +140,7 @@ def chunked_attention(
     window: Optional[int] = None,
     chunk: int = 512,
     rules: Optional[MeshRules] = None,
+    q_offset: int = 0,
 ) -> jnp.ndarray:
     """Memory-bounded full attention: scan over query chunks.
 
@@ -148,6 +149,11 @@ def chunked_attention(
     repeat). Logits for one chunk are (b, h, chunk, m): the peak activation
     is n/chunk times smaller than the full logits tensor, which is what lets
     prefill_32k lower without an O(n^2) buffer.
+
+    ``q_offset`` shifts the queries' absolute positions for the causal /
+    window masks: query row i sits at position q_offset + i while keys
+    stay at 0..m-1 — the suffix-prefill case, where the first q_offset
+    keys are a cached prefix every query may attend to.
     """
     b, n, h, hd = q.shape
     m, g = k.shape[1], k.shape[2]
@@ -165,14 +171,14 @@ def chunked_attention(
         qc, start = inp
         logits = jnp.einsum("bgpck,bmgk->bgpcm", qc, k).astype(jnp.float32) * scale
         if causal:
-            q_pos = start + jnp.arange(chunk)[:, None]
+            q_pos = q_offset + start + jnp.arange(chunk)[:, None]
             k_pos = jnp.arange(m)[None, :]
             mask = k_pos <= q_pos
             if window is not None:
                 mask = mask & (k_pos > q_pos - window)
             logits = logits + mask_to_bias(mask)
         elif window is not None:
-            q_pos = start + jnp.arange(chunk)[:, None]
+            q_pos = q_offset + start + jnp.arange(chunk)[:, None]
             k_pos = jnp.arange(m)[None, :]
             logits = logits + mask_to_bias(jnp.abs(k_pos - q_pos) < window)
         w = jax.nn.softmax(logits, axis=-1)
@@ -196,6 +202,7 @@ def flash_chunked_attention(
     q_chunk: int = 512,
     kv_chunk: int = 1024,
     rules: Optional[MeshRules] = None,
+    q_offset: int = 0,
 ) -> jnp.ndarray:
     """Online-softmax (flash) attention in pure JAX: nested scans over query
     and key chunks with fp32 (m, l, acc) carries. Never materializes
@@ -227,7 +234,7 @@ def flash_chunked_attention(
 
     def q_block(_, inp):
         qc, qi = inp  # (b, g, p, qc, hd)
-        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
 
         def kv_block(carry, kv_inp):
             m_run, l_run, acc = carry
@@ -311,6 +318,53 @@ def attention_prefill_kv(
         pos = positions if positions is not None else jnp.arange(k.shape[1])
         k = apply_rope(k, pos, cfg.rope_theta)
     return k, v
+
+
+def attention_prefill_suffix(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,
+    k_anc: jnp.ndarray,
+    v_anc: jnp.ndarray,
+    *,
+    rules: Optional[MeshRules],
+    positions: jnp.ndarray,
+    chunk: int = 512,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Bifurcated SUFFIX prefill for one layer: the n fresh suffix tokens
+    (``x``: (b, n, d), absolute ``positions`` = m_anc..m_anc+n-1) attend
+    over [cached ancestor KV ∥ their own fresh KV]. ``k_anc``/``v_anc``:
+    (b, m_anc, g, hd), already rotated at THEIR absolute positions — they
+    come straight out of the serve cache, never recomputed; that is the
+    point (admission cost O(n), not O(m_anc + n)).
+
+    Returns (attn output (b, n, d), k_new, v_new) — the fresh K/V are
+    exactly the tensors a full prefill would produce at ``positions``."""
+    q, k_new, v_new = _project_qkv(cfg, params, x)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    m_anc = k_anc.shape[1]
+    k_full = jnp.concatenate([k_anc.astype(k_new.dtype), k_new], axis=1)
+    v_full = jnp.concatenate([v_anc.astype(v_new.dtype), v_new], axis=1)
+    q = constrain(q, rules, "batch", None, "tensor", None)
+    k_full = constrain(k_full, rules, "batch", None, None, None)
+    v_full = constrain(v_full, rules, "batch", None, None, None)
+    # absolute-position causal mask: query row i is position m_anc + i, so
+    # every row sees the whole cached prefix plus its own causal suffix.
+    if cfg.train_attn == "flash":
+        o = flash_chunked_attention(
+            q, k_full, v_full, causal=True, window=cfg.sliding_window,
+            q_chunk=chunk, rules=rules, q_offset=m_anc,
+        )
+    else:
+        o = chunked_attention(
+            q, k_full, v_full, causal=True, window=cfg.sliding_window,
+            chunk=chunk, rules=rules, q_offset=m_anc,
+        )
+    b, n = o.shape[:2]
+    o = o.reshape(b, n, cfg.n_heads_padded * cfg.kq_dim)
+    return o @ params["wo"].astype(x.dtype), k_new, v_new
 
 
 def attention_decode(

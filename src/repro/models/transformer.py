@@ -163,6 +163,52 @@ class TransformerLM:
         cache = DecodeCache(k=ks, v=vs, length=jnp.asarray(x.shape[1], jnp.int32))
         return logits, cache
 
+    def prefill_suffix(self, params, tokens, k_anc, v_anc,
+                       rules: Optional[MeshRules], *, start: int):
+        """Suffix-only prefill (cross-request prefix cache): ``tokens``
+        (b, n) continue a cached prefix of ``start`` tokens whose per-layer
+        rotated K/V — ``k_anc``/``v_anc``, (L, b, start, g, hd), exactly
+        what ``prefill`` would have stacked — are fed as the context arm of
+        each layer's attention. Only the n suffix tokens are embedded,
+        projected and attended (cost O(n · (start + n)) instead of
+        O((start + n)²)); the cached prefix is READ, never recomputed.
+
+        Returns (last-position logits, DecodeCache over the SUFFIX only:
+        k/v are (L, b, n, g, hd) at absolute positions start..start+n-1) —
+        the token-slices a caller writes into its prefix cache."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"prefill_suffix supports dense/moe families, not "
+                f"{cfg.family!r}")
+        x = self._embed(params, tokens)
+        x = constrain(x, rules, "batch", None, None)
+        positions = start + jnp.arange(x.shape[1])
+
+        def body(x, inp):
+            layer, ka, va = inp
+            h = apply_norm(cfg, layer["ln1"], x)
+            a, k, v = blocks.attention_prefill_suffix(
+                cfg, layer["attn"], h, ka, va, rules=rules,
+                positions=positions)
+            x = x + a
+            h2 = apply_norm(cfg, layer["ln2"], x)
+            if cfg.moe is not None:
+                m, _ = apply_moe(cfg, layer["moe"], h2, rules)
+            else:
+                m = apply_mlp(cfg, layer["mlp"], h2, rules)
+            x = x + m
+            x = constrain(x, rules, "batch", None, None)
+            return x, (k, v)
+
+        x, (ks, vs) = lax.scan(body, x, (params["layers"], k_anc, v_anc))
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x[:, -1:], rules)[:, 0]
+        cache = DecodeCache(
+            k=ks, v=vs,
+            length=jnp.asarray(start + x.shape[1], jnp.int32))
+        return logits, cache
+
     # ---- decode ----
     def decode_step(self, params, cache, tokens, rules: Optional[MeshRules],
                     *, impl: str = "einsum"):

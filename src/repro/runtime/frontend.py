@@ -364,6 +364,9 @@ class ServeFrontend:
 
             need = sum(pages_needed(int(s.shape[1]), ecfg.page_size)
                        for s in t.segments)
+            # gate against the TOTAL pool, not the free list: with the
+            # prefix cache on, cached-resident pages are evictable on
+            # demand, so any request fitting the whole pool is feasible
             if need > eng.num_pages:
                 return REASON_INFEASIBLE
         return None
@@ -379,7 +382,9 @@ class ServeFrontend:
         if self._is_tree:
             state, slots = self.engine.admit(params, state, t.segments,
                                              t.n_samples)
-            t.handle = len(self.engine.requests) - 1
+            # stable rid from the engine's monotonic counter — the request
+            # table is a compacted dict, NOT a dense history list
+            t.handle = self.engine.last_rid
         else:
             ctx = (t.segments[0] if len(t.segments) == 1
                    else jnp.concatenate(t.segments, axis=1))
@@ -502,14 +507,20 @@ class ServeFrontend:
         if self.round <= self._retire_suppressed_until:
             self._count("retirement_suppressed")
             return state
+        import numpy as np
+
+        # ONE device→host sync of the active mask per collection pass,
+        # threaded through retirement (free_slots in the next admit pays
+        # its own — the mask changes at decode, not here)
+        active = np.asarray(state.active)
         if self._is_tree:
-            self.engine.retire_requests(state)
+            self.engine.retire_requests(state, active=active)
         else:
-            self.engine.retire_groups(state)
+            self.engine.retire_groups(state, active=active)
         if getattr(self.engine, "paged", False):
             state = self.engine.release_retired(state)
         for t in self._running():
-            live = (self.engine.requests[t.handle]["live"] if self._is_tree
+            live = (self.engine.request_live(t.handle) if self._is_tree
                     else self.engine.group_live[t.handle])
             if live:
                 continue

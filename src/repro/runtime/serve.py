@@ -635,16 +635,19 @@ class ForestServeEngine(_SlotTableEngine):
     def free_groups(self):
         return [g for g, live in enumerate(self.group_live) if not live]
 
-    def free_slots(self, state: ForestState):
+    def free_slots(self, state: ForestState, active=None):
         """Slots safe to (re)assign: never admitted, or belonging to a
         RETIRED group. An EOS'd slot of a still-live group is NOT free —
         its finished output must stay readable via ``result()`` until
         ``retire_groups`` frees the whole group (reassigning it would
-        silently clobber the host-side output lists)."""
+        silently clobber the host-side output lists). ``active`` —
+        optional host snapshot of ``state.active`` so one serve round
+        pays the device→host sync once."""
         import numpy as np
 
-        inactive = ~np.asarray(state.active)
-        return [int(s) for s in np.where(inactive)[0]
+        if active is None:
+            active = np.asarray(state.active)
+        return [int(s) for s in np.where(~active)[0]
                 if self.slot_group[s] < 0
                 or not self.group_live[self.slot_group[s]]]
 
@@ -730,7 +733,7 @@ class ForestServeEngine(_SlotTableEngine):
         return state, slots
 
     # ---- retire ----
-    def retire_groups(self, state: ForestState):
+    def retire_groups(self, state: ForestState, active=None):
         """Free every segment whose slots have all gone inactive. Returns
         the list of retired group ids; their slots become reusable by the
         next ``admit`` (which wipes the stale decode arms). In paged mode
@@ -740,10 +743,15 @@ class ForestServeEngine(_SlotTableEngine):
         segments); call ``release_retired`` to clear them right away and
         stop streaming the freed pages without waiting for an admission
         (a dense cache keeps streaming retired capacity — that envelope
-        is exactly what paging removes)."""
+        is exactly what paging removes).
+
+        ``active`` optionally supplies a host snapshot of ``state.active``
+        so a serve loop that already synced it this round doesn't pay a
+        second device→host transfer."""
         import numpy as np
 
-        active = np.asarray(state.active)
+        if active is None:
+            active = np.asarray(state.active)
         retired = []
         for g in range(self.fcfg.n_groups):
             if not self.group_live[g]:
@@ -881,14 +889,38 @@ class TreeServeEngine(_SlotTableEngine):
         self.node_refs = [0] * tcfg.n_nodes          # live-request refcount
         self.node_index = {}    # (parent id, token tuple) -> node id
         self.node_key = [None] * tcfg.n_nodes        # reverse map
+        self.node_len = [0] * tcfg.n_nodes           # live tokens per node
+        # (host mirror of node_lens/seg_lens: eviction tie-breaks and the
+        # suffix-prefill gather read it without a device sync)
         self.slot_request = [-1] * tcfg.slots
-        self.requests = []      # admission log: {"path", "slots", "live"}
+        # request table: rid -> {"path", "slots", "live"}. Holds LIVE
+        # requests plus retired ones still referenced by a slot (their
+        # outputs stay readable until the slot is reused); anything else
+        # compacts away (_compact_requests), so the table stays O(slots)
+        # on a long-running server, not O(requests-ever). rids are
+        # monotonic (next_rid) and never reused — frontend tickets and
+        # journal replay key on them across compaction.
+        self.requests = {}
+        self.next_rid = 0
+        self.last_rid = -1      # rid of the most recent admit
+        # cross-request prefix cache (tcfg.prefix_cache): refcount-zero
+        # nodes stay RESIDENT — node_live True, pages held, trie-index
+        # entry kept, checksum kept — stamped here for LRU eviction
+        # under node/page pressure. Revival (a later admit matching the
+        # node) just pops the stamp and bumps the refcount.
+        self.node_cached = {}   # node id -> LRU stamp
+        self.lru_clock = 0
         # prefix-cache accounting: every admission records how many of
         # its path tokens were REUSED from resident trie nodes (their KV
-        # neither re-stored nor re-streamed at write) vs written fresh —
-        # the soak harness turns this into hit-rate / bytes-saved.
-        self.prefix_stats = {"admits": 0, "hits": 0,
-                             "reused_tokens": 0, "new_tokens": 0}
+        # neither re-stored nor re-streamed at write) vs written fresh,
+        # split into FULL-path and partial hits, plus how many tokens
+        # actually ran through prefill (suffix-only prefill computes just
+        # the new levels) — the soak harness turns this into token-
+        # weighted reuse / bytes-saved.
+        self.prefix_stats = {"admits": 0, "full_hits": 0,
+                             "partial_hits": 0, "reused_tokens": 0,
+                             "new_tokens": 0, "computed_tokens": 0,
+                             "evictions": 0}
         self.paged = tcfg.ctx_store == "paged"
         if self.paged:
             from repro.core.paged import PageAllocator, pages_needed
@@ -942,16 +974,28 @@ class TreeServeEngine(_SlotTableEngine):
     def free_nodes(self):
         return [i for i, live in enumerate(self.node_live) if not live]
 
-    def free_slots(self, state: ForestState):
+    def free_slots(self, state: ForestState, active=None):
         """Slots safe to (re)assign: never admitted, or belonging to a
         RETIRED request (same invariant as the forest engine: an EOS'd
-        slot of a still-live request keeps its output readable)."""
+        slot of a still-live request keeps its output readable). A slot
+        whose request has been COMPACTED away counts as retired.
+        ``active`` — optional host snapshot of ``state.active`` so one
+        serve round pays the device→host sync once and threads it
+        through free_slots / retire_requests."""
         import numpy as np
 
-        inactive = ~np.asarray(state.active)
-        return [int(s) for s in np.where(inactive)[0]
+        if active is None:
+            active = np.asarray(state.active)
+        return [int(s) for s in np.where(~active)[0]
                 if self.slot_request[s] < 0
-                or not self.requests[self.slot_request[s]]["live"]]
+                or not self.request_live(self.slot_request[s])]
+
+    def request_live(self, rid: int) -> bool:
+        """Is request ``rid`` still live? A compacted (long-retired) rid
+        is simply not-live — slot reuse and the frontend's collection
+        pass treat it exactly like a freshly-retired one."""
+        req = self.requests.get(rid)
+        return bool(req is not None and req["live"])
 
     def match_prefix(self, segments):
         """Longest-matching prefix path for ``segments`` (list of (1, m)
@@ -969,6 +1013,140 @@ class TreeServeEngine(_SlotTableEngine):
             path.append(nid)
             parent = nid
         return path, len(path)
+
+    # ---- cross-request prefix cache (tcfg.prefix_cache) ----
+    def cached_nodes(self):
+        """Refcount-zero trie nodes currently held RESIDENT as cache
+        entries (sorted node ids)."""
+        return sorted(self.node_cached)
+
+    def _eviction_order(self, protect=()):
+        """Cached nodes in eviction order. A candidate must have NO
+        resident children (evicting a parent first would dangle its
+        descendants' (parent, tokens) trie keys across node-slot reuse);
+        among candidates the oldest LRU stamp goes first, ties broken
+        toward the smallest subtree (fewest live tokens, then lowest
+        id). Because a live descendant pins every ancestor's refcount, a
+        cached node's resident descendants are all cached too — so the
+        childless-first peeling below reaches everything outside
+        ``protect`` (which is prefix-closed: a protected node's cached
+        ancestors are on the same matched path)."""
+        protect = set(protect)
+        remaining = {n for n in self.node_cached if n not in protect}
+        order = []
+        while remaining:
+            blocked = {self.node_key[n][0] for n in remaining}
+            nid = min((n for n in remaining if n not in blocked),
+                      key=lambda n: (self.node_cached[n],
+                                     self.node_len[n], n))
+            order.append(nid)
+            remaining.discard(nid)
+        return order
+
+    def _evict_cached(self, state: ForestState, *, need_nodes: int = 0,
+                      need_pages: int = 0, protect=()) -> ForestState:
+        """Lazily evict cached nodes until ``need_nodes`` free node slots
+        and ``need_pages`` allocatable pool pages exist. If the demand is
+        unsatisfiable even by evicting EVERY candidate, nothing is
+        evicted — the caller's typed capacity error fires and the cache
+        keeps its contents. Eviction goes through the same free path as
+        eager retirement (index entry, checksum and length dropped), with
+        the page-table row cleared BEFORE the pages return to the
+        allocator so no aliasing window opens against the allocation that
+        triggered the eviction."""
+        order = self._eviction_order(protect)
+        victims = []
+        if self.paged and need_pages:
+            plan = self.page_alloc.plan_eviction(
+                need_pages,
+                [(n, len(self.node_pages.get(n, ()))) for n in order])
+            if plan is None:
+                return state
+            victims = list(plan)
+        short = need_nodes - len(self.free_nodes()) - len(victims)
+        if short > 0:
+            if len(victims) + short > len(order):
+                return state
+            victims = order[:len(victims) + short]
+        if not victims:
+            return state
+        cache = state.cache
+        for nid in victims:
+            self.node_live[nid] = False
+            self.node_cached.pop(nid, None)
+            self.node_index.pop(self.node_key[nid], None)
+            self.node_key[nid] = None
+            self.node_len[nid] = 0
+            self.seg_checksums.pop(nid, None)
+            if self.paged:
+                cache = cache.free_node(nid)
+                self.page_alloc.release(self.node_pages.pop(nid, []))
+        self.prefix_stats["evictions"] += len(victims)
+        return dataclasses.replace(state, cache=cache)
+
+    # ---- suffix-only prefill (tcfg.suffix_prefill) ----
+    def _node_kv(self, cache, nid: int, m: int):
+        """One resident node's first ``m`` live tokens of K/V as
+        (L, m, g, hd) model-dtype tensors, read straight from the serve
+        cache — dense slab slices or pool-page gathers; int8 nodes
+        dequantize (k-scales carry the logit scale hd**-0.5 pre-folded,
+        so K unfolds it by hd**0.5)."""
+        hd = self.cfg.kq_dim
+        store = getattr(cache, "store", None)
+        if store is not None:
+            ids = jnp.asarray(self.node_pages[nid], jnp.int32)
+            k = jnp.take(store.k_pages, ids, axis=1)  # (L, npg, g, pm, hd)
+            v = jnp.take(store.v_pages, ids, axis=1)
+            k = k.transpose(0, 1, 3, 2, 4).reshape(
+                k.shape[0], -1, k.shape[2], k.shape[4])[:, :m]
+            v = v.transpose(0, 1, 3, 2, 4).reshape(
+                v.shape[0], -1, v.shape[2], v.shape[4])[:, :m]
+            if getattr(store, "k_scale_pages", None) is not None:
+                sk = jnp.take(store.k_scale_pages, ids, axis=1)
+                sv = jnp.take(store.v_scale_pages, ids, axis=1)
+                sk = sk.transpose(0, 1, 3, 2).reshape(
+                    sk.shape[0], -1, sk.shape[2])[:, :m]
+                sv = sv.transpose(0, 1, 3, 2).reshape(
+                    sv.shape[0], -1, sv.shape[2])[:, :m]
+                k = k.astype(jnp.float32) * sk[..., None] * hd**0.5
+                v = v.astype(jnp.float32) * sv[..., None]
+        else:
+            layout = getattr(cache, "ctx_layout", "gmk")
+            if layout == "gmk":
+                k = cache.k_ctx[:, nid, :, :m].transpose(0, 2, 1, 3)
+                v = cache.v_ctx[:, nid, :, :m].transpose(0, 2, 1, 3)
+            else:
+                k = cache.k_ctx[:, nid, :m]
+                v = cache.v_ctx[:, nid, :m]
+            if getattr(cache, "k_scale", None) is not None:
+                if layout == "gmk":
+                    sk = cache.k_scale[:, nid, :, :m].transpose(0, 2, 1)
+                    sv = cache.v_scale[:, nid, :, :m].transpose(0, 2, 1)
+                else:
+                    sk = cache.k_scale[:, nid, :m]
+                    sv = cache.v_scale[:, nid, :m]
+                k = k.astype(jnp.float32) * sk[..., None] * hd**0.5
+                v = v.astype(jnp.float32) * sv[..., None]
+        dtype = cache.k_dec.dtype
+        return k.astype(dtype), v.astype(dtype)
+
+    def _gather_path_kv(self, state: ForestState, path, cut: int):
+        """Per-layer K/V of the matched path's first ``cut`` tokens in
+        prefill layout (L, 1, cut, g, hd) — the cached context arm fed to
+        ``model.prefill_suffix`` so admission never recomputes them."""
+        ks, vs = [], []
+        got = 0
+        for nid in path:
+            if got >= cut:
+                break
+            m = min(self.node_len[nid], cut - got)
+            k, v = self._node_kv(state.cache, nid, m)
+            ks.append(k)
+            vs.append(v)
+            got += m
+        k = jnp.concatenate(ks, axis=1)
+        v = jnp.concatenate(vs, axis=1)
+        return k[:, None], v[:, None]
 
     def admit(self, params, state: ForestState, segments,
               n_samples: int) -> tuple:
@@ -998,6 +1176,12 @@ class TreeServeEngine(_SlotTableEngine):
                     f"segment of {seg.shape[1]} tokens > node capacity {cap}")
         path, matched = self.match_prefix(segments)
         new_segs = segments[matched:]
+        if tcfg.prefix_cache and len(new_segs) > len(self.free_nodes()):
+            # node-slot pressure: lazily evict cached nodes (LRU,
+            # children-first). The matched path is protected — it is
+            # about to be revived by this very admission.
+            state = self._evict_cached(state, need_nodes=len(new_segs),
+                                       protect=path)
         free_n = self.free_nodes()
         free_s = self.free_slots(state)
         if len(new_segs) > len(free_n):
@@ -1014,6 +1198,11 @@ class TreeServeEngine(_SlotTableEngine):
 
             n_pg = sum(pages_needed(int(s.shape[1]), self.tcfg.page_size)
                        for s in new_segs)
+            if tcfg.prefix_cache and n_pg > self.page_alloc.free_count():
+                # page pressure: same lazy eviction, the victim prefix
+                # planned by the allocator against its live free list.
+                state = self._evict_cached(state, need_pages=n_pg,
+                                           protect=path)
             if n_pg > self.page_alloc.free_count():
                 raise PoolExhausted(
                     f"request needs {n_pg} pool pages for "
@@ -1028,17 +1217,36 @@ class TreeServeEngine(_SlotTableEngine):
             state = self.release_retired(state)
         slots = free_s[:n_samples]
 
-        # ONE prefill of the full concatenation: reused ancestors are
-        # recomputed (identical values — same tokens, same positions) but
-        # NOT rewritten; each new node gets its token-slice of the result.
-        full = jnp.concatenate(segments, axis=1)
-        logits0, cache1 = self.model.prefill(params, full, self.rules)
-        cache = state.cache
+        total = sum(int(s.shape[1]) for s in segments)
         offset = sum(int(s.shape[1]) for s in segments[:matched])
+        cut = 0
+        if tcfg.suffix_prefill and matched:
+            # SUFFIX-ONLY prefill: the matched ancestors' cached KV is
+            # the context arm; only the new levels' tokens run through
+            # the model — admission costs O(new tokens), not O(path). On
+            # a FULL-path match the last cached token re-runs as a
+            # 1-token suffix so the first-token logits stay defined
+            # (cut < total always; nothing is rewritten).
+            cut = min(offset, total - 1)
+            k_anc, v_anc = self._gather_path_kv(state, path, cut)
+            suffix = jnp.concatenate(segments, axis=1)[:, cut:]
+            logits0, cache1 = self.model.prefill_suffix(
+                params, suffix, k_anc, v_anc, self.rules, start=cut)
+        else:
+            # ONE prefill of the full concatenation: reused ancestors are
+            # recomputed (identical values — same tokens, same positions)
+            # but NOT rewritten; each new node gets its token-slice.
+            full = jnp.concatenate(segments, axis=1)
+            logits0, cache1 = self.model.prefill(params, full, self.rules)
+        cache = state.cache
         self.prefix_stats["admits"] += 1
-        self.prefix_stats["hits"] += 1 if matched else 0
+        if matched == len(segments):
+            self.prefix_stats["full_hits"] += 1
+        elif matched:
+            self.prefix_stats["partial_hits"] += 1
         self.prefix_stats["reused_tokens"] += offset
-        self.prefix_stats["new_tokens"] += int(full.shape[1]) - offset
+        self.prefix_stats["new_tokens"] += total - offset
+        self.prefix_stats["computed_tokens"] += total - cut
         parent = path[-1] if path else -1
         for seg in new_segs:
             nid = free_n.pop(0)
@@ -1050,17 +1258,18 @@ class TreeServeEngine(_SlotTableEngine):
                     pages_needed(m, self.tcfg.page_size))
                 self.node_pages[nid] = ids
                 cache = cache.write_node(
-                    cache1.k[:, 0, offset:offset + m],
-                    cache1.v[:, 0, offset:offset + m], nid, ids)
+                    cache1.k[:, 0, offset - cut:offset - cut + m],
+                    cache1.v[:, 0, offset - cut:offset - cut + m], nid, ids)
             else:
                 cache = cache.write_node(
-                    cache1.k[:, 0, offset:offset + m],
-                    cache1.v[:, 0, offset:offset + m], nid)
+                    cache1.k[:, 0, offset - cut:offset - cut + m],
+                    cache1.v[:, 0, offset - cut:offset - cut + m], nid)
             key = (parent, tuple(int(t) for t in
                                  jax.device_get(seg)[0]))
             self.node_index[key] = nid
             self.node_key[nid] = key
             self.node_live[nid] = True
+            self.node_len[nid] = m
             # write-time integrity fingerprint (re-verified at snapshot
             # load / audit_state on demand)
             from repro.core.integrity import segment_checksum
@@ -1070,6 +1279,7 @@ class TreeServeEngine(_SlotTableEngine):
             offset += m
         for nid in path:
             self.node_refs[nid] += 1
+            self.node_cached.pop(nid, None)  # revival: cached -> live
 
         path_col = jnp.asarray(
             path + [-1] * (tcfg.depth - len(path)), jnp.int32)
@@ -1087,28 +1297,42 @@ class TreeServeEngine(_SlotTableEngine):
             steps=state.steps.at[slot_ids].set(0),
             key=key,
         )
-        self.requests.append(
-            {"path": list(path), "slots": list(slots), "live": True})
-        rid = len(self.requests) - 1
+        rid = self.next_rid
+        self.next_rid += 1
+        self.last_rid = rid
+        self.requests[rid] = {"path": list(path), "slots": list(slots),
+                              "live": True}
         for i, s in enumerate(slots):
             self.slot_request[s] = rid
             self.outputs[s] = [int(tok[i])]
             self.logps[s] = [float(lp[i])]
             self.corrupt_slots.discard(s)  # fresh request, fresh verdict
+        # slot reuse may have dropped the last reference to a retired
+        # request's table entry — compact it away now
+        self._compact_requests()
         return state, slots
 
     # ---- retire ----
-    def retire_requests(self, state: ForestState):
+    def retire_requests(self, state: ForestState, active=None):
         """Free every request whose slots have all gone inactive. Node
         refcounts drop along the retired paths; a node's segment (and its
         trie-index entry) frees only at refcount zero — an ancestor shared
-        with a still-live request survives. Returns retired request ids;
-        their slots become reusable by the next ``admit``."""
+        with a still-live request survives. With ``prefix_cache`` on, a
+        refcount-zero node is NOT freed: it transitions to the CACHED
+        state (pages held, index entry kept, LRU-stamped) and frees only
+        under pool pressure via ``_evict_cached``. Returns retired request
+        ids; their slots become reusable by the next ``admit``.
+
+        ``active`` optionally supplies a host snapshot of ``state.active``
+        so a serve loop that already synced it this round doesn't pay a
+        second device→host transfer."""
         import numpy as np
 
-        active = np.asarray(state.active)
+        if active is None:
+            active = np.asarray(state.active)
         retired = []
-        for rid, req in enumerate(self.requests):
+        for rid in sorted(self.requests):
+            req = self.requests[rid]
             if not req["live"]:
                 continue
             if not any(active[s] for s in req["slots"]):
@@ -1118,9 +1342,18 @@ class TreeServeEngine(_SlotTableEngine):
                     self.node_refs[nid] -= 1
                 for nid in reversed(req["path"]):
                     if self.node_refs[nid] == 0 and self.node_live[nid]:
+                        if self.tcfg.prefix_cache:
+                            # live -> cached: keep the row, the pages,
+                            # the index entry and the checksum — a
+                            # re-admission revives all of it for free.
+                            if nid not in self.node_cached:
+                                self.lru_clock += 1
+                                self.node_cached[nid] = self.lru_clock
+                            continue
                         self.node_live[nid] = False
                         self.node_index.pop(self.node_key[nid], None)
                         self.node_key[nid] = None
+                        self.node_len[nid] = 0
                         self.seg_checksums.pop(nid, None)
                         if self.paged:
                             # refcounted page sharing: an ancestor's pages
@@ -1128,7 +1361,20 @@ class TreeServeEngine(_SlotTableEngine):
                             # referencing request gone)
                             self.page_alloc.release(
                                 self.node_pages.pop(nid, []))
+        if retired:
+            self._compact_requests()
         return retired
+
+    def _compact_requests(self):
+        """Drop retired request-table entries no slot references anymore.
+        The table stays O(slots) instead of O(history); rids are
+        monotonic (``next_rid``) so journal replay and ticket handles
+        stay stable — a compacted rid is simply absent, and
+        ``request_live`` reports it dead."""
+        referenced = {rid for rid in self.slot_request if rid >= 0}
+        for rid in [r for r, req in self.requests.items()
+                    if not req["live"] and r not in referenced]:
+            del self.requests[rid]
 
     def release_retired(self, state: ForestState) -> ForestState:
         """Paged mode: clear the page-table rows of every freed trie node,
@@ -1150,9 +1396,10 @@ class TreeServeEngine(_SlotTableEngine):
         client cancellation). Refcounted resource release happens through
         the normal ``retire_requests`` path — shared ancestors survive; a
         preempted request re-admitted later re-matches whatever prefix is
-        still resident, so re-prefill costs only the evicted suffix."""
-        req = self.requests[rid]
-        if not req["live"]:
+        still resident, so re-prefill costs only the evicted suffix.
+        Tolerates already-compacted rids (no-op)."""
+        req = self.requests.get(rid)
+        if req is None or not req["live"]:
             return state
         return self.deactivate_slots(state, req["slots"])
 
@@ -1162,11 +1409,23 @@ class TreeServeEngine(_SlotTableEngine):
         LEAST shared victim first: its nodes free the most pages (nothing
         else holds them) and its re-admission re-prefills the most cheaply
         relative to what anyone else loses."""
-        req = self.requests[rid]
+        req = self.requests.get(rid)
+        if req is None:
+            return 0
         return sum(1 for nid in req["path"] if self.node_refs[nid] > 1)
 
     def _live_segments(self):
+        # cached nodes are RESIDENT (node_live stays True) so they remain
+        # checksum- and audit-visible until actually evicted
         return [n for n in range(self.tcfg.n_nodes) if self.node_live[n]]
+
+    def occupancy(self, state: ForestState) -> dict:
+        occ = super().occupancy(state)
+        occ["nodes_cached"] = len(self.node_cached)
+        if self.paged:
+            occ["pages_cached"] = sum(
+                len(self.node_pages.get(n, ())) for n in self.node_cached)
+        return occ
 
     def audit_state(self, state: ForestState,
                     extra_tracked: Sequence[int] = (),
@@ -1205,10 +1464,20 @@ class TreeServeEngine(_SlotTableEngine):
                            for (parent, toks), nid
                            in self.node_index.items()],
             "slot_request": [int(x) for x in self.slot_request],
-            "requests": [{"path": [int(n) for n in r["path"]],
-                          "slots": [int(s) for s in r["slots"]],
-                          "live": bool(r["live"])}
-                         for r in self.requests],
+            # requests as (rid, entry) pairs: the table is a compacted
+            # dict keyed by stable monotonic rids, NOT a dense list
+            "requests": [[int(rid),
+                          {"path": [int(n) for n in r["path"]],
+                           "slots": [int(s) for s in r["slots"]],
+                           "live": bool(r["live"])}]
+                         for rid, r in sorted(self.requests.items())],
+            "next_rid": int(self.next_rid),
+            "node_len": [int(x) for x in self.node_len],
+            # cached-node set + LRU clock survive snapshot/replay so
+            # post-recovery eviction order is bit-identical
+            "node_cached": [[int(n), int(stamp)] for n, stamp
+                            in sorted(self.node_cached.items())],
+            "lru_clock": int(self.lru_clock),
             "prefix_stats": {k: int(v)
                              for k, v in self.prefix_stats.items()},
         })
@@ -1229,10 +1498,16 @@ class TreeServeEngine(_SlotTableEngine):
             self.node_index[key] = int(nid)
             self.node_key[int(nid)] = key
         self.slot_request = [int(x) for x in d["slot_request"]]
-        self.requests = [{"path": [int(n) for n in r["path"]],
-                          "slots": [int(s) for s in r["slots"]],
-                          "live": bool(r["live"])}
-                         for r in d["requests"]]
+        self.requests = {int(rid): {"path": [int(n) for n in r["path"]],
+                                    "slots": [int(s) for s in r["slots"]],
+                                    "live": bool(r["live"])}
+                         for rid, r in d["requests"]}
+        self.next_rid = int(d["next_rid"])
+        self.last_rid = self.next_rid - 1
+        self.node_len = [int(x) for x in d["node_len"]]
+        self.node_cached = {int(n): int(stamp)
+                            for n, stamp in d["node_cached"]}
+        self.lru_clock = int(d["lru_clock"])
         self.prefix_stats = {k: int(v)
                              for k, v in d["prefix_stats"].items()}
         if self.paged:

@@ -1,0 +1,297 @@
+"""Cross-request prefix cache (tcfg.prefix_cache) + suffix-only prefill
+(tcfg.suffix_prefill) + request-table compaction.
+
+Fast (host-only) tier: PageAllocator.plan_eviction planning surface.
+
+Engine tier (real model, CPU):
+  * request table stays O(slots) under admit/retire churn — stable rids,
+    host-side outputs still readable for retired-but-unreused slots;
+  * retire with prefix_cache on transitions refcount-zero nodes to the
+    CACHED state (resident: pages held, index kept, checksum kept) and a
+    re-admission REVIVES them: zero new prefill tokens for cached levels,
+    zero new pages, full-hit stats;
+  * LRU eviction under node and page pressure — oldest stamp first,
+    matched path protected, unsatisfiable demand evicts nothing;
+  * allocator audits + checksum verification stay green with cached
+    nodes resident, and occupancy reports them;
+  * host_state/load_host_state round-trips the cache (node_cached, LRU
+    clock, compacted request table, next_rid) bit-exactly;
+  * ACCEPTANCE: greedy tokens with prefix_cache+suffix_prefill are
+    bit-identical to the evict-eagerly baseline across
+    tree x {dense, paged} x {bf16, int8}.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TreeConfig, get_config, reduced_config
+from repro.core.paged import PageAllocator
+from repro.models import get_model
+from repro.runtime.serve import TreeServeEngine
+
+CFG = reduced_config(get_config("internlm2-1.8b"))
+MODEL = get_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+RNG = np.random.RandomState(7)
+SYS = jnp.asarray(RNG.randint(0, CFG.vocab_size, (1, 12)))
+TPL = jnp.asarray(RNG.randint(0, CFG.vocab_size, (1, 6)))
+REQ_A = jnp.asarray(RNG.randint(0, CFG.vocab_size, (1, 9)))
+REQ_B = jnp.asarray(RNG.randint(0, CFG.vocab_size, (1, 7)))
+SEGS = [jnp.asarray(RNG.randint(0, CFG.vocab_size, (1, 10)))
+        for _ in range(4)]
+
+
+def _tree(**kw):
+    tcfg = TreeConfig(**{**dict(n_nodes=6, depth=3, slots=6,
+                                node_capacity=32, decode_capacity=16,
+                                temperature=0.0), **kw})
+    return TreeServeEngine(MODEL, CFG, tcfg)
+
+
+def _force_retire(eng, st, slots):
+    """Deactivate ``slots`` and run retirement (as the serve loop would)."""
+    st = dataclasses.replace(
+        st, active=st.active & ~jnp.isin(
+            jnp.arange(eng.tcfg.slots), jnp.asarray(slots)))
+    eng.retire_requests(st)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Fast: allocator eviction planning
+# ---------------------------------------------------------------------------
+
+def test_plan_eviction_planning_surface():
+    alloc = PageAllocator(6)
+    held = alloc.alloc(5)                         # 1 page free
+    cands = [(10, 2), (11, 1), (12, 2)]
+    assert alloc.plan_eviction(1, cands) == []    # free list suffices
+    assert alloc.plan_eviction(3, cands) == [10]  # minimal prefix
+    assert alloc.plan_eviction(4, cands) == [10, 11]
+    assert alloc.plan_eviction(6, cands) == [10, 11, 12]
+    assert alloc.plan_eviction(7, cands) is None  # unsatisfiable
+    assert alloc.free_count() == 1                # pure planning: no mutation
+    with pytest.raises(ValueError):
+        alloc.plan_eviction(-1, cands)
+    alloc.release(held)
+
+
+# ---------------------------------------------------------------------------
+# Request-table compaction
+# ---------------------------------------------------------------------------
+
+def test_request_table_stays_bounded_under_churn():
+    eng = _tree(n_nodes=2, depth=1, slots=2)
+    st = eng.init_state()
+    for i in range(5):
+        st, slots = eng.admit(PARAMS, st, [SEGS[i % len(SEGS)]], 1)
+        assert eng.last_rid == i                 # stable monotonic rids
+        st = _force_retire(eng, st, slots)
+        # table holds at most the entries some slot still references
+        assert len(eng.requests) <= eng.tcfg.slots
+    assert eng.next_rid == 5
+    # ancient rids report dead, not KeyError
+    assert not eng.request_live(0)
+    assert eng.request_sharing(0) == 0
+    st2 = eng.cancel_request(st, 0)              # tolerant no-op
+    assert st2 is st
+
+
+def test_compaction_keeps_outputs_readable_until_slot_reuse():
+    eng = _tree(n_nodes=4, depth=2, slots=4)
+    st = eng.init_state()
+    st, sa = eng.admit(PARAMS, st, [SYS, REQ_A], 2)
+    out_a = {s: list(eng.outputs[s]) for s in sa}
+    st = _force_retire(eng, st, sa)
+    # retired entry survives while its slots are unreused (result() path)
+    assert 0 in eng.requests and not eng.requests[0]["live"]
+    assert all(eng.outputs[s] == out_a[s] for s in sa)
+    st, sb = eng.admit(PARAMS, st, [SYS, REQ_B], 2)
+    assert set(sb) == set(sa)                    # slots recycled ...
+    assert 0 not in eng.requests                 # ... entry compacted away
+    assert eng.last_rid == 1 and eng.request_live(1)
+
+
+# ---------------------------------------------------------------------------
+# Cache lifecycle: live -> cached -> revived / evicted
+# ---------------------------------------------------------------------------
+
+def test_retire_caches_nodes_and_readmit_revives_zero_prefill():
+    eng = _tree(prefix_cache=True, suffix_prefill=True)
+    st = eng.init_state()
+    st, slots = eng.admit(PARAMS, st, [SYS, TPL, REQ_A], 2)
+    st = eng.step_chunk(PARAMS, st, 4)
+    baseline = {i: list(eng.outputs[s]) for i, s in enumerate(slots)}
+    st = _force_retire(eng, st, slots)
+    # cached, not freed: resident rows, index entries, checksums, pages
+    assert len(eng.node_cached) == 3
+    assert all(eng.node_live[n] for n in eng.cached_nodes())
+    assert len(eng.node_index) == 3
+    pre_stats = dict(eng.prefix_stats)
+    st, slots2 = eng.admit(PARAMS, st, [SYS, TPL, REQ_A], 2)
+    # revival: full hit, ALL tokens reused, only the 1-token logits
+    # recompute runs (cut = total - 1), nothing re-enters the cache
+    assert eng.prefix_stats["full_hits"] == pre_stats["full_hits"] + 1
+    assert (eng.prefix_stats["reused_tokens"] - pre_stats["reused_tokens"]
+            == 12 + 6 + 9)
+    assert (eng.prefix_stats["computed_tokens"]
+            - pre_stats["computed_tokens"] == 1)
+    assert eng.node_cached == {}                 # cached -> live again
+    st = eng.step_chunk(PARAMS, st, 4)
+    for i, s in enumerate(slots2):
+        assert eng.outputs[s] == baseline[i]     # greedy identity
+
+
+def test_lru_eviction_order_under_node_pressure():
+    eng = _tree(n_nodes=3, depth=1, slots=4, prefix_cache=True)
+    st = eng.init_state()
+    stamps = []
+    for seg in SEGS[:3]:
+        st, slots = eng.admit(PARAMS, st, [seg], 1)
+        nid = eng.requests[eng.last_rid]["path"][0]
+        stamps.append(nid)
+        st = _force_retire(eng, st, slots)
+    assert sorted(eng.node_cached) == sorted(stamps)
+    # a fourth distinct prefix needs a node slot: the OLDEST cached node
+    # (first retired) evicts; the younger two stay resident
+    st, slots = eng.admit(PARAMS, st, [SEGS[3]], 1)
+    assert eng.prefix_stats["evictions"] == 1
+    assert stamps[0] not in eng.node_cached
+    assert stamps[1] in eng.node_cached and stamps[2] in eng.node_cached
+    # re-admitting the survivor revives it (still indexed)
+    st = _force_retire(eng, st, slots)
+    st, _ = eng.admit(PARAMS, st, [SEGS[1]], 1)
+    assert eng.prefix_stats["full_hits"] >= 1
+
+
+def test_page_pressure_evicts_lru_and_audits_green():
+    eng = _tree(n_nodes=4, depth=1, slots=4, node_capacity=16,
+                ctx_store="paged", page_size=8, num_pages=4,
+                prefix_cache=True)
+    st = eng.init_state()
+    seg_a, seg_b, seg_c = (jnp.asarray(
+        RNG.randint(0, CFG.vocab_size, (1, 12))) for _ in range(3))
+    st, sa = eng.admit(PARAMS, st, [seg_a], 1)       # 2 pages
+    st = _force_retire(eng, st, sa)
+    st, sb = eng.admit(PARAMS, st, [seg_b], 1)       # 2 pages: pool full
+    st = _force_retire(eng, st, sb)
+    assert eng.page_alloc.free_count() == 0
+    assert len(eng.node_cached) == 2
+    assert eng.audit_state(st, verify_checksums=True)   # cached => audited
+    occ = eng.occupancy(st)
+    assert occ["nodes_cached"] == 2 and occ["pages_cached"] == 4
+    # 2-page demand evicts exactly the LRU entry (seg_a's node)
+    nid_a = eng.node_index[(-1, tuple(int(t) for t in np.asarray(seg_a)[0]))]
+    st, sc = eng.admit(PARAMS, st, [seg_c], 1)
+    assert eng.prefix_stats["evictions"] == 1
+    assert not eng.node_live[nid_a]
+    assert len(eng.node_cached) == 1
+    assert eng.audit_state(st, verify_checksums=True)
+
+
+def test_unsatisfiable_demand_evicts_nothing_and_raises():
+    eng = _tree(n_nodes=3, depth=2, slots=4, prefix_cache=True)
+    st = eng.init_state()
+    st, _live = eng.admit(PARAMS, st, [SYS, REQ_A], 1)   # pins 2 nodes
+    st, s2 = eng.admit(PARAMS, st, [TPL], 1)
+    st = _force_retire(eng, st, s2)
+    assert len(eng.node_cached) == 1
+    # two NEW levels need 2 nodes; 0 free + 1 evictable can never supply
+    # them: typed error fires, the cache keeps its contents
+    with pytest.raises(RuntimeError, match="free trie node"):
+        eng.admit(PARAMS, st, [REQ_B, REQ_A], 1)
+    assert len(eng.node_cached) == 1
+    assert eng.prefix_stats["evictions"] == 0
+    assert all(eng.node_live[n] for n in eng.cached_nodes())
+
+
+def test_matched_path_protected_from_eviction():
+    eng = _tree(n_nodes=2, depth=2, slots=2, prefix_cache=True)
+    st = eng.init_state()
+    st, slots = eng.admit(PARAMS, st, [SYS, REQ_A], 1)
+    st = _force_retire(eng, st, slots)
+    # [SYS, REQ_B] matches the cached root and needs one node: the leaf
+    # (REQ_A) evicts; the matched root must NOT (it is being revived)
+    root = eng.node_index[(-1, tuple(int(t) for t in np.asarray(SYS)[0]))]
+    st, _ = eng.admit(PARAMS, st, [SYS, REQ_B], 1)
+    assert eng.prefix_stats["evictions"] == 1
+    assert eng.node_live[root] and eng.node_refs[root] == 1
+    assert eng.prefix_stats["partial_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Durability: cached nodes survive snapshot round-trips
+# ---------------------------------------------------------------------------
+
+def test_host_state_roundtrip_with_cached_nodes():
+    import json
+
+    eng = _tree(ctx_store="paged", page_size=8, num_pages=8,
+                prefix_cache=True, suffix_prefill=True)
+    st = eng.init_state()
+    st, slots = eng.admit(PARAMS, st, [SYS, TPL, REQ_A], 2)
+    st = eng.step_chunk(PARAMS, st, 4)
+    st = _force_retire(eng, st, slots)
+    d = json.loads(json.dumps(eng.host_state()))     # JSON-clean
+    eng2 = _tree(ctx_store="paged", page_size=8, num_pages=8,
+                 prefix_cache=True, suffix_prefill=True)
+    eng2.load_host_state(d)
+    assert eng2.node_cached == eng.node_cached
+    assert eng2.lru_clock == eng.lru_clock
+    assert eng2.node_len == eng.node_len
+    assert eng2.requests == eng.requests
+    assert eng2.next_rid == eng.next_rid
+    assert eng2.prefix_stats == eng.prefix_stats
+    # restored engine + the same device state: checksums verify and the
+    # cached path REVIVES exactly as on the original engine. (step_chunk
+    # donates its state carry, so the two engines need disjoint buffers.)
+    st_b = jax.tree.map(jnp.copy, st)
+    assert eng2.audit_state(st_b, verify_checksums=True)
+    st2, slots2 = eng2.admit(PARAMS, st_b, [SYS, TPL, REQ_A], 2)
+    assert eng2.prefix_stats["full_hits"] == eng.prefix_stats["full_hits"] + 1
+    st2 = eng2.step_chunk(PARAMS, st2, 4)
+    st, slots = eng.admit(PARAMS, st, [SYS, TPL, REQ_A], 2)
+    st = eng.step_chunk(PARAMS, st, 4)
+    for s2, s1 in zip(slots2, slots):
+        assert eng2.outputs[s2] == eng.outputs[s1]
+
+
+# ---------------------------------------------------------------------------
+# ACCEPTANCE: greedy bit-identity vs the evict-eagerly baseline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("store,dtype", [
+    ("dense", "bfloat16"), ("dense", "int8"),
+    ("paged", "bfloat16"), ("paged", "int8"),
+])
+def test_greedy_identity_vs_evict_eager_baseline(store, dtype):
+    kw = dict(cache_dtype=dtype, ctx_store=store)
+    if store == "paged":
+        kw.update(page_size=8, num_pages=12)
+    base = _tree(**kw)
+    cached = _tree(prefix_cache=True, suffix_prefill=True, **kw)
+
+    def run(eng):
+        st = eng.init_state()
+        st, s1 = eng.admit(PARAMS, st, [SYS, TPL, REQ_A], 2)
+        st = eng.step_chunk(PARAMS, st, 4)
+        out1 = [list(eng.outputs[s]) for s in s1]
+        st = _force_retire(eng, st, s1)
+        # second request shares [SYS, TPL]: the baseline re-prefills the
+        # whole path from scratch; the cached engine revives both levels
+        # and suffix-prefills only REQ_B
+        st, s2 = eng.admit(PARAMS, st, [SYS, TPL, REQ_B], 2)
+        st = eng.step_chunk(PARAMS, st, 4)
+        return out1, [list(eng.outputs[s]) for s in s2]
+
+    b1, b2 = run(base)
+    c1, c2 = run(cached)
+    assert base.prefix_stats["full_hits"] + base.prefix_stats[
+        "partial_hits"] == 0                      # baseline found nothing
+    assert cached.prefix_stats["partial_hits"] == 1
+    assert cached.prefix_stats["reused_tokens"] == 12 + 6
+    assert b1 == c1
+    assert b2 == c2                               # bit-identical greedy
