@@ -217,13 +217,15 @@ def _soak_durable(model, cfg, params, sched, *, seed: int, fault_plan,
 
 
 def _soak_plain(model, cfg, params, sched, *, seed: int,
-                max_new_tokens: int = 6, tcfg=None):
+                max_new_tokens: int = 6, tcfg=None, policy="fifo"):
     """Fault-free control: same schedule, same pump cadence, plain
     ServeFrontend (no durability layer in the measured path). ``tcfg``
     selects the engine envelope (cached default vs evict-eager
-    baseline)."""
+    baseline); ``policy`` selects the admission policy for the A/B
+    (fifo vs sharing on the SAME seeded schedule)."""
     engine = TreeServeEngine(model, cfg, TreeConfig(**(tcfg or TCFG)))
-    fe = ServeFrontend(engine, queue_depth=32, stall_rounds=6)
+    fe = ServeFrontend(engine, queue_depth=32, stall_rounds=6,
+                       policy=policy)
     state = fe.init_state()
     rng, prefixes = _prefixes(cfg, seed)
     t0 = time.perf_counter()
@@ -252,6 +254,7 @@ def _summarize(fe: ServeFrontend, econ: dict, wall: float) -> dict:
            for o in fe.occupancy_log]
     m.update(
         wall_s=round(wall, 3),
+        admission_policy=fe.policy.name,
         completed_tokens=tokens,
         tokens_per_s=round(tokens / wall, 2) if wall else None,
         preempted_then_completed=sum(
@@ -307,6 +310,34 @@ def run(report) -> dict:
     assert econ_c["computed_tokens"] < econ_e["computed_tokens"], (
         econ_c["computed_tokens"], econ_e["computed_tokens"])
 
+    # ADMISSION-POLICY A/B: ONE seeded Zipf schedule drained under both
+    # policy="fifo" and policy="sharing" (runtime/scheduler.py). The A/B
+    # uses a CONTENDED variant of the workload — deeper bursts, flatter
+    # Zipf — because admission order only matters while a queue is
+    # backed up (the durability schedule above drains almost every
+    # round, leaving nothing to reorder). The sharing policy must
+    # strictly lower the modelled context bytes/step (co-scheduled
+    # sharers amortize their ancestors' reads), at least match
+    # token-weighted prefix reuse, and reject NOTHING extra on deadline
+    # (the slack lane's contract).
+    ab_kw = dict(rate=0.9, burst_every=2, burst_size=8, zipf_a=1.1)
+    ab_sched = _workload(seed, rounds, **ab_kw)
+    fe_fifo, econ_pf, wall_pf = _soak_plain(model, cfg, params, ab_sched,
+                                            seed=seed, policy="fifo")
+    fe_shar, econ_s, wall_shar = _soak_plain(model, cfg, params, ab_sched,
+                                             seed=seed, policy="sharing")
+    fifo_io = fe_fifo.metrics()["modelled_io"]
+    shar_io = fe_shar.metrics()["modelled_io"]
+    assert shar_io["ctx_bytes_per_step"] < fifo_io["ctx_bytes_per_step"], (
+        shar_io, fifo_io)
+    assert econ_s["token_reuse_rate"] >= econ_pf["token_reuse_rate"], (
+        econ_s["token_reuse_rate"], econ_pf["token_reuse_rate"])
+    dead_fifo = fe_fifo.metrics()["rejections_by_reason"].get(
+        "deadline_exceeded", 0)
+    dead_shar = fe_shar.metrics()["rejections_by_reason"].get(
+        "deadline_exceeded", 0)
+    assert dead_shar <= dead_fifo, (dead_shar, dead_fifo)
+
     payload = {
         "meta": {
             "device": jax.devices()[0].platform,
@@ -325,11 +356,36 @@ def run(report) -> dict:
                      "prefix cache + suffix-only prefill ON; faulty soak "
                      "(incl. process kills survived via snapshot+journal "
                      "recovery) vs fault-free control vs evict-eagerly "
-                     "baseline of the same schedule."),
+                     "baseline vs sharing-policy admission A/B of the "
+                     "same schedule."),
         },
         "faulty": _summarize(dfe.fe, econ_f, wall_fault),
         "fault_free": _summarize(fe_clean, econ_c, wall_clean),
         "fault_free_evict_eager": _summarize(fe_eager, econ_e, wall_eager),
+        # the policy axis: fifo vs sharing on ONE contended seeded Zipf
+        # schedule (full per-arm summaries below; this block is the
+        # asserted comparison in one place)
+        "policy_ab": {
+            "schedule": dict(ab_kw, rounds=rounds, seed=seed,
+                             requests=sum(len(e) for e in ab_sched)),
+            "fifo": {
+                "ctx_bytes_per_step": fifo_io["ctx_bytes_per_step"],
+                "total_bytes_per_step": fifo_io["total_bytes_per_step"],
+                "token_reuse_rate": econ_pf["token_reuse_rate"],
+                "deadline_rejections": dead_fifo,
+            },
+            "sharing": {
+                "ctx_bytes_per_step": shar_io["ctx_bytes_per_step"],
+                "total_bytes_per_step": shar_io["total_bytes_per_step"],
+                "token_reuse_rate": econ_s["token_reuse_rate"],
+                "deadline_rejections": dead_shar,
+            },
+            "ctx_bytes_per_step_saving": round(
+                fifo_io["ctx_bytes_per_step"]
+                / max(shar_io["ctx_bytes_per_step"], 1), 4),
+        },
+        "policy_ab_fifo": _summarize(fe_fifo, econ_pf, wall_pf),
+        "policy_ab_sharing": _summarize(fe_shar, econ_s, wall_shar),
     }
     payload["faulty"]["durability"] = dict(dfe.stats)
     BENCH_JSON.write_text(json.dumps(payload, indent=2))
@@ -361,6 +417,14 @@ def run(report) -> dict:
            econ_e["token_reuse_rate"])
     report("serve_soak/cache_evictions", econ_f["evictions"])
     report("serve_soak/prefill_bytes_saved", econ_f["prefill_bytes_saved"])
+    report("serve_soak/policy_fifo_ctx_bytes_per_step",
+           fifo_io["ctx_bytes_per_step"])
+    report("serve_soak/policy_sharing_ctx_bytes_per_step",
+           shar_io["ctx_bytes_per_step"])
+    report("serve_soak/policy_ctx_bytes_saving",
+           payload["policy_ab"]["ctx_bytes_per_step_saving"])
+    report("serve_soak/policy_sharing_token_reuse",
+           econ_s["token_reuse_rate"])
     return payload
 
 

@@ -60,6 +60,7 @@ import numpy as np
 from repro.core.errors import AllocatorCorruption, CapacityError
 from repro.runtime.fault_tolerance import Heartbeat
 from repro.runtime.faults import FaultKind, FaultPlan, ProcessKilled
+from repro.runtime.scheduler import make_policy
 
 
 # Ticket lifecycle states. PREEMPTED is a TRANSITION, not a state: a
@@ -151,8 +152,15 @@ class ServeFrontend:
                  decode_steps: int = 4,
                  fault_plan: Optional[FaultPlan] = None,
                  heartbeat_path: Optional[str] = None,
-                 audit_every_round: bool = True):
+                 audit_every_round: bool = True,
+                 policy="fifo"):
         self.engine = engine
+        # admission policy (runtime/scheduler.py): "fifo" reproduces
+        # the classic priority-then-submission drain; "sharing"
+        # co-schedules queued requests that share trie ancestors to
+        # minimize modelled context bytes/step. The same object ranks
+        # preemption victims.
+        self.policy = make_policy(policy)
         self.queue_depth = queue_depth
         self.max_attempts = max_attempts
         self.backoff_base = backoff_base
@@ -171,6 +179,12 @@ class ServeFrontend:
         self.tickets: List[Ticket] = []
         self.counters: Dict[str, int] = {}
         self.occupancy_log: List[dict] = []
+        # modelled per-step IO ledger (engine.step_io_bytes x decode
+        # chunks): the bytes/step axis the admission-policy A/B is
+        # judged on. Snapshot state — replayed rounds re-accumulate it
+        # deterministically.
+        self.io_ledger: Dict[str, int] = {
+            "ctx_bytes": 0, "total_bytes": 0, "steps": 0}
         self._retire_suppressed_until = -1
         self._stolen: List = []   # (return_round, page_ids) under fault
         # durability hooks (installed by runtime/recovery.DurableFrontend):
@@ -278,14 +292,25 @@ class ServeFrontend:
                 by_reason[t.reason] = by_reason.get(t.reason, 0) + 1
         lat = [t.per_token_latency() for t in self.tickets]
         lat = sorted(x for x in lat if x is not None)
+        il = self.io_ledger
         return {
             "rounds": self.round,
+            "policy": self.policy.name,
             "by_status": by_status,
             "rejections_by_reason": by_reason,
             "preemptions": sum(t.preemptions for t in self.tickets),
             "counters": dict(self.counters),
             "per_token_latency_s": {
                 "p50": _pct(lat, 50), "p99": _pct(lat, 99),
+            },
+            "modelled_io": {
+                "decode_steps": il["steps"],
+                "ctx_bytes_per_step": (
+                    round(il["ctx_bytes"] / il["steps"], 2)
+                    if il["steps"] else None),
+                "total_bytes_per_step": (
+                    round(il["total_bytes"] / il["steps"], 2)
+                    if il["steps"] else None),
             },
         }
 
@@ -308,6 +333,7 @@ class ServeFrontend:
             "retire_suppressed_until": self._retire_suppressed_until,
             "stolen": [[due, [int(i) for i in ids]]
                        for due, ids in self._stolen],
+            "io_ledger": {k: int(v) for k, v in self.io_ledger.items()},
         }
 
     def load_host_state(self, d: dict):
@@ -317,6 +343,10 @@ class ServeFrontend:
         self.occupancy_log = list(d["occupancy_log"])
         self._retire_suppressed_until = int(d["retire_suppressed_until"])
         self._stolen = [(int(due), list(ids)) for due, ids in d["stolen"]]
+        self.io_ledger = {k: int(v)
+                          for k, v in d.get("io_ledger", {
+                              "ctx_bytes": 0, "total_bytes": 0,
+                              "steps": 0}).items()}
 
     # ------------------------------------------------------------------
     # scheduling passes
@@ -405,15 +435,23 @@ class ServeFrontend:
         return state
 
     def _admit_pass(self, params, state):
-        """The admission ladder. Eligible queued tickets (backoff expired)
-        try to admit in (priority desc, submission order); transient
-        failures back off exponentially (capped), starved tickets trigger
-        preemption, permanent failures and exhausted retry budgets become
-        typed rejections."""
-        eligible = sorted(
-            (t for t in self._queued() if t.next_try <= self.round),
-            key=lambda t: (-t.priority, t.tid))
-        for t in eligible:
+        """The admission ladder. Eligible queued tickets (backoff
+        expired) try to admit in the order the POLICY chooses
+        (``runtime/scheduler.py`` — fifo: priority desc, submission
+        order; sharing: SLO lanes then greedy marginal bytes/step
+        gain); transient failures back off exponentially (capped),
+        starved tickets trigger preemption, permanent failures and
+        exhausted retry budgets become typed rejections. The chosen
+        order is journaled (``admit_order`` event) BEFORE any admission
+        applies, so replay recovery cross-checks the policy's decision
+        itself, not just its side effects."""
+        eligible = [t for t in self._queued() if t.next_try <= self.round]
+        order = self.policy.admit_order(self, eligible)
+        if order:
+            self._emit(ev="admit_order", round=self.round,
+                       policy=self.policy.name,
+                       tids=[int(t.tid) for t in order])
+        for t in order:
             state = self._try_admit_one(params, state, t)
         return state
 
@@ -460,27 +498,21 @@ class ServeFrontend:
         return state
 
     def _pick_victim(self, requester: Ticket) -> Optional[Ticket]:
-        """Preemption policy: among live requests STRICTLY below the
-        requester's effective priority (base priority + preemptions
+        """Preemption victim choice: among live requests STRICTLY below
+        the requester's effective priority (base priority + preemptions
         already suffered — aging, so repeatedly-evicted work climbs out
-        of victimhood and preemption cycles terminate), pick the LOWEST
-        effective priority first, then the LEAST-SHARED (fewest trie
-        nodes held by any other live request — evicting it frees the
-        most pages and its re-prefill re-matches the surviving shared
-        prefix), then the youngest (least sunk decode work)."""
+        of victimhood and preemption cycles terminate), the POLICY's
+        ``victim_key`` picks the minimum — the same score that ranks
+        admissions, inverted (fifo: least-shared node count; sharing:
+        fewest shared context bytes/step), then the youngest (least
+        sunk decode work)."""
         def eff(t: Ticket) -> int:
             return t.priority + t.preemptions
 
         cands = [t for t in self._running() if eff(t) < eff(requester)]
         if not cands:
             return None
-
-        def key(t: Ticket):
-            sharing = (self.engine.request_sharing(t.handle)
-                       if self._is_tree else 0)
-            return (eff(t), sharing, -t.submitted_round)
-
-        return min(cands, key=key)
+        return min(cands, key=lambda t: self.policy.victim_key(self, t))
 
     def _preempt(self, state, victim: Ticket, *, fault: bool = False):
         """Cancel a running ticket's slots and mark it for REQUEUE at the
@@ -606,6 +638,13 @@ class ServeFrontend:
                                 t.max_new_tokens - 1 - int(steps[s]))
         if chunk <= 0:
             return state
+        if hasattr(self.engine, "step_io_bytes"):
+            # modelled-IO ledger: the live set read during this chunk's
+            # steps (host mirrors only — no extra device sync)
+            io = self.engine.step_io_bytes(state, active=active)
+            self.io_ledger["ctx_bytes"] += io["ctx_bytes"] * chunk
+            self.io_ledger["total_bytes"] += io["total"] * chunk
+            self.io_ledger["steps"] += chunk
         state = self.engine.step_chunk(params, state, chunk)
         # progress accounting for the watchdog
         for t in self._running():

@@ -1014,6 +1014,55 @@ class TreeServeEngine(_SlotTableEngine):
             parent = nid
         return path, len(path)
 
+    def peek_prefix(self, segments):
+        """Side-effect-free admission PROBE: what would ``admit`` match,
+        without admitting. Returns ``(path, matched, matched_tokens)`` —
+        the longest-matching prefix path's node ids, the number of
+        matched levels, and the total resident tokens on that path
+        (live OR cached — a cached match revives for free).
+
+        This is the surface the admission policy
+        (``runtime/scheduler.SharingPolicy``) scores candidates through:
+        unlike ``admit`` it never touches refcounts, the LRU stamps, or
+        ``prefix_stats`` — probing a queued request N times leaves the
+        trie bit-identical, which is what keeps policy scoring
+        deterministic and replay-safe."""
+        path, matched = self.match_prefix(segments)
+        return path, matched, sum(self.node_len[nid] for nid in path)
+
+    def step_io_bytes(self, state: ForestState, active=None) -> dict:
+        """Modelled per-DECODE-STEP HBM bytes of the current live slot
+        table (per layer), via ``core.io_model.tree_decode_io_bytes``
+        over the live slots' trie paths: every referenced node's context
+        read once per step, plus per-slot decode arms and q/out rows.
+        The frontend accumulates this per decode chunk into its
+        ``io_ledger`` — the bytes/step axis the admission-policy A/B
+        (benchmarks/serve_soak.py) compares policies on.
+
+        ``active`` optionally supplies a host snapshot of
+        ``state.active`` (same convention as ``free_slots``). Returns
+        ``{"ctx_bytes", "total", "slots"}`` — zeros when nothing is
+        decoding."""
+        import numpy as np
+
+        from repro.core.io_model import tree_decode_io_bytes
+
+        if active is None:
+            active = np.asarray(state.active)
+        paths = []
+        for s in range(self.tcfg.slots):
+            rid = self.slot_request[s]
+            if active[s] and rid >= 0 and self.request_live(rid):
+                paths.append(tuple(self.requests[rid]["path"]))
+        if not paths:
+            return {"ctx_bytes": 0, "total": 0, "slots": 0}
+        io = tree_decode_io_bytes(
+            paths=paths, node_lens=self.node_len,
+            c_d=self.tcfg.decode_capacity,
+            g=self.cfg.n_kv_heads, hd=self.cfg.kq_dim)
+        return {"ctx_bytes": int(sum(io["per_node"].values())),
+                "total": int(io["total"]), "slots": len(paths)}
+
     # ---- cross-request prefix cache (tcfg.prefix_cache) ----
     def cached_nodes(self):
         """Refcount-zero trie nodes currently held RESIDENT as cache

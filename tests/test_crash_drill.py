@@ -1,0 +1,88 @@
+"""Out-of-process SIGKILL crash drill.
+
+The in-process recovery tests (tests/test_recovery.py) simulate death
+with ``ProcessKilled`` — the interpreter, the engine objects, and every
+jit cache survive. This drill removes that safety net: a REAL serve
+worker subprocess (tests/_crash_drill_worker.py) is SIGKILLed
+mid-workload — no atexit, no finally blocks, nothing flushes — and a
+second, FRESH interpreter recovers from the workdir's snapshot +
+journal alone and finishes the workload. Its terminal results must be
+bit-identical to an uninterrupted control run of the same seeded
+workload, under BOTH admission policies (the sharing policy's journaled
+admit order must replay divergence-free across a process boundary).
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+WORKER = os.path.join(_HERE, "_crash_drill_worker.py")
+
+
+def _env():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(_HERE), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def _run_worker(mode, workdir, policy, sleep_s="0"):
+    subprocess.run([sys.executable, WORKER, mode, str(workdir), policy,
+                    sleep_s], env=_env(), check=True, timeout=900)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["fifo", "sharing"])
+def test_sigkill_drill_recovers_bit_identical(tmp_path, policy):
+    # uninterrupted control: same workload, its own interpreter
+    ctrl_dir = tmp_path / "control"
+    _run_worker("serve", ctrl_dir, policy)
+    control = json.loads((ctrl_dir / "done.json").read_text())
+    assert all(t["status"] == "completed" for t in control["tickets"])
+
+    # the drill: a real worker, slowed per round so the kill window is
+    # wide, SIGKILLed once it has pumped a few rounds
+    drill_dir = tmp_path / "drill"
+    proc = subprocess.Popen(
+        [sys.executable, WORKER, "serve", str(drill_dir), policy, "0.3"],
+        env=_env())
+    try:
+        progress = drill_dir / "progress.txt"
+        deadline = time.time() + 600
+        seen = -1
+        while time.time() < deadline:
+            if progress.exists():
+                try:
+                    seen = int(progress.read_text().split()[0])
+                except (ValueError, IndexError):
+                    pass   # racing the atomic rename; retry
+                if seen >= 3:
+                    break
+            if proc.poll() is not None:
+                pytest.fail(f"worker exited (rc={proc.returncode}) "
+                            f"before the kill window")
+            time.sleep(0.05)
+        assert seen >= 3, "worker never reached the kill window"
+        os.kill(proc.pid, signal.SIGKILL)
+        proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=60)
+    assert proc.returncode == -signal.SIGKILL
+    assert not (drill_dir / "done.json").exists(), \
+        "kill landed after the workload already completed"
+
+    # fresh interpreter, recovery from disk alone
+    _run_worker("recover", drill_dir, policy)
+    result = json.loads((drill_dir / "result.json").read_text())
+    assert result["stats"]["recoveries"] == 1
+    assert result["tickets"] == control["tickets"], (
+        f"policy={policy}: recovered results diverged from the "
+        f"uninterrupted control")

@@ -260,6 +260,105 @@ def test_host_state_roundtrip_with_cached_nodes():
 
 
 # ---------------------------------------------------------------------------
+# prefix_stats edge cases: token-weighted reuse is an admission-time
+# fact — revivals count, evicted-then-recomputed paths do not, and the
+# counters are durable state
+# ---------------------------------------------------------------------------
+
+def test_token_accounting_across_revive_evict_readmit_cycle():
+    eng = _tree(n_nodes=2, depth=2, slots=2, prefix_cache=True,
+                suffix_prefill=True)
+    st = eng.init_state()
+
+    def stats():
+        ps = eng.prefix_stats
+        return (ps["reused_tokens"], ps["new_tokens"],
+                ps["computed_tokens"], ps["evictions"])
+
+    # cold admit: every token is new and computed       (SYS+REQ_A = 21)
+    st, s1 = eng.admit(PARAMS, st, [SYS, REQ_A], 1)
+    assert stats() == (0, 21, 21, 0)
+    st = _force_retire(eng, st, s1)
+    # revival: all 21 reused, only the 1-token logits floor recomputes
+    st, s2 = eng.admit(PARAMS, st, [SYS, REQ_A], 1)
+    assert eng.prefix_stats["full_hits"] == 1
+    assert stats() == (21, 21, 22, 0)
+    st = _force_retire(eng, st, s2)
+    # an unrelated 2-level path (TPL+REQ_B = 13) needs both node slots:
+    # the cached pair evicts, its tokens now gone from the trie
+    st, s3 = eng.admit(PARAMS, st, [TPL, REQ_B], 1)
+    assert stats() == (21, 34, 35, 2)
+    st = _force_retire(eng, st, s3)
+    # readmitting the ORIGINAL path after eviction is a cold admit
+    # again: reuse does NOT grow — eviction really forfeited the credit
+    st, s4 = eng.admit(PARAMS, st, [SYS, REQ_A], 1)
+    assert stats() == (21, 55, 56, 4)
+    assert eng.prefix_stats["full_hits"] == 1       # no phantom hit
+    assert eng.prefix_stats["admits"] == 4
+
+
+def test_partial_vs_full_hit_counter_boundaries():
+    eng = _tree(prefix_cache=True, suffix_prefill=True)
+    st = eng.init_state()
+    st, s = eng.admit(PARAMS, st, [SYS, TPL], 1)
+    st = _force_retire(eng, st, s)
+    ps0 = dict(eng.prefix_stats)
+    assert (ps0["full_hits"], ps0["partial_hits"]) == (0, 0)
+    # matched < len(segments): a partial hit, NEVER a full one — the
+    # suffix level's 9 tokens are the exact computed cost
+    st, s = eng.admit(PARAMS, st, [SYS, TPL, REQ_A], 1)
+    ps1 = dict(eng.prefix_stats)
+    assert (ps1["full_hits"], ps1["partial_hits"]) == (0, 1)
+    assert ps1["reused_tokens"] - ps0["reused_tokens"] == 18
+    assert ps1["computed_tokens"] - ps0["computed_tokens"] == 9
+    st = _force_retire(eng, st, s)
+    # matched == len(segments), even for a single-level path: full hit,
+    # with the 1-token first-logits recompute as the only cost
+    st, s = eng.admit(PARAMS, st, [SYS], 1)
+    ps2 = dict(eng.prefix_stats)
+    assert (ps2["full_hits"], ps2["partial_hits"]) == (1, 1)
+    assert ps2["reused_tokens"] - ps1["reused_tokens"] == 12
+    assert ps2["new_tokens"] == ps1["new_tokens"]
+    assert ps2["computed_tokens"] - ps1["computed_tokens"] == 1
+
+
+def test_full_hit_without_suffix_prefill_recomputes_the_path():
+    # reuse counts KV bytes NOT rewritten; compute is a separate axis —
+    # with suffix_prefill off, a full hit still re-runs every token
+    eng = _tree(prefix_cache=True, suffix_prefill=False)
+    st = eng.init_state()
+    st, s = eng.admit(PARAMS, st, [SYS], 1)
+    st = _force_retire(eng, st, s)
+    st, _ = eng.admit(PARAMS, st, [SYS], 1)
+    ps = eng.prefix_stats
+    assert ps["full_hits"] == 1
+    assert ps["reused_tokens"] == 12
+    assert ps["computed_tokens"] == 24
+
+
+def test_prefix_stats_survive_host_state_roundtrip_and_continue():
+    import json
+
+    kw = dict(prefix_cache=True, suffix_prefill=True)
+    eng = _tree(**kw)
+    st = eng.init_state()
+    st, s = eng.admit(PARAMS, st, [SYS, TPL], 1)
+    st = _force_retire(eng, st, s)
+    st, s = eng.admit(PARAMS, st, [SYS, TPL, REQ_A], 1)
+    st = _force_retire(eng, st, s)
+    blob = json.loads(json.dumps(eng.host_state()))
+    eng2 = _tree(**kw)
+    eng2.load_host_state(blob)
+    assert eng2.prefix_stats == eng.prefix_stats
+    # both sides of the round-trip must keep counting IDENTICALLY
+    st_b = jax.tree.map(jnp.copy, st)
+    st, _ = eng.admit(PARAMS, st, [SYS, REQ_B], 1)
+    st_b, _ = eng2.admit(PARAMS, st_b, [SYS, REQ_B], 1)
+    assert eng2.prefix_stats == eng.prefix_stats
+    assert eng2.prefix_stats["partial_hits"] == 2
+
+
+# ---------------------------------------------------------------------------
 # ACCEPTANCE: greedy bit-identity vs the evict-eagerly baseline
 # ---------------------------------------------------------------------------
 

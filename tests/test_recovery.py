@@ -283,6 +283,11 @@ def tiny_model():
 RNG = np.random.RandomState(0)
 SYS_TOKS = RNG.randint(0, 64, (1, 12))
 REQ_TOKS = [RNG.randint(0, 64, (1, 7)) for _ in range(4)]
+# second shared prefix + six suffixes for the sharing-policy replay
+# drills: submissions alternate the two prefixes, so the sharing
+# policy's greedy order (same-prefix siblings first) differs from FIFO
+ALT_TOKS = RNG.randint(0, 64, (1, 12))
+SHARED_REQ_TOKS = [RNG.randint(0, 64, (1, 7)) for _ in range(6)]
 
 
 def _factory(cfg, model, kind: str, store: str, dtype: str):
@@ -408,6 +413,120 @@ def test_journal_truncation_replay_stops_cleanly(tiny_model, tmp_path):
     # this workload's submits all land in the round-0 epoch before the
     # truncation point, so every request survives here
     assert got_status == ctrl_status and got_tokens == ctrl_tokens
+
+
+def _submit_shared(fe_like):
+    pfx = [jnp.asarray(SYS_TOKS), jnp.asarray(ALT_TOKS)]
+    for i, r in enumerate(SHARED_REQ_TOKS):
+        fe_like.submit([pfx[i % 2], jnp.asarray(r)], n_samples=1,
+                       max_new_tokens=5)
+
+
+@pytest.mark.slow
+def test_sharing_policy_admit_order_replays_divergence_free(tiny_model,
+                                                            tmp_path):
+    """Regression: with ``policy="sharing"`` the admission ORDER is a
+    scheduling decision, not a stable function of the ticket table — it
+    depends on the trie the policy saw at that round. The frontend
+    journals the chosen order (``admit_order`` event) before admitting,
+    so replay both re-derives it and CROSS-CHECKS it; a killed-and-
+    recovered sharing run must finish bit-identical to its control."""
+    from repro.runtime.faults import ProcessKilled
+    from repro.runtime.frontend import ServeFrontend
+    from repro.runtime.recovery import DurableFrontend
+
+    cfg, model, params = tiny_model
+    factory = _factory(cfg, model, "tree", "paged", "bfloat16")
+    fe = ServeFrontend(factory(), queue_depth=32, decode_steps=1,
+                       policy="sharing")
+    st = fe.init_state()
+    _submit_shared(fe)
+    fe.drain(params, st)
+    ctrl_tokens, ctrl_status = _results(fe.tickets)
+    assert all(s == "completed" for s in ctrl_status.values())
+
+    plan = FaultPlan([FaultEvent(2, FaultKind.KILL_PROCESS),
+                      FaultEvent(4, FaultKind.KILL_PROCESS)])
+    dfe = DurableFrontend(factory, str(tmp_path), fault_plan=plan,
+                          snapshot_every=2, keep_last_k=100,
+                          frontend_kwargs=dict(queue_depth=32,
+                                               decode_steps=1,
+                                               policy="sharing"))
+    dfe.init_state()
+    _submit_shared(dfe)
+    pumps = 0
+    while dfe.pending():
+        pumps += 1
+        assert pumps < 200, "recovery liveness failure"
+        try:
+            dfe.pump(params)
+        except ProcessKilled:
+            dfe.recover(params)
+    assert dfe.stats["recoveries"] == 2
+    assert dfe.stats["replayed_rounds"] > 0   # the cross-check really ran
+    got_tokens, got_status = _results(dfe.fe.tickets)
+    assert got_status == ctrl_status
+    assert got_tokens == ctrl_tokens
+
+    # the journal carries the ORDER, and the order is non-trivial: the
+    # sharing policy pulls same-prefix siblings ahead of earlier tids,
+    # so at least one journaled admit_order is NOT in fifo (tid) order
+    orders = []
+    for name in sorted(os.listdir(dfe.journal_dir)):
+        recs, _ = Journal.read(os.path.join(dfe.journal_dir, name))
+        for rec in recs:
+            if rec.get("ev") == "round":
+                orders += [o["tids"] for o in rec["obs"]
+                           if o.get("ev") == "admit_order"]
+    assert orders, "no admit_order events journaled"
+    assert any(o != sorted(o) for o in orders), orders
+
+
+@pytest.mark.slow
+def test_tampered_admit_order_is_a_replay_divergence(tiny_model, tmp_path):
+    """Anti-regression for the cross-check itself: swap two tids inside a
+    journaled ``admit_order`` (same SET, different order, valid CRCs) and
+    recovery must refuse with ``ReplayDivergence`` rather than silently
+    re-admitting in whatever order the replayed policy derives."""
+    from repro.runtime.faults import ProcessKilled
+    from repro.runtime.recovery import DurableFrontend, ReplayDivergence
+
+    cfg, model, params = tiny_model
+    factory = _factory(cfg, model, "tree", "paged", "bfloat16")
+    plan = FaultPlan([FaultEvent(3, FaultKind.KILL_PROCESS)])
+    dfe = DurableFrontend(factory, str(tmp_path), fault_plan=plan,
+                          snapshot_every=100, keep_last_k=100,
+                          frontend_kwargs=dict(queue_depth=32,
+                                               decode_steps=1,
+                                               policy="sharing"))
+    dfe.init_state()
+    _submit_shared(dfe)
+    with pytest.raises(ProcessKilled):
+        while dfe.pending():
+            dfe.pump(params)
+
+    ep = os.path.join(dfe.journal_dir, "journal_000000000.log")
+    recs, clean = Journal.read(ep)
+    assert clean
+    swapped = False
+    for rec in recs:
+        if rec["ev"] != "round":
+            continue
+        for o in rec["obs"]:
+            if o.get("ev") == "admit_order" and len(o["tids"]) >= 2:
+                o["tids"][0], o["tids"][1] = o["tids"][1], o["tids"][0]
+                swapped = True
+                break
+        if swapped:
+            break
+    assert swapped, "no multi-ticket admit_order to tamper with"
+    os.remove(ep)
+    j = Journal(ep)
+    for rec in recs:
+        j.append(rec)
+    j.close()
+    with pytest.raises(ReplayDivergence, match="admit_order"):
+        dfe.recover(params)
 
 
 @pytest.mark.slow

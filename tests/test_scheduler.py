@@ -1,0 +1,426 @@
+"""Admission-policy surface (runtime/scheduler.py).
+
+Unit tests drive the policies directly on HAND-BUILT tries: a
+model-less ``TreeServeEngine`` carries only its host mirrors (the
+policy's entire input surface), so greedy ordering, the SLO lanes, and
+victim ranking are asserted on exact tiny scenarios. The byte model
+(``core.io_model.tree_admit_bytes_delta``) is pinned to its exactness
+contract against ``tree_decode_io_bytes``. The slow tier then runs a
+seeded workload x policy fuzz over a real tiny model: every draw must
+end allowed-terminal with exact budgets and green audits, and the
+sharing policy's modelled context bytes/step must never exceed fifo's
+on the same draw.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TreeConfig
+from repro.core.io_model import tree_admit_bytes_delta, tree_decode_io_bytes
+from repro.runtime.frontend import COMPLETED, REJECTED, ServeFrontend, Ticket
+from repro.runtime.scheduler import (AdmissionPolicy, FifoPolicy,
+                                     SharingPolicy, SharingPolicyConfig,
+                                     make_policy)
+from repro.runtime.serve import TreeServeEngine
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:           # optional dep: CI installs it
+    HAVE_HYPOTHESIS = False
+
+# policy scoring reads only (n_kv_heads, kq_dim) off the model config —
+# any tiny shape works for the mirror-only engines below
+CFG = ModelConfig(name="sched-unit", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                  vocab_size=64, vocab_pad_multiple=16, decode_capacity=8)
+PER_TOK = 2 * CFG.n_kv_heads * CFG.kq_dim * 2      # bf16 context bytes/token
+
+# distinct token tuples for hand-built trie levels
+SYS = tuple(range(1, 11))               # 10-token shared system prompt
+TPL = tuple(range(20, 26))              # 6-token template under SYS
+OTH = (40, 41, 42)                      # unshared 3-token context
+OTH2 = (50, 51, 52, 53)
+
+
+def _engine(**kw):
+    """Host mirrors only: no model, no device state — admission policies
+    are pure functions of the mirrors."""
+    base = dict(n_nodes=8, depth=3, slots=8, node_capacity=32,
+                decode_capacity=8, temperature=0.0)
+    return TreeServeEngine(None, CFG, TreeConfig(**{**base, **kw}))
+
+
+def _grow(eng, parent, toks, refs=0):
+    """Hand-plant one trie node (live; ``refs=0`` models a cached
+    resident node, ``refs>0`` a node read by live requests)."""
+    nid = eng.node_live.index(False)
+    key = (parent, tuple(toks))
+    eng.node_index[key] = nid
+    eng.node_key[nid] = key
+    eng.node_live[nid] = True
+    eng.node_len[nid] = len(toks)
+    eng.node_refs[nid] = refs
+    return nid
+
+
+def _tk(tid, levels, *, n_samples=1, priority=0, deadline=None, submitted=0):
+    return Ticket(
+        tid=tid,
+        segments=[jnp.asarray([list(lv)], jnp.int32) for lv in levels],
+        n_samples=n_samples, max_new_tokens=4, priority=priority,
+        deadline_round=deadline, submitted_round=submitted)
+
+
+def _fe(eng, policy="sharing", **kw):
+    return ServeFrontend(eng, policy=policy, **kw)
+
+
+def _tids(order):
+    return [t.tid for t in order]
+
+
+# ---------------------------------------------------------------------------
+# policy resolution
+# ---------------------------------------------------------------------------
+
+def test_make_policy_resolution():
+    assert isinstance(make_policy(None), FifoPolicy)
+    assert isinstance(make_policy("fifo"), FifoPolicy)
+    assert isinstance(make_policy("sharing"), SharingPolicy)
+    custom = SharingPolicy(SharingPolicyConfig(age_bound=3))
+    assert make_policy(custom) is custom
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        make_policy("lifo")
+
+
+def test_frontend_reports_policy_name():
+    assert _fe(_engine(), policy="fifo").policy.name == "fifo"
+    assert _fe(_engine(), policy="sharing").policy.name == "sharing"
+
+
+# ---------------------------------------------------------------------------
+# fifo: the pre-policy ladder, bit-for-bit
+# ---------------------------------------------------------------------------
+
+def test_fifo_orders_by_priority_then_submission():
+    fe = _fe(_engine(), policy="fifo")
+    ts = [_tk(0, [OTH], priority=0), _tk(1, [OTH], priority=2),
+          _tk(2, [OTH], priority=1), _tk(3, [OTH], priority=2)]
+    assert _tids(fe.policy.admit_order(fe, ts)) == [1, 3, 2, 0]
+    # sharing metadata is invisible to fifo: a hot trie changes nothing
+    eng = fe.engine
+    _grow(eng, -1, SYS, refs=3)
+    rich = _tk(4, [SYS, OTH], priority=0)
+    assert _tids(fe.policy.admit_order(fe, ts + [rich])) == [1, 3, 2, 0, 4]
+
+
+# ---------------------------------------------------------------------------
+# sharing: greedy marginal gain
+# ---------------------------------------------------------------------------
+
+def test_greedy_prefers_deeper_shared_ancestors():
+    eng = _engine()
+    sys_id = _grow(eng, -1, SYS, refs=1)
+    _grow(eng, sys_id, TPL, refs=1)
+    fe = _fe(eng)
+    ts = [_tk(0, [OTH]),                 # shares nothing
+          _tk(1, [SYS, OTH]),            # shares SYS        (10 tokens)
+          _tk(2, [SYS, TPL, OTH])]       # shares SYS + TPL  (16 tokens)
+    order = fe.policy.admit_order(fe, ts)
+    assert _tids(order) == [2, 1, 0]
+    assert sorted(_tids(order)) == [0, 1, 2]      # always a permutation
+
+
+def test_greedy_chains_siblings_through_the_hypothetical_read_set():
+    # EMPTY trie: nothing is shared yet. The first pick falls back to
+    # priority, but folding its would-be path into the read-set makes
+    # its sibling the next winner — ahead of a HIGHER-priority loner.
+    fe = _fe(_engine())
+    ts = [_tk(5, [SYS, OTH], priority=2),     # first: best (prio) tie-break
+          _tk(6, [SYS, OTH2], priority=0),    # sibling of 5
+          _tk(7, [OTH], priority=1)]          # loner, higher prio than 6
+    assert _tids(fe.policy.admit_order(fe, ts)) == [5, 6, 7]
+
+
+def test_greedy_normalizes_saving_per_claimed_slot():
+    eng = _engine()
+    _grow(eng, -1, SYS, refs=1)
+    fe = _fe(eng)
+    # same shared ancestor, but tid 9 claims 4 slots for it: tid 10's
+    # bytes-saved-per-slot is 4x higher, so it wins despite fifo order
+    ts = [_tk(9, [SYS, OTH], n_samples=4), _tk(10, [SYS, OTH2])]
+    assert _tids(fe.policy.admit_order(fe, ts)) == [10, 9]
+    assert _tids(FifoPolicy().admit_order(fe, ts)) == [9, 10]
+
+
+def test_cached_nodes_count_as_matched_tokens_not_saved_bytes():
+    # a CACHED resident node (refcount 0) is not streamed per step, so
+    # it saves no bytes — but peek_prefix reuse makes it the secondary
+    # key, beating an equal-priority non-matching ticket
+    eng = _engine()
+    _grow(eng, -1, SYS, refs=0)
+    fe = _fe(eng)
+    ts = [_tk(0, [OTH]), _tk(1, [SYS, OTH])]
+    assert _tids(fe.policy.admit_order(fe, ts)) == [1, 0]
+
+
+# ---------------------------------------------------------------------------
+# sharing: SLO lanes
+# ---------------------------------------------------------------------------
+
+def test_deadline_slack_overrides_sharing():
+    eng = _engine()
+    _grow(eng, -1, SYS, refs=2)
+    fe = _fe(eng)
+    fe.round = 10
+    ts = [_tk(2, [SYS, OTH]),                      # top greedy score
+          _tk(3, [OTH], deadline=12),              # slack 2 == bound: urgent
+          _tk(5, [OTH2], deadline=11),             # slack 1: more urgent
+          _tk(4, [OTH], deadline=14)]              # slack 4: greedy lane
+    # urgent lane first (tightest deadline first), then greedy by score
+    assert _tids(fe.policy.admit_order(fe, ts)) == [5, 3, 2, 4]
+
+
+def test_aging_bound_is_a_starvation_bound():
+    cfg = SharingPolicyConfig()
+    eng = _engine()
+    _grow(eng, -1, SYS, refs=1)
+    fe = _fe(eng)
+    poor = _tk(0, [OTH], submitted=0)          # never shares anything
+    # at every round a FRESH sharer outscores the loner...
+    fe.round = cfg.age_bound
+    rich = _tk(1, [SYS, OTH], submitted=fe.round - 1)
+    assert _tids(fe.policy.admit_order(fe, [poor, rich])) == [1, 0]
+    # ...until the loner has waited past age_bound: aged lane, admitted
+    # ahead of the greedy lane no matter how rich the sharers are
+    fe.round = cfg.age_bound + 1
+    rich = _tk(1, [SYS, OTH], submitted=fe.round - 1)
+    assert _tids(fe.policy.admit_order(fe, [poor, rich])) == [0, 1]
+
+
+def test_lane_picks_seed_the_greedy_read_set():
+    # the urgent pick's path joins the hypothetical read-set, so its
+    # sibling wins the greedy lane over an earlier-submitted loner
+    fe = _fe(_engine())
+    fe.round = 10
+    ts = [_tk(0, [SYS, OTH], deadline=11),     # urgent
+          _tk(1, [OTH2]),                      # loner, earlier tid
+          _tk(2, [SYS, TPL])]                  # sibling of the urgent pick
+    assert _tids(fe.policy.admit_order(fe, ts)) == [0, 2, 1]
+
+
+# ---------------------------------------------------------------------------
+# victim ranking (the same score, inverted)
+# ---------------------------------------------------------------------------
+
+def _victim_fixture():
+    eng = _engine()
+    sys_id = _grow(eng, -1, SYS, refs=2)
+    a_id = _grow(eng, sys_id, OTH, refs=1)
+    loner_id = _grow(eng, -1, OTH2, refs=1)
+    eng.requests = {
+        7: {"path": [sys_id, a_id], "slots": [0], "live": True},
+        8: {"path": [loner_id], "slots": [1], "live": True},
+    }
+    sharer, loner = _tk(0, [SYS, OTH]), _tk(1, [OTH2])
+    sharer.handle, loner.handle = 7, 8
+    return _fe(eng), sharer, loner
+
+
+def test_victim_key_prefers_the_least_shared_request():
+    fe, sharer, loner = _victim_fixture()
+    pol = fe.policy
+    # the loner holds no node that anyone else amortizes: cheapest evict
+    assert pol.victim_key(fe, loner) < pol.victim_key(fe, sharer)
+    # same ranking from the default (fifo) key, via node counts
+    fifo = FifoPolicy()
+    assert fifo.victim_key(fe, loner) < fifo.victim_key(fe, sharer)
+
+
+def test_victim_key_effective_priority_dominates_sharing():
+    fe, sharer, loner = _victim_fixture()
+    loner.priority = 1          # higher-priority loner outranks the sharer
+    assert fe.policy.victim_key(fe, sharer) < fe.policy.victim_key(fe, loner)
+    loner.priority, loner.preemptions = 0, 1   # aging counts the same way
+    assert fe.policy.victim_key(fe, sharer) < fe.policy.victim_key(fe, loner)
+
+
+# ---------------------------------------------------------------------------
+# peek_prefix: a side-effect-free probe
+# ---------------------------------------------------------------------------
+
+def test_peek_prefix_is_side_effect_free():
+    eng = _engine()
+    sys_id = _grow(eng, -1, SYS, refs=1)
+    tpl_id = _grow(eng, sys_id, TPL, refs=1)
+
+    def mirrors():
+        return (list(eng.node_live), list(eng.node_refs),
+                dict(eng.node_index), list(eng.node_key),
+                list(eng.node_len),
+                {r: dict(req) for r, req in eng.requests.items()})
+
+    before = mirrors()
+    segs = [jnp.asarray([list(SYS)]), jnp.asarray([list(TPL)]),
+            jnp.asarray([list(OTH)])]
+    path, matched, toks = eng.peek_prefix(segs)
+    assert (path, matched, toks) == ([sys_id, tpl_id], 2, len(SYS) + len(TPL))
+    path, matched, toks = eng.peek_prefix([jnp.asarray([list(OTH)])])
+    assert (path, matched, toks) == ([], 0, 0)
+    assert mirrors() == before
+
+
+# ---------------------------------------------------------------------------
+# the byte model: incremental delta == full-model difference
+# ---------------------------------------------------------------------------
+
+def test_admit_delta_matches_full_model_difference():
+    node_lens = [8, 3, 5]
+    kw = dict(c_d=8, g=2, hd=16)
+    # live trie: two slots on the (0) and (0,1) paths; the candidate
+    # admits 2 slots on (0,1,2) — levels 0/1 shared, level 2 new
+    before = tree_decode_io_bytes(paths=[(0,), (0, 1)],
+                                  node_lens=node_lens, **kw)
+    after = tree_decode_io_bytes(paths=[(0,), (0, 1), (0, 1, 2), (0, 1, 2)],
+                                 node_lens=node_lens, **kw)
+    delta = tree_admit_bytes_delta(seg_lens=node_lens,
+                                   shared=[True, True, False],
+                                   n_slots=2, **kw)
+    assert delta["total_delta"] == after["total"] - before["total"]
+
+
+def test_admit_delta_nothing_shared():
+    node_lens = [8, 4, 6]
+    kw = dict(c_d=8, g=1, hd=16)
+    before = tree_decode_io_bytes(paths=[(0,)], node_lens=node_lens, **kw)
+    after = tree_decode_io_bytes(paths=[(0,), (1, 2)],
+                                 node_lens=node_lens, **kw)
+    delta = tree_admit_bytes_delta(seg_lens=[4, 6], shared=[False, False],
+                                   n_slots=1, **kw)
+    assert delta["total_delta"] == after["total"] - before["total"]
+    assert delta["shared_bytes"] == 0 and delta["saved_per_slot"] == 0
+
+
+def test_admit_delta_score_terms():
+    d = tree_admit_bytes_delta(seg_lens=[10, 6], shared=[True, True],
+                               n_slots=4, c_d=8, g=1, hd=16)
+    per_tok = 2 * 1 * 16 * 2
+    assert d["ctx_delta"] == 0
+    assert d["shared_bytes"] == 16 * per_tok
+    assert d["saved_per_slot"] == pytest.approx(16 * per_tok / 4)
+
+
+def test_admit_delta_validation():
+    with pytest.raises(ValueError, match="align"):
+        tree_admit_bytes_delta(seg_lens=[3], shared=[True, False],
+                               n_slots=1, c_d=8, g=1, hd=16)
+    with pytest.raises(ValueError, match="n_slots"):
+        tree_admit_bytes_delta(seg_lens=[3], shared=[True],
+                               n_slots=0, c_d=8, g=1, hd=16)
+
+
+# ---------------------------------------------------------------------------
+# slow tier: seeded workload x policy over a real tiny model
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_serve():
+    from repro.models import get_model
+
+    cfg = ModelConfig(name="sched-fuzz", family="dense", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+                      d_ff=64, vocab_size=64, vocab_pad_multiple=16,
+                      decode_capacity=8)
+    model = get_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _draw_schedule(cfg, wseed):
+    """Seeded arrival schedule with CONCRETE token arrays, so both policy
+    arms replay byte-identical submissions."""
+    rng = np.random.RandomState(wseed)
+    prefixes = [jnp.asarray(rng.randint(0, cfg.vocab_size, (1, n)))
+                for n in (8, 12)]
+    sched = []
+    for r in range(5):
+        n = int(rng.poisson(1.0)) + (2 if r == 2 else 0)
+        evs = []
+        for _ in range(n):
+            pfx = prefixes[int(rng.randint(2))]
+            sfx = jnp.asarray(
+                rng.randint(0, cfg.vocab_size, (1, int(rng.randint(2, 6)))))
+            evs.append(dict(
+                segments=[pfx, sfx],
+                n_samples=int(rng.choice([1, 2])),
+                max_new_tokens=int(rng.randint(3, 6)),
+                priority=int(rng.randint(0, 2)),
+                deadline=(int(rng.randint(10, 25))
+                          if rng.rand() < 0.25 else None)))
+        sched.append(evs)
+    return sched
+
+
+def _run_policy_arm(tiny_serve, sched, policy):
+    cfg, model, params = tiny_serve
+    eng = TreeServeEngine(model, cfg, TreeConfig(
+        n_nodes=6, depth=2, slots=4, node_capacity=16, decode_capacity=8,
+        temperature=0.0, ctx_store="paged", page_size=8, num_pages=8,
+        prefix_cache=True, suffix_prefill=True))
+    fe = ServeFrontend(eng, queue_depth=16, stall_rounds=6, policy=policy)
+    state = fe.init_state()
+    for evs in sched:
+        for ev in evs:
+            fe.submit(ev["segments"], n_samples=ev["n_samples"],
+                      max_new_tokens=ev["max_new_tokens"],
+                      priority=ev["priority"],
+                      deadline_rounds=ev["deadline"])
+        state = fe.pump(params, state)
+    fe.drain(params, state, max_rounds=len(sched) + 200)
+    # allowed-terminal with EXACT budgets, audits green every round
+    for t in fe.tickets:
+        assert t.status in (COMPLETED, REJECTED), (t.tid, t.status)
+        if t.status == REJECTED:
+            assert t.reason, t.tid
+        else:
+            assert t.tokens is not None and all(
+                len(tok) == t.max_new_tokens for tok in t.tokens), t.tid
+    m = fe.metrics()
+    assert m["counters"].get("audits_passed", 0) == m["rounds"]
+    return fe
+
+
+def _fuzz_one(tiny_serve, wseed):
+    cfg = tiny_serve[0]
+    sched = _draw_schedule(cfg, wseed)
+    if not any(sched):
+        return
+    fifo = _run_policy_arm(tiny_serve, sched, "fifo")
+    shar = _run_policy_arm(tiny_serve, sched, "sharing")
+    f_io, s_io = fifo.metrics()["modelled_io"], shar.metrics()["modelled_io"]
+    if f_io["decode_steps"] and s_io["decode_steps"]:
+        assert s_io["ctx_bytes_per_step"] <= f_io["ctx_bytes_per_step"], (
+            s_io, f_io)
+    # greedy decode depends only on a request's own context: any request
+    # COMPLETED under both policies produced identical tokens
+    def done(fe):
+        return {t.tid: [[int(x) for x in tok] for tok in t.tokens]
+                for t in fe.tickets if t.status == COMPLETED}
+
+    df, ds = done(fifo), done(shar)
+    for tid in set(df) & set(ds):
+        assert df[tid] == ds[tid], f"ticket {tid} diverged across policies"
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=5, deadline=None)
+    @given(wseed=st.integers(0, 2 ** 16 - 1))
+    def test_policy_workload_fuzz(tiny_serve, wseed):
+        _fuzz_one(tiny_serve, wseed)
+else:
+    @pytest.mark.slow
+    @pytest.mark.parametrize("wseed", [3, 41])
+    def test_policy_workload_fuzz(tiny_serve, wseed):
+        _fuzz_one(tiny_serve, wseed)

@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Per-file pytest runner: one subprocess per test module.
+
+Why this exists: the full suite in a SINGLE pytest process segfaults —
+dozens of jitted tiny models, three engine families, and Pallas
+interpret-mode kernels accumulate enough XLA/CPU client state in one
+interpreter to bring it down (observed long before this tool; the crash
+moves around with collection order and is not attributable to any one
+test). CI has always sidestepped it by splitting the suite across jobs;
+this tool is the same sidestep for a laptop: every ``tests/test_*.py``
+runs in its OWN interpreter, so state cannot accumulate across modules
+and one module's crash cannot take down another's results.
+
+Usage::
+
+    PYTHONPATH=src python tools/run_tests.py               # whole suite
+    PYTHONPATH=src python tools/run_tests.py -m "not slow" # fast tier
+    PYTHONPATH=src python tools/run_tests.py tests/test_scheduler.py
+    PYTHONPATH=src python tools/run_tests.py -- -k sharing -x
+
+Positional args that are paths select test files; everything else
+(and anything after ``--``) is passed through to every pytest
+invocation verbatim. Exit status is non-zero if ANY module fails.
+A module whose subprocess dies on a signal (segfault) is reported as
+CRASH — with per-file isolation that points at a real bug in that
+module, not at suite-wide state.
+"""
+import glob
+import os
+import signal
+import subprocess
+import sys
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+
+
+def _env():
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    files, passthrough, seen_sep = [], [], False
+    for a in argv:
+        if a == "--" and not seen_sep:
+            seen_sep = True
+        elif not seen_sep and not a.startswith("-") and a.endswith(".py"):
+            files.append(a)
+        else:
+            passthrough.append(a)
+    if not files:
+        files = sorted(glob.glob(os.path.join(ROOT, "tests", "test_*.py")))
+
+    results, t0 = [], time.time()
+    for path in files:
+        name = os.path.relpath(path, ROOT)
+        print(f"=== {name} ===", flush=True)
+        rc = subprocess.call(
+            [sys.executable, "-m", "pytest", "-q", path, *passthrough],
+            env=_env(), cwd=ROOT)
+        if rc < 0:
+            status = f"CRASH ({signal.Signals(-rc).name})"
+        elif rc == 5:          # pytest: no tests collected (e.g. -m filter)
+            status, rc = "no tests", 0
+        else:
+            status = "ok" if rc == 0 else f"FAIL (rc={rc})"
+        results.append((name, rc, status))
+
+    print(f"\n{'-' * 60}")
+    for name, _, status in results:
+        print(f"{name:<44} {status}")
+    bad = [n for n, rc, _ in results if rc != 0]
+    print(f"{'-' * 60}\n{len(results) - len(bad)}/{len(results)} modules "
+          f"passed in {time.time() - t0:.0f}s")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
