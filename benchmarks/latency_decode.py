@@ -34,6 +34,7 @@ from repro.core.bifurcated import bifurcated_attention
 from repro.core.io_model import (
     decode_impl_io_bytes,
     forest_decode_io_bytes,
+    packed_step_io_bytes,
     paged_decode_io_bytes,
     quantized_ctx_bytes,
     tree_decode_io_bytes,
@@ -44,6 +45,8 @@ from repro.kernels.ops import (
     bifurcated_decode_attention_q8,
     grouped_bifurcated_decode_attention,
     grouped_bifurcated_decode_attention_q8,
+    packed_bifurcated_decode_attention,
+    packed_bifurcated_decode_attention_q8,
     paged_bifurcated_decode_attention,
     paged_bifurcated_decode_attention_q8,
     tree_bifurcated_decode_attention,
@@ -62,6 +65,7 @@ BENCH_QUANT_JSON = BENCH_JSON.parent / "BENCH_quant_decode.json"
 BENCH_MULTIPREFIX_JSON = BENCH_JSON.parent / "BENCH_multiprefix.json"
 BENCH_TREE_JSON = BENCH_JSON.parent / "BENCH_tree.json"
 BENCH_PAGED_JSON = BENCH_JSON.parent / "BENCH_paged.json"
+BENCH_PACKED_JSON = BENCH_JSON.parent / "BENCH_packed.json"
 
 
 def _emit(path, rows, *, fast, note, report, tag):
@@ -550,6 +554,186 @@ def _paged_grid(report):
     return rows_out
 
 
+def _packed_grid(report):
+    """Packed heterogeneous-step sweep: the ragged L=2 trie of the paged
+    grid decoding WHILE a mid-stream admission's first suffix-prefill
+    chunk (64 rows under the shared root) piggybacks on the same
+    work-queue launch, vs the two-launch baseline (paged decode kernel +
+    a separate jitted prefill pass that re-reads the matched ancestor
+    pages) -> BENCH_packed.json.
+
+    Wall-clock (interpret mode) is indicative; the acceptance metric is
+    the tile/byte model (``io_model.packed_step_io_bytes``):
+
+      * modelled tile-occupancy gain of the one-launch grid over the
+        two-launch baseline >= 1.3x on every cell (asserted) — the
+        chunk's rows ride the decode rows' 128-lane register tiles and
+        the ancestor pages are read ONCE for both;
+      * a decode-only packed step models BYTE-IDENTICAL to
+        ``paged_decode_io_bytes`` (asserted) — piggybacking is free when
+        there is nothing to piggyback.
+
+    Bit-identity of the packed kernel itself is the differential
+    harness's job (tests/test_differential.py, tests/test_packed.py).
+    ``BENCH_PACKED_FAST=1`` restricts to one cell — the CI subset."""
+    from repro.core.paged import pages_needed
+
+    rng = np.random.RandomState(7)
+    g, p, hd = PROXY.n_kv_heads, 1, PROXY.kq_dim
+    c_d = 32
+    page_m = 64
+    n_nodes = 8                    # 5 live (root + 4 children), 3 FREE
+    node_lens = [1152, 512, 384, 260, 640, 0, 0, 0]
+    anc = 0                        # pending admission matched the root
+    anc_lens = [node_lens[anc]]
+    chunk_rows = 64                # first prefill chunk of the new child
+    fast = os.environ.get("BENCH_PACKED_FAST", "") == "1"
+    grid_b = (16,) if fast else (8, 16)
+
+    needed = [pages_needed(m, page_m) for m in node_lens]
+    num_pages = sum(needed)
+    ppn = pages_needed(2048, page_m)
+    tables = np.full((n_nodes, ppn), -1, np.int32)
+    nxt = 0
+    for nid in range(n_nodes):
+        for j in range(needed[nid]):
+            tables[nid, j] = nxt
+            nxt += 1
+    tables = jnp.asarray(tables)
+    nlens = jnp.asarray(node_lens, jnp.int32)
+
+    # pool contents are timing payload only — correctness lives in the
+    # differential harness, so random pages (and unit q8 scales) suffice
+    kp = rng.randn(num_pages, g, page_m, hd).astype(np.float32)
+    vp = rng.randn(num_pages, g, page_m, hd).astype(np.float32)
+    kp_bf, vp_bf = jnp.asarray(kp, jnp.bfloat16), jnp.asarray(vp,
+                                                              jnp.bfloat16)
+    kpq = jnp.asarray(np.clip(kp * 16, -127, 127).astype(np.int8))
+    vpq = jnp.asarray(np.clip(vp * 16, -127, 127).astype(np.int8))
+    ksp = jnp.full((num_pages, g, page_m), hd**-0.5 / 16, jnp.float32)
+    vsp = jnp.full((num_pages, g, page_m), 1 / 16, jnp.float32)
+
+    # the piggybacked chunk: 64 query rows + their fresh KV envelope
+    # (one page_m tile), positions 0..63 of the new node, ancestors
+    # = [root]
+    q_fresh = jnp.asarray(rng.randn(chunk_rows, g, p, hd), jnp.bfloat16)
+    kfr = jnp.asarray(rng.randn(chunk_rows, g, hd), jnp.bfloat16)
+    vfr = jnp.asarray(rng.randn(chunk_rows, g, hd), jnp.bfloat16)
+    fresh_len = jnp.int32(chunk_rows)
+    fresh_start = jnp.int32(0)
+    fresh_pos = jnp.arange(chunk_rows, dtype=jnp.int32)
+    fresh_path = jnp.asarray([anc, -1], jnp.int32)
+
+    # baseline prefill pass: plain jitted einsum attention of the chunk
+    # rows over [dense ancestor KV ++ causal fresh KV] — XLA-fused, i.e.
+    # a FAVORABLE stand-in for the separate prefill launch
+    kanc = jnp.asarray(rng.randn(g, node_lens[anc], hd), jnp.bfloat16)
+    vanc = jnp.asarray(rng.randn(g, node_lens[anc], hd), jnp.bfloat16)
+
+    @jax.jit
+    def ref_prefill(qf, kanc, vanc, kfr, vfr):
+        qf2 = qf[:, :, 0].astype(jnp.float32)              # (cp, g, hd)
+        lg_a = jnp.einsum("cgh,gmh->gcm", qf2, kanc.astype(jnp.float32))
+        lg_f = jnp.einsum("cgh,fgh->gcf", qf2, kfr.astype(jnp.float32))
+        causal = (fresh_pos[None, :, None]
+                  >= jnp.arange(chunk_rows)[None, None, :])
+        lg_f = jnp.where(causal, lg_f, -1e30)
+        w = jax.nn.softmax(
+            jnp.concatenate([lg_a, lg_f], -1) * hd**-0.5, axis=-1)
+        vall = jnp.concatenate(
+            [vanc, vfr.transpose(1, 0, 2)], 1).astype(jnp.float32)
+        return jnp.einsum("gcm,gmh->cgh", w, vall)
+
+    rows_out = []
+    for b in grid_b:
+        slot_paths = [(0, 1 + i % 4) for i in range(b)]
+        table = np.full((2, b), -1, np.int64)
+        for s, pth in enumerate(slot_paths):
+            table[:len(pth), s] = pth
+        paths = jnp.asarray(table, jnp.int32)
+        q = jnp.asarray(rng.randn(b, g, p, 1, hd), jnp.bfloat16)
+        kd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+        vd = jnp.asarray(rng.randn(b, c_d, g, hd), jnp.bfloat16)
+        mask = jnp.ones((b, c_d), bool)
+
+        packed = lambda: packed_bifurcated_decode_attention(
+            q, kp_bf, vp_bf, tables, nlens, paths, kd, vd, mask,
+            q_fresh, kfr, vfr, fresh_len, fresh_start, fresh_pos,
+            fresh_path, interpret=True)
+        packed_q8 = lambda: packed_bifurcated_decode_attention_q8(
+            q, kpq, vpq, ksp, vsp, tables, nlens, paths, kd, vd, mask,
+            q_fresh, kfr, vfr, fresh_len, fresh_start, fresh_pos,
+            fresh_path, interpret=True)
+        dec_only = lambda: paged_bifurcated_decode_attention(
+            q, kp_bf, vp_bf, tables, nlens, paths, kd, vd, mask,
+            interpret=True)
+        dec_only_q8 = lambda: paged_bifurcated_decode_attention_q8(
+            q, kpq, vpq, ksp, vsp, tables, nlens, paths, kd, vd, mask,
+            interpret=True)
+        prefill = lambda: ref_prefill(q_fresh, kanc, vanc, kfr, vfr)
+
+        row = {"b": b, "c_d": c_d, "g": g, "p": p, "hd": hd,
+               "page_m": page_m, "n_nodes": n_nodes,
+               "node_lens": node_lens, "anc_lens": anc_lens,
+               "chunk_rows": chunk_rows}
+        for name, fn in (("packed", packed), ("packed_q8", packed_q8),
+                         ("paged_decode", dec_only),
+                         ("paged_decode_q8", dec_only_q8),
+                         ("baseline_prefill", prefill)):
+            row[f"{name}_us"] = _time(fn, iters=3) * 1e6
+            report(f"latency_decode/packed_bs{b}_{name}_us",
+                   row[f"{name}_us"])
+        row["baseline_us"] = (row["paged_decode_us"]
+                              + row["baseline_prefill_us"])
+        row["baseline_q8_us"] = (row["paged_decode_q8_us"]
+                                 + row["baseline_prefill_us"])
+
+        for impl, tag in (("paged", "packed"), ("paged_q8", "packed_q8")):
+            io = packed_step_io_bytes(
+                node_lens=node_lens, page_m=page_m, c_d=c_d, g=g, hd=hd,
+                b=b, p=p, n=1, anc_lens=anc_lens, chunk_rows=chunk_rows,
+                impl=impl)
+            row[f"{tag}_io_bytes"] = io["total"]
+            row[f"{tag}_baseline_io_bytes"] = io["baseline_total"]
+            row[f"{tag}_io_saving_vs_baseline"] = \
+                io["io_saving_vs_baseline"]
+            row[f"{tag}_tile_occupancy_gain"] = io["tile_occupancy_gain"]
+            row[f"{tag}_utilization"] = io["packed_utilization"]
+            row[f"{tag}_baseline_utilization"] = \
+                io["baseline_utilization"]
+            report(f"latency_decode/packed_bs{b}_{tag}_tile_gain",
+                   io["tile_occupancy_gain"])
+            report(f"latency_decode/packed_bs{b}_{tag}_io_saving",
+                   io["io_saving_vs_baseline"])
+            # decode-only parity: nothing to piggyback => the packed
+            # model degenerates to the paged decode model EXACTLY
+            io0 = packed_step_io_bytes(
+                node_lens=node_lens, page_m=page_m, c_d=c_d, g=g, hd=hd,
+                b=b, p=p, n=1, impl=impl)
+            pg = paged_decode_io_bytes(
+                node_lens=node_lens, page_m=page_m, c_d=c_d, g=g, hd=hd,
+                b=b, p=p, n=1, impl=impl)
+            assert io0["total"] == pg["total"], (io0, pg)
+        rows_out.append(row)
+
+    # acceptance gate: the one-launch grid must model >= 1.3x tile
+    # occupancy over decode launch + separate prefill launch, every cell
+    for r in rows_out:
+        for tag in ("packed", "packed_q8"):
+            assert r[f"{tag}_tile_occupancy_gain"] >= 1.3, r
+            assert r[f"{tag}_io_saving_vs_baseline"] > 1.0, r
+    _emit(BENCH_PACKED_JSON, rows_out, fast=fast, report=report,
+          tag="packed",
+          note="interpret-mode wall-clock is indicative only; "
+               "*_tile_occupancy_gain / *_io_bytes are the modelled "
+               "objects (core.io_model.packed_step_io_bytes): one "
+               "work-queue launch serving the decode batch AND a "
+               "piggybacked 64-row suffix-prefill chunk vs a decode "
+               "launch plus a separate prefill pass re-reading the "
+               "matched ancestor pages.")
+    return rows_out
+
+
 # name -> (grid fn, emitted artifact, CI fast-subset env var). ONE
 # dispatcher for every artifact-emitting sweep: `--grid <name>` on the
 # CLI and `run()` both walk this registry, so a new grid (e.g. paged)
@@ -560,6 +744,7 @@ GRIDS = {
                     "BENCH_MULTIPREFIX_FAST"),
     "tree": (_tree_grid, BENCH_TREE_JSON, "BENCH_TREE_FAST"),
     "paged": (_paged_grid, BENCH_PAGED_JSON, "BENCH_PAGED_FAST"),
+    "packed": (_packed_grid, BENCH_PACKED_JSON, "BENCH_PACKED_FAST"),
 }
 
 

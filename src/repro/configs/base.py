@@ -279,6 +279,22 @@ class TreeConfig:
     # cached KV as the context arm of the bifurcated prefill so admission
     # computes only the NEW levels' tokens (O(new) instead of O(path)).
     suffix_prefill: bool = False
+    # step mode: "decode" (admission prefills synchronously, decode steps
+    # run alone) | "packed" (admissions with NEW trie levels become
+    # PENDING prefills whose suffix is computed in chunks PIGGYBACKED
+    # onto decode steps — one packed work-queue kernel launch per layer
+    # serves the decode batch and the prefill chunk together; the request
+    # activates when its last chunk lands). Full-path hits still admit
+    # synchronously (nothing to prefill).
+    step_mode: str = "decode"
+    # packed mode: suffix tokens prefilled per piggybacked chunk.
+    # 0 = page_size. Chunks never cross trie-node boundaries.
+    prefill_chunk: int = 0
+    # prefix-cache eviction order: "lru" (oldest stamp first, smallest
+    # subtree tie-break) | "sharing" (least ancestor-shared bytes first —
+    # cold private tails evict before leaves under hot shared ancestors;
+    # LRU stamp breaks ties)
+    evict_policy: str = "lru"
     seed: int = 0
 
 

@@ -62,6 +62,18 @@ class SlotsExhausted(CapacityError, RuntimeError):
     retryable = True
 
 
+class PrefillInFlight(CapacityError, RuntimeError):
+    """Transient: the request's prefix path collides with a trie node
+    whose KV is still being prefilled by a PENDING packed admission
+    (``step_mode="packed"``) — the node can be neither reused (its KV
+    isn't written yet) nor duplicated (same (parent, tokens) identity).
+    Clears within a few decode steps, when the pending prefill's chunks
+    land and the node goes live."""
+
+    reason = "prefill_in_flight"
+    retryable = True
+
+
 class SegmentCapacityExceeded(CapacityError, ValueError):
     """Permanent: a context/segment is longer than the engine's segment or
     node capacity envelope — no amount of retirement makes it fit.
@@ -113,6 +125,7 @@ __all__ = [
     "PoolExhausted",
     "SegmentsExhausted",
     "SlotsExhausted",
+    "PrefillInFlight",
     "SegmentCapacityExceeded",
     "DecodeCapacityExceeded",
     "KVCorruption",

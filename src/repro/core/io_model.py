@@ -364,6 +364,130 @@ def paged_decode_io_bytes(*, node_lens, page_m, c_d, g, hd, b, p=1, n=1,
     }
 
 
+def packed_step_io_bytes(*, node_lens, page_m, c_d, g, hd, b,
+                         anc_lens=(), chunk_rows=0, fresh_len=None,
+                         p=1, n=1, impl="paged", bytes_per_el=2) -> dict:
+    """Per-layer HBM bytes AND tile-occupancy model of one PACKED
+    heterogeneous step (``kernels/bifurcated_decode.packed_fused_*``):
+    decode page-reads and one piggybacked suffix-prefill chunk share a
+    single work-queue launch.
+
+    Inputs beyond ``paged_decode_io_bytes``:
+
+      ``anc_lens``   live token count of the pending request's MATCHED
+                     ancestor levels (a subset of ``node_lens``). The
+                     packed step reads their pages once — the chunk rows
+                     ride the same DMA as the decode rows — while the
+                     BASELINE (decode launch + separate prefill launch)
+                     re-reads them a second time for the prefill pass.
+      ``chunk_rows`` valid query rows in this step's prefill chunk
+                     (0 = a decode-only step).
+      ``fresh_len``  KV columns in the fresh suffix envelope streamed by
+                     the queue, ``buf_len + chunk_rows`` in the engine
+                     (defaults to ``chunk_rows``: first chunk of a node).
+
+    Byte model: the packed total is the paged decode total (live pages +
+    decode arm + q/out rows for ``b`` slots) plus the fresh-tile stream
+    (page-rounded ``fresh_len`` columns, model dtype — fresh KV is never
+    quantized mid-prefill, even under ``paged_q8``) plus the chunk's
+    q/out rows. With ``chunk_rows == 0`` the fresh terms vanish and
+    ``total`` equals ``paged_decode_io_bytes(...)["total"]`` EXACTLY
+    (tested) — piggybacking is free when there is nothing to piggyback.
+
+    Tile model: the grid walks one (rows x page_m) MXU tile per queue
+    entry plus one fused decode-arm/normalize step, and the row axis is
+    padded to the 128-lane register tile:
+
+        tiles(E, R) = (E + 1) * ceil(R / 128)
+
+      packed   : tiles(E_live + F, b*p*n + chunk_rows)      (one launch)
+      baseline : tiles(E_live, b*p*n)                       (decode)
+                 + tiles(A + F, chunk_rows)                 (prefill pass
+                   re-reading the A ancestor pages)
+
+    ``tile_occupancy_gain = baseline_tiles / packed_tiles`` is the
+    modelled MXU-issue saving — the benchmark gate asserts >= 1.3x on a
+    ragged trie with mid-stream admissions. ``packed_utilization`` /
+    ``baseline_utilization`` report useful cells (live columns x rows
+    that actually attend the entry) over launched cells.
+    """
+    if impl not in ("paged", "paged_q8"):
+        raise ValueError(impl)
+    page_m = int(page_m)
+    chunk_rows = int(chunk_rows)
+    if fresh_len is None:
+        fresh_len = chunk_rows
+    fresh_len = int(fresh_len)
+    if chunk_rows == 0:
+        fresh_len = 0
+
+    paged = paged_decode_io_bytes(
+        node_lens=node_lens, page_m=page_m, c_d=c_d, g=g, hd=hd, b=b,
+        p=p, n=n, impl=impl, bytes_per_el=bytes_per_el)
+
+    def pages_of(m):
+        return -(-int(m) // page_m)
+
+    rows_dec = b * p * n
+    rows_all = rows_dec + chunk_rows
+    row_io = 2 * g * hd * bytes_per_el                     # q + out per row
+    e_live = sum(pages_of(m) for m in node_lens)
+    a_pages = sum(pages_of(m) for m in anc_lens)
+    f_tiles = pages_of(fresh_len)
+
+    # fresh tiles stream in the MODEL dtype in both impls
+    fresh_io = 2 * g * f_tiles * page_m * hd * bytes_per_el
+    total = paged["total"] + fresh_io + chunk_rows * row_io
+
+    # baseline: the same decode launch + a SEPARATE prefill pass that
+    # re-reads the matched ancestors' pages for the chunk's context arm
+    def ctx_bytes(tokens):
+        if impl == "paged_q8":
+            return quantized_ctx_bytes(m_c=tokens, g=g, hd=hd)
+        return 2 * g * tokens * hd * bytes_per_el
+
+    anc_reread = ctx_bytes(a_pages * page_m)
+    baseline_total = paged["total"] + anc_reread + fresh_io \
+        + chunk_rows * row_io
+
+    def tiles(entries, rows):
+        return (entries + 1) * -(-max(int(rows), 1) // 128)
+
+    packed_tiles = tiles(e_live + f_tiles, rows_all)
+    if chunk_rows:
+        baseline_tiles = tiles(e_live, rows_dec) \
+            + tiles(a_pages + f_tiles, chunk_rows)
+    else:
+        baseline_tiles = tiles(e_live, rows_dec)
+
+    lane = 128 * page_m                                    # cells per tile
+
+    def useful(entries_cols_rows):
+        return sum(cols * rows for cols, rows in entries_cols_rows)
+
+    live_cols = [int(m) for m in node_lens if int(m) > 0]
+    anc_cols = [int(m) for m in anc_lens if int(m) > 0]
+    packed_useful = useful([(m, rows_dec) for m in live_cols]) \
+        + useful([(m, chunk_rows) for m in anc_cols]) \
+        + fresh_len * chunk_rows + rows_all * c_d
+    baseline_useful = useful([(m, rows_dec) for m in live_cols]) \
+        + rows_dec * c_d \
+        + useful([(m, chunk_rows) for m in anc_cols]) \
+        + fresh_len * chunk_rows
+    return {
+        "per_node": paged["per_node"],
+        "total": total,
+        "baseline_total": baseline_total,
+        "io_saving_vs_baseline": baseline_total / max(total, 1),
+        "packed_tiles": packed_tiles,
+        "baseline_tiles": baseline_tiles,
+        "tile_occupancy_gain": baseline_tiles / max(packed_tiles, 1),
+        "packed_utilization": packed_useful / max(packed_tiles * lane, 1),
+        "baseline_utilization": baseline_useful
+        / max(baseline_tiles * lane, 1),
+    }
+
+
 def kv_speedup(*, b, m_c, m_d) -> float:
     """Pure KV-IO speedup bound: b(m_c+m_d) / (m_c + b m_d)."""
     return b * (m_c + m_d) / (m_c + b * m_d)

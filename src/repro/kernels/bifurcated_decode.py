@@ -2,7 +2,7 @@
 
 The paper's context GEMM (⟨q, K_c⟩, Eq. 3) is the memory-IO hot spot of
 shared-prefix batch decoding: K_c is the one tensor whose HBM traffic the
-technique eliminates b-fold. Nine kernels live here:
+technique eliminates b-fold. Eleven kernels live here:
 
 ``fused_bifurcated_decode`` — the deployable single-pass path. One
   ``pallas_call`` over grid ``(g, nb_ctx + 1)``: for each kv group the
@@ -53,6 +53,22 @@ technique eliminates b-fold. Nine kernels live here:
   all-zero paths, the forest is depth == 1, the trie the full path table;
   on the same logical contents the output is bit-identical to the dense
   kernels at ``page_m == block_m``.
+
+``packed_fused_bifurcated_decode`` / ``..._q8`` — the HETEROGENEOUS-STEP
+  generalization (PackInfer / CoDec lineage): the scalar-prefetched
+  live-page list becomes a WORK-QUEUE of (kind, seg, page/offset)
+  descriptors and one grid walks it, processing decode page-reads
+  (kind == 0, pool pages) AND chunked suffix-prefill tiles (kind == 1,
+  fresh KV the queue positions at an absolute offset with per-row causal
+  masking) in the SAME launch — prefill rows join the same fp32
+  (max, sumexp, acc) VMEM state as the decode rows, the decode arm folds
+  into the final step, and dead capacity is never enqueued so it is
+  structurally never streamed. On a decode-only queue every descriptor is
+  a pool page and the per-entry op sequence reduces bit-identically to
+  the paged kernels. Static ``carry``/``emit_partials`` modes chain
+  launches exactly (raw fp32 state in/out) when a queue exceeds one
+  launch's grid envelope — the one deliberate exception to the no-spill
+  contract, used only for multi-launch spill.
 
 ``context_flash_partials`` — the historical two-pass building block (context
   arm only, spills unnormalized partials to HBM for a host-side merge with
@@ -1384,6 +1400,491 @@ def paged_fused_bifurcated_decode_q8(
       q, k_pages_q, v_pages_q, k_scale_pages, v_scale_pages,
       path_rows, page_bias, k_dec, v_dec, dec_bias)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Packed work-queue kernels: decode page-reads + piggybacked prefill tiles
+# in one launch
+# ---------------------------------------------------------------------------
+#
+# Descriptor format (all scalar-prefetched i32, built by ops.packed_work_queue
+# from runtime data — admissions/retirements/chunk progress never recompile):
+#
+#   kind[i]  0 = pool page (decode context read), 1 = fresh prefill tile
+#   seg[i]   segment id the entry belongs to; prefill tiles use a PSEUDO
+#            segment id carried only by the chunk rows' extra path level
+#   pdma[i]  pool-page DMA index; fresh entries PIN to the previous page
+#            (revisiting rule -> no DMA)
+#   fdma[i]  fresh-tile DMA index; page entries pin symmetrically
+#   pos[i]   absolute token position of the entry's column 0 (pages: 0 —
+#            their masking is wholly via ent_bias + path membership)
+#   n_ent    live entry count (structural early exit past it)
+#
+# Per-row operands: path_rows carries one EXTRA level holding the pseudo
+# segment for chunk rows (-1 for decode rows), row_pos the per-row absolute
+# position for the causal mask over fresh tiles (decode rows: don't-care),
+# row_slot the decode-arm slot id (chunk rows: -1, so they take nothing
+# from the decode arm — their columns go NEG_INF and contribute
+# exp(NEG_INF - m) == 0 to the shared running state).
+
+
+def _packed_fused_kernel(
+    *refs,
+    scale: float,
+    c_d: int,
+    depth: int,
+    has_carry: bool,
+    emit_partials: bool,
+):
+    """Work-queue generalization of ``_paged_fused_kernel``: grid step i
+    processes queue entry i — a pool page or a fresh prefill tile, selected
+    in-register by ``kind`` while BOTH DMA streams pin their unused side to
+    the previous block (revisiting rule ⇒ one real copy per step). The
+    per-entry op sequence (scale, entry bias, path membership, online
+    update) is the paged kernel's exactly, plus one causal term that is
+    vacuously true for pages — which is what makes a decode-only queue
+    bit-identical.
+
+    ``has_carry`` seeds the fp32 scratch from a previous launch's raw
+    (acc, m, l) instead of the identity; ``emit_partials`` flushes raw
+    state instead of running the decode arm. Both are static, so the
+    default single-launch kernel keeps the no-spill structure untouched."""
+    (kind_ref, seg_ref, pdma_ref, fdma_ref, pos_ref, nent_ref) = refs[:6]
+    idx = 6
+    (q_ref, k_ref, v_ref, kf_ref, vf_ref,
+     path_ref, eb_ref, rpos_ref, rslot_ref) = refs[idx:idx + 9]
+    idx += 9
+    if has_carry:
+        acc0_ref, m0_ref, l0_ref = refs[idx:idx + 3]
+        idx += 3
+    if emit_partials:
+        accout_ref, mout_ref, lout_ref = refs[idx:idx + 3]
+        idx += 3
+    else:
+        kd_ref, vd_ref, bias_ref = refs[idx:idx + 3]
+        out_ref = refs[idx + 3]
+        idx += 4
+    acc_scr, m_scr, l_scr = refs[idx:idx + 3]
+
+    i = pl.program_id(1)
+    n_ctx = pl.num_programs(1) - 1   # queue steps; last = decode arm/flush
+
+    @pl.when(i == 0)
+    def _init():
+        if has_carry:
+            acc_scr[...] = acc0_ref[0]
+            m_scr[...] = m0_ref[0]
+            l_scr[...] = l0_ref[0]
+        else:
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0]                      # (rows, hd)
+
+    @pl.when((i < n_ctx) & (i < nent_ref[0]))
+    def _queue_entry():
+        is_page = kind_ref[i] == 0
+        # in-register select between the two pinned DMA streams — the
+        # unused one holds the PREVIOUS block (no copy moved for it).
+        k = jnp.where(is_page, k_ref[0, 0], kf_ref[0, 0])   # (pm, hd)
+        v = jnp.where(is_page, v_ref[0, 0], vf_ref[0, 0])
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                      # (rows, pm)
+        s = s + eb_ref[...]            # ragged tail / chunk-length bias
+        seg = seg_ref[i]
+        assigned = path_ref[0][:, :1] == seg   # (rows, 1)
+        for lvl in range(1, depth):
+            assigned |= path_ref[lvl][:, :1] == seg
+        # causal mask for fresh tiles: entry columns live at absolute
+        # positions pos[i]..pos[i]+pm-1 and a row may only attend columns
+        # at-or-before its own position. Pages: vacuously true.
+        cols = pos_ref[i] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = assigned & (is_page | (cols <= rpos_ref[:, :1]))
+        s = jnp.where(ok, s, NEG_INF)
+        _online_update(s, v, acc_scr, m_scr, l_scr)
+
+    @pl.when(i == n_ctx)
+    def _final_step():
+        if emit_partials:
+            accout_ref[0] = acc_scr[...]
+            mout_ref[0] = m_scr[...]
+            lout_ref[0] = l_scr[...]
+        else:
+            kd = kd_ref[0]                # (ld, hd)
+            vd = vd_ref[0]
+            sd = jax.lax.dot_general(
+                q, kd, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) * scale                      # (rows, ld)
+            sd = sd + bias_ref[...]        # slot validity + ld padding
+            col_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 1) // c_d
+            # row_slot replaces the paged kernel's iota//pn: decode rows
+            # carry their slot id (identical values), chunk rows carry -1
+            # (never a valid column slot -> zero contribution).
+            sd = jnp.where(rslot_ref[:, :1] == col_s, sd, NEG_INF)
+
+            acc, l_new = _online_update(sd, vd, acc_scr, m_scr, l_scr)
+            out_ref[0] = (
+                acc / jnp.maximum(l_new, 1e-30)
+            ).astype(out_ref.dtype)
+
+
+def _packed_specs(
+    rows, hd, pm, depth, max_q, ld_full, g,
+    *, has_carry, emit_partials, q8,
+):
+    """Shared BlockSpec scaffolding for the packed kernels. Index-map args
+    after the grid indices are the six prefetch refs (kind, seg, pdma,
+    fdma, pos, n_ent)."""
+    last = max_q - 1
+    in_specs = [
+        pl.BlockSpec((1, rows, hd),
+                     lambda gk, i, kn, sg, pd, fd, ps, ne: (gk, 0, 0)),
+        # pool-page walk: block index = prefetched pdma entry. Fresh-tile
+        # steps (and the final step) pin to the previous page — no DMA.
+        pl.BlockSpec((1, 1, pm, hd),
+                     lambda gk, i, kn, sg, pd, fd, ps, ne:
+                     (pd[jnp.minimum(i, last)], gk, 0, 0)),
+        pl.BlockSpec((1, 1, pm, hd),
+                     lambda gk, i, kn, sg, pd, fd, ps, ne:
+                     (pd[jnp.minimum(i, last)], gk, 0, 0)),
+    ]
+    if q8:
+        in_specs += [
+            pl.BlockSpec((1, 1, pm),
+                         lambda gk, i, kn, sg, pd, fd, ps, ne:
+                         (pd[jnp.minimum(i, last)], gk, 0)),
+            pl.BlockSpec((1, 1, pm),
+                         lambda gk, i, kn, sg, pd, fd, ps, ne:
+                         (pd[jnp.minimum(i, last)], gk, 0)),
+        ]
+    in_specs += [
+        # fresh-tile walk: the symmetric pinned stream (bf16 either way).
+        pl.BlockSpec((1, 1, pm, hd),
+                     lambda gk, i, kn, sg, pd, fd, ps, ne:
+                     (fd[jnp.minimum(i, last)], gk, 0, 0)),
+        pl.BlockSpec((1, 1, pm, hd),
+                     lambda gk, i, kn, sg, pd, fd, ps, ne:
+                     (fd[jnp.minimum(i, last)], gk, 0, 0)),
+        pl.BlockSpec((depth, rows, 128),
+                     lambda gk, i, kn, sg, pd, fd, ps, ne: (0, 0, 0)),
+        pl.BlockSpec((1, pm),
+                     lambda gk, i, kn, sg, pd, fd, ps, ne:
+                     (jnp.minimum(i, last), 0)),
+        pl.BlockSpec((rows, 128),
+                     lambda gk, i, kn, sg, pd, fd, ps, ne: (0, 0)),
+        pl.BlockSpec((rows, 128),
+                     lambda gk, i, kn, sg, pd, fd, ps, ne: (0, 0)),
+    ]
+    if has_carry:
+        in_specs += [
+            pl.BlockSpec((1, rows, hd),
+                         lambda gk, i, kn, sg, pd, fd, ps, ne: (gk, 0, 0)),
+            pl.BlockSpec((1, rows, 128),
+                         lambda gk, i, kn, sg, pd, fd, ps, ne: (gk, 0, 0)),
+            pl.BlockSpec((1, rows, 128),
+                         lambda gk, i, kn, sg, pd, fd, ps, ne: (gk, 0, 0)),
+        ]
+    if emit_partials:
+        out_specs = [
+            pl.BlockSpec((1, rows, hd),
+                         lambda gk, i, kn, sg, pd, fd, ps, ne: (gk, 0, 0)),
+            pl.BlockSpec((1, rows, 128),
+                         lambda gk, i, kn, sg, pd, fd, ps, ne: (gk, 0, 0)),
+            pl.BlockSpec((1, rows, 128),
+                         lambda gk, i, kn, sg, pd, fd, ps, ne: (gk, 0, 0)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((g, rows, hd), jnp.float32),
+            jax.ShapeDtypeStruct((g, rows, 128), jnp.float32),
+            jax.ShapeDtypeStruct((g, rows, 128), jnp.float32),
+        ]
+    else:
+        in_specs += [
+            pl.BlockSpec((1, ld_full, hd),
+                         lambda gk, i, kn, sg, pd, fd, ps, ne: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full, hd),
+                         lambda gk, i, kn, sg, pd, fd, ps, ne: (gk, 0, 0)),
+            pl.BlockSpec((1, ld_full),
+                         lambda gk, i, kn, sg, pd, fd, ps, ne: (0, 0)),
+        ]
+        out_specs = pl.BlockSpec(
+            (1, rows, hd),
+            lambda gk, i, kn, sg, pd, fd, ps, ne: (gk, 0, 0))
+        out_shape = None   # caller supplies (needs q.dtype)
+    scratch_shapes = [
+        pltpu.VMEM((rows, hd), jnp.float32),
+        pltpu.VMEM((rows, 128), jnp.float32),
+        pltpu.VMEM((rows, 128), jnp.float32),
+    ]
+    return in_specs, out_specs, out_shape, scratch_shapes
+
+
+def _pad_decode_tile(k_dec, v_dec, dec_bias):
+    ld = k_dec.shape[1]
+    ld_pad = (-ld) % 128   # lane-align the decode tile
+    if ld_pad:
+        k_dec = jnp.pad(k_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        v_dec = jnp.pad(v_dec, ((0, 0), (0, ld_pad), (0, 0)))
+        dec_bias = jnp.pad(dec_bias, ((0, 0), (0, ld_pad)),
+                           constant_values=NEG_INF)
+    return k_dec, v_dec, dec_bias, ld + ld_pad
+
+
+def packed_fused_bifurcated_decode(
+    q: jnp.ndarray,          # (g, rows, hd)  decode rows ++ chunk rows
+    k_pages: jnp.ndarray,    # (P, g, pm, hd) — head-major page pool
+    v_pages: jnp.ndarray,    # (P, g, pm, hd)
+    k_fresh: jnp.ndarray,    # (F, g, pm, hd) — prefill-chunk KV tiles
+    v_fresh: jnp.ndarray,    # (F, g, pm, hd)
+    ent_kind: jnp.ndarray,   # (max_q,) i32 — 0 page / 1 fresh tile
+    ent_seg: jnp.ndarray,    # (max_q,) i32 — owning (pseudo-)segment
+    ent_pdma: jnp.ndarray,   # (max_q,) i32 — pool DMA stream (pinned)
+    ent_fdma: jnp.ndarray,   # (max_q,) i32 — fresh DMA stream (pinned)
+    ent_pos: jnp.ndarray,    # (max_q,) i32 — absolute position of col 0
+    n_ent: jnp.ndarray,      # (1,) i32 — live entry count
+    path_rows: jnp.ndarray,  # (depth, rows, 128) i32 — incl. pseudo level
+    ent_bias: jnp.ndarray,   # (max_q, pm) f32 — per-entry ragged bias
+    row_pos: jnp.ndarray,    # (rows, 128) i32 — per-row absolute position
+    row_slot: jnp.ndarray,   # (rows, 128) i32 — decode slot id / -1
+    k_dec: jnp.ndarray = None,   # (g, b * c_d, hd); None iff emit_partials
+    v_dec: jnp.ndarray = None,
+    dec_bias: jnp.ndarray = None,  # (1, b * c_d) f32
+    *,
+    scale: float,
+    c_d: int,
+    interpret: bool = True,
+    carry: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] = None,
+    emit_partials: bool = False,
+):
+    """Single-pallas_call PACKED heterogeneous step: one work-queue grid
+    streams decode page-reads AND chunked suffix-prefill tiles, all rows
+    sharing the fp32 VMEM running state; the decode arm + normalize fold
+    into the final step. On a decode-only queue (all kind == 0) this is
+    bit-identical to ``paged_fused_bifurcated_decode``: the where-selects
+    resolve to the page stream, the causal term is vacuously true, the
+    extra path level is -1 for every row, and ``row_slot`` carries exactly
+    ``iota // pn``.
+
+    ``carry=(acc, m, l)`` / ``emit_partials=True`` chain launches exactly
+    for queues longer than one grid envelope; the chained result is
+    bit-identical to a single launch because the raw fp32 state round-trips
+    losslessly and the per-entry op sequence is unchanged."""
+    depth = path_rows.shape[0]
+    g, rows, hd = q.shape
+    pm = k_pages.shape[2]
+    max_q = ent_kind.shape[0]
+
+    ld_full = 0
+    if not emit_partials:
+        k_dec, v_dec, dec_bias, ld_full = _pad_decode_tile(
+            k_dec, v_dec, dec_bias)
+
+    kernel = functools.partial(
+        _packed_fused_kernel, scale=scale, c_d=c_d, depth=depth,
+        has_carry=carry is not None, emit_partials=emit_partials,
+    )
+    in_specs, out_specs, out_shape, scratch = _packed_specs(
+        rows, hd, pm, depth, max_q, ld_full, g,
+        has_carry=carry is not None, emit_partials=emit_partials, q8=False,
+    )
+    if out_shape is None:
+        out_shape = jax.ShapeDtypeStruct((g, rows, hd), q.dtype)
+
+    operands = [q, k_pages, v_pages, k_fresh, v_fresh,
+                path_rows, ent_bias, row_pos, row_slot]
+    if carry is not None:
+        operands += list(carry)
+    if not emit_partials:
+        operands += [k_dec, v_dec, dec_bias]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(g, max_q + 1),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ent_kind, ent_seg, ent_pdma, ent_fdma, ent_pos, n_ent, *operands)
+
+
+def _packed_fused_q8_kernel(
+    *refs,
+    scale: float,
+    c_d: int,
+    depth: int,
+    has_carry: bool,
+    emit_partials: bool,
+):
+    """Quantized twin of ``_packed_fused_kernel``: pool pages stream int8 +
+    f32 scales (logit scale pre-folded into k scales) while fresh prefill
+    tiles stay bf16 — the per-entry scale/p_scale select keeps the pool
+    side bit-identical to ``_paged_fused_q8_kernel`` on decode-only
+    queues."""
+    (kind_ref, seg_ref, pdma_ref, fdma_ref, pos_ref, nent_ref) = refs[:6]
+    idx = 6
+    (q_ref, k_ref, v_ref, ks_ref, vs_ref, kf_ref, vf_ref,
+     path_ref, eb_ref, rpos_ref, rslot_ref) = refs[idx:idx + 11]
+    idx += 11
+    if has_carry:
+        acc0_ref, m0_ref, l0_ref = refs[idx:idx + 3]
+        idx += 3
+    if emit_partials:
+        accout_ref, mout_ref, lout_ref = refs[idx:idx + 3]
+        idx += 3
+    else:
+        kd_ref, vd_ref, bias_ref = refs[idx:idx + 3]
+        out_ref = refs[idx + 3]
+        idx += 4
+    acc_scr, m_scr, l_scr = refs[idx:idx + 3]
+
+    i = pl.program_id(1)
+    n_ctx = pl.num_programs(1) - 1
+
+    @pl.when(i == 0)
+    def _init():
+        if has_carry:
+            acc_scr[...] = acc0_ref[0]
+            m_scr[...] = m0_ref[0]
+            l_scr[...] = l0_ref[0]
+        else:
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0]                      # (rows, hd)
+
+    @pl.when((i < n_ctx) & (i < nent_ref[0]))
+    def _queue_entry():
+        is_page = kind_ref[i] == 0
+        k = jnp.where(is_page,
+                      k_ref[0, 0].astype(jnp.float32),
+                      kf_ref[0, 0].astype(jnp.float32))
+        v = jnp.where(is_page,
+                      v_ref[0, 0].astype(jnp.float32),
+                      vf_ref[0, 0].astype(jnp.float32))
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                              # raw q·K — scale folded below
+        # pages: per-token k scales with the logit scale pre-folded;
+        # fresh bf16 tiles: the plain logit scale.
+        s = s * jnp.where(is_page, ks_ref[0], jnp.float32(scale))
+        s = s + eb_ref[...]
+        seg = seg_ref[i]
+        assigned = path_ref[0][:, :1] == seg
+        for lvl in range(1, depth):
+            assigned |= path_ref[lvl][:, :1] == seg
+        cols = pos_ref[i] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = assigned & (is_page | (cols <= rpos_ref[:, :1]))
+        s = jnp.where(ok, s, NEG_INF)
+        p_scale = jnp.where(is_page, vs_ref[0], jnp.ones_like(vs_ref[0]))
+        _online_update(s, v, acc_scr, m_scr, l_scr, p_scale=p_scale)
+
+    @pl.when(i == n_ctx)
+    def _final_step():
+        if emit_partials:
+            accout_ref[0] = acc_scr[...]
+            mout_ref[0] = m_scr[...]
+            lout_ref[0] = l_scr[...]
+        else:
+            kd = kd_ref[0]                # (ld, hd) bf16
+            vd = vd_ref[0]
+            sd = jax.lax.dot_general(
+                q, kd, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) * scale
+            sd = sd + bias_ref[...]
+            col_s = jax.lax.broadcasted_iota(jnp.int32, sd.shape, 1) // c_d
+            sd = jnp.where(rslot_ref[:, :1] == col_s, sd, NEG_INF)
+
+            acc, l_new = _online_update(sd, vd, acc_scr, m_scr, l_scr)
+            out_ref[0] = (
+                acc / jnp.maximum(l_new, 1e-30)
+            ).astype(out_ref.dtype)
+
+
+def packed_fused_bifurcated_decode_q8(
+    q: jnp.ndarray,          # (g, rows, hd)
+    k_pages_q: jnp.ndarray,  # (P, g, pm, hd) int8
+    v_pages_q: jnp.ndarray,  # (P, g, pm, hd) int8
+    k_scale_pages: jnp.ndarray,  # (P, g, pm) f32 — logit scale pre-folded
+    v_scale_pages: jnp.ndarray,  # (P, g, pm) f32
+    k_fresh: jnp.ndarray,    # (F, g, pm, hd) bf16 — chunk KV stays full
+    v_fresh: jnp.ndarray,    # (F, g, pm, hd) bf16
+    ent_kind: jnp.ndarray,   # (max_q,) i32
+    ent_seg: jnp.ndarray,    # (max_q,) i32
+    ent_pdma: jnp.ndarray,   # (max_q,) i32
+    ent_fdma: jnp.ndarray,   # (max_q,) i32
+    ent_pos: jnp.ndarray,    # (max_q,) i32
+    n_ent: jnp.ndarray,      # (1,) i32
+    path_rows: jnp.ndarray,  # (depth, rows, 128) i32
+    ent_bias: jnp.ndarray,   # (max_q, pm) f32
+    row_pos: jnp.ndarray,    # (rows, 128) i32
+    row_slot: jnp.ndarray,   # (rows, 128) i32
+    k_dec: jnp.ndarray = None,   # (g, b * c_d, hd) bf16
+    v_dec: jnp.ndarray = None,
+    dec_bias: jnp.ndarray = None,
+    *,
+    scale: float,
+    c_d: int,
+    interpret: bool = True,
+    carry: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] = None,
+    emit_partials: bool = False,
+):
+    """Quantized packed heterogeneous step: int8 pool pages + bf16 fresh
+    prefill tiles on one work-queue grid. Bit-identical to
+    ``paged_fused_bifurcated_decode_q8`` on decode-only queues (the scale
+    and p_scale selects resolve to the pool-page values)."""
+    depth = path_rows.shape[0]
+    g, rows, hd = q.shape
+    pm = k_pages_q.shape[2]
+    max_q = ent_kind.shape[0]
+
+    ld_full = 0
+    if not emit_partials:
+        k_dec, v_dec, dec_bias, ld_full = _pad_decode_tile(
+            k_dec, v_dec, dec_bias)
+
+    kernel = functools.partial(
+        _packed_fused_q8_kernel, scale=scale, c_d=c_d, depth=depth,
+        has_carry=carry is not None, emit_partials=emit_partials,
+    )
+    in_specs, out_specs, out_shape, scratch = _packed_specs(
+        rows, hd, pm, depth, max_q, ld_full, g,
+        has_carry=carry is not None, emit_partials=emit_partials, q8=True,
+    )
+    if out_shape is None:
+        out_shape = jax.ShapeDtypeStruct((g, rows, hd), q.dtype)
+
+    operands = [q, k_pages_q, v_pages_q, k_scale_pages, v_scale_pages,
+                k_fresh, v_fresh, path_rows, ent_bias, row_pos, row_slot]
+    if carry is not None:
+        operands += list(carry)
+    if not emit_partials:
+        operands += [k_dec, v_dec, dec_bias]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(g, max_q + 1),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ent_kind, ent_seg, ent_pdma, ent_fdma, ent_pos, n_ent, *operands)
 
 
 # ---------------------------------------------------------------------------

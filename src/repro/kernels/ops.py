@@ -53,6 +53,20 @@ per-segment block tables, the kernel walking a prefix-counted live-page
 list (``live_page_list``) so free segments and dead capacity are never
 DMA'd. The dense dispatchers above remain the escape hatch and the
 differential oracles for them.
+
+``packed_bifurcated_decode_attention`` / ``..._q8`` are the PACKED
+heterogeneous-step dispatchers: ``packed_work_queue`` generalizes the
+live-page list into a work-queue of (kind, seg, page/offset) descriptors
+— decode page-reads AND chunked suffix-prefill tiles — and one kernel
+launch walks it, the prefill-chunk query rows joining the decode rows in
+the same fp32 running state (a separate prefill dispatch disappears from
+the step). Everything in the queue is traced runtime data: chunk sizes,
+admissions mid-stream, and retirements never recompile. On a decode-only
+queue the result is bit-identical to the paged dispatchers; with a chunk
+attached the chunk half equals a causal suffix prefill over
+[matched ancestors ⊕ chunk]. ``entries_per_launch`` statically splits
+queues longer than one grid envelope into chained launches (raw fp32
+carry in HBM between launches — the one deliberate no-spill exception).
 """
 from __future__ import annotations
 
@@ -68,6 +82,8 @@ from repro.kernels.bifurcated_decode import (
     fused_bifurcated_decode_q8,
     grouped_fused_bifurcated_decode,
     grouped_fused_bifurcated_decode_q8,
+    packed_fused_bifurcated_decode,
+    packed_fused_bifurcated_decode_q8,
     paged_fused_bifurcated_decode,
     paged_fused_bifurcated_decode_q8,
     tree_fused_bifurcated_decode,
@@ -633,3 +649,349 @@ def paged_bifurcated_decode_attention_q8(
     )  # (g, b*p*n, hd), normalized
     out = out.reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
     return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Packed dispatchers: one work-queue grid for decode + piggybacked prefill
+# ---------------------------------------------------------------------------
+
+def packed_work_queue(page_tables, seg_lens, page_m: int, *,
+                      fresh_len, fresh_start, num_fresh_tiles: int,
+                      pseudo_seg: int):
+    """Work-queue of (kind, seg, page/offset) descriptors — pure data.
+
+    Generalizes ``live_page_list``: the first ``n_live`` entries are the
+    live pool pages in the paged kernels' exact (segment, page) stream
+    order (which is what keeps decode-only queues bit-comparable), followed
+    by ``ceil(fresh_len / page_m)`` FRESH prefill-chunk tiles positioned at
+    absolute offset ``fresh_start`` and owned by the ``pseudo_seg`` id that
+    only the chunk rows' extra path level carries. Returns
+
+      ent_kind (max_q,) i32 — 0 pool page / 1 fresh tile;
+      ent_seg  (max_q,) i32 — owning (pseudo-)segment per entry;
+      ent_pdma (max_q,) i32 — pool-page DMA index; fresh/tail entries PIN
+               to the last live page (revisit ⇒ no DMA);
+      ent_fdma (max_q,) i32 — fresh-tile DMA index; page entries pin
+               symmetrically (tile 0 loads once at grid start);
+      ent_pos  (max_q,) i32 — absolute position of the entry's column 0
+               (pages: 0 — their masking is bias + membership only);
+      n_ent    (1,) i32     — live entry count (structural early exit);
+      ent_bias (max_q, page_m) f32 — ragged-tail / chunk-length bias.
+
+    ``max_q = page_tables.size + num_fresh_tiles``. Everything is traced
+    jnp: chunk lengths, admissions and retirements are runtime DATA, so
+    the packed dispatch compiles once per shape envelope. With
+    ``fresh_len == 0`` the queue IS the live-page list (zero fresh entries
+    enqueued — dead capacity is structurally never streamed).
+    """
+    pm = int(page_m)
+    fcap = int(num_fresh_tiles)
+    ids, segs, n_live, page_bias = live_page_list(page_tables, seg_lens, pm)
+    max_pages = ids.shape[0]
+    max_q = max_pages + fcap
+    j = jnp.arange(max_q, dtype=jnp.int32)
+    nl = n_live[0]
+    fresh_len = jnp.asarray(fresh_len, jnp.int32)
+    nf = -(-fresh_len // pm)                        # traced ceil
+    is_page = j < nl
+    fidx = j - nl
+    is_fresh = (~is_page) & (fidx < nf)
+    n_ent = (nl + nf).astype(jnp.int32)[None]
+
+    # extend the (max_pages,) page-list arrays to max_q; live_page_list
+    # already pins its own tail, so the extension keeps the pin.
+    ext = jnp.minimum(j, max_pages - 1)
+    ids_x = jnp.take(ids, ext)
+    segs_x = jnp.take(segs, ext)
+    bias_x = jnp.take(page_bias, ext, axis=0)
+
+    ent_kind = is_fresh.astype(jnp.int32)
+    ent_seg = jnp.where(is_fresh, jnp.int32(pseudo_seg), segs_x)
+    ent_pdma = ids_x.astype(jnp.int32)              # pinned past n_live
+    ent_fdma = jnp.where(
+        is_fresh, jnp.clip(fidx, 0, fcap - 1),
+        jnp.where(is_page, 0, jnp.clip(nf - 1, 0, fcap - 1)),
+    ).astype(jnp.int32)
+    ent_pos = jnp.where(
+        is_fresh, jnp.asarray(fresh_start, jnp.int32) + fidx * pm, 0
+    ).astype(jnp.int32)
+    fcols = (jnp.clip(fidx, 0, fcap - 1)[:, None] * pm
+             + jnp.arange(pm, dtype=jnp.int32)[None, :])
+    fresh_bias = jnp.where(fcols < fresh_len, 0.0, NEG_INF
+                           ).astype(jnp.float32)
+    ent_bias = jnp.where(is_fresh[:, None], fresh_bias, bias_x)
+    return ent_kind, ent_seg, ent_pdma, ent_fdma, ent_pos, n_ent, ent_bias
+
+
+def _packed_operands(q, paths, k_dec, v_dec, dec_mask,
+                     q_fresh, fresh_pos, fresh_path, pseudo_seg):
+    """Packed-dispatch plumbing: decode rows ++ chunk rows in one
+    kernel-major q, the path table gaining one EXTRA level (pseudo-segment
+    for chunk rows, -1 for decode rows), per-row absolute positions for
+    the chunk causal mask, and the decode-arm slot-id column (chunk rows:
+    -1, so the decode arm contributes exp(NEG_INF - m) == 0 to them)."""
+    b, g, p, n, hd = q.shape
+    cp = q_fresh.shape[0]
+    c_d = k_dec.shape[1]
+    depth = paths.shape[0]
+    nd = b * p * n
+    rows = nd + cp * p
+    qk = jnp.concatenate([
+        q.transpose(1, 0, 2, 3, 4).reshape(g, nd, hd),
+        q_fresh.transpose(1, 0, 2, 3).reshape(g, cp * p, hd).astype(q.dtype),
+    ], axis=1)                                       # (g, rows, hd)
+    pr = jnp.repeat(paths.astype(jnp.int32), p * n, axis=1)   # (depth, nd)
+    dec_path = jnp.concatenate(
+        [pr, jnp.full((1, nd), -1, jnp.int32)], axis=0)
+    fr = jnp.broadcast_to(
+        fresh_path.astype(jnp.int32)[:, None], (depth, cp * p))
+    fr_path = jnp.concatenate(
+        [fr, jnp.full((1, cp * p), pseudo_seg, jnp.int32)], axis=0)
+    path_all = jnp.concatenate([dec_path, fr_path], axis=1)
+    path_rows = jnp.broadcast_to(
+        path_all[:, :, None], (depth + 1, rows, 128))
+    rp = jnp.concatenate([
+        jnp.zeros((nd,), jnp.int32),
+        jnp.repeat(fresh_pos.astype(jnp.int32), p),
+    ])
+    row_pos = jnp.broadcast_to(rp[:, None], (rows, 128))
+    rs = jnp.concatenate([
+        jnp.arange(nd, dtype=jnp.int32) // (p * n),
+        jnp.full((cp * p,), -1, jnp.int32),
+    ])
+    row_slot = jnp.broadcast_to(rs[:, None], (rows, 128))
+    kd = k_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+    vd = v_dec.transpose(2, 0, 1, 3).reshape(g, b * c_d, hd)
+    bias = jnp.where(dec_mask.reshape(1, b * c_d), 0.0, NEG_INF
+                     ).astype(jnp.float32)
+    return qk, path_rows, row_pos, row_slot, kd, vd, bias
+
+
+def _fresh_tiles(k_fresh, v_fresh, pm, g, hd):
+    """(F*pm, g, hd) contiguous chunk envelope -> (F, g, pm, hd) tiles."""
+    fcap = k_fresh.shape[0] // pm
+    kf = k_fresh.reshape(fcap, pm, g, hd).transpose(0, 2, 1, 3)
+    vf = v_fresh.reshape(fcap, pm, g, hd).transpose(0, 2, 1, 3)
+    return kf, vf, fcap
+
+
+def _packed_launches(packed_fn, queue, ent_bias, cap, kd_args):
+    """Statically split a queue across chained kernel launches of at most
+    ``cap`` entries each: every launch but the last flushes raw fp32
+    (acc, m, l) partials which seed the next launch's scratch — exact, so
+    multi-launch output is bit-identical to single-launch."""
+    ent_kind, ent_seg, ent_pdma, ent_fdma, ent_pos, n_ent = queue
+    max_q = ent_kind.shape[0]
+    n_launch = -(-max_q // cap)
+    carry = None
+    for t in range(n_launch):
+        lo = t * cap
+        hi = min(lo + cap, max_q)
+        q_t = (ent_kind[lo:hi], ent_seg[lo:hi], ent_pdma[lo:hi],
+               ent_fdma[lo:hi], ent_pos[lo:hi],
+               jnp.clip(n_ent - lo, 0, hi - lo))
+        last = t == n_launch - 1
+        res = packed_fn(
+            *q_t, ent_bias[lo:hi],
+            kd_args if last else (None, None, None),
+            carry=carry, emit_partials=not last,
+        )
+        if last:
+            return res
+        carry = res
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "interpret", "entries_per_launch"),
+)
+def packed_bifurcated_decode_attention(
+    q: jnp.ndarray,           # (b, g, p, n, hd) — framework decode layout
+    k_pages: jnp.ndarray,     # (P, g, pm, hd) — head-major page pool
+    v_pages: jnp.ndarray,
+    page_tables: jnp.ndarray, # (N, ppn) i32 — pool pages per segment
+    seg_lens: jnp.ndarray,    # (N,) i32
+    paths: jnp.ndarray,       # (depth, b) i32 — -1 = level unused
+    k_dec: jnp.ndarray,       # (b, c_d, g, hd)
+    v_dec: jnp.ndarray,
+    dec_mask: jnp.ndarray,    # (b, c_d) bool
+    q_fresh: jnp.ndarray = None,   # (cp, g, p, hd) — chunk query rows
+    k_fresh: jnp.ndarray = None,   # (F*pm, g, hd) — chunk KV envelope
+    v_fresh: jnp.ndarray = None,
+    fresh_len: jnp.ndarray = None,   # () i32 — live chunk-KV length
+    fresh_start: jnp.ndarray = None, # () i32 — absolute offset of col 0
+    fresh_pos: jnp.ndarray = None,   # (cp,) i32 — per-row absolute
+                                     #   position, -1 = padded row
+    fresh_path: jnp.ndarray = None,  # (depth,) i32 — chunk ancestors
+    *,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+    entries_per_launch: Optional[int] = None,
+):
+    """PACKED heterogeneous-step dispatcher: ONE kernel launch processes
+    the decode batch's page walk AND a piggybacked suffix-prefill chunk.
+    The chunk's query rows join the decode rows on the MXU row dimension,
+    its KV arrives as fresh work-queue tiles causally masked per row, and
+    its ancestor pages are the SAME pool pages the decode rows stream —
+    read once for both (a separate prefill dispatch would read them
+    again).
+
+    Returns ``(out_dec (b, g, p, n, hd), out_fresh (cp, g, p, hd))``.
+    With no chunk attached (``q_fresh=None``) the queue is decode-only and
+    ``out_dec`` is bit-identical to ``paged_bifurcated_decode_attention``.
+    ``entries_per_launch`` statically chains multiple launches when the
+    queue exceeds one grid envelope (bit-identical to single-launch)."""
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    pm = k_pages.shape[2]
+    n_seg = page_tables.shape[0]
+    scale = hd**-0.5 if scale is None else scale
+    if interpret is None:  # static arg: resolved once at trace time
+        interpret = jax.default_backend() != "tpu"
+
+    depth = paths.shape[0]
+    if q_fresh is None:
+        q_fresh = jnp.zeros((0, g, p, hd), q.dtype)
+        fresh_pos = jnp.zeros((0,), jnp.int32)
+    if k_fresh is None:
+        k_fresh = jnp.zeros((pm, g, hd), k_dec.dtype)
+        v_fresh = jnp.zeros((pm, g, hd), v_dec.dtype)
+    if fresh_len is None:
+        fresh_len = jnp.int32(0)
+    if fresh_start is None:
+        fresh_start = jnp.int32(0)
+    if fresh_path is None:
+        fresh_path = jnp.full((depth,), -1, jnp.int32)
+    cp = q_fresh.shape[0]
+
+    kf, vf, fcap = _fresh_tiles(k_fresh, v_fresh, pm, g, hd)
+    (ent_kind, ent_seg, ent_pdma, ent_fdma, ent_pos, n_ent,
+     ent_bias) = packed_work_queue(
+        page_tables, seg_lens, pm,
+        fresh_len=fresh_len, fresh_start=fresh_start,
+        num_fresh_tiles=fcap, pseudo_seg=n_seg)
+    qk, path_rows, row_pos, row_slot, kd, vd, bias = _packed_operands(
+        q, paths, k_dec, v_dec, dec_mask,
+        q_fresh, fresh_pos, fresh_path, n_seg)
+
+    max_q = ent_kind.shape[0]
+    if entries_per_launch is not None and entries_per_launch < max_q:
+        def _launch(kind, seg, pdma, fdma, pos, nent, bias_t, kd_args,
+                    *, carry, emit_partials):
+            kd_t, vd_t, db_t = kd_args
+            return packed_fused_bifurcated_decode(
+                qk, k_pages, v_pages, kf, vf,
+                kind, seg, pdma, fdma, pos, nent,
+                path_rows, bias_t, row_pos, row_slot,
+                kd_t, vd_t, db_t,
+                scale=scale, c_d=c_d, interpret=interpret,
+                carry=carry, emit_partials=emit_partials)
+        out = _packed_launches(
+            _launch, (ent_kind, ent_seg, ent_pdma, ent_fdma, ent_pos,
+                      n_ent), ent_bias, entries_per_launch,
+            (kd, vd, bias))
+    else:
+        out = packed_fused_bifurcated_decode(
+            qk, k_pages, v_pages, kf, vf,
+            ent_kind, ent_seg, ent_pdma, ent_fdma, ent_pos, n_ent,
+            path_rows, ent_bias, row_pos, row_slot,
+            kd, vd, bias,
+            scale=scale, c_d=c_d, interpret=interpret)
+    nd = b * p * n
+    out_dec = out[:, :nd].reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
+    out_fresh = out[:, nd:].reshape(g, cp, p, hd).transpose(1, 0, 2, 3)
+    return out_dec.astype(q.dtype), out_fresh.astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "interpret", "entries_per_launch"),
+)
+def packed_bifurcated_decode_attention_q8(
+    q: jnp.ndarray,           # (b, g, p, n, hd) — framework decode layout
+    k_pages_q: jnp.ndarray,   # (P, g, pm, hd) int8 — quantized page pool
+    v_pages_q: jnp.ndarray,
+    k_scale_pages: jnp.ndarray,  # (P, g, pm) f32 — logit scale PRE-FOLDED
+    v_scale_pages: jnp.ndarray,  # (P, g, pm) f32
+    page_tables: jnp.ndarray, # (N, ppn) i32
+    seg_lens: jnp.ndarray,    # (N,) i32
+    paths: jnp.ndarray,       # (depth, b) i32
+    k_dec: jnp.ndarray,       # (b, c_d, g, hd) bf16
+    v_dec: jnp.ndarray,
+    dec_mask: jnp.ndarray,    # (b, c_d) bool
+    q_fresh: jnp.ndarray = None,   # (cp, g, p, hd)
+    k_fresh: jnp.ndarray = None,   # (F*pm, g, hd) bf16 — chunk KV stays
+    v_fresh: jnp.ndarray = None,   #   full precision until node write
+    fresh_len: jnp.ndarray = None,
+    fresh_start: jnp.ndarray = None,
+    fresh_pos: jnp.ndarray = None,
+    fresh_path: jnp.ndarray = None,
+    *,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+    entries_per_launch: Optional[int] = None,
+):
+    """Quantized-context twin of ``packed_bifurcated_decode_attention``:
+    int8 pool pages + bf16 fresh chunk tiles on one work-queue grid. The
+    per-entry scale select keeps decode-only queues bit-identical to
+    ``paged_bifurcated_decode_attention_q8``."""
+    b, g, p, n, hd = q.shape
+    c_d = k_dec.shape[1]
+    pm = k_pages_q.shape[2]
+    n_seg = page_tables.shape[0]
+    scale = hd**-0.5 if scale is None else scale
+    if interpret is None:  # static arg: resolved once at trace time
+        interpret = jax.default_backend() != "tpu"
+
+    depth = paths.shape[0]
+    if q_fresh is None:
+        q_fresh = jnp.zeros((0, g, p, hd), q.dtype)
+        fresh_pos = jnp.zeros((0,), jnp.int32)
+    if k_fresh is None:
+        k_fresh = jnp.zeros((pm, g, hd), k_dec.dtype)
+        v_fresh = jnp.zeros((pm, g, hd), v_dec.dtype)
+    if fresh_len is None:
+        fresh_len = jnp.int32(0)
+    if fresh_start is None:
+        fresh_start = jnp.int32(0)
+    if fresh_path is None:
+        fresh_path = jnp.full((depth,), -1, jnp.int32)
+    cp = q_fresh.shape[0]
+
+    kf, vf, fcap = _fresh_tiles(k_fresh, v_fresh, pm, g, hd)
+    (ent_kind, ent_seg, ent_pdma, ent_fdma, ent_pos, n_ent,
+     ent_bias) = packed_work_queue(
+        page_tables, seg_lens, pm,
+        fresh_len=fresh_len, fresh_start=fresh_start,
+        num_fresh_tiles=fcap, pseudo_seg=n_seg)
+    qk, path_rows, row_pos, row_slot, kd, vd, bias = _packed_operands(
+        q, paths, k_dec, v_dec, dec_mask,
+        q_fresh, fresh_pos, fresh_path, n_seg)
+
+    max_q = ent_kind.shape[0]
+    if entries_per_launch is not None and entries_per_launch < max_q:
+        def _launch(kind, seg, pdma, fdma, pos, nent, bias_t, kd_args,
+                    *, carry, emit_partials):
+            kd_t, vd_t, db_t = kd_args
+            return packed_fused_bifurcated_decode_q8(
+                qk, k_pages_q, v_pages_q, k_scale_pages, v_scale_pages,
+                kf, vf, kind, seg, pdma, fdma, pos, nent,
+                path_rows, bias_t, row_pos, row_slot,
+                kd_t, vd_t, db_t,
+                scale=scale, c_d=c_d, interpret=interpret,
+                carry=carry, emit_partials=emit_partials)
+        out = _packed_launches(
+            _launch, (ent_kind, ent_seg, ent_pdma, ent_fdma, ent_pos,
+                      n_ent), ent_bias, entries_per_launch,
+            (kd, vd, bias))
+    else:
+        out = packed_fused_bifurcated_decode_q8(
+            qk, k_pages_q, v_pages_q, k_scale_pages, v_scale_pages,
+            kf, vf, ent_kind, ent_seg, ent_pdma, ent_fdma, ent_pos, n_ent,
+            path_rows, ent_bias, row_pos, row_slot,
+            kd, vd, bias,
+            scale=scale, c_d=c_d, interpret=interpret)
+    nd = b * p * n
+    out_dec = out[:, :nd].reshape(g, b, p, n, hd).transpose(1, 0, 2, 3, 4)
+    out_fresh = out[:, nd:].reshape(g, cp, p, hd).transpose(1, 0, 2, 3)
+    return out_dec.astype(q.dtype), out_fresh.astype(q.dtype)

@@ -704,6 +704,117 @@ def attention_decode_paged(
     return o @ params["wo"].astype(x.dtype), new_cache
 
 
+def attention_decode_packed(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,        # (b, n, d) — decode tokens' hidden state
+    x_chunk: jnp.ndarray,  # (1, cp, d) — prefill-chunk hidden state
+    layer_cache: dict,
+    *,
+    page_tables: jnp.ndarray,  # (N, ppn) i32
+    seg_lens: jnp.ndarray,     # (N,) i32
+    paths: jnp.ndarray,        # (depth, b) i32
+    ctx_lens_b: jnp.ndarray,   # (b,) i32
+    dec_lens: jnp.ndarray,     # (b,) i32
+    buf_len: jnp.ndarray,      # () i32 — valid tokens already in the
+                               #   layer's fresh envelope
+    chunk_valid: jnp.ndarray,  # () i32 — live tokens in this chunk
+    fresh_start: jnp.ndarray,  # () i32 — absolute position of envelope
+                               #   column 0 (= the pending node's start)
+    fresh_pos: jnp.ndarray,    # (cp,) i32 — per chunk row, -1 = padded
+    fresh_path: jnp.ndarray,   # (depth,) i32 — the chunk's matched
+                               #   ancestor segments
+    rules: Optional[MeshRules],
+    entries_per_launch: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, dict]:
+    """One PACKED heterogeneous step for one layer over the paged store:
+    the decode batch's attention AND one request's suffix-prefill chunk
+    run in a single work-queue kernel launch. ``layer_cache`` is the paged
+    layer cache plus {"k_fresh", "v_fresh"}: the (F*pm, g, hd) fresh-KV
+    envelope holding the pending node's already-prefilled tokens — this
+    chunk's rotated K/V are spliced in at ``buf_len`` (in-trace
+    ``dynamic_update_slice``, so the envelope stays contiguous for the
+    kernel's tile view) and the updated envelope rides back out in the
+    returned cache. The chunk rows attend [matched ancestors ⊕ envelope
+    (causal)]; the decode rows are untouched by them (disjoint
+    path/pseudo-segment membership) — on an empty chunk the step IS the
+    paged decode step, bit-identically.
+    """
+    if cfg.sliding_window is not None:
+        raise NotImplementedError(
+            "packed decoding does not support sliding-window configs")
+    b, n = x.shape[:2]
+    cp = x_chunk.shape[1]
+    g, hd = cfg.n_kv_heads_padded, cfg.kq_dim
+    p = cfg.n_heads_padded // g
+    q, k_new, v_new = _project_qkv(cfg, params, x)
+    pos_b = ctx_lens_b + dec_lens                           # (b,)
+    qc, kc, vc = _project_qkv(cfg, params, x_chunk)
+    chunk_pos = fresh_start + buf_len + jnp.arange(cp)[None, :]  # (1, cp)
+    if cfg.rope_theta > 0:
+        pos = pos_b[:, None] + jnp.arange(n)[None, :]       # (b, n)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+        qc = apply_rope(qc, chunk_pos, cfg.rope_theta)
+        kc = apply_rope(kc, chunk_pos, cfg.rope_theta)
+    q = q.reshape(b, n, g, p, hd).transpose(0, 2, 3, 1, 4)  # (b,g,p,n,hd)
+    q_fresh = qc[0].reshape(cp, g, p, hd)
+
+    # splice the chunk KV into the fresh envelope at buf_len (padded-row
+    # garbage past buf_len + chunk_valid is masked by fresh_len and
+    # overwritten by the next chunk).
+    k_buf = lax.dynamic_update_slice(
+        layer_cache["k_fresh"], kc[0].astype(layer_cache["k_fresh"].dtype),
+        (buf_len, 0, 0))
+    v_buf = lax.dynamic_update_slice(
+        layer_cache["v_fresh"], vc[0].astype(layer_cache["v_fresh"].dtype),
+        (buf_len, 0, 0))
+    fresh_len = buf_len + chunk_valid
+
+    quant = "k_scale_pages" in layer_cache
+    k_dec = _scatter_decode_slots(layer_cache["k_dec"], k_new, dec_lens)
+    v_dec = _scatter_decode_slots(layer_cache["v_dec"], v_new, dec_lens)
+    cap = k_dec.shape[1]
+    slot = jnp.arange(cap)[None, :]
+    dec_valid = slot <= dec_lens[:, None] + n - 1           # (b, C_d)
+
+    k_pages = constrain(layer_cache["k_pages"], rules,
+                        None, "tensor", None, None)
+    v_pages = constrain(layer_cache["v_pages"], rules,
+                        None, "tensor", None, None)
+    if quant:
+        from repro.kernels.ops import packed_bifurcated_decode_attention_q8
+
+        k_sp = constrain(layer_cache["k_scale_pages"], rules,
+                         None, "tensor", None)
+        v_sp = constrain(layer_cache["v_scale_pages"], rules,
+                         None, "tensor", None)
+        o, o_chunk = packed_bifurcated_decode_attention_q8(
+            q, k_pages, v_pages, k_sp, v_sp, page_tables, seg_lens,
+            paths, k_dec, v_dec, dec_valid,
+            q_fresh, k_buf, v_buf, fresh_len, fresh_start,
+            fresh_pos, fresh_path,
+            entries_per_launch=entries_per_launch,
+        )
+    else:
+        from repro.kernels.ops import packed_bifurcated_decode_attention
+
+        o, o_chunk = packed_bifurcated_decode_attention(
+            q, k_pages, v_pages, page_tables, seg_lens, paths,
+            k_dec, v_dec, dec_valid,
+            q_fresh, k_buf, v_buf, fresh_len, fresh_start,
+            fresh_pos, fresh_path,
+            entries_per_launch=entries_per_launch,
+        )
+    new_cache = {**layer_cache, "k_dec": k_dec, "v_dec": v_dec,
+                 "k_fresh": k_buf, "v_fresh": v_buf}
+
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, n, cfg.n_heads_padded * hd)
+    oc = o_chunk.reshape(1, cp, cfg.n_heads_padded * hd)
+    wo = params["wo"].astype(x.dtype)
+    return o @ wo, oc @ wo, new_cache
+
+
 def attention_decode_tree(
     cfg: ModelConfig,
     params,

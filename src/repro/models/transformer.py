@@ -432,6 +432,84 @@ class TransformerLM:
             new_caches["k_dec"], new_caches["v_dec"], n)
         return logits, new_cache
 
+    def decode_step_packed(self, params, cache, tokens, chunk_tokens,
+                           rules: Optional[MeshRules], *,
+                           k_fresh, v_fresh, buf_len, chunk_valid,
+                           fresh_start, fresh_pos, fresh_path,
+                           entries_per_launch: Optional[int] = None):
+        """One PACKED heterogeneous step over a paged cache: the decode
+        batch (``tokens`` (b, 1)) and ONE request's suffix-prefill chunk
+        (``chunk_tokens`` (1, cp)) run through every layer in a single
+        work-queue kernel launch per layer — no separate prefill dispatch.
+
+        ``k_fresh``/``v_fresh`` are the per-layer (L, F*pm, g, hd) fresh-KV
+        envelopes of the pending node (already-prefilled tokens in
+        ``[:buf_len]``); the chunk's rotated K/V are spliced in in-trace
+        and the updated envelopes return with the step. All chunk
+        bookkeeping (lengths, positions, ancestor path) is runtime data —
+        one compile serves every chunk of every admission.
+
+        Returns (logits_dec (b, 1, V), logits_chunk (1, cp, V),
+        new_cache, k_fresh', v_fresh')."""
+        cfg = self.cfg
+        from repro.models.blocks import attention_decode_packed
+
+        x = self._embed(params, tokens)
+        x = constrain(x, rules, "batch", None, None)
+        x_c = self._embed(params, chunk_tokens)
+        store = cache.store
+        layer_caches = {
+            "k_pages": store.k_pages, "v_pages": store.v_pages,
+            "k_dec": cache.k_dec, "v_dec": cache.v_dec,
+            "k_fresh": k_fresh, "v_fresh": v_fresh,
+        }
+        if hasattr(store, "k_scale_pages"):
+            layer_caches["k_scale_pages"] = store.k_scale_pages
+            layer_caches["v_scale_pages"] = store.v_scale_pages
+        paths = cache.slot_paths()               # (depth, b)
+        dec_lens = cache.slot_dec_lens()         # (b,)
+        ctx_lens_b = cache.slot_context_lens()   # (b,) — once per step
+
+        def body(carry, inp):
+            x, x_c = carry
+            layer, lcache = inp
+            h = apply_norm(cfg, layer["ln1"], x)
+            h_c = apply_norm(cfg, layer["ln1"], x_c)
+            a, a_c, new_lcache = attention_decode_packed(
+                cfg, layer["attn"], h, h_c, lcache,
+                page_tables=store.page_tables, seg_lens=store.seg_lens,
+                paths=paths, ctx_lens_b=ctx_lens_b, dec_lens=dec_lens,
+                buf_len=buf_len, chunk_valid=chunk_valid,
+                fresh_start=fresh_start, fresh_pos=fresh_pos,
+                fresh_path=fresh_path, rules=rules,
+                entries_per_launch=entries_per_launch,
+            )
+            x = x + a
+            x_c = x_c + a_c
+            h2 = apply_norm(cfg, layer["ln2"], x)
+            h2_c = apply_norm(cfg, layer["ln2"], x_c)
+            if cfg.moe is not None:
+                m = moe_decode(cfg, layer["moe"], h2, rules)
+                m_c = moe_decode(cfg, layer["moe"], h2_c, rules)
+            else:
+                m = apply_mlp(cfg, layer["mlp"], h2, rules)
+                m_c = apply_mlp(cfg, layer["mlp"], h2_c, rules)
+            x = x + m
+            x_c = x_c + m_c
+            return (x, x_c), new_lcache
+
+        (x, x_c), new_caches = lax.scan(
+            body, (x, x_c), (params["layers"], layer_caches))
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._unembed(params, x, rules)
+        x_c = apply_norm(cfg, params["final_norm"], x_c)
+        logits_c = self._unembed(params, x_c, rules)
+        n = tokens.shape[1]
+        new_cache = cache.advance_decode(
+            new_caches["k_dec"], new_caches["v_dec"], n)
+        return (logits, logits_c, new_cache,
+                new_caches["k_fresh"], new_caches["v_fresh"])
+
     # ---- cache constructors (dry-run + serving) ----
     def make_paged_cache_spec(self, slots, n_segments, depth, node_capacity,
                               page_m=128, num_pages=None, dec_capacity=None,

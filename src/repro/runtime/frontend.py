@@ -621,10 +621,17 @@ class ServeFrontend:
         distinct value compiles once — bounded by ``decode_steps``
         distinct lengths over the frontend's lifetime."""
         active = np.asarray(state.active)
-        if not active.any() or n_steps <= 0:
+        # packed mode: pending prefills advance ONLY inside decode steps
+        # (their chunks piggyback), so an otherwise-idle slot table must
+        # still step while any admission's prefill is in flight.
+        pending = bool(getattr(self.engine, "_pending", None))
+        if (not active.any() and not pending) or n_steps <= 0:
             return state
-        deepest = int(np.asarray(state.cache.dec_lens)[active].max())
-        chunk = min(n_steps, state.cache.decode_capacity - deepest)
+        if active.any():
+            deepest = int(np.asarray(state.cache.dec_lens)[active].max())
+            chunk = min(n_steps, state.cache.decode_capacity - deepest)
+        else:
+            chunk = n_steps
         # also stop at the tightest live token budget, so every ticket
         # emits EXACTLY max_new_tokens (the expiry pass then parks its
         # slots) — budgets stay exact regardless of chunk boundaries,

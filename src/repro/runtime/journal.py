@@ -70,6 +70,32 @@ class Journal:
             self._f.close()
 
     @staticmethod
+    def compact(path: str) -> int:
+        """Rewrite ``path`` keeping only its clean record prefix.
+
+        A torn tail (crash mid-write, injected ``journal_truncate``) is
+        tolerated by ``read`` — but APPENDING after the tear would bury
+        the new records behind bytes ``read`` refuses to cross. When an
+        epoch must be re-opened for further appends (recovery that
+        cannot snapshot yet), compact it first: the clean records are
+        re-serialised atomically, the torn bytes are dropped, and new
+        appends chain on readably. Returns the number of records kept.
+        A clean (or missing) file is left untouched."""
+        records, clean = Journal.read(path)
+        if clean:
+            return len(records)
+        tmp = path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            for seq, rec in enumerate(records):
+                payload = json.dumps(rec, separators=(",", ":"))
+                f.write(f"{seq} {zlib.crc32(payload.encode()):08x} "
+                        f"{payload}\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        return len(records)
+
+    @staticmethod
     def read(path: str) -> Tuple[List[dict], bool]:
         """Parse a journal file -> (records, clean).
 

@@ -9,7 +9,14 @@ scheduling time is VIRTUAL (one pump = one round) and therefore
 perfectly deterministic:
 
   * **Snapshots** (``checkpoint.ServeCheckpointer``) — every
-    ``snapshot_every`` rounds, the full device state (paged pool
+    ``snapshot_every`` rounds, or, with ``snapshot_budget_s`` set,
+    whenever the journal tail's ESTIMATED replay time (records since
+    the last snapshot x a measured per-record cost, EMA over live
+    rounds and corrected by each actual replay) exceeds the budget —
+    bounding recovery TIME rather than record count. Either cadence
+    defers while the engine has a packed prefill in flight (its host
+    mirrors refuse to serialize mid-prefill). A snapshot captures the
+    full device state (paged pool
     tensors, page tables, seg_lens, decode arms) plus the host blob
     (ticket table, engine mirrors — trie index, refcounts, allocator
     free-list IN ORDER, per-segment checksums — and the fault plan's RNG
@@ -88,6 +95,8 @@ class DurableFrontend:
                  frontend_kwargs: Optional[dict] = None,
                  fault_plan: Optional[FaultPlan] = None,
                  snapshot_every: int = 8, keep_last_k: int = 3,
+                 snapshot_budget_s: Optional[float] = None,
+                 clock=time.monotonic,
                  heartbeat_path: Optional[str] = None,
                  stale_after_s: Optional[float] = None,
                  verify_replay: bool = True):
@@ -97,6 +106,8 @@ class DurableFrontend:
         self.fault_plan = fault_plan
         self.snapshot_every = snapshot_every
         self.keep_last_k = keep_last_k
+        self.snapshot_budget_s = snapshot_budget_s
+        self.clock = clock
         self.heartbeat_path = heartbeat_path
         self.stale_after_s = stale_after_s
         self.verify_replay = verify_replay
@@ -106,7 +117,14 @@ class DurableFrontend:
                                       keep_last_k=keep_last_k)
         self.stats = {"recoveries": 0, "snapshot_fallbacks": 0,
                       "replayed_rounds": 0, "replayed_submits": 0,
-                      "snapshots": 0, "cold_starts": 0}
+                      "snapshots": 0, "cold_starts": 0,
+                      "deferred_snapshots": 0}
+        # replay-cost model for ``snapshot_budget_s``: EMA of seconds to
+        # apply ONE journal record, seeded from live execution (a replayed
+        # round re-runs the same pump) and corrected by the measured rate
+        # of each actual replay. None until the first record lands.
+        self._replay_s_per_record: Optional[float] = None
+        self._records_since_snapshot = 0
         self.journal: Optional[Journal] = None
         self.state = None
         self._replaying = False
@@ -155,10 +173,13 @@ class DurableFrontend:
             "priority": int(priority),
             "deadline_rounds": deadline_rounds,
         })
-        return self.fe.submit(segments, n_samples=n_samples,
-                              max_new_tokens=max_new_tokens,
-                              priority=priority,
-                              deadline_rounds=deadline_rounds)
+        t0 = self.clock()
+        tid = self.fe.submit(segments, n_samples=n_samples,
+                             max_new_tokens=max_new_tokens,
+                             priority=priority,
+                             deadline_rounds=deadline_rounds)
+        self._note_record_cost(self.clock() - t0)
+        return tid
 
     def pump(self, params, decode_steps: Optional[int] = None):
         """One scheduler round, made durable: pump the frontend, then
@@ -173,11 +194,14 @@ class DurableFrontend:
                 f"no heartbeat for > {self.stale_after_s}s "
                 f"(last: {self.fe.heartbeat.last()!r})")
         self._obs_buf = []
+        t0 = self.clock()
         self.state = self.fe.pump(params, self.state, decode_steps)
+        dt = self.clock() - t0
         self.journal.append({"ev": "round", "round": self.fe.round,
                              "decode_steps": decode_steps,
                              "obs": self._obs_buf})
-        if self.snapshot_every and self.fe.round % self.snapshot_every == 0:
+        self._note_record_cost(dt)
+        if self._should_snapshot():
             self._snapshot()
         return self.state
 
@@ -190,7 +214,59 @@ class DurableFrontend:
     def metrics(self) -> dict:
         m = self.fe.metrics()
         m["durability"] = dict(self.stats)
+        m["durability"]["estimated_replay_s"] = self.estimated_replay_s()
         return m
+
+    # ------------------------------------------------------------------
+    # snapshot cadence — fixed interval, or a replay-time budget
+    # ------------------------------------------------------------------
+    def _note_record_cost(self, dt: float):
+        """Fold one applied journal record's wall time into the
+        per-record replay estimate (EMA, weight 1/4) and count it toward
+        the records a crash right now would have to replay."""
+        self._records_since_snapshot += 1
+        dt = max(float(dt), 0.0)
+        if self._replay_s_per_record is None:
+            self._replay_s_per_record = dt
+        else:
+            self._replay_s_per_record = (0.75 * self._replay_s_per_record
+                                         + 0.25 * dt)
+
+    def estimated_replay_s(self) -> float:
+        """Seconds a crash at this instant is estimated to cost in
+        journal replay: records appended since the last snapshot times
+        the per-record estimate (0.0 until anything is measured)."""
+        if self._replay_s_per_record is None:
+            return 0.0
+        return self._records_since_snapshot * self._replay_s_per_record
+
+    def _should_snapshot(self) -> bool:
+        """Snapshot cadence decision, made after each journaled round.
+
+        With ``snapshot_budget_s`` set, snapshot as soon as the
+        ESTIMATED replay time of the journal tail exceeds the budget —
+        cheap rounds (a mostly-idle queue) stretch the interval out,
+        expensive rounds (deep decode batches, chunked prefills) pull
+        the next snapshot in, so recovery time stays bounded instead of
+        the record count. Without a budget, the fixed
+        ``snapshot_every``-rounds cadence applies.
+
+        Either way a due snapshot is DEFERRED while the engine has a
+        packed prefill in flight (``_pending`` non-empty): its host
+        mirrors deliberately refuse to serialize mid-prefill
+        (``host_state`` raises), and the journaled rounds replay the
+        partial prefill deterministically anyway. Budget cadence retries
+        every round until quiescent; fixed cadence waits for the next
+        multiple."""
+        if self.snapshot_budget_s is not None:
+            due = self.estimated_replay_s() > self.snapshot_budget_s
+        else:
+            due = bool(self.snapshot_every) and (
+                self.fe.round % self.snapshot_every == 0)
+        if due and getattr(self.fe.engine, "_pending", None):
+            self.stats["deferred_snapshots"] += 1
+            return False
+        return due
 
     # ------------------------------------------------------------------
     # snapshots + journal epochs
@@ -213,6 +289,7 @@ class DurableFrontend:
         r = self.fe.round
         self.ckpt.save(r, self.state, self._host_blob())
         self.stats["snapshots"] += 1
+        self._records_since_snapshot = 0
         if self.journal is not None:
             self.journal.close()
         ep = self._epoch_path(r)
@@ -239,6 +316,22 @@ class DurableFrontend:
             if m:
                 out.append(int(m.group(1)))
         return sorted(out)
+
+    def _tail_end_epoch(self, from_round: int) -> int:
+        """Round of the epoch the replay chain ENDS in — the first
+        unclean epoch >= ``from_round`` if any (later epochs describe
+        unreachable state), else the newest epoch, else ``from_round``.
+        This is the file further appends must continue when recovery
+        cannot roll a fresh epoch yet."""
+        last = from_round
+        for er in self._epoch_rounds():
+            if er < from_round:
+                continue
+            last = er
+            _, clean = Journal.read(self._epoch_path(er))
+            if not clean:
+                break
+        return last
 
     def _journal_tail(self, from_round: int):
         """Chain journal epochs >= ``from_round`` back together, stopping
@@ -309,6 +402,7 @@ class DurableFrontend:
             self.fault_plan.disable(FaultKind.KILL_PROCESS, crash_round)
 
         self._replaying = True
+        t_replay = self.clock()
         try:
             for rec in records:
                 if rec["ev"] == "submit":
@@ -336,7 +430,26 @@ class DurableFrontend:
                     self.stats["replayed_rounds"] += 1
         finally:
             self._replaying = False
-        self._snapshot()
+        if records:
+            # the replay we just did IS the quantity the budget bounds:
+            # adopt its measured per-record rate outright (the live-
+            # execution EMA is only a proxy for it).
+            self._replay_s_per_record = (
+                max(self.clock() - t_replay, 0.0) / len(records))
+        if getattr(self.fe.engine, "_pending", None):
+            # the crash landed mid packed-prefill: the engine's host
+            # mirrors refuse to serialize until the chunks drain, so the
+            # post-recovery base snapshot is deferred to the next
+            # quiescent pump. Keep journaling into the newest replayed
+            # epoch — compacted first, so appends after a torn tail stay
+            # readable — and replay-from-r covers the gap meanwhile.
+            self.stats["deferred_snapshots"] += 1
+            ep = self._epoch_path(self._tail_end_epoch(r))
+            Journal.compact(ep)
+            self.journal = Journal(ep)
+            self._records_since_snapshot = len(records)
+        else:
+            self._snapshot()
         return self.state
 
     def cold_start(self):

@@ -220,23 +220,46 @@ class SharingPolicy(AdmissionPolicy):
         return order
 
     def victim_key(self, fe, ticket):
-        """Same score, inverted: evict the victim whose removal LOSES
-        the least shared reading — lowest effective priority first,
-        then the fewest context bytes/step shared with other live
-        requests (its nodes free the most pages and nobody else was
-        amortizing them), then the youngest."""
+        """Preemption COST MODEL: evict the victim with the lowest
+
+            shared_bytes - re-prefill price of its PRIVATE levels
+
+        (min over candidates wins), after effective priority. The two
+        terms price the two sides of a preemption:
+
+          * ``shared_bytes`` — context bytes/step this victim's nodes
+            contribute to OTHER live requests' reading (refcount > 1).
+            Evicting a sharer forfeits amortization everyone else was
+            enjoying, so high sharing protects.
+          * ``ctx_delta`` of the unshared levels
+            (``io_model.tree_admit_bytes_delta``) — the bytes a
+            re-admission must re-prefill. Shared ancestors stay
+            resident (other refs pin them), so this prices exactly the
+            victim's PRIVATE footprint: a mostly-private victim has a
+            large ctx_delta and small shared_bytes, scores most
+            negative, and is evicted first — it frees the most pages
+            nobody else uses, and its re-prefill bill is paid by it
+            alone rather than by the sharers it would have displaced.
+
+        Ties break youngest-first, matching the base policy."""
+        from repro.core.io_model import tree_admit_bytes_delta
+
         eff = ticket.priority + ticket.preemptions
         engine = fe.engine
-        shared_bytes = 0
+        score = 0
         if fe._is_tree and hasattr(engine, "requests"):
             req = engine.requests.get(ticket.handle)
-            per_tok = (2 * engine.cfg.n_kv_heads * engine.cfg.kq_dim
-                       * self.config.bytes_per_el)
-            if req is not None:
-                shared_bytes = sum(
-                    engine.node_len[nid] * per_tok
-                    for nid in req["path"] if engine.node_refs[nid] > 1)
-        return (eff, shared_bytes, -ticket.submitted_round)
+            if req is not None and req["path"]:
+                shared = [engine.node_refs[nid] > 1 for nid in req["path"]]
+                delta = tree_admit_bytes_delta(
+                    seg_lens=[engine.node_len[nid] for nid in req["path"]],
+                    shared=shared,
+                    n_slots=max(len(req["slots"]), 1),
+                    c_d=engine.ecfg.decode_capacity,
+                    g=engine.cfg.n_kv_heads, hd=engine.cfg.kq_dim,
+                    bytes_per_el=self.config.bytes_per_el)
+                score = delta["shared_bytes"] - delta["ctx_delta"]
+        return (eff, score, -ticket.submitted_round)
 
 
 def make_policy(policy) -> AdmissionPolicy:

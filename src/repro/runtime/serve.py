@@ -49,6 +49,7 @@ from repro.configs.base import (
 from repro.core.errors import (
     DecodeCapacityExceeded,
     PoolExhausted,
+    PrefillInFlight,
     SegmentCapacityExceeded,
     SegmentsExhausted,
     SlotsExhausted,
@@ -440,8 +441,19 @@ class _SlotTableEngine:
         state, (toks, lps, emits) = self._chunk(params, state,
                                                 n_steps=n_steps)
         self.decode_dispatches += 1
+        self._collect_emitted(toks, lps, emits)
+        return state
+
+    def _collect_emitted(self, toks, lps, emits):
+        """Append one decode chunk's emitted tokens ((T, b) stacks, or
+        (b,) for a single step) to the host-side output lists, running the
+        NaN/Inf corruption sentinel per emission."""
+        import numpy as np
+
         toks, lps, emits = (np.asarray(toks), np.asarray(lps),
                             np.asarray(emits))
+        if toks.ndim == 1:
+            toks, lps, emits = toks[None], lps[None], emits[None]
         for t in range(toks.shape[0]):
             for s in range(toks.shape[1]):
                 if not emits[t, s] or s in self.corrupt_slots:
@@ -457,7 +469,6 @@ class _SlotTableEngine:
                     continue
                 self.outputs[s].append(int(toks[t, s]))
                 self.logps[s].append(float(lps[t, s]))
-        return state
 
     def _sample_first(self, key, logits0, n_samples):
         """Sample each fanned-out slot's first token from the shared
@@ -935,6 +946,19 @@ class TreeServeEngine(_SlotTableEngine):
             # node refcounts: a reused ancestor's pages are allocated once
             # at its first admission and freed only when the node's own
             # refcount hits zero (retire_requests).
+        # packed heterogeneous stepping (tcfg.step_mode == "packed"):
+        # admissions with NEW trie levels register a PENDING prefill here;
+        # their suffix KV lands in chunks piggybacked onto decode steps
+        # (one packed work-queue kernel launch per layer serves the decode
+        # batch and the chunk together) and the request activates when its
+        # last chunk lands. ``node_pending`` holds trie-node ids reserved
+        # by in-flight prefills: not live (no KV yet, excluded from the
+        # kernels' live-page walk by their zeroed seg_lens rows), not free
+        # (their identity and pages are claimed).
+        self._pending = {}           # rid -> pending-prefill record
+        self.node_pending = set()    # node ids reserved, KV not yet written
+        self._packed_one = jax.jit(self._packed_one_body,
+                                   donate_argnums=(1, 2, 3))
 
     # ---- lifecycle ----
     def init_state(self) -> ForestState:
@@ -972,7 +996,8 @@ class TreeServeEngine(_SlotTableEngine):
         )
 
     def free_nodes(self):
-        return [i for i, live in enumerate(self.node_live) if not live]
+        return [i for i, live in enumerate(self.node_live)
+                if not live and i not in self.node_pending]
 
     def free_slots(self, state: ForestState, active=None):
         """Slots safe to (re)assign: never admitted, or belonging to a
@@ -1079,18 +1104,52 @@ class TreeServeEngine(_SlotTableEngine):
         cached node's resident descendants are all cached too — so the
         childless-first peeling below reaches everything outside
         ``protect`` (which is prefix-closed: a protected node's cached
-        ancestors are on the same matched path)."""
+        ancestors are on the same matched path).
+
+        Under ``tcfg.evict_policy == "sharing"`` the primary key is the
+        candidate's ancestor-shared bytes (``_ancestor_shared_bytes``):
+        cold PRIVATE tails — nothing above them shared — evict before
+        leaves hanging under hot shared ancestors, regardless of recency;
+        the LRU stamp only breaks ties."""
         protect = set(protect)
         remaining = {n for n in self.node_cached if n not in protect}
+        sharing = self.tcfg.evict_policy == "sharing"
         order = []
         while remaining:
             blocked = {self.node_key[n][0] for n in remaining}
-            nid = min((n for n in remaining if n not in blocked),
-                      key=lambda n: (self.node_cached[n],
-                                     self.node_len[n], n))
+            if sharing:
+                key = lambda n: (self._ancestor_shared_bytes(n),
+                                 self.node_cached[n], self.node_len[n], n)
+            else:
+                key = lambda n: (self.node_cached[n],
+                                 self.node_len[n], n)
+            nid = min((n for n in remaining if n not in blocked), key=key)
             order.append(nid)
             remaining.discard(nid)
         return order
+
+    def _ancestor_shared_bytes(self, nid: int) -> int:
+        """Per-layer context bytes of ``nid``'s resident ancestors that
+        are SHARED — pinned by a live request (refcount > 0) or parenting
+        >= 2 resident children — the eviction-side twin of the admission
+        policy's shared-bytes score (``io_model.tree_admit_bytes_delta``).
+        A node under a purely private chain scores 0."""
+        children = {}
+        for n in range(self.tcfg.n_nodes):
+            if self.node_live[n] and self.node_key[n] is not None:
+                parent = self.node_key[n][0]
+                if parent >= 0:
+                    children[parent] = children.get(parent, 0) + 1
+        per_tok = 2 * self.cfg.n_kv_heads * self.cfg.kq_dim * 2
+        total, n = 0, nid
+        while True:
+            key = self.node_key[n]
+            if key is None or key[0] < 0:
+                return total
+            parent = key[0]
+            if self.node_refs[parent] > 0 or children.get(parent, 0) >= 2:
+                total += self.node_len[parent] * per_tok
+            n = parent
 
     def _evict_cached(self, state: ForestState, *, need_nodes: int = 0,
                       need_pages: int = 0, protect=()) -> ForestState:
@@ -1225,6 +1284,24 @@ class TreeServeEngine(_SlotTableEngine):
                     f"segment of {seg.shape[1]} tokens > node capacity {cap}")
         path, matched = self.match_prefix(segments)
         new_segs = segments[matched:]
+        if new_segs:
+            # collision with an IN-FLIGHT packed prefill: the first new
+            # level's (parent, tokens) identity may already be reserved by
+            # a pending admission — it can be neither reused (KV not
+            # written) nor duplicated. Retryable: clears when the pending
+            # prefill's chunks land. (Deeper new levels hang off nodes
+            # created by THIS admission, so only the first can collide.)
+            key0 = (path[-1] if path else -1,
+                    tuple(int(t) for t in jax.device_get(new_segs[0])[0]))
+            nid0 = self.node_index.get(key0)
+            if nid0 is not None and nid0 in self.node_pending:
+                raise PrefillInFlight(
+                    f"trie level is being prefilled by a pending packed "
+                    f"admission (node {nid0}) — retry after its chunks "
+                    f"land")
+        if tcfg.step_mode == "packed" and new_segs:
+            return self._admit_packed(params, state, segments, n_samples,
+                                      path, matched)
         if tcfg.prefix_cache and len(new_segs) > len(self.free_nodes()):
             # node-slot pressure: lazily evict cached nodes (LRU,
             # children-first). The matched path is protected — it is
@@ -1361,6 +1438,340 @@ class TreeServeEngine(_SlotTableEngine):
         self._compact_requests()
         return state, slots
 
+    # ---- packed heterogeneous stepping (tcfg.step_mode == "packed") ----
+    def _prefill_chunk(self) -> int:
+        return self.tcfg.prefill_chunk or self.tcfg.page_size
+
+    def _admit_packed(self, params, state: ForestState, segments,
+                      n_samples: int, path, matched) -> tuple:
+        """Packed-mode admission of a request with NEW trie levels: all
+        validation, eviction, page allocation and trie registration happen
+        NOW (host bookkeeping + allocator, no device writes, no prefill),
+        and the suffix prefill is deferred to chunks piggybacked onto
+        subsequent decode steps (``_packed_step``). The reserved slots
+        activate — ``assign_paths`` + first-token sampling — only when the
+        LAST chunk lands. Until then the request is live (its slots are
+        not reusable) but decodes nothing."""
+        import numpy as np
+
+        tcfg = self.tcfg
+        new_segs = segments[matched:]
+        if tcfg.prefix_cache and len(new_segs) > len(self.free_nodes()):
+            state = self._evict_cached(state, need_nodes=len(new_segs),
+                                       protect=path)
+        free_n = self.free_nodes()
+        free_s = self.free_slots(state)
+        if len(new_segs) > len(free_n):
+            raise SegmentsExhausted(
+                f"need {len(new_segs)} free trie nodes, have {len(free_n)}"
+                " — retire first")
+        if len(free_s) < n_samples:
+            raise SlotsExhausted(
+                f"need {n_samples} free slots, have {len(free_s)}")
+        if self.paged:
+            from repro.core.paged import pages_needed
+
+            n_pg = sum(pages_needed(int(s.shape[1]), tcfg.page_size)
+                       for s in new_segs)
+            if tcfg.prefix_cache and n_pg > self.page_alloc.free_count():
+                state = self._evict_cached(state, need_pages=n_pg,
+                                           protect=path)
+            if n_pg > self.page_alloc.free_count():
+                raise PoolExhausted(
+                    f"request needs {n_pg} pool pages for "
+                    f"{len(new_segs)} new node(s), only "
+                    f"{self.page_alloc.free_count()} of {self.num_pages} "
+                    f"free — retire first")
+            state = self.release_retired(state)
+        slots = free_s[:n_samples]
+
+        total = sum(int(s.shape[1]) for s in segments)
+        offset = sum(int(s.shape[1]) for s in segments[:matched])
+        self.prefix_stats["admits"] += 1
+        if matched:
+            self.prefix_stats["partial_hits"] += 1
+        self.prefix_stats["reused_tokens"] += offset
+        self.prefix_stats["new_tokens"] += total - offset
+        self.prefix_stats["computed_tokens"] += total - offset
+
+        # reserve trie identity + pages for every new level; KV arrives
+        # chunk by chunk, the node goes LIVE only at its last chunk.
+        parent = path[-1] if path else -1
+        new_nodes = []
+        for seg in new_segs:
+            nid = free_n.pop(0)
+            m = int(seg.shape[1])
+            if self.paged:
+                from repro.core.paged import pages_needed
+
+                self.node_pages[nid] = self.page_alloc.alloc(
+                    pages_needed(m, tcfg.page_size))
+            key = (parent, tuple(int(t) for t in jax.device_get(seg)[0]))
+            self.node_index[key] = nid
+            self.node_key[nid] = key
+            self.node_len[nid] = m
+            self.node_pending.add(nid)
+            new_nodes.append((nid, m))
+            path.append(nid)
+            parent = nid
+        for nid in path:
+            self.node_refs[nid] += 1
+            self.node_cached.pop(nid, None)  # revival: cached -> live
+
+        rid = self.next_rid
+        self.next_rid += 1
+        self.last_rid = rid
+        self.requests[rid] = {"path": list(path), "slots": list(slots),
+                              "live": True}
+        for s in slots:
+            self.slot_request[s] = rid
+            self.outputs[s] = []
+            self.logps[s] = []
+            self.corrupt_slots.discard(s)
+        suffix = np.concatenate(
+            [np.asarray(jax.device_get(s))[0] for s in new_segs])
+        self._pending[rid] = {
+            "path": list(path), "slots": list(slots), "matched": matched,
+            "new": new_nodes, "suffix": suffix.astype(np.int32),
+            "cut": offset, "done": 0, "node_i": 0, "buf_len": 0,
+            "fresh_start": offset,
+            # kernel path: per-layer fresh-KV envelopes (lazy); ref path:
+            # accumulated suffix KV in model dtype
+            "k_fresh": None, "v_fresh": None, "kbuf": None, "vbuf": None,
+        }
+        self._compact_requests()
+        return state, slots
+
+    def step_chunk(self, params, state: ForestState, n_steps: int):
+        """Packed mode: decompose the chunk into single steps while any
+        prefill is pending, piggybacking one suffix chunk per step; the
+        remainder (or the whole chunk when nothing is pending) runs
+        through the inherited one-dispatch scan."""
+        if self.tcfg.step_mode != "packed":
+            return super().step_chunk(params, state, n_steps)
+        done = 0
+        while done < n_steps:
+            if not self._pending:
+                return super().step_chunk(params, state, n_steps - done)
+            state = self._packed_step(params, state)
+            done += 1
+        return state
+
+    def _packed_step(self, params, state: ForestState) -> ForestState:
+        """ONE packed heterogeneous step: the whole slot table advances
+        one decode token AND the oldest pending prefill advances one
+        suffix chunk (never crossing a trie-node boundary). Node
+        completion writes the buffered KV into the cache; completing the
+        last node ACTIVATES the request from the final chunk's logits."""
+        import numpy as np
+
+        rid = min(self._pending)
+        pend = self._pending[rid]
+        nid, m_node = pend["new"][pend["node_i"]]
+        cv = min(self._prefill_chunk(), m_node - pend["buf_len"])
+        chunk = pend["suffix"][pend["done"]:pend["done"] + cv]
+
+        active = np.asarray(state.active)
+        if active.any():
+            deepest = int(np.asarray(state.cache.dec_lens)[active].max())
+            cap = state.cache.decode_capacity
+            if deepest + 1 > cap:
+                raise DecodeCapacityExceeded(
+                    f"packed step would overflow decode_capacity={cap} "
+                    f"(deepest live slot at {deepest}); retire slots "
+                    f"first")
+        if self.paged and self.tcfg.use_kernel:
+            state, out, logits_last = self._packed_step_kernel(
+                params, state, pend, chunk, cv)
+        else:
+            state, out, logits_last = self._packed_step_ref(
+                params, state, pend, chunk, cv)
+        self.decode_dispatches += 1
+        self._collect_emitted(*out)
+        pend["buf_len"] += cv
+        pend["done"] += cv
+        if pend["buf_len"] == m_node:
+            state = self._complete_node(state, pend, nid, m_node)
+        if pend["node_i"] == len(pend["new"]):
+            state = self._activate_pending(state, rid, logits_last)
+        return state
+
+    def _packed_one_body(self, params, state: ForestState, k_fresh,
+                         v_fresh, chunk_tokens, buf_len, chunk_valid,
+                         fresh_start, fresh_path):
+        """Jitted kernel-path packed step (compiled ONCE: every chunk of
+        every admission reuses it — all chunk bookkeeping is traced
+        data). Mirrors ``_decode_one`` for the decode half and returns
+        the chunk's last-live-row logits for activation."""
+        ecfg = self.ecfg
+        cp = chunk_tokens.shape[1]
+        key, sub = jax.random.split(state.key)
+        fresh_pos = fresh_start + buf_len + jnp.arange(cp, dtype=jnp.int32)
+        logits, logits_c, cache, k_fresh, v_fresh = \
+            self.model.decode_step_packed(
+                params, state.cache, state.tokens, chunk_tokens,
+                self.rules, k_fresh=k_fresh, v_fresh=v_fresh,
+                buf_len=buf_len, chunk_valid=chunk_valid,
+                fresh_start=fresh_start, fresh_pos=fresh_pos,
+                fresh_path=fresh_path)
+        logits = logits[:, -1]
+        sampled = sample_tokens(sub, logits, ecfg.temperature, ecfg.top_p)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        tok_logp = jnp.take_along_axis(logp, sampled[:, None], axis=-1)[:, 0]
+        emit = state.active
+        tok = jnp.where(emit, sampled, ecfg.pad_token)
+        active = emit & (sampled != ecfg.eos_token) if ecfg.eos_token >= 0 \
+            else emit
+        new = ForestState(
+            cache=cache,
+            tokens=tok[:, None],
+            active=active,
+            steps=state.steps + emit.astype(jnp.int32),
+            key=key,
+        )
+        logits_last = logits_c[0, chunk_valid - 1]
+        return new, (tok, tok_logp, emit), logits_last, k_fresh, v_fresh
+
+    def _packed_step_kernel(self, params, state: ForestState, pend,
+                            chunk, cv):
+        import numpy as np
+
+        tcfg, cfg = self.tcfg, self.cfg
+        cp = self._prefill_chunk()
+        if pend["k_fresh"] is None:
+            shape = (cfg.n_layers, self.pages_per_node * tcfg.page_size,
+                     cfg.n_kv_heads_padded, cfg.kq_dim)
+            dtype = state.cache.k_dec.dtype
+            pend["k_fresh"] = jnp.zeros(shape, dtype)
+            pend["v_fresh"] = jnp.zeros(shape, dtype)
+        buf = np.zeros((1, cp), np.int32)
+        buf[0, :cv] = chunk
+        fpath = np.full((tcfg.depth,), -1, np.int32)
+        fpath[:len(pend["path"])] = pend["path"]
+        state, out, logits_last, pend["k_fresh"], pend["v_fresh"] = \
+            self._packed_one(
+                params, state, pend["k_fresh"], pend["v_fresh"],
+                jnp.asarray(buf), jnp.int32(pend["buf_len"]),
+                jnp.int32(cv), jnp.int32(pend["fresh_start"]),
+                jnp.asarray(fpath))
+        return state, out, logits_last
+
+    def _packed_step_ref(self, params, state: ForestState, pend,
+                         chunk, cv):
+        """Reference packed step (dense caches / ``use_kernel=False``):
+        the decode half is the inherited single-step scan — bit-identical
+        to ``step_mode="decode"`` — and the chunk half composes
+        ``model.prefill`` / ``model.prefill_suffix`` over [matched
+        ancestors ⊕ the suffix KV buffered so far], which is row-for-row
+        bit-identical to the synchronous one-shot suffix prefill (exact-
+        zero causal masking makes each row independent of later rows)."""
+        state, (toks, lps, emits) = self._chunk(params, state, n_steps=1)
+        start = pend["cut"] + pend["done"]
+        chunk_arr = jnp.asarray(chunk)[None, :]
+        if start == 0:
+            logits_c, cache_c = self.model.prefill(
+                params, chunk_arr, self.rules)
+        else:
+            k_anc, v_anc = self._pending_context(state, pend, start)
+            logits_c, cache_c = self.model.prefill_suffix(
+                params, chunk_arr, k_anc, v_anc, self.rules, start=start)
+        k_new, v_new = cache_c.k[:, 0], cache_c.v[:, 0]  # (L, cv, g, hd)
+        pend["kbuf"] = (k_new if pend["kbuf"] is None
+                        else jnp.concatenate([pend["kbuf"], k_new], axis=1))
+        pend["vbuf"] = (v_new if pend["vbuf"] is None
+                        else jnp.concatenate([pend["vbuf"], v_new], axis=1))
+        return state, (toks[0], lps[0], emits[0]), logits_c
+
+    def _pending_context(self, state: ForestState, pend, start: int):
+        """The pending request's first ``start`` tokens of per-layer K/V
+        in prefill layout (L, 1, start, g, hd): matched ancestors read
+        from the cache ⊕ suffix tokens buffered by earlier chunks."""
+        ks, vs = [], []
+        if pend["cut"]:
+            k_m, v_m = self._gather_path_kv(
+                state, pend["path"][:pend["matched"]], pend["cut"])
+            ks.append(k_m[:, 0])
+            vs.append(v_m[:, 0])
+        if pend["done"]:
+            ks.append(pend["kbuf"])
+            vs.append(pend["vbuf"])
+        return (jnp.concatenate(ks, axis=1)[:, None],
+                jnp.concatenate(vs, axis=1)[:, None])
+
+    def _complete_node(self, state: ForestState, pend, nid: int,
+                       m: int) -> ForestState:
+        """All of node ``nid``'s tokens have been chunk-prefilled: write
+        the buffered KV into the serve cache (quantize/transpose once, by
+        value — same write path as synchronous admission), fingerprint
+        it, and flip the node live so later chunks/requests stream it."""
+        if pend["k_fresh"] is not None:
+            k, v = pend["k_fresh"][:, :m], pend["v_fresh"][:, :m]
+        else:
+            lo = pend["done"] - m
+            k = pend["kbuf"][:, lo:lo + m]
+            v = pend["vbuf"][:, lo:lo + m]
+        cache = state.cache
+        if self.paged:
+            cache = cache.write_node(k, v, nid, self.node_pages[nid])
+        else:
+            cache = cache.write_node(k, v, nid)
+        from repro.core.integrity import segment_checksum
+        self.seg_checksums[nid] = segment_checksum(cache, nid)
+        self.node_live[nid] = True
+        self.node_pending.discard(nid)
+        pend["node_i"] += 1
+        pend["buf_len"] = 0
+        pend["fresh_start"] += m
+        return dataclasses.replace(state, cache=cache)
+
+    def _activate_pending(self, state: ForestState, rid: int,
+                          logits0) -> ForestState:
+        """The pending request's last chunk landed: point its reserved
+        slots at the now-fully-live path and sample their first token
+        from the final chunk's last-live-row logits — the exact analogue
+        of synchronous admission's prefill-logits sampling."""
+        tcfg = self.tcfg
+        pend = self._pending.pop(rid)
+        path, slots = pend["path"], pend["slots"]
+        path_col = jnp.asarray(
+            path + [-1] * (tcfg.depth - len(path)), jnp.int32)
+        slot_ids = jnp.asarray(slots, jnp.int32)
+        slot_mask = jnp.zeros((tcfg.slots,), bool).at[slot_ids].set(True)
+        cache = state.cache.assign_paths(slot_mask, path_col)
+        key, sub = jax.random.split(state.key)
+        tok, lp, live = self._sample_first(sub, logits0, len(slots))
+        state = ForestState(
+            cache=cache,
+            tokens=state.tokens.at[slot_ids, 0].set(tok),
+            active=state.active.at[slot_ids].set(live),
+            steps=state.steps.at[slot_ids].set(0),
+            key=key,
+        )
+        for i, s in enumerate(slots):
+            self.outputs[s] = [int(tok[i])]
+            self.logps[s] = [float(lp[i])]
+        return state
+
+    def _abort_pending(self, state: ForestState, rid: int) -> ForestState:
+        """Hard-abort an in-flight packed prefill (cancellation /
+        preemption / deadline): UNWRITTEN reserved nodes free immediately
+        — trie identity dropped, pages released, nothing was ever written
+        to the cache — and matched ancestors plus already-completed nodes
+        release through the same refcounted path as retirement."""
+        pend = self._pending.pop(rid)
+        self.requests[rid]["live"] = False
+        for nid, _m in pend["new"][pend["node_i"]:]:
+            self.node_pending.discard(nid)
+            self.node_refs[nid] -= 1
+            self.node_index.pop(self.node_key[nid], None)
+            self.node_key[nid] = None
+            self.node_len[nid] = 0
+            if self.paged:
+                self.page_alloc.release(self.node_pages.pop(nid, []))
+        self._release_path(pend["path"][:pend["matched"] + pend["node_i"]])
+        self._compact_requests()
+        return state
+
     # ---- retire ----
     def retire_requests(self, state: ForestState, active=None):
         """Free every request whose slots have all gone inactive. Node
@@ -1384,35 +1795,48 @@ class TreeServeEngine(_SlotTableEngine):
             req = self.requests[rid]
             if not req["live"]:
                 continue
+            if rid in self._pending:
+                # mid-prefill: its reserved slots are inactive by
+                # construction, but the request is NOT done — it retires
+                # only through cancellation (_abort_pending) or after
+                # activation.
+                continue
             if not any(active[s] for s in req["slots"]):
                 req["live"] = False
                 retired.append(rid)
-                for nid in req["path"]:
-                    self.node_refs[nid] -= 1
-                for nid in reversed(req["path"]):
-                    if self.node_refs[nid] == 0 and self.node_live[nid]:
-                        if self.tcfg.prefix_cache:
-                            # live -> cached: keep the row, the pages,
-                            # the index entry and the checksum — a
-                            # re-admission revives all of it for free.
-                            if nid not in self.node_cached:
-                                self.lru_clock += 1
-                                self.node_cached[nid] = self.lru_clock
-                            continue
-                        self.node_live[nid] = False
-                        self.node_index.pop(self.node_key[nid], None)
-                        self.node_key[nid] = None
-                        self.node_len[nid] = 0
-                        self.seg_checksums.pop(nid, None)
-                        if self.paged:
-                            # refcounted page sharing: an ancestor's pages
-                            # free only with the node itself (last
-                            # referencing request gone)
-                            self.page_alloc.release(
-                                self.node_pages.pop(nid, []))
+                self._release_path(req["path"])
         if retired:
             self._compact_requests()
         return retired
+
+    def _release_path(self, path):
+        """Drop one reference from every node on ``path`` and run the
+        refcount-zero transition (children-first): with ``prefix_cache``
+        the node goes live -> CACHED (row, pages, index entry and
+        checksum kept, LRU-stamped); otherwise it frees outright."""
+        for nid in path:
+            self.node_refs[nid] -= 1
+        for nid in reversed(path):
+            if self.node_refs[nid] == 0 and self.node_live[nid]:
+                if self.tcfg.prefix_cache:
+                    # live -> cached: keep the row, the pages,
+                    # the index entry and the checksum — a
+                    # re-admission revives all of it for free.
+                    if nid not in self.node_cached:
+                        self.lru_clock += 1
+                        self.node_cached[nid] = self.lru_clock
+                    continue
+                self.node_live[nid] = False
+                self.node_index.pop(self.node_key[nid], None)
+                self.node_key[nid] = None
+                self.node_len[nid] = 0
+                self.seg_checksums.pop(nid, None)
+                if self.paged:
+                    # refcounted page sharing: an ancestor's pages
+                    # free only with the node itself (last
+                    # referencing request gone)
+                    self.page_alloc.release(
+                        self.node_pages.pop(nid, []))
 
     def _compact_requests(self):
         """Drop retired request-table entries no slot references anymore.
@@ -1446,10 +1870,15 @@ class TreeServeEngine(_SlotTableEngine):
         the normal ``retire_requests`` path — shared ancestors survive; a
         preempted request re-admitted later re-matches whatever prefix is
         still resident, so re-prefill costs only the evicted suffix.
-        Tolerates already-compacted rids (no-op)."""
+        Tolerates already-compacted rids (no-op). A request whose packed
+        prefill is still in flight has no active slots to deactivate —
+        its pending prefill is hard-aborted instead (unwritten nodes
+        free immediately)."""
         req = self.requests.get(rid)
         if req is None or not req["live"]:
             return state
+        if rid in self._pending:
+            return self._abort_pending(state, rid)
         return self.deactivate_slots(state, req["slots"])
 
     def request_sharing(self, rid: int) -> int:
@@ -1503,6 +1932,13 @@ class TreeServeEngine(_SlotTableEngine):
 
     # ---- durable-state serialization (checkpoint/recovery) ----
     def host_state(self) -> dict:
+        if self._pending:
+            raise RuntimeError(
+                "host_state with packed prefills in flight — drain the "
+                "pending chunks (step the engine) before snapshotting; "
+                "in-flight fresh-KV buffers are not serializable state "
+                "(DurableFrontend defers its snapshot until the engine "
+                "is quiescent)")
         d = super().host_state()
         d.update({
             "node_live": [bool(x) for x in self.node_live],

@@ -117,7 +117,8 @@ def collect_pallas_calls(jaxpr):
     return calls
 
 
-def assert_no_hbm_spill(jaxpr, *, out_dtype, hd=None, q8=False):
+def assert_no_hbm_spill(jaxpr, *, out_dtype, hd=None, q8=False,
+                        fresh=False):
     """The fused-decode structural guarantee, in one place:
 
       * exactly ONE pallas_call in the computation;
@@ -129,6 +130,10 @@ def assert_no_hbm_spill(jaxpr, *, out_dtype, hd=None, q8=False):
         (3 tensors) — i.e. no dequantized K_c/V_c buffer is ever an HBM
         operand. Callers must pick test shapes with m_c != hd and hd != 128
         so scale vectors / lane-replicated masks can't alias the check.
+      * ``fresh=True`` (the packed work-queue kernels): the prefill-chunk
+        K/V envelopes are two additional FULL-dtype operands by design
+        (fresh tiles are never quantized mid-prefill), so the q8 float-hd
+        allowance becomes 5 = q + bf16 decode arm + bf16 fresh K/V.
 
     Returns the single pallas_call eqn for any kernel-specific follow-ups.
     """
@@ -146,6 +151,8 @@ def assert_no_hbm_spill(jaxpr, *, out_dtype, hd=None, q8=False):
         float_hd = [a for a in in_avals
                     if a.dtype != jnp.int8 and a.ndim >= 1
                     and a.shape[-1] == hd]
-        assert len(float_hd) == 3, \
-            f"only q + bf16 decode arm may carry head_dim: {float_hd}"
+        want = 5 if fresh else 3
+        assert len(float_hd) == want, \
+            f"only q + bf16 decode arm{' + fresh K/V' if fresh else ''} " \
+            f"may carry head_dim: {float_hd}"
     return call

@@ -2,8 +2,8 @@
 
 ONE parametrized harness runs every implementation — {fused, fused_q8,
 two_pass, einsum, einsum_q8, grouped, grouped_q8, tree, tree_q8, paged,
-paged_q8} — on IDENTICAL inputs (tests/conftest.make_decode_case) and
-cross-checks:
+paged_q8, packed, packed_q8} — on IDENTICAL inputs
+(tests/conftest.make_decode_case) and cross-checks:
 
   * every implementation against the fp32 monolithic-softmax oracle
     (standard attention over [broadcast K_c ⊕ K_d]) with per-dtype /
@@ -23,7 +23,11 @@ cross-checks:
     BIT-IDENTICAL to the dense tree kernel at page_m == block_m — PR 5's
     reduction acceptance (paged structure/engines live in
     tests/test_paged.py) — plus a hypothesis fuzz over page-table
-    permutations and ragged node lengths.
+    permutations and ragged node lengths;
+  * the packed work-queue kernel on a DECODE-ONLY queue BIT-IDENTICAL to
+    the paged kernel, single- and multi-launch — the packed-step
+    reduction acceptance (chunk-carrying queues live in
+    tests/test_packed.py).
 
 The case list sweeps b x p x n x ragged m_c x partial C_d masks x both ctx
 layouts x {f32, bf16}. When ``hypothesis`` is installed (CI installs it; a
@@ -44,6 +48,8 @@ from repro.kernels.ops import (
     bifurcated_decode_attention_q8,
     grouped_bifurcated_decode_attention,
     grouped_bifurcated_decode_attention_q8,
+    packed_bifurcated_decode_attention,
+    packed_bifurcated_decode_attention_q8,
     paged_bifurcated_decode_attention,
     paged_bifurcated_decode_attention_q8,
     tree_bifurcated_decode_attention,
@@ -208,6 +214,26 @@ def impl_paged_q8(case, ctx_layout, block_m):
         case["kd"], case["vd"], case["mask"], interpret=True)
 
 
+def impl_packed(case, ctx_layout, block_m):
+    """Single-prefix case on the PACKED work-queue dispatch with a
+    DECODE-ONLY queue (no chunk attached): the queue degenerates to the
+    live-page list and the kernel to the paged page walk."""
+    (kp, vp), table, seg_lens, paths = _paged_case(case, ctx_layout, block_m)
+    out_dec, _ = packed_bifurcated_decode_attention(
+        case["q"], kp, vp, table, seg_lens, paths,
+        case["kd"], case["vd"], case["mask"], interpret=True)
+    return out_dec
+
+
+def impl_packed_q8(case, ctx_layout, block_m):
+    (kp, vp, ksp, vsp), table, seg_lens, paths = _paged_case(
+        case, ctx_layout, block_m, q8=True)
+    out_dec, _ = packed_bifurcated_decode_attention_q8(
+        case["q"], kp, vp, ksp, vsp, table, seg_lens, paths,
+        case["kd"], case["vd"], case["mask"], interpret=True)
+    return out_dec
+
+
 # name -> (fn, is_quantized). Quantized impls carry the int8 rounding error
 # against the fp32 oracle; non-quantized ones only their dtype's.
 IMPLS = {
@@ -222,6 +248,8 @@ IMPLS = {
     "tree_q8": (impl_tree_q8, True),
     "paged": (impl_paged, False),
     "paged_q8": (impl_paged_q8, True),
+    "packed": (impl_packed, False),
+    "packed_q8": (impl_packed_q8, True),
 }
 
 # per-dtype tolerance for exact (non-quantized) implementations
@@ -399,6 +427,33 @@ def test_paged_bit_identical_to_tree(shape):
     out_pq = impl_paged_q8(case, "gmk", block_m)
     out_tq = impl_tree_q8(case, "gmk", block_m)
     np.testing.assert_array_equal(np.asarray(out_pq), np.asarray(out_tq))
+
+
+@pytest.mark.parametrize("shape", CASES[:4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_packed_bit_identical_to_paged(shape, dtype):
+    """ISSUE acceptance: on a DECODE-ONLY work queue (no prefill chunk
+    attached) the packed heterogeneous-step kernel reduces EXACTLY —
+    bit-for-bit — to the paged page-walk kernel, both dtypes, both
+    quantization modes, and the multi-launch chaining path is
+    bit-identical to the single launch."""
+    b, p, n, m_c, c_d, block_m = shape
+    case = make_decode_case(b, p, m_c, c_d, g=G, hd=HD, n=n,
+                            dtype=dtype, seed=sum(shape))
+    out_k = impl_packed(case, "gmk", block_m)
+    out_p = impl_paged(case, "gmk", block_m)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_p))
+    out_kq = impl_packed_q8(case, "gmk", block_m)
+    out_pq = impl_paged_q8(case, "gmk", block_m)
+    np.testing.assert_array_equal(np.asarray(out_kq), np.asarray(out_pq))
+
+    # multi-launch spill: cap the grid at 2 entries/launch
+    (kp, vp), table, seg_lens, paths = _paged_case(case, "gmk", block_m)
+    out_m, _ = packed_bifurcated_decode_attention(
+        case["q"], kp, vp, table, seg_lens, paths,
+        case["kd"], case["vd"], case["mask"], interpret=True,
+        entries_per_launch=2)
+    np.testing.assert_array_equal(np.asarray(out_m), np.asarray(out_k))
 
 
 def test_grouped_multi_prefix_vs_per_group_fused():

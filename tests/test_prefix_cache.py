@@ -12,6 +12,10 @@ Engine tier (real model, CPU):
     zero new pages, full-hit stats;
   * LRU eviction under node and page pressure — oldest stamp first,
     matched path protected, unsatisfiable demand evicts nothing;
+  * ``evict_policy="sharing"``: eviction order tie-breaks by the
+    ancestor-shared-bytes score — cold PRIVATE tails evict before leaves
+    under hot shared ancestors regardless of recency — and a seeded soak
+    shows prefix reuse never regresses against plain LRU;
   * allocator audits + checksum verification stay green with cached
     nodes resident, and occupancy reports them;
   * host_state/load_host_state round-trips the cache (node_cached, LRU
@@ -165,6 +169,71 @@ def test_lru_eviction_order_under_node_pressure():
     st = _force_retire(eng, st, slots)
     st, _ = eng.admit(PARAMS, st, [SEGS[1]], 1)
     assert eng.prefix_stats["full_hits"] >= 1
+
+
+def _node_of(eng, seg, parent=-1):
+    return eng.node_index[(parent, tuple(int(t) for t in np.asarray(seg)[0]))]
+
+
+@pytest.mark.parametrize("policy,evicted_is_private", [
+    ("sharing", True), ("lru", False),
+])
+def test_sharing_eviction_prefers_cold_private_tails(policy,
+                                                     evicted_is_private):
+    """ISSUE satellite: under ``evict_policy="sharing"`` the eviction
+    order's primary key is the ancestor-shared-bytes score — a cached
+    leaf under a HOT ancestor (live sibling pins it) outlives a cold
+    private path even though the leaf's LRU stamp is OLDER. Plain LRU on
+    the identical scenario evicts by stamp, i.e. the shared leaf."""
+    eng = _tree(n_nodes=4, depth=2, slots=4, prefix_cache=True,
+                evict_policy=policy)
+    st = eng.init_state()
+    st, sa = eng.admit(PARAMS, st, [SYS, REQ_A], 1)     # nodes: SYS, A
+    st, sb = eng.admit(PARAMS, st, [SYS, REQ_B], 1)     # node B stays LIVE
+    st = _force_retire(eng, st, sa)                     # A cached, OLDEST
+    st, sp = eng.admit(PARAMS, st, [SEGS[0]], 1)        # cold private P
+    st = _force_retire(eng, st, sp)                     # P cached, younger
+    sys_id = _node_of(eng, SYS)
+    a_id = _node_of(eng, REQ_A, parent=sys_id)
+    p_id = _node_of(eng, SEGS[0])
+    order = eng._eviction_order()
+    assert (order == [p_id, a_id]) == evicted_is_private
+    # node pressure: a fourth prefix needs exactly one slot
+    st, _ = eng.admit(PARAMS, st, [SEGS[1]], 1)
+    assert eng.prefix_stats["evictions"] == 1
+    if evicted_is_private:
+        assert p_id not in eng.node_cached and a_id in eng.node_cached
+    else:
+        assert a_id not in eng.node_cached and p_id in eng.node_cached
+
+
+@pytest.mark.slow
+def test_sharing_eviction_soak_reuse_does_not_regress():
+    """Seeded soak under node pressure: alternating hot-ancestor
+    re-admissions and one-off private prompts. The sharing policy must
+    reuse AT LEAST as many prefix tokens as plain LRU on the identical
+    workload (here strictly more: LRU keeps evicting the hot leaves)."""
+    lrng = np.random.RandomState(3)
+    kids = [jnp.asarray(lrng.randint(0, CFG.vocab_size, (1, 8)))
+            for _ in range(3)]
+    privs = [jnp.asarray(lrng.randint(0, CFG.vocab_size, (1, 10)))
+             for _ in range(6)]
+
+    def run(policy):
+        eng = _tree(n_nodes=5, depth=2, slots=4, prefix_cache=True,
+                    evict_policy=policy)
+        st = eng.init_state()
+        for i in range(9):
+            st, sl = eng.admit(PARAMS, st, [SYS, kids[i % 3]], 1)
+            st = _force_retire(eng, st, sl)
+            st, sl = eng.admit(PARAMS, st, [privs[i % 6]], 1)
+            st = _force_retire(eng, st, sl)
+        assert eng.audit_state(st, verify_checksums=True)
+        return eng.prefix_stats
+
+    sharing, lru = run("sharing"), run("lru")
+    assert sharing["reused_tokens"] >= lru["reused_tokens"]
+    assert sharing["reused_tokens"] > 0
 
 
 def test_page_pressure_evicts_lru_and_audits_green():

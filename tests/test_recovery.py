@@ -118,6 +118,37 @@ def test_journal_reopen_continues_seq(tmp_path):
     assert clean and got == [{"i": 0}, {"i": 1}]
 
 
+def test_journal_compact_drops_torn_tail_and_appends_readably(tmp_path):
+    """``compact`` rewrites a torn epoch down to its clean prefix, so an
+    epoch re-opened for appends (recovery that must defer its snapshot)
+    chains new records READABLY instead of burying them past the tear."""
+    p = str(tmp_path / "j.log")
+    j = Journal(p)
+    for i in range(3):
+        j.append({"i": i})
+    j.close()
+    os.truncate(p, os.path.getsize(p) - 5)       # tear the last record
+    assert Journal.compact(p) == 2
+    got, clean = Journal.read(p)
+    assert clean and got == [{"i": 0}, {"i": 1}]
+    j2 = Journal(p)                               # appends continue the seq
+    assert j2.seq == 2
+    j2.append({"i": 9})
+    j2.close()
+    got, clean = Journal.read(p)
+    assert clean and got == [{"i": 0}, {"i": 1}, {"i": 9}]
+
+
+def test_journal_compact_leaves_clean_file_untouched(tmp_path):
+    p = str(tmp_path / "j.log")
+    j = Journal(p)
+    j.append({"i": 0})
+    j.close()
+    before = open(p, "rb").read()
+    assert Journal.compact(p) == 1
+    assert open(p, "rb").read() == before
+
+
 # ---------------------------------------------------------------------------
 # Fast: ServeCheckpointer
 # ---------------------------------------------------------------------------
@@ -413,6 +444,152 @@ def test_journal_truncation_replay_stops_cleanly(tiny_model, tmp_path):
     # this workload's submits all land in the round-0 epoch before the
     # truncation point, so every request survives here
     assert got_status == ctrl_status and got_tokens == ctrl_tokens
+
+
+class TickClock:
+    """Injected clock: every call returns the current time, then advances
+    it by a fixed ``dt`` — so each (start, stop) pair the frontend takes
+    around one journal record measures EXACTLY ``dt`` seconds, making the
+    budget cadence a deterministic function of record counts."""
+
+    def __init__(self, dt: float = 1.0):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self) -> float:
+        v = self.t
+        self.t += self.dt
+        return v
+
+
+@pytest.mark.slow
+def test_snapshot_budget_cadence_with_injected_clock(tiny_model, tmp_path):
+    """With ``snapshot_budget_s`` set, snapshots fire when the ESTIMATED
+    replay time of the journal tail crosses the budget — not on the
+    fixed round cadence. The injected clock makes every record cost
+    exactly 1s, so the cadence is predictable to the round: 5 records
+    (4 submits + 1 round) trip a 3.5s budget at round 1, then every 4th
+    round after."""
+    from repro.runtime.recovery import DurableFrontend
+
+    cfg, model, params = tiny_model
+    factory = _factory(cfg, model, "tree", "paged", "bfloat16")
+    clk = TickClock(1.0)
+    dfe = DurableFrontend(factory, str(tmp_path), snapshot_every=8,
+                          snapshot_budget_s=3.5, clock=clk,
+                          frontend_kwargs=dict(queue_depth=32,
+                                               decode_steps=1))
+    dfe.init_state()                              # base snapshot, round 0
+    _submit_all(dfe)                              # 4 records @ 1s each
+    assert dfe.estimated_replay_s() == pytest.approx(4.0)
+    dfe.pump(params)                              # 5 records > 3.5s budget
+    assert sorted(dfe.ckpt.all_rounds()) == [0, 1]
+    assert dfe.estimated_replay_s() == 0.0        # tail reset by snapshot
+    for _ in range(3):                            # 1s, 2s, 3s — under budget
+        dfe.pump(params)
+    assert sorted(dfe.ckpt.all_rounds()) == [0, 1]
+    assert dfe.estimated_replay_s() == pytest.approx(3.0)
+    dfe.pump(params)                              # 4s > 3.5s: round 5, NOT 8
+    assert max(dfe.ckpt.all_rounds()) == 5
+    assert dfe.stats["snapshots"] == 3
+    assert dfe.metrics()["durability"]["estimated_replay_s"] == 0.0
+
+
+@pytest.mark.slow
+def test_recovery_remeasures_replay_cost(tiny_model, tmp_path):
+    """An actual replay re-measures the per-record cost directly (the
+    live-execution EMA is only a proxy) and the recovered run still
+    finishes bit-identically under budget cadence."""
+    from repro.runtime.faults import ProcessKilled
+    from repro.runtime.recovery import DurableFrontend
+
+    cfg, model, params = tiny_model
+    factory = _factory(cfg, model, "tree", "paged", "bfloat16")
+    ctrl_tokens, ctrl_status = _control(factory, params)
+    plan = FaultPlan([FaultEvent(2, FaultKind.KILL_PROCESS)])
+    clk = TickClock(1.0)
+    dfe = DurableFrontend(factory, str(tmp_path), fault_plan=plan,
+                          snapshot_budget_s=30.0, clock=clk,
+                          frontend_kwargs=dict(queue_depth=32,
+                                               decode_steps=1))
+    dfe.init_state()
+    _submit_all(dfe)
+    pumps = 0
+    while dfe.pending():
+        pumps += 1
+        assert pumps < 200, "recovery liveness failure"
+        try:
+            dfe.pump(params)
+        except ProcessKilled:
+            before = (dfe.stats["replayed_submits"]
+                      + dfe.stats["replayed_rounds"])
+            dfe.recover(params)
+            n = (dfe.stats["replayed_submits"]
+                 + dfe.stats["replayed_rounds"]) - before
+            # replay spans ONE clock tick (no journaling inside it), so
+            # the re-measured rate is exactly 1s / n records
+            assert n > 0
+            assert dfe._replay_s_per_record == pytest.approx(1.0 / n)
+            assert dfe._records_since_snapshot == 0   # post-recovery base
+    assert dfe.stats["recoveries"] == 1
+    got_tokens, got_status = _results(dfe.fe.tickets)
+    assert got_status == ctrl_status and got_tokens == ctrl_tokens
+
+
+@pytest.mark.slow
+def test_packed_pending_defers_snapshots_and_recovers(tiny_model, tmp_path):
+    """step_mode="packed": while an admission's chunked prefill is in
+    flight the engine's host mirrors refuse to serialize, so a due
+    snapshot is DEFERRED — including the post-recovery base snapshot
+    when the kill lands mid-prefill and replay faithfully reconstructs
+    the mid-prefill state. The run must still finish identically to an
+    uninterrupted packed control."""
+    from repro.configs.base import TreeConfig
+    from repro.runtime.faults import ProcessKilled
+    from repro.runtime.frontend import ServeFrontend
+    from repro.runtime.recovery import DurableFrontend
+    from repro.runtime.serve import TreeServeEngine
+
+    cfg, model, params = tiny_model
+
+    def factory():
+        return TreeServeEngine(model, cfg, TreeConfig(
+            n_nodes=6, depth=2, slots=4, node_capacity=16,
+            decode_capacity=8, temperature=0.0, cache_dtype="bfloat16",
+            ctx_store="paged", page_size=8, num_pages=8,
+            step_mode="packed", prefill_chunk=5, suffix_prefill=True))
+
+    fe = ServeFrontend(factory(), queue_depth=32, decode_steps=1)
+    st = fe.init_state()
+    _submit_all(fe)
+    fe.drain(params, st)
+    ctrl_tokens, ctrl_status = _results(fe.tickets)
+
+    plan = FaultPlan([FaultEvent(2, FaultKind.KILL_PROCESS)])
+    dfe = DurableFrontend(factory, str(tmp_path), fault_plan=plan,
+                          snapshot_every=1,
+                          frontend_kwargs=dict(queue_depth=32,
+                                               decode_steps=1))
+    dfe.init_state()
+    _submit_all(dfe)
+    pumps = 0
+    while dfe.pending():
+        pumps += 1
+        assert pumps < 200, "recovery liveness failure"
+        try:
+            dfe.pump(params)
+        except ProcessKilled:
+            dfe.recover(params)
+            # replay landed back in the mid-prefill state: the base
+            # snapshot was deferred, journaling continues in the
+            # replayed epoch
+            assert dfe.fe.engine._pending
+            assert dfe.journal is not None
+    assert dfe.stats["recoveries"] == 1
+    assert dfe.stats["deferred_snapshots"] > 0
+    got_tokens, got_status = _results(dfe.fe.tickets)
+    assert got_status == ctrl_status and got_tokens == ctrl_tokens
+    dfe.fe.engine.host_state()    # quiescent again once drained
 
 
 def _submit_shared(fe_like):

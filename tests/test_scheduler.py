@@ -247,6 +247,64 @@ def test_victim_key_effective_priority_dominates_sharing():
     assert fe.policy.victim_key(fe, sharer) < fe.policy.victim_key(fe, loner)
 
 
+def _reprefill_fixture():
+    """Two victims sharing the SAME ancestor, differing only in their
+    PRIVATE tail length: the re-prefill price must break the tie."""
+    eng = _engine()
+    sys_id = _grow(eng, -1, SYS, refs=2)
+    long_id = _grow(eng, sys_id, SYS + TPL, refs=1)    # 16 private tokens
+    short_id = _grow(eng, sys_id, OTH, refs=1)         # 3 private tokens
+    eng.requests = {
+        7: {"path": [sys_id, long_id], "slots": [0], "live": True},
+        8: {"path": [sys_id, short_id], "slots": [1], "live": True},
+    }
+    long_t, short_t = _tk(0, [SYS, SYS + TPL]), _tk(1, [SYS, OTH])
+    long_t.handle, short_t.handle = 7, 8
+    return _fe(eng), long_t, short_t, (sys_id, long_id, short_id)
+
+
+def test_victim_key_reprefill_price_breaks_sharing_ties():
+    """ISSUE satellite: equally-shared victims rank by the re-prefill
+    byte price of their PRIVATE levels — the mostly-private victim
+    (largest ctx_delta) scores most negative and is preempted first: it
+    frees the most pages nobody else amortizes."""
+    fe, long_t, short_t, _ = _reprefill_fixture()
+    pol = fe.policy
+    # identical shared_bytes (same SYS ancestor), so the old score tied;
+    # the re-prefill term must now rank the long private tail first
+    assert pol.victim_key(fe, long_t) < pol.victim_key(fe, short_t)
+
+
+def test_victim_key_score_matches_io_model():
+    """The ranking term is EXACTLY shared_bytes - ctx_delta from
+    ``tree_admit_bytes_delta`` on the victim's resident path."""
+    fe, long_t, short_t, (sys_id, long_id, short_id) = _reprefill_fixture()
+    eng = fe.engine
+    for t, leaf in [(long_t, long_id), (short_t, short_id)]:
+        delta = tree_admit_bytes_delta(
+            seg_lens=[eng.node_len[sys_id], eng.node_len[leaf]],
+            shared=[True, False], n_slots=1,
+            c_d=eng.ecfg.decode_capacity, g=CFG.n_kv_heads, hd=CFG.kq_dim,
+            bytes_per_el=2)
+        key = fe.policy.victim_key(fe, t)
+        assert key[1] == delta["shared_bytes"] - delta["ctx_delta"]
+
+
+def test_victim_key_fully_shared_pays_no_reprefill():
+    """A victim whose every level is shared has ctx_delta == 0: its
+    score stays the pure shared-bytes protection term."""
+    eng = _engine()
+    sys_id = _grow(eng, -1, SYS, refs=3)
+    tpl_id = _grow(eng, sys_id, TPL, refs=2)
+    eng.requests = {5: {"path": [sys_id, tpl_id], "slots": [0],
+                        "live": True}}
+    t = _tk(0, [SYS, TPL])
+    t.handle = 5
+    fe = _fe(eng)
+    key = fe.policy.victim_key(fe, t)
+    assert key[1] == (len(SYS) + len(TPL)) * PER_TOK
+
+
 # ---------------------------------------------------------------------------
 # peek_prefix: a side-effect-free probe
 # ---------------------------------------------------------------------------
